@@ -1,0 +1,79 @@
+//! Capacity planner: how much effective capacity does a compressed
+//! expander add for a given fleet workload mix, and what does it cost?
+//!
+//! The intro's motivating scenario: a hyperscaler with a fixed number of
+//! PCIe slots wants to know, per workload, the effective-capacity gain
+//! and the performance cost of enabling device-level compression —
+//! including whether the paper's promoted-region sizing (512 MB vs
+//! 1 GB) changes the verdict.
+//!
+//!     cargo run --release --example capacity_planner
+
+use ibex::config::SimConfig;
+use ibex::coordinator::{run_many, Job};
+use ibex::stats::Table;
+use ibex::workload;
+
+fn main() {
+    let mut base = SimConfig::table1();
+    // Bench-style scaling (see DESIGN.md §6b): steady state in minutes.
+    base.footprint_scale = 1.0 / 64.0;
+    base.instructions = 3_000_000;
+    base.warmup_instructions = 600_000;
+    let scaled = |mb: u64, c: &SimConfig| ((mb << 20) as f64 * c.footprint_scale) as u64;
+
+    let mut jobs = Vec::new();
+    for &w in &workload::names() {
+        // Uncompressed baseline.
+        let mut c0 = base.clone();
+        c0.set("scheme", "uncompressed").unwrap();
+        c0.promoted_bytes = scaled(512, &base);
+        jobs.push(Job::new("raw", c0, w));
+        // IBEX @ 512 MB and 1 GB promoted regions (paper's two points).
+        for mb in [512u64, 1024] {
+            let mut c = base.clone();
+            c.promoted_bytes = scaled(mb, &base);
+            jobs.push(Job::new(format!("ibex{mb}"), c, w));
+        }
+    }
+    let results = run_many(jobs);
+
+    let mut t = Table::new(
+        "Capacity planning — effective capacity vs performance cost",
+        &[
+            "workload",
+            "ratio",
+            "extra GB per 128GB device",
+            "perf @512MB promoted",
+            "perf @1GB promoted",
+            "verdict",
+        ],
+    );
+    for chunk in results.chunks(3) {
+        let raw = &chunk[0];
+        let i512 = &chunk[1];
+        let i1g = &chunk[2];
+        let ratio = i512.metrics.compression_ratio;
+        let p512 = i512.metrics.perf() / raw.metrics.perf();
+        let p1g = i1g.metrics.perf() / raw.metrics.perf();
+        let verdict = if p512 >= 0.95 {
+            "enable"
+        } else if p1g >= 0.9 {
+            "enable w/ 1GB region"
+        } else if ratio >= 1.4 {
+            "capacity-tier only"
+        } else {
+            "skip"
+        };
+        t.row(vec![
+            raw.workload.clone(),
+            format!("{ratio:.2}"),
+            format!("{:.0}", (ratio - 1.0) * 128.0),
+            format!("{p512:.3}"),
+            format!("{p1g:.3}"),
+            verdict.to_string(),
+        ]);
+    }
+    t.emit();
+    println!("\n'extra GB' = effective capacity gained per 128 GB expander at that ratio.");
+}

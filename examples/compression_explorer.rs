@@ -1,0 +1,105 @@
+//! Compression explorer: inspect what the engine model (Pallas-kernel
+//! semantics) and the real LZ77 codec think of concrete data.
+//!
+//!     cargo run --release --example compression_explorer [file]
+//!
+//! With a file argument, its first pages are analyzed; otherwise the
+//! synthetic content-class corpus is used. Demonstrates the full
+//! compression substrate: size model (PJRT artifact when built),
+//! chunk/packing math for both IBEX formats, and real round-trip
+//! compression.
+
+use ibex::compress::size_model::{PageSizes, SizeModel, PAGE_BYTES};
+use ibex::compress::lz;
+use ibex::expander::chunks_for;
+use ibex::rng::Pcg64;
+use ibex::runtime::EngineModel;
+use ibex::stats::Table;
+
+fn packing(sizes: &PageSizes) -> (u64, u64) {
+    // IBEX-4KB: whole page in 512 B chunks; IBEX-1KB: 128 B packing.
+    let four_k = chunks_for(sizes.page, 4096) * 512;
+    let one_k: u64 = sizes
+        .blocks
+        .iter()
+        .map(|&b| if b == 0 { 0 } else { (b as u64).div_ceil(128) * 128 })
+        .sum();
+    (four_k, one_k.div_ceil(512) * 512)
+}
+
+fn main() {
+    let mut engine = EngineModel::auto();
+    println!(
+        "engine model: {}",
+        if engine.is_pjrt() {
+            "PJRT artifact (AOT-compiled Pallas kernel)"
+        } else {
+            "analytic mirror (run `make artifacts` for the PJRT path)"
+        }
+    );
+
+    let pages: Vec<(String, Vec<u8>)> = if let Some(path) = std::env::args().nth(1) {
+        let data = std::fs::read(&path).expect("read input file");
+        data.chunks(PAGE_BYTES)
+            .take(16)
+            .enumerate()
+            .map(|(i, c)| {
+                let mut p = c.to_vec();
+                p.resize(PAGE_BYTES, 0);
+                (format!("{path}#{i}"), p)
+            })
+            .collect()
+    } else {
+        let mut rng = Pcg64::new(1, 9);
+        let mut v: Vec<(String, Vec<u8>)> = vec![
+            ("zero".into(), vec![0; PAGE_BYTES]),
+            ("const 0xA5".into(), vec![0xA5; PAGE_BYTES]),
+        ];
+        for period in [8usize, 16, 32, 64] {
+            let motif: Vec<u8> = (0..period).map(|_| rng.next_u64() as u8).collect();
+            v.push((
+                format!("period-{period}"),
+                (0..PAGE_BYTES).map(|i| motif[i % period]).collect(),
+            ));
+        }
+        v.push((
+            "random".into(),
+            (0..PAGE_BYTES).map(|_| rng.next_u64() as u8).collect(),
+        ));
+        v
+    };
+
+    let refs: Vec<&[u8]> = pages.iter().map(|(_, p)| p.as_slice()).collect();
+    let sizes = engine.analyze(&refs);
+
+    let mut t = Table::new(
+        "Compression explorer",
+        &[
+            "page",
+            "model 4KB (B)",
+            "model 1KB blocks (B)",
+            "LZ77 actual (B)",
+            "IBEX-4KB stored",
+            "IBEX-1KB stored",
+            "roundtrip",
+        ],
+    );
+    for (i, (name, data)) in pages.iter().enumerate() {
+        let s = &sizes[i];
+        let compressed = lz::compress(data);
+        let ok = lz::decompress(&compressed, data.len())
+            .map(|d| d == *data)
+            .unwrap_or(false);
+        let (p4, p1) = packing(s);
+        t.row(vec![
+            name.clone(),
+            s.page.to_string(),
+            format!("{:?}", s.blocks),
+            compressed.len().to_string(),
+            format!("{p4} B"),
+            format!("{p1} B"),
+            if ok { "ok".into() } else { "FAIL".into() },
+        ]);
+    }
+    t.emit();
+}

@@ -1,0 +1,103 @@
+//! Device A/B test: compare two device configurations on a workload
+//! mix — the tool a memory-expander vendor would use to pick shipping
+//! settings (IBEX options, promoted-region size, engine latency).
+//!
+//!     cargo run --release --example device_ab_test -- \
+//!         A ibex.shadow=true  B ibex.shadow=false --workloads pr,cc
+//!
+//! Any `key=value` accepted by `ibex config-dump` works on either side.
+
+use ibex::config::SimConfig;
+use ibex::coordinator::{run_many, Job};
+use ibex::stats::{geomean, Table};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut a_over: Vec<(String, String)> = Vec::new();
+    let mut b_over: Vec<(String, String)> = Vec::new();
+    let mut workloads = vec!["omnetpp".to_string(), "pr".to_string(), "XSBench".to_string()];
+    let mut side = 'A';
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "A" => side = 'A',
+            "B" => side = 'B',
+            "--workloads" => {
+                i += 1;
+                workloads = args[i].split(',').map(|s| s.to_string()).collect();
+            }
+            kv if kv.contains('=') => {
+                let (k, v) = kv.split_once('=').unwrap();
+                let dst = if side == 'A' { &mut a_over } else { &mut b_over };
+                dst.push((k.to_string(), v.to_string()));
+            }
+            other => {
+                eprintln!("unrecognized argument {other:?}");
+                std::process::exit(2);
+            }
+        }
+        i += 1;
+    }
+    if a_over.is_empty() && b_over.is_empty() {
+        // Default A/B: shadowed promotion on vs off.
+        a_over.push(("ibex.shadow".into(), "true".into()));
+        b_over.push(("ibex.shadow".into(), "false".into()));
+    }
+
+    let mut base = SimConfig::table1();
+    // Bench-style scaling (see DESIGN.md §6b): steady state in minutes.
+    base.footprint_scale = 1.0 / 64.0;
+    base.instructions = 3_000_000;
+    base.warmup_instructions = 600_000;
+    base.promoted_bytes = ((512u64 << 20) as f64 * base.footprint_scale) as u64;
+
+    let make = |overrides: &[(String, String)]| {
+        let mut c = base.clone();
+        for (k, v) in overrides {
+            if let Err(e) = c.set(k, v) {
+                eprintln!("error: {e}");
+                std::process::exit(2);
+            }
+        }
+        c
+    };
+    let (ca, cb) = (make(&a_over), make(&b_over));
+    println!("A = {a_over:?}\nB = {b_over:?}\n");
+
+    let mut jobs = Vec::new();
+    for w in &workloads {
+        jobs.push(Job::new("A", ca.clone(), w));
+        jobs.push(Job::new("B", cb.clone(), w));
+    }
+    let results = run_many(jobs);
+
+    let mut t = Table::new(
+        "A/B results",
+        &["workload", "perf A", "perf B", "B/A", "ratio A", "ratio B", "traffic B/A"],
+    );
+    let mut speedups = Vec::new();
+    for pair in results.chunks(2) {
+        let (a, b) = (&pair[0], &pair[1]);
+        let rel = b.metrics.perf() / a.metrics.perf();
+        speedups.push(rel);
+        t.row(vec![
+            a.workload.clone(),
+            format!("{:.4}", a.metrics.perf()),
+            format!("{:.4}", b.metrics.perf()),
+            format!("{rel:.3}"),
+            format!("{:.2}", a.metrics.compression_ratio),
+            format!("{:.2}", b.metrics.compression_ratio),
+            format!(
+                "{:.3}",
+                b.metrics.mem_total as f64 / a.metrics.mem_total.max(1) as f64
+            ),
+        ]);
+    }
+    t.emit();
+    let gm = geomean(&speedups);
+    println!(
+        "\nverdict: B is {:.1}% {} than A (geomean perf)",
+        (gm - 1.0).abs() * 100.0,
+        if gm >= 1.0 { "faster" } else { "slower" }
+    );
+}

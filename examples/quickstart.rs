@@ -1,0 +1,61 @@
+//! Quickstart: simulate one workload on IBEX vs uncompressed CXL memory
+//! and print the headline numbers.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! This is the end-to-end path: the Table-2 workload generator drives
+//! the 4-core host model over the CXL link into the IBEX device, whose
+//! compression engine sizes come from the AOT-compiled Pallas kernel
+//! via PJRT (analytic fallback if `make artifacts` hasn't run).
+
+use ibex::config::SimConfig;
+use ibex::coordinator::{run_one, Job};
+use ibex::stats::Table;
+
+fn main() {
+    let workload = std::env::args().nth(1).unwrap_or_else(|| "omnetpp".into());
+    let mut cfg = SimConfig::table1();
+    // Bench-style scaling (see DESIGN.md §6b): steady state in minutes.
+    cfg.footprint_scale = 1.0 / 64.0;
+    cfg.instructions = 4_000_000;
+    cfg.warmup_instructions = 800_000;
+    // Scaled Table-1 promoted region (512 MB × footprint scale).
+    cfg.promoted_bytes = ((512u64 << 20) as f64 * cfg.footprint_scale) as u64;
+
+    println!("IBEX quickstart — workload {workload}\n");
+    let mut rows = Vec::new();
+    for scheme in ["uncompressed", "ibex"] {
+        let mut c = cfg.clone();
+        c.set("scheme", scheme).unwrap();
+        let r = run_one(&Job::new(scheme, c, &workload));
+        rows.push(r);
+    }
+    let base_perf = rows[0].metrics.perf();
+    let mut t = Table::new("Quickstart results", &[
+        "scheme",
+        "norm. perf",
+        "compression ratio",
+        "mean latency (ns)",
+        "device accesses",
+        "promotions",
+        "demotions (clean)",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.scheme.clone(),
+            format!("{:.3}", r.metrics.perf() / base_perf),
+            format!("{:.2}", r.metrics.compression_ratio),
+            format!("{:.0}", r.device.mean_latency_ns),
+            r.metrics.mem_total.to_string(),
+            r.device.promotions.to_string(),
+            format!("{} ({})", r.device.demotions, r.device.clean_demotions),
+        ]);
+    }
+    t.emit();
+    println!(
+        "\nIBEX stores this workload in {:.2}x less device memory at {:.1}% of raw performance.",
+        rows[1].metrics.compression_ratio,
+        100.0 * rows[1].metrics.perf() / base_perf
+    );
+    println!("Try: cargo run --release --example quickstart -- pr");
+}

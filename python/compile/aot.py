@@ -1,0 +1,67 @@
+"""AOT bridge: lower the L2 engine model to HLO *text* for the Rust runtime.
+
+HLO text (not ``HloModuleProto.serialize()``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``). The HLO text parser reassigns ids, so text
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: python -m compile.aot --out ../artifacts/ibex_size.hlo.txt
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from jax._src.lib import xla_client as xc
+
+from .kernels import ref
+from .model import AOT_BATCH, lower_engine
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/ibex_size.hlo.txt")
+    ap.add_argument("--batch", type=int, default=AOT_BATCH)
+    args = ap.parse_args()
+
+    text = to_hlo_text(lower_engine(args.batch))
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(text)
+
+    # Sidecar consumed by rust/src/runtime to validate artifact/runtime
+    # agreement (batch size and the size-model constants).
+    meta = {
+        "artifact": os.path.basename(args.out),
+        "batch": args.batch,
+        "page_bytes": ref.PAGE_BYTES,
+        "outputs_per_page": 5,
+        "window_words": ref.W,
+        "lit_qb": ref.LIT_QB,
+        "new_qb": ref.NEW_QB,
+        "ext_qb": ref.EXT_QB,
+        "hdr_1k": ref.HDR_1K,
+        "hdr_4k": ref.HDR_4K,
+    }
+    meta_path = os.path.splitext(args.out)[0]
+    meta_path = meta_path[: -len(".hlo")] if meta_path.endswith(".hlo") else meta_path
+    meta_path += ".meta.json"
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {len(text)} chars to {args.out} (+ {os.path.basename(meta_path)})")
+
+
+if __name__ == "__main__":
+    main()

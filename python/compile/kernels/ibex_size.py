@@ -1,0 +1,121 @@
+"""Layer-1 Pallas kernel: IBEX block-compression size analyzer.
+
+One grid step analyzes one 4 KB page. The LZ-style backward match search
+is reformulated as W shifted word-equality reductions (dense VPU work, no
+serial dictionary) — see DESIGN.md §Hardware-Adaptation for the TPU
+mapping rationale.
+
+VMEM/roofline notes (the structural profile for a real-TPU build; we run
+``interpret=True`` on the CPU PJRT plugin):
+
+* per-step working set: 4096 f32 in (16 KiB) + W shifted copies of the
+  (512, 8) word view (W·16 KiB = 128 KiB) + (512,) state vectors —
+  well under the ~16 MiB VMEM budget, so the whole page is a single tile
+  (``BlockSpec((1, 4096))``) and no double-buffering is required: the
+  kernel is compute-bound on vector compares (512·8·W·2 ≈ 65 K lane-ops
+  per page per granularity), not HBM-bound (4 KiB in / 20 B out).
+* all arithmetic is elementwise/reduction VPU work; there is no matmul,
+  so the MXU is intentionally idle — the paper's engine is a pattern
+  matcher, not a GEMM.
+
+The kernel must match ``ref.analyze_pages_ref`` bit-exactly (integer
+outputs); the pytest suite enforces equality, and
+``rust/src/compress/size_model.rs`` mirrors the same constants.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import (
+    EXT_QB,
+    HDR_1K,
+    HDR_4K,
+    LIT_QB,
+    NEW_QB,
+    PAGE_BYTES,
+    W,
+    WORDS_PER_1K,
+    WORDS_PER_PAGE,
+)
+
+_NO_MATCH = 99  # sentinel bestd for unmatched words
+
+
+def _shift_words(words: jnp.ndarray, d: int) -> jnp.ndarray:
+    """words delayed by d rows, zero-filled at the top (no wraparound)."""
+    pad = jnp.zeros((d, 8), dtype=words.dtype)
+    return jnp.concatenate([pad, words[: WORDS_PER_PAGE - d]], axis=0)
+
+
+def _costs(words: jnp.ndarray, idx: jnp.ndarray, block_words: int) -> jnp.ndarray:
+    """Per-word quarter-byte costs, (512,) int32, window reset per block."""
+    matched = jnp.zeros((WORDS_PER_PAGE,), dtype=bool)
+    bestd = jnp.full((WORDS_PER_PAGE,), _NO_MATCH, dtype=jnp.int32)
+    for d in range(W, 0, -1):  # descending: smallest matching d wins
+        eq = jnp.all(words == _shift_words(words, d), axis=1)
+        eq = eq & ((idx % block_words) >= d)
+        matched = matched | eq
+        bestd = jnp.where(eq, jnp.int32(d), bestd)
+
+    # A match extends a run when the previous word (same block) matched at
+    # the same backward distance.
+    prev_matched = jnp.concatenate([jnp.zeros((1,), bool), matched[:-1]])
+    prev_bestd = jnp.concatenate(
+        [jnp.full((1,), _NO_MATCH, jnp.int32), bestd[:-1]]
+    )
+    extend = (
+        matched & prev_matched & (bestd == prev_bestd) & ((idx % block_words) != 0)
+    )
+    return jnp.where(
+        matched,
+        jnp.where(extend, jnp.int32(EXT_QB), jnp.int32(NEW_QB)),
+        jnp.int32(LIT_QB),
+    )
+
+
+def _size_kernel(x_ref, s1_ref, s4_ref):
+    page = x_ref[0, :]  # (4096,) f32 byte values
+    words = page.reshape(WORDS_PER_PAGE, 8)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (WORDS_PER_PAGE, 1), 0)[:, 0]
+
+    # 1 KB granularity (co-located IBEX format): window resets per block.
+    cost1 = _costs(words, idx, WORDS_PER_1K)
+    qb1 = jnp.sum(cost1.reshape(4, WORDS_PER_1K), axis=1)
+    bytes1 = (qb1 + 3) // 4 + HDR_1K
+    nonzero1 = jnp.any(page.reshape(4, 1024) != 0, axis=1)
+    s1_ref[0, :] = jnp.where(nonzero1, bytes1, 0).astype(jnp.int32)
+
+    # 4 KB granularity (page-as-one-block format).
+    cost4 = _costs(words, idx, WORDS_PER_PAGE)
+    qb4 = jnp.sum(cost4)
+    bytes4 = (qb4 + 3) // 4 + HDR_4K
+    nonzero4 = jnp.any(page != 0)
+    s4_ref[0, 0] = jnp.where(nonzero4, bytes4, 0).astype(jnp.int32)
+
+
+def analyze_pages(pages: jnp.ndarray):
+    """Pallas analyzer: (B, 4096) f32 → ((B, 4) i32, (B,) i32).
+
+    Semantics identical to ``ref.analyze_pages_ref``.
+    """
+    b = pages.shape[0]
+    if pages.shape != (b, PAGE_BYTES):
+        raise ValueError(f"expected (B, {PAGE_BYTES}), got {pages.shape}")
+    sizes_1k, size_4k = pl.pallas_call(
+        _size_kernel,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, PAGE_BYTES), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1, 4), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, 4), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        ],
+        interpret=True,  # CPU PJRT: Mosaic custom-calls are TPU-only
+    )(pages)
+    return sizes_1k, size_4k[:, 0]

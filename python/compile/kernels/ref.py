@@ -1,0 +1,110 @@
+"""Pure-jnp oracle for the IBEX compression size model.
+
+This is the correctness reference for the Pallas kernel in
+``ibex_size.py``. The two implementations are structured differently on
+purpose (batched pad-shifts here vs. per-page concatenate-shifts in the
+kernel) so exact integer equality between them is a meaningful check.
+
+Model (see DESIGN.md §Hardware-Adaptation)
+------------------------------------------
+A 4 KB page is viewed as 512 eight-byte words. A word *matches* if it is
+bit-identical to one of the previous ``W`` words inside its compression
+block (1 KB block for the co-located IBEX format, the whole page for the
+4 KB format). Costs are accounted in quarter-bytes (qb):
+
+* literal word ......... 36 qb  (8 B literal + 1 B tag)
+* new match token ...... 12 qb  (3 B offset/length token)
+* run extension ........  1 qb  (amortized long-match encoding)
+
+A match is a *run extension* when the previous word matched at the same
+backward distance. Block size = ceil(total_qb / 4) + header, and an
+all-zero block costs 0 bytes (type bits encode it, per paper §4.1.2).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Model constants — mirrored bit-exactly by the Pallas kernel and by the
+# Rust analytic model (rust/src/compress/size_model.rs).
+W = 8  # match window, in 8-byte words (64 B backward window)
+LIT_QB = 36  # literal word cost (quarter-bytes)
+NEW_QB = 12  # new match token cost
+EXT_QB = 1  # run-extension cost
+HDR_1K = 4  # per-1KB-block header bytes
+HDR_4K = 16  # per-4KB-page header bytes
+
+WORDS_PER_PAGE = 512
+WORDS_PER_1K = 128
+PAGE_BYTES = 4096
+
+
+def _match_state(words: jnp.ndarray, block_words: int):
+    """Match/best-distance state for every word, window confined to blocks.
+
+    Args:
+      words: (B, 512, 8) f32 byte values.
+      block_words: window reset granularity (128 for 1 KB, 512 for 4 KB).
+
+    Returns:
+      (matched, bestd): (B, 512) bool / int32. ``bestd`` is the smallest
+      matching backward distance in [1, W], 99 where unmatched.
+    """
+    b = words.shape[0]
+    idx = jnp.arange(WORDS_PER_PAGE)
+    matched = jnp.zeros((b, WORDS_PER_PAGE), dtype=bool)
+    bestd = jnp.full((b, WORDS_PER_PAGE), 99, dtype=jnp.int32)
+    # Descending d so smaller distances overwrite: bestd = first match.
+    for d in range(W, 0, -1):
+        shifted = jnp.pad(words, ((0, 0), (d, 0), (0, 0)))[:, :WORDS_PER_PAGE]
+        eq = jnp.all(words == shifted, axis=2) & ((idx % block_words) >= d)
+        matched = matched | eq
+        bestd = jnp.where(eq, jnp.int32(d), bestd)
+    return matched, bestd
+
+
+def _word_costs(words: jnp.ndarray, block_words: int) -> jnp.ndarray:
+    """Per-word cost in quarter-bytes, shape (B, 512) int32."""
+    matched, bestd = _match_state(words, block_words)
+    idx = jnp.arange(WORDS_PER_PAGE)
+    prev_ok = (idx % block_words) != 0
+    prev_matched = jnp.pad(matched, ((0, 0), (1, 0)))[:, :WORDS_PER_PAGE]
+    prev_bestd = jnp.pad(bestd, ((0, 0), (1, 0)), constant_values=99)[
+        :, :WORDS_PER_PAGE
+    ]
+    extend = matched & prev_matched & (bestd == prev_bestd) & prev_ok
+    return jnp.where(
+        matched,
+        jnp.where(extend, jnp.int32(EXT_QB), jnp.int32(NEW_QB)),
+        jnp.int32(LIT_QB),
+    )
+
+
+def analyze_pages_ref(pages: jnp.ndarray):
+    """Reference analyzer.
+
+    Args:
+      pages: (B, 4096) f32, each element an exact byte value in [0, 255].
+
+    Returns:
+      sizes_1k: (B, 4) int32 — estimated compressed bytes per 1 KB block
+        (0 for an all-zero block).
+      size_4k: (B,) int32 — estimated compressed bytes for the whole page
+        as one block (0 for an all-zero page).
+    """
+    b = pages.shape[0]
+    words = pages.reshape(b, WORDS_PER_PAGE, 8)
+
+    cost_1k = _word_costs(words, WORDS_PER_1K)
+    qb_1k = cost_1k.reshape(b, 4, WORDS_PER_1K).sum(axis=2)
+    bytes_1k = (qb_1k + 3) // 4 + HDR_1K
+    nonzero_1k = jnp.any(pages.reshape(b, 4, 1024) != 0, axis=2)
+    sizes_1k = jnp.where(nonzero_1k, bytes_1k, 0).astype(jnp.int32)
+
+    cost_4k = _word_costs(words, WORDS_PER_PAGE)
+    qb_4k = cost_4k.sum(axis=1)
+    bytes_4k = (qb_4k + 3) // 4 + HDR_4K
+    nonzero_4k = jnp.any(pages != 0, axis=1)
+    size_4k = jnp.where(nonzero_4k, bytes_4k, 0).astype(jnp.int32)
+
+    return sizes_1k, size_4k

@@ -1,0 +1,36 @@
+"""Layer-2 JAX compute graph: the device compression-engine model.
+
+The CXL expander's compression engine is, from the coordinator's point of
+view, a function from page contents to per-block compressed sizes — that
+is what decides ``num_chunks``, chunk packing, promotion/demotion traffic
+and the compression ratio. This module is that function as a JAX graph,
+calling the Layer-1 Pallas kernel, AOT-lowered once by ``aot.py`` and then
+executed from Rust via PJRT (Python is never on the request path).
+
+Outputs are packed into a single (B, 5) i32 tensor
+``[size_1k[0..4), size_4k]`` so the Rust side unpacks one literal.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ibex_size import analyze_pages
+from .kernels.ref import PAGE_BYTES
+
+# Canonical AOT batch: Rust pads partial batches with zero pages (which
+# analyze to size 0 in both granularities and are discarded).
+AOT_BATCH = 64
+
+
+def engine_model(pages: jnp.ndarray) -> jnp.ndarray:
+    """(B, 4096) f32 byte values → (B, 5) i32 [4×1KB sizes, 1×4KB size]."""
+    sizes_1k, size_4k = analyze_pages(pages)
+    return jnp.concatenate([sizes_1k, size_4k[:, None]], axis=1)
+
+
+def lower_engine(batch: int = AOT_BATCH):
+    """AOT-lower the engine model for a fixed batch size."""
+    spec = jax.ShapeDtypeStruct((batch, PAGE_BYTES), jnp.float32)
+    return jax.jit(engine_model).lower(spec)

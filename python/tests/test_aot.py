@@ -1,0 +1,41 @@
+"""AOT pipeline tests: HLO text emission + metadata sidecar."""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from compile.aot import to_hlo_text
+from compile.model import lower_engine
+
+
+def test_hlo_text_wellformed():
+    text = to_hlo_text(lower_engine(batch=2))
+    assert text.startswith("HloModule")
+    assert "ROOT" in text
+    # return_tuple=True: the entry computation returns a tuple.
+    assert "(s32[2,5]" in text.replace(" ", "") or "s32[2,5]" in text
+
+
+def test_hlo_text_deterministic():
+    a = to_hlo_text(lower_engine(batch=2))
+    b = to_hlo_text(lower_engine(batch=2))
+    assert a == b
+
+
+def test_aot_cli_writes_artifact_and_sidecar(tmp_path):
+    out = tmp_path / "ibex_size.hlo.txt"
+    env = dict(os.environ)
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out), "--batch", "2"],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+    )
+    assert out.exists() and out.read_text().startswith("HloModule")
+    meta = json.loads((tmp_path / "ibex_size.meta.json").read_text())
+    assert meta["batch"] == 2
+    assert meta["page_bytes"] == 4096
+    assert meta["outputs_per_page"] == 5

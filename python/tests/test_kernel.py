@@ -1,0 +1,169 @@
+"""L1 correctness: Pallas kernel vs pure-jnp oracle — the CORE signal.
+
+Integer outputs must match *exactly* (no allclose fuzz): the Rust
+analytic model mirrors the same constants and the whole simulator keys
+chunk allocation off these values.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels.ibex_size import analyze_pages
+from compile.kernels.ref import analyze_pages_ref
+
+from . import util
+
+
+def run_both(pages_u8: np.ndarray):
+    x = util.as_f32(pages_u8)
+    k1, k4 = analyze_pages(x)
+    r1, r4 = analyze_pages_ref(x)
+    return (np.asarray(k1), np.asarray(k4)), (np.asarray(r1), np.asarray(r4))
+
+
+def assert_equal_outputs(pages_u8: np.ndarray):
+    (k1, k4), (r1, r4) = run_both(pages_u8)
+    np.testing.assert_array_equal(k1, r1)
+    np.testing.assert_array_equal(k4, r4)
+
+
+# ------------------------------------------------------------------
+# Exact hand-computed values (pin the cost model itself).
+# ------------------------------------------------------------------
+
+
+def test_zero_page_is_free():
+    (k1, k4), _ = run_both(util.zero_page())
+    assert k1.tolist() == [[0, 0, 0, 0]]
+    assert k4.tolist() == [0]
+
+
+def test_constant_page_exact():
+    # Per 1KB block: lit(36) + new(12) + 126*ext(1) = 174 qb -> 44 B + 4.
+    # Page: lit + new + 510*ext = 558 qb -> 140 B + 16.
+    (k1, k4), _ = run_both(util.const_page(0x5A))
+    assert k1.tolist() == [[48, 48, 48, 48]]
+    assert k4.tolist() == [156]
+
+
+def test_incompressible_exact():
+    # A page where no 8B word repeats within the 64B window: all literal.
+    words = np.arange(512, dtype=np.uint32)
+    page = np.zeros(4096, dtype=np.uint8)
+    page[0::8] = words & 0xFF
+    page[1::8] = (words >> 8) & 0xFF
+    page[2::8] = 1  # avoid the all-zero word at index 0
+    (k1, k4), _ = run_both(page)
+    # 128 literals * 36 qb = 4608 qb -> 1152 B + 4 header.
+    assert k1.tolist() == [[1156, 1156, 1156, 1156]]
+    assert k4.tolist() == [36 * 512 // 4 + 16]
+
+
+def test_period8_page_exact():
+    # One 8B motif repeated: same as constant-page cost shape.
+    rng = np.random.default_rng(7)
+    page = util.periodic_page(rng, period=8)
+    (k1, k4), _ = run_both(page)
+    assert k1.tolist() == [[48, 48, 48, 48]]
+    assert k4.tolist() == [156]
+
+
+def test_zero_blocks_inside_nonzero_page():
+    page = util.random_page(np.random.default_rng(3))
+    page[1024:2048] = 0
+    (k1, _), _ = run_both(page)
+    assert k1[0, 1] == 0
+    assert all(k1[0, i] > 0 for i in (0, 2, 3))
+
+
+# ------------------------------------------------------------------
+# Kernel == oracle on the full corpus and under hypothesis sweeps.
+# ------------------------------------------------------------------
+
+
+def test_corpus_kernel_matches_ref():
+    assert_equal_outputs(util.corpus(seed=0))
+
+
+@pytest.mark.parametrize("batch", [1, 2, 3, 5, 8])
+def test_batch_sizes(batch):
+    rng = np.random.default_rng(100 + batch)
+    pages = np.stack([util.mixed_page(rng) for _ in range(batch)])
+    assert_equal_outputs(pages)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    batch=st.integers(1, 4),
+    kind=st.sampled_from(["random", "periodic", "mixed", "sparse"]),
+)
+def test_hypothesis_kernel_matches_ref(seed, batch, kind):
+    rng = np.random.default_rng(seed)
+    pages = []
+    for _ in range(batch):
+        if kind == "random":
+            pages.append(util.random_page(rng))
+        elif kind == "periodic":
+            pages.append(
+                util.periodic_page(
+                    rng, int(rng.integers(8, 129)), float(rng.uniform(0, 0.2))
+                )
+            )
+        elif kind == "mixed":
+            pages.append(util.mixed_page(rng))
+        else:  # sparse: mostly zero with a few random bytes
+            p = np.zeros(4096, dtype=np.uint8)
+            n = int(rng.integers(0, 64))
+            p[rng.integers(0, 4096, n)] = rng.integers(0, 256, n, dtype=np.uint8)
+            pages.append(p)
+    assert_equal_outputs(np.stack(pages))
+
+
+# ------------------------------------------------------------------
+# Structural properties of the size model.
+# ------------------------------------------------------------------
+
+
+def test_block_sizes_depend_only_on_block_bytes():
+    """1KB sizes must be a pure function of that block's bytes (the
+    window resets at block boundaries — required for independently
+    decompressible co-located blocks, paper §4.6)."""
+    rng = np.random.default_rng(42)
+    block = util.periodic_page(rng, 24)[:1024]
+    others = [util.random_page(rng) for _ in range(3)]
+    sizes = []
+    for slot in range(4):
+        page = util.random_page(rng)
+        page[slot * 1024 : (slot + 1) * 1024] = block
+        (k1, _), _ = run_both(page)
+        sizes.append(int(k1[0, slot]))
+    assert len(set(sizes)) == 1, sizes
+
+
+def test_monotone_compressibility_ordering():
+    rng = np.random.default_rng(9)
+    (k1_const, _), _ = run_both(util.const_page(1))
+    (k1_per, _), _ = run_both(util.periodic_page(rng, 32))
+    (k1_noisy, _), _ = run_both(util.periodic_page(rng, 32, noise=0.1))
+    (k1_rand, _), _ = run_both(util.random_page(rng))
+    assert k1_const.sum() <= k1_per.sum() <= k1_noisy.sum() <= k1_rand.sum()
+
+
+def test_sizes_bounded():
+    (k1, k4), _ = run_both(util.corpus(seed=5))
+    assert ((k1 == 0) | ((k1 >= ref.HDR_1K) & (k1 <= 1156))).all()
+    assert ((k4 == 0) | ((k4 >= ref.HDR_4K) & (k4 <= 4624))).all()
+
+
+def test_determinism():
+    pages = util.corpus(seed=11)
+    a = run_both(pages)[0]
+    b = run_both(pages)[0]
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])

@@ -1,0 +1,51 @@
+"""L2 model tests: packing, batch invariance, lowering."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from compile.kernels.ibex_size import analyze_pages
+from compile.model import AOT_BATCH, engine_model, lower_engine
+
+from . import util
+
+
+def test_engine_model_packs_kernel_outputs():
+    pages = util.as_f32(util.corpus(seed=1))
+    out = np.asarray(engine_model(pages))
+    k1, k4 = analyze_pages(pages)
+    assert out.shape == (pages.shape[0], 5)
+    np.testing.assert_array_equal(out[:, :4], np.asarray(k1))
+    np.testing.assert_array_equal(out[:, 4], np.asarray(k4))
+
+
+def test_batch_slot_invariance():
+    """A page's analysis must not depend on its batch position or on the
+    other pages in the batch (the Rust runtime pads partial batches)."""
+    rng = np.random.default_rng(2)
+    page = util.mixed_page(rng)
+    alone = np.asarray(engine_model(util.as_f32(page)))[0]
+    for slot in (0, 3, 7):
+        batch = np.stack([util.random_page(rng) for _ in range(8)])
+        batch[slot] = page
+        out = np.asarray(engine_model(util.as_f32(batch)))
+        np.testing.assert_array_equal(out[slot], alone)
+
+
+def test_zero_padding_is_inert():
+    """Zero pad pages analyze to all-zero rows (runtime discards them)."""
+    rng = np.random.default_rng(4)
+    batch = np.zeros((4, 4096), dtype=np.uint8)
+    batch[0] = util.mixed_page(rng)
+    out = np.asarray(engine_model(util.as_f32(batch)))
+    np.testing.assert_array_equal(out[1:], 0)
+
+
+def test_lowering_shapes():
+    lowered = lower_engine(batch=4)
+    text = str(lowered.compiler_ir("stablehlo"))
+    assert "4x4096" in text and "4x5" in text
+
+
+def test_default_batch_constant():
+    assert AOT_BATCH == 64

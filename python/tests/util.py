@@ -1,0 +1,73 @@
+"""Shared synthetic page generators for the python test-suite.
+
+Mirrors the content-class taxonomy used by the Rust workload generator
+(rust/src/workload/content.rs): zero, constant, periodic-with-noise,
+random (incompressible), and mixed pages.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+PAGE_BYTES = 4096
+
+
+def zero_page() -> np.ndarray:
+    return np.zeros(PAGE_BYTES, dtype=np.uint8)
+
+
+def const_page(value: int = 0xA5) -> np.ndarray:
+    return np.full(PAGE_BYTES, value, dtype=np.uint8)
+
+
+def random_page(rng: np.random.Generator) -> np.ndarray:
+    return rng.integers(0, 256, PAGE_BYTES, dtype=np.uint8)
+
+
+def periodic_page(
+    rng: np.random.Generator, period: int = 16, noise: float = 0.0
+) -> np.ndarray:
+    """Repeating `period`-byte motif; `noise` fraction of bytes corrupted."""
+    motif = rng.integers(0, 256, period, dtype=np.uint8)
+    page = np.tile(motif, PAGE_BYTES // period + 1)[:PAGE_BYTES].copy()
+    if noise > 0:
+        n = int(noise * PAGE_BYTES)
+        pos = rng.integers(0, PAGE_BYTES, n)
+        page[pos] = rng.integers(0, 256, n, dtype=np.uint8)
+    return page
+
+
+def mixed_page(rng: np.random.Generator) -> np.ndarray:
+    """Per-1KB-block mixture of the other classes."""
+    blocks = []
+    for _ in range(4):
+        kind = rng.integers(0, 4)
+        if kind == 0:
+            blocks.append(np.zeros(1024, dtype=np.uint8))
+        elif kind == 1:
+            blocks.append(np.full(1024, rng.integers(0, 256), dtype=np.uint8))
+        elif kind == 2:
+            blocks.append(periodic_page(rng, int(rng.integers(8, 65)))[:1024])
+        else:
+            blocks.append(rng.integers(0, 256, 1024, dtype=np.uint8))
+    return np.concatenate(blocks)
+
+
+def corpus(seed: int = 0, n_random: int = 8) -> np.ndarray:
+    """A (N, 4096) uint8 corpus covering every content class."""
+    rng = np.random.default_rng(seed)
+    pages = [zero_page(), const_page(0), const_page(0xFF), const_page(0x42)]
+    for period in (8, 16, 24, 32, 64, 128):
+        pages.append(periodic_page(rng, period))
+        pages.append(periodic_page(rng, period, noise=0.05))
+    for _ in range(n_random):
+        pages.append(random_page(rng))
+        pages.append(mixed_page(rng))
+    return np.stack(pages)
+
+
+def as_f32(pages: np.ndarray) -> np.ndarray:
+    """uint8 pages → exact f32 byte values (model input encoding)."""
+    if pages.ndim == 1:
+        pages = pages[None, :]
+    return pages.astype(np.float32)

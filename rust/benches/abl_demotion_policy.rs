@@ -1,0 +1,81 @@
+//! Ablation (§4.4 claims): demotion-policy comparison.
+//!
+//! * "61% reduction in memory traffic compared to a doubly linked
+//!   list-based LRU implementation" — we run IBEX with its
+//!   second-chance activity region vs an in-memory linked-list LRU
+//!   (3 control accesses per promoted touch) vs FIFO vs random.
+//! * "random selection rarely occurs (0.6% of total selections)".
+
+mod common;
+
+use ibex::compress::AnalyticSizeModel;
+use ibex::expander::ibex::{DemotionPolicy, Ibex};
+use ibex::expander::Scheme;
+use ibex::host::HostSim;
+use ibex::stats::Table;
+use ibex::workload::{by_name, WorkloadOracle};
+
+fn main() {
+    common::banner("Ablation §4.4", "demotion-policy traffic comparison");
+    let policies = [
+        ("second-chance", DemotionPolicy::SecondChance),
+        ("lru-list", DemotionPolicy::LruList),
+        ("fifo", DemotionPolicy::Fifo),
+        ("random", DemotionPolicy::Random),
+    ];
+    // Thrash-prone workloads where demotion policy matters.
+    let workloads = ["omnetpp", "pr", "cc", "bfs"];
+    let mut t = Table::new(
+        "Demotion policy — control traffic and precision",
+        &[
+            "workload",
+            "policy",
+            "total accesses",
+            "control accesses",
+            "demotions",
+            "random %",
+        ],
+    );
+    let mut clock_ctl = Vec::new();
+    let mut lru_ctl = Vec::new();
+    for &w in &workloads {
+        let spec = by_name(w).unwrap();
+        for (name, policy) in policies {
+            let cfg = common::bench_cfg();
+            let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
+            let mut dev = Ibex::with_policy(&cfg, policy);
+            let mut sim = HostSim::new(&cfg, &spec);
+            let m = sim.run(&mut dev, &mut oracle);
+            let s = dev.stats();
+            let rand_pct = if s.victim_selections > 0 {
+                100.0 * s.random_victims as f64 / s.victim_selections as f64
+            } else {
+                0.0
+            };
+            if name == "second-chance" {
+                clock_ctl.push(m.mem_by_kind[0] as f64);
+            }
+            if name == "lru-list" {
+                lru_ctl.push(m.mem_by_kind[0] as f64);
+            }
+            t.row(vec![
+                w.to_string(),
+                name.to_string(),
+                m.mem_total.to_string(),
+                m.mem_by_kind[0].to_string(),
+                s.demotions.to_string(),
+                format!("{rand_pct:.2}%"),
+            ]);
+        }
+    }
+    t.emit();
+    let saved: Vec<f64> = clock_ctl
+        .iter()
+        .zip(&lru_ctl)
+        .map(|(c, l)| 1.0 - c / l.max(1.0))
+        .collect();
+    println!(
+        "\nsecond-chance control-traffic savings vs linked-list LRU: {:.1}% avg (paper: 61%)",
+        ibex::stats::mean(&saved) * 100.0
+    );
+}

@@ -1,0 +1,108 @@
+//! Size-model calibration: the analytic/Pallas size model vs real
+//! compressors (our LZ77 codec and zstd-1/-3) on the content-class
+//! corpus the workloads actually generate.
+//!
+//! The simulator needs *ordering* and *magnitude band* fidelity, not
+//! byte-exact sizes; this bench quantifies both (see DESIGN.md
+//! §Hardware-Adaptation).
+
+mod common;
+
+use ibex::compress::{lz, size_model};
+use ibex::rng::Pcg64;
+use ibex::stats::Table;
+
+fn spearman(a: &[f64], b: &[f64]) -> f64 {
+    fn ranks(v: &[f64]) -> Vec<f64> {
+        let mut idx: Vec<usize> = (0..v.len()).collect();
+        idx.sort_by(|&i, &j| v[i].partial_cmp(&v[j]).unwrap());
+        let mut r = vec![0.0; v.len()];
+        for (rank, &i) in idx.iter().enumerate() {
+            r[i] = rank as f64;
+        }
+        r
+    }
+    let (ra, rb) = (ranks(a), ranks(b));
+    let ma = ra.iter().sum::<f64>() / ra.len() as f64;
+    let mb = rb.iter().sum::<f64>() / rb.len() as f64;
+    let (mut num, mut da, mut db) = (0.0, 0.0, 0.0);
+    for i in 0..ra.len() {
+        num += (ra[i] - ma) * (rb[i] - mb);
+        da += (ra[i] - ma).powi(2);
+        db += (rb[i] - mb).powi(2);
+    }
+    num / (da * db).sqrt()
+}
+
+fn corpus() -> Vec<(String, Vec<u8>)> {
+    let mut rng = Pcg64::new(2024, 7);
+    let mut pages = vec![
+        ("zero".to_string(), vec![0u8; 4096]),
+        ("const".to_string(), vec![0xA5u8; 4096]),
+    ];
+    for period in [8usize, 16, 24, 32, 48, 64] {
+        for noise_words in [0usize, 4, 16, 48, 128] {
+            let motif: Vec<u8> = (0..period).map(|_| rng.next_u64() as u8).collect();
+            let mut page: Vec<u8> = (0..4096).map(|i| motif[i % period]).collect();
+            for _ in 0..noise_words {
+                let w = rng.below(512) as usize;
+                for k in 0..8 {
+                    page[w * 8 + k] = rng.next_u64() as u8;
+                }
+            }
+            pages.push((format!("p{period}n{noise_words}"), page));
+        }
+    }
+    for v in 0..6 {
+        pages.push((
+            format!("rand{v}"),
+            (0..4096).map(|_| rng.next_u64() as u8).collect(),
+        ));
+    }
+    pages
+}
+
+fn main() {
+    common::banner("Calibration", "size model vs real compressors");
+    let corpus = corpus();
+    let model: Vec<f64> = corpus
+        .iter()
+        .map(|(_, p)| size_model::analyze_page(p).page as f64)
+        .collect();
+    let ours: Vec<f64> = corpus
+        .iter()
+        .map(|(_, p)| lz::compressed_size(p) as f64)
+        .collect();
+    let z1: Vec<f64> = corpus
+        .iter()
+        .map(|(_, p)| zstd::bulk::compress(p, 1).unwrap().len() as f64)
+        .collect();
+    let z3: Vec<f64> = corpus
+        .iter()
+        .map(|(_, p)| zstd::bulk::compress(p, 3).unwrap().len() as f64)
+        .collect();
+
+    let mut t = Table::new(
+        "Calibration — compressed sizes per content class (bytes)",
+        &["class", "size model", "our LZ77", "zstd-1", "zstd-3"],
+    );
+    for (i, (name, _)) in corpus.iter().enumerate() {
+        t.row(vec![
+            name.clone(),
+            format!("{:.0}", model[i]),
+            format!("{:.0}", ours[i]),
+            format!("{:.0}", z1[i]),
+            format!("{:.0}", z3[i]),
+        ]);
+    }
+    t.emit();
+
+    let mut t2 = Table::new(
+        "Calibration — rank correlation of the size model",
+        &["vs", "spearman rho"],
+    );
+    t2.row(vec!["our LZ77".into(), format!("{:.3}", spearman(&model, &ours))]);
+    t2.row(vec!["zstd-1".into(), format!("{:.3}", spearman(&model, &z1))]);
+    t2.row(vec!["zstd-3".into(), format!("{:.3}", spearman(&model, &z3))]);
+    t2.emit();
+}

@@ -1,0 +1,66 @@
+//! Shared plumbing for the figure benches.
+//!
+//! Every bench binary prints the rows of one paper table/figure via
+//! `ibex::stats::Table`. Scale knobs:
+//!
+//! * `IBEX_BENCH_INSTS`  — instructions per core (default 4M; the
+//!   EXPERIMENTS.md runs use 8M+).
+//! * `IBEX_BENCH_QUICK=1` — 1M instructions, for smoke runs.
+//! * `IBEX_THREADS`      — worker pool width.
+//! * `IBEX_RESULTS_DIR`  — also dump CSVs there.
+
+#![allow(dead_code)]
+
+use ibex::config::SimConfig;
+use ibex::workload;
+
+/// All ten Table-2 workloads, in the paper's figure order.
+pub fn workloads() -> Vec<&'static str> {
+    workload::names()
+}
+
+/// Bench footprint scale. The paper simulates 1 B instructions against
+/// full-size footprints; we scale footprints AND the promoted region by
+/// 1/64 and run ≥8 M instructions, so every workload completes multiple
+/// working-set sweeps inside the measured window (steady-state behaviour,
+/// like the paper) while preserving the working-set : promoted-region
+/// ratios that drive promotion/demotion. The metadata cache scales to
+/// 24 KB to keep its reach between footprint and promoted-region sizes.
+pub const BENCH_SCALE: f64 = 1.0 / 64.0;
+
+/// Bench-scale base configuration (Table 1, scaled as above).
+pub fn bench_cfg() -> SimConfig {
+    let mut c = SimConfig::table1();
+    c.footprint_scale = BENCH_SCALE;
+    c.instructions = insts();
+    c.warmup_instructions = insts() / 4;
+    c.promoted_bytes = scaled_promoted_mb(512);
+    c.meta_cache_bytes = 24 * 1024;
+    c
+}
+
+/// Promoted-region size for a paper-scale value in MB, scaled with the
+/// bench footprint scale so working-set : promoted ratios match the paper.
+pub fn scaled_promoted_mb(paper_mb: u64) -> u64 {
+    ((paper_mb << 20) as f64 * BENCH_SCALE) as u64
+}
+
+pub fn insts() -> u64 {
+    if std::env::var("IBEX_BENCH_QUICK").is_ok_and(|v| v == "1") {
+        return 2_000_000;
+    }
+    std::env::var("IBEX_BENCH_INSTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8_000_000)
+}
+
+/// Pretty banner.
+pub fn banner(fig: &str, what: &str) {
+    println!("=== {fig}: {what}");
+    println!(
+        "    (instructions/core = {}, threads = {})",
+        insts(),
+        ibex::coordinator::parallelism()
+    );
+}

@@ -1,0 +1,46 @@
+//! Figure 1: performance of compressed CXL memory under dual-channel
+//! (limited) internal bandwidth, normalized to the same device with
+//! unlimited internal bandwidth at identical latency.
+//!
+//! Paper shape: ~35% average degradation, worst ~60% (cc) — the
+//! motivation for internal-bandwidth-efficient management. The
+//! compressed device here is baseline promotion-based block compression
+//! (IBEX with all optimizations off), matching §3.2's motivation setup.
+
+mod common;
+
+use ibex::config::IbexOptions;
+use ibex::coordinator::{report, run_many, Job};
+
+fn main() {
+    common::banner(
+        "Fig 1",
+        "dual-channel vs unlimited internal bandwidth (compressed device)",
+    );
+    let workloads = common::workloads();
+    let mut jobs = Vec::new();
+    for unlimited in [true, false] {
+        for &w in &workloads {
+            let mut cfg = common::bench_cfg();
+            cfg.ibex = IbexOptions::baseline();
+            cfg.unlimited_internal_bw = unlimited;
+            jobs.push(Job::new(if unlimited { "ideal" } else { "dual" }, cfg, w));
+        }
+    }
+    let results = run_many(jobs);
+    let (ideal, dual) = results.split_at(workloads.len());
+    let norm = report::normalize(dual, ideal);
+    let t = report::perf_table(
+        "Fig 1 — dual-channel compressed CXL vs ideal internal bandwidth",
+        &workloads,
+        &["limited/ideal"],
+        &[norm.clone()],
+    );
+    t.emit();
+    let avg_deg = 1.0 - ibex::stats::geomean(&norm);
+    println!(
+        "\naverage degradation: {:.1}% (paper: ~35%), worst: {:.1}% (paper: ~60% on cc)",
+        avg_deg * 100.0,
+        (1.0 - norm.iter().cloned().fold(f64::INFINITY, f64::min)) * 100.0
+    );
+}

@@ -1,0 +1,74 @@
+//! Figure 9: normalized performance of the six schemes vs uncompressed
+//! CXL memory across the ten Table-2 workloads (+ geomean).
+//!
+//! Paper shape to reproduce: Compresso fastest (line-level, light
+//! management); IBEX best among block-level — 1.28× over TMCC, 1.40×
+//! over DyLeCT, 1.58× over MXT, 4.64× over DMC; zero-heavy workloads
+//! (lbm, bfs, tc) beat uncompressed; omnetpp/pr/cc degrade (undersized
+//! promoted region).
+
+mod common;
+
+use ibex::coordinator::{report, run_many, Job};
+use ibex::stats::{geomean, Table};
+
+fn main() {
+    common::banner("Fig 9", "normalized performance of different schemes");
+    let schemes = [
+        "uncompressed",
+        "compresso",
+        "mxt",
+        "dmc",
+        "tmcc",
+        "dylect",
+        "ibex",
+    ];
+    let workloads = common::workloads();
+
+    let mut jobs = Vec::new();
+    for &s in &schemes {
+        for &w in &workloads {
+            let mut cfg = common::bench_cfg();
+            cfg.set("scheme", s).unwrap();
+            jobs.push(Job::new(s, cfg, w));
+        }
+    }
+    let results = run_many(jobs);
+    let per_scheme: Vec<&[ibex::coordinator::JobResult]> =
+        results.chunks(workloads.len()).collect();
+    let baseline = per_scheme[0];
+
+    let mut norm = Vec::new();
+    for series in &per_scheme[1..] {
+        norm.push(report::normalize(series, baseline));
+    }
+    let t = report::perf_table(
+        "Fig 9 — normalized performance (vs uncompressed)",
+        &workloads,
+        &schemes[1..],
+        &norm,
+    );
+    t.emit();
+
+    // The paper's headline ratios (IBEX vs each block-level scheme).
+    let gm: Vec<f64> = norm.iter().map(|s| geomean(s)).collect();
+    let idx = |name: &str| schemes[1..].iter().position(|&s| s == name).unwrap();
+    let ibex = gm[idx("ibex")];
+    let mut t2 = Table::new(
+        "Fig 9 headline — IBEX speedup over block-level schemes",
+        &["vs", "paper", "measured"],
+    );
+    for (name, paper) in [
+        ("tmcc", 1.28),
+        ("dylect", 1.40),
+        ("mxt", 1.58),
+        ("dmc", 4.64),
+    ] {
+        t2.row(vec![
+            name.to_string(),
+            format!("{paper:.2}x"),
+            format!("{:.2}x", ibex / gm[idx(name)]),
+        ]);
+    }
+    t2.emit();
+}

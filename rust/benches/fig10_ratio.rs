@@ -1,0 +1,66 @@
+//! Figure 10: compression ratios of Compresso, DMC, MXT, TMCC,
+//! IBEX-4KB and IBEX-1KB (zero/unaccessed regions excluded).
+//!
+//! Paper shape: IBEX-1KB ≈ 1.59 > MXT ≈ 1.49; Compresso lowest ≈ 1.24;
+//! DMC moderate ≈ 1.31; TMCC's variable chunks pack well but need
+//! complex management.
+
+mod common;
+
+use ibex::coordinator::{run_many, Job};
+use ibex::stats::{geomean, Table};
+
+fn main() {
+    common::banner("Fig 10", "compression ratios of the schemes");
+    let variants: Vec<(&str, Box<dyn Fn(&mut ibex::config::SimConfig)>)> = vec![
+        ("compresso", Box::new(|c| c.set("scheme", "compresso").unwrap())),
+        ("dmc", Box::new(|c| c.set("scheme", "dmc").unwrap())),
+        ("mxt", Box::new(|c| c.set("scheme", "mxt").unwrap())),
+        ("tmcc", Box::new(|c| c.set("scheme", "tmcc").unwrap())),
+        (
+            "ibex-4kb",
+            Box::new(|c| {
+                c.set("scheme", "ibex").unwrap();
+                c.ibex.colocate = false;
+                c.ibex.compact = false;
+                // 4 KB blocks: 4x engine latency (§6.2).
+                c.comp_cycles_per_kb = 256;
+                c.decomp_cycles_per_kb = 64;
+            }),
+        ),
+        ("ibex-1kb", Box::new(|c| c.set("scheme", "ibex").unwrap())),
+    ];
+    let workloads = common::workloads();
+    let mut jobs = Vec::new();
+    for (label, tweak) in &variants {
+        for &w in &workloads {
+            let mut cfg = common::bench_cfg();
+            tweak(&mut cfg);
+            jobs.push(Job::new(*label, cfg, w));
+        }
+    }
+    let results = run_many(jobs);
+
+    let mut headers = vec!["workload"];
+    headers.extend(variants.iter().map(|(l, _)| *l));
+    let mut t = Table::new("Fig 10 — compression ratio", &headers);
+    let chunks: Vec<_> = results.chunks(workloads.len()).collect();
+    for (wi, w) in workloads.iter().enumerate() {
+        let mut row = vec![w.to_string()];
+        for series in &chunks {
+            row.push(format!("{:.3}", series[wi].metrics.compression_ratio));
+        }
+        t.row(row);
+    }
+    let mut gm = vec!["geomean".to_string()];
+    for series in &chunks {
+        let rs: Vec<f64> = series
+            .iter()
+            .map(|r| r.metrics.compression_ratio.max(1e-9))
+            .collect();
+        gm.push(format!("{:.3}", geomean(&rs)));
+    }
+    t.row(gm);
+    t.emit();
+    println!("\npaper anchors: IBEX-1KB 1.59, MXT 1.49, DMC 1.31, Compresso 1.24");
+}

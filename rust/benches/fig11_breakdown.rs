@@ -1,0 +1,70 @@
+//! Figure 11: memory-access breakdown (control / promotion / demotion /
+//! final) of TMCC vs IBEX, normalized to TMCC's total per workload.
+//!
+//! Paper shape: IBEX ≈ 30% less total traffic on average; pr/cc ≈ 72-75%
+//! less (shadowed promotion kills ≥99% of their demotion traffic;
+//! co-location cuts promotion traffic ~34%).
+
+mod common;
+
+use ibex::coordinator::{run_many, Job};
+use ibex::stats::Table;
+
+fn main() {
+    common::banner("Fig 11", "memory access breakdown, TMCC vs IBEX");
+    let workloads = common::workloads();
+    let mut jobs = Vec::new();
+    for scheme in ["tmcc", "ibex"] {
+        for &w in &workloads {
+            let mut cfg = common::bench_cfg();
+            cfg.set("scheme", scheme).unwrap();
+            jobs.push(Job::new(scheme, cfg, w));
+        }
+    }
+    let results = run_many(jobs);
+    let (tmcc, ibex_r) = results.split_at(workloads.len());
+
+    let mut t = Table::new(
+        "Fig 11 — access breakdown normalized to TMCC total",
+        &[
+            "workload", "scheme", "control", "promotion", "demotion", "final", "total",
+        ],
+    );
+    let mut ratios = Vec::new();
+    for (wi, _) in workloads.iter().enumerate() {
+        let denom = tmcc[wi].metrics.mem_total.max(1) as f64;
+        t.row(ibex::coordinator::report::breakdown_row(&tmcc[wi], denom));
+        t.row(ibex::coordinator::report::breakdown_row(&ibex_r[wi], denom));
+        ratios.push(ibex_r[wi].metrics.mem_total as f64 / denom);
+    }
+    t.emit();
+
+    let avg_savings = 1.0 - ibex::stats::mean(&ratios);
+    println!(
+        "\nIBEX total-traffic savings vs TMCC: {:.1}% average (paper: ~30%)",
+        avg_savings * 100.0
+    );
+    // §4.5 clean-demotion anchor.
+    let mut t2 = Table::new(
+        "Fig 11 aux — demotion behaviour (IBEX)",
+        &["workload", "demotions", "clean", "clean %", "demo traffic vs TMCC"],
+    );
+    for (wi, w) in workloads.iter().enumerate() {
+        let d = &ibex_r[wi].device;
+        let clean_pct = if d.demotions > 0 {
+            100.0 * d.clean_demotions as f64 / d.demotions as f64
+        } else {
+            0.0
+        };
+        let tm_demo = tmcc[wi].metrics.mem_by_kind[2].max(1) as f64;
+        t2.row(vec![
+            w.to_string(),
+            d.demotions.to_string(),
+            d.clean_demotions.to_string(),
+            format!("{clean_pct:.1}%"),
+            format!("{:.3}", ibex_r[wi].metrics.mem_by_kind[2] as f64 / tm_demo),
+        ]);
+    }
+    t2.emit();
+    println!("\npaper anchors: ~62% of demotions clean on average; pr/cc/XSBench demotion traffic cut >99%");
+}

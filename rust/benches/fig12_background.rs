@@ -1,0 +1,35 @@
+//! Figure 12: IBEX with background (demotion-engine) traffic modeled
+//! ("practical") vs excluded ("miracle").
+//!
+//! Paper shape: ≤1% for most workloads; ~5% omnetpp; ~13% pr/cc (their
+//! undersized promoted region keeps the scanner busy).
+
+mod common;
+
+use ibex::coordinator::{report, run_many, Job};
+
+fn main() {
+    common::banner("Fig 12", "impact of demotion-engine background traffic");
+    let workloads = common::workloads();
+    let mut jobs = Vec::new();
+    for miracle in [true, false] {
+        for &w in &workloads {
+            let mut cfg = common::bench_cfg();
+            cfg.background_free = miracle;
+            jobs.push(Job::new(if miracle { "miracle" } else { "practical" }, cfg, w));
+        }
+    }
+    let results = run_many(jobs);
+    let (miracle, practical) = results.split_at(workloads.len());
+    let norm = report::normalize(practical, miracle);
+    report::perf_table(
+        "Fig 12 — practical vs miracle (background traffic excluded)",
+        &workloads,
+        &["practical/miracle"],
+        &[norm.clone()],
+    )
+    .emit();
+    println!(
+        "\npaper anchors: ≥0.99 for most workloads, ~0.95 omnetpp, ~0.87 pr/cc"
+    );
+}

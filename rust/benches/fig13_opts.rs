@@ -1,0 +1,91 @@
+//! Figure 13: traffic breakdown of IBEX as the optimizations are
+//! applied incrementally — baseline, +S(hadow), +SC(o-locate),
+//! +SCM(etadata compaction) — normalized to the *uncompressed* system's
+//! access count.
+//!
+//! Paper shape: S, C, M cut memory accesses by ~16%, ~20%, ~3.3% on
+//! average; for omnetpp/pr/cc the baseline is ~20.6× uncompressed and
+//! S cuts 34%, then C cuts 42% of the rest. Baseline and S-only run
+//! 4 KB blocks at 4× engine latency (§6.2).
+
+mod common;
+
+use ibex::coordinator::{run_many, Job};
+use ibex::stats::{mean, Table};
+
+fn main() {
+    common::banner("Fig 13", "traffic reduction per optimization");
+    let variants: Vec<(&str, bool, bool, bool)> = vec![
+        // label, shadow, colocate, compact
+        ("base", false, false, false),
+        ("+S", true, false, false),
+        ("+SC", true, true, false),
+        ("+SCM", true, true, true),
+    ];
+    let workloads = common::workloads();
+    let mut jobs = Vec::new();
+    // Uncompressed reference for the normalization denominator.
+    for &w in &workloads {
+        let mut cfg = common::bench_cfg();
+        cfg.set("scheme", "uncompressed").unwrap();
+        jobs.push(Job::new("uncomp", cfg, w));
+    }
+    for &(label, s, c, m) in &variants {
+        for &w in &workloads {
+            let mut cfg = common::bench_cfg();
+            cfg.ibex.shadow = s;
+            cfg.ibex.colocate = c;
+            cfg.ibex.compact = m;
+            if !c {
+                // 4 KB blocks → 4× compression-engine latency (§6.2).
+                cfg.comp_cycles_per_kb = 4 * 256;
+                cfg.decomp_cycles_per_kb = 4 * 64;
+            }
+            jobs.push(Job::new(label, cfg, w));
+        }
+    }
+    let results = run_many(jobs);
+    let uncomp = &results[..workloads.len()];
+    let chunks: Vec<_> = results[workloads.len()..].chunks(workloads.len()).collect();
+
+    let mut headers = vec!["workload"];
+    headers.extend(variants.iter().map(|v| v.0));
+    let mut t = Table::new(
+        "Fig 13 — memory accesses normalized to uncompressed",
+        &headers,
+    );
+    let mut series_norm: Vec<Vec<f64>> = vec![Vec::new(); variants.len()];
+    for (wi, w) in workloads.iter().enumerate() {
+        let denom = uncomp[wi].metrics.mem_total.max(1) as f64;
+        let mut row = vec![w.to_string()];
+        for (vi, series) in chunks.iter().enumerate() {
+            let x = series[wi].metrics.mem_total as f64 / denom;
+            series_norm[vi].push(x);
+            row.push(format!("{x:.2}"));
+        }
+        t.row(row);
+    }
+    let mut avg = vec!["mean".to_string()];
+    for s in &series_norm {
+        avg.push(format!("{:.2}", mean(s)));
+    }
+    t.row(avg);
+    t.emit();
+
+    // Step-by-step savings.
+    let mut t2 = Table::new(
+        "Fig 13 aux — average traffic cut per optimization step",
+        &["step", "paper", "measured"],
+    );
+    let steps = [("shadow (S)", 0.16), ("co-location (C)", 0.20), ("compaction (M)", 0.033)];
+    for (i, (name, paper)) in steps.iter().enumerate() {
+        let before = mean(&series_norm[i]);
+        let after = mean(&series_norm[i + 1]);
+        t2.row(vec![
+            name.to_string(),
+            format!("{:.1}%", paper * 100.0),
+            format!("{:.1}%", (1.0 - after / before) * 100.0),
+        ]);
+    }
+    t2.emit();
+}

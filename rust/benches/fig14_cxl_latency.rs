@@ -1,0 +1,58 @@
+//! Figure 14: IBEX performance normalized to uncompressed memory as the
+//! CXL round-trip latency sweeps 70 → 400 ns.
+//!
+//! Paper shape: relative performance converges toward 1.0 at higher
+//! latency (zero-page wins shrink; MSHR occupancy throttles issue rate,
+//! relieving internal-bandwidth congestion for pr/cc).
+
+mod common;
+
+use ibex::coordinator::{report, run_many, Job};
+use ibex::stats::Table;
+
+const LATENCIES: [u64; 4] = [70, 150, 250, 400];
+
+fn main() {
+    common::banner("Fig 14", "sensitivity to CXL round-trip latency");
+    let workloads = common::workloads();
+    let mut jobs = Vec::new();
+    for &lat in &LATENCIES {
+        for scheme in ["uncompressed", "ibex"] {
+            for &w in &workloads {
+                let mut cfg = common::bench_cfg();
+                cfg.cxl.round_trip_ns = lat;
+                cfg.set("scheme", scheme).unwrap();
+                jobs.push(Job::new(format!("{scheme}@{lat}"), cfg, w));
+            }
+        }
+    }
+    let results = run_many(jobs);
+
+    let mut headers = vec!["workload"];
+    let labels: Vec<String> = LATENCIES.iter().map(|l| format!("{l}ns")).collect();
+    headers.extend(labels.iter().map(|s| s.as_str()));
+    let mut t = Table::new(
+        "Fig 14 — IBEX vs uncompressed across CXL latencies",
+        &headers,
+    );
+    let per_lat: Vec<_> = results.chunks(2 * workloads.len()).collect();
+    let mut series: Vec<Vec<f64>> = Vec::new();
+    for chunk in &per_lat {
+        let (base, ib) = chunk.split_at(workloads.len());
+        series.push(report::normalize(ib, base));
+    }
+    for (wi, w) in workloads.iter().enumerate() {
+        let mut row = vec![w.to_string()];
+        for s in &series {
+            row.push(format!("{:.3}", s[wi]));
+        }
+        t.row(row);
+    }
+    let mut gm = vec!["geomean".to_string()];
+    for s in &series {
+        gm.push(format!("{:.3}", ibex::stats::geomean(s)));
+    }
+    t.row(gm);
+    t.emit();
+    println!("\npaper shape: spread narrows toward 1.0 as latency grows; pr/cc vary the most");
+}

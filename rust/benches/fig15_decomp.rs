@@ -1,0 +1,46 @@
+//! Figure 15: sensitivity to decompression latency (16 → 512 cycles),
+//! average performance relative to uncompressed, with a 1024 MB
+//! (paper-scale) promoted region to remove capacity effects.
+//!
+//! Paper shape: nearly flat — ≤2% drop at 512 cycles. This robustness
+//! is what lets IBEX adopt heavier codecs for more ratio.
+
+mod common;
+
+use ibex::coordinator::{report, run_many, Job};
+use ibex::stats::{geomean, Table};
+
+const CYCLES: [u64; 6] = [16, 32, 64, 128, 256, 512];
+
+fn main() {
+    common::banner("Fig 15", "sensitivity to decompression cycles");
+    let workloads = common::workloads();
+    let mut jobs = Vec::new();
+    // Shared uncompressed baseline (engine latency irrelevant).
+    for &w in &workloads {
+        let mut cfg = common::bench_cfg();
+        cfg.promoted_bytes = common::scaled_promoted_mb(1024);
+        cfg.set("scheme", "uncompressed").unwrap();
+        jobs.push(Job::new("uncomp", cfg, w));
+    }
+    for &cyc in &CYCLES {
+        for &w in &workloads {
+            let mut cfg = common::bench_cfg();
+            cfg.promoted_bytes = common::scaled_promoted_mb(1024);
+            cfg.decomp_cycles_per_kb = cyc;
+            jobs.push(Job::new(format!("{cyc}cyc"), cfg, w));
+        }
+    }
+    let results = run_many(jobs);
+    let base = &results[..workloads.len()];
+    let mut t = Table::new(
+        "Fig 15 — average normalized performance vs decompression cycles",
+        &["decomp cycles", "perf vs uncompressed"],
+    );
+    for (i, chunk) in results[workloads.len()..].chunks(workloads.len()).enumerate() {
+        let norm = report::normalize(chunk, base);
+        t.row(vec![CYCLES[i].to_string(), format!("{:.3}", geomean(&norm))]);
+    }
+    t.emit();
+    println!("\npaper shape: ≤2% total drop from 16 to 512 cycles");
+}

@@ -1,0 +1,69 @@
+//! §Perf L3: device hot-path microbenchmarks.
+//!
+//! Measures simulated-requests-per-second of the end-to-end driver for
+//! each scheme (the simulator's own throughput — DESIGN.md §7 targets
+//! ≥1 M device requests/s/core) plus the isolated cost of the hottest
+//! operations (translation, activity scan, size-model call).
+
+mod common;
+
+use std::time::Instant;
+
+use ibex::compress::size_model::analyze_page;
+use ibex::compress::AnalyticSizeModel;
+use ibex::expander::build_scheme;
+use ibex::host::HostSim;
+use ibex::stats::Table;
+use ibex::workload::{by_name, WorkloadOracle};
+
+fn main() {
+    common::banner("Perf L3", "simulator hot-path throughput");
+    let mut t = Table::new(
+        "Hot path — simulated request throughput per scheme",
+        &["scheme", "requests", "wall ms", "Mreq/s"],
+    );
+    for scheme in [
+        "uncompressed",
+        "compresso",
+        "mxt",
+        "dmc",
+        "tmcc",
+        "dylect",
+        "ibex",
+    ] {
+        let mut cfg = common::bench_cfg();
+        cfg.instructions = 2_000_000;
+        cfg.warmup_instructions = 0;
+        cfg.set("scheme", scheme).unwrap();
+        let spec = by_name("pr").unwrap();
+        let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
+        let mut dev = build_scheme(&cfg);
+        let mut sim = HostSim::new(&cfg, &spec);
+        let start = Instant::now();
+        let m = sim.run(dev.as_mut(), &mut oracle);
+        let wall = start.elapsed();
+        t.row(vec![
+            scheme.to_string(),
+            m.requests.to_string(),
+            format!("{:.0}", wall.as_secs_f64() * 1000.0),
+            format!("{:.2}", m.requests as f64 / wall.as_secs_f64() / 1e6),
+        ]);
+    }
+    t.emit();
+
+    // Isolated: analytic size model (the oracle's miss path).
+    let page: Vec<u8> = (0..4096u32)
+        .map(|i| ((i as u64).wrapping_mul(0x9E3779B97F4A7C15) >> 17) as u8)
+        .collect();
+    let n = 2000;
+    let start = Instant::now();
+    let mut acc = 0u64;
+    for _ in 0..n {
+        acc += analyze_page(&page).page as u64;
+    }
+    let per = start.elapsed().as_secs_f64() / n as f64;
+    println!(
+        "\nanalytic size model: {:.1} µs/page ({acc} checksum)",
+        per * 1e6
+    );
+}

@@ -1,0 +1,72 @@
+//! §Perf L1/L2: PJRT artifact throughput.
+//!
+//! Measures the AOT-compiled engine model's batch throughput on the
+//! PJRT CPU client (compile time, per-batch latency, pages/s) and the
+//! memoized oracle's effective hit rate in a realistic run — the knobs
+//! the §Perf log tracks for the compile-path layers.
+
+mod common;
+
+use std::time::Instant;
+
+use ibex::compress::size_model::{SizeModel, PAGE_BYTES};
+use ibex::rng::Pcg64;
+use ibex::runtime::{CachedSizeModel, PjrtSizeModel};
+use ibex::stats::Table;
+
+fn main() {
+    common::banner("Perf L1/L2", "PJRT engine-model throughput");
+    let t0 = Instant::now();
+    let model = match PjrtSizeModel::load_default() {
+        Ok(m) => m,
+        Err(e) => {
+            println!("SKIP: {e}");
+            return;
+        }
+    };
+    let compile_ms = t0.elapsed().as_secs_f64() * 1000.0;
+    let batch = model.batch();
+    println!("artifact loaded+compiled in {compile_ms:.0} ms (batch={batch})");
+
+    let mut rng = Pcg64::new(5, 5);
+    let pages: Vec<Vec<u8>> = (0..batch)
+        .map(|_| (0..PAGE_BYTES).map(|_| rng.next_u64() as u8).collect())
+        .collect();
+    let refs: Vec<&[u8]> = pages.iter().map(|p| p.as_slice()).collect();
+
+    let mut cached = CachedSizeModel::new(model);
+    // Warm (memoized path untested here: all distinct).
+    let _ = cached.analyze(&refs);
+
+    let mut t = Table::new(
+        "PJRT batch throughput",
+        &["batches", "wall ms", "pages/s", "µs/page"],
+    );
+    for rounds in [4u32, 16] {
+        // New content every round to defeat the memo (worst case).
+        let mut fresh: Vec<Vec<u8>> = Vec::new();
+        for _ in 0..rounds {
+            for _ in 0..batch {
+                fresh.push((0..PAGE_BYTES).map(|_| rng.next_u64() as u8).collect());
+            }
+        }
+        let start = Instant::now();
+        for chunk in fresh.chunks(batch) {
+            let refs: Vec<&[u8]> = chunk.iter().map(|p| p.as_slice()).collect();
+            let _ = cached.analyze(&refs);
+        }
+        let wall = start.elapsed().as_secs_f64();
+        let pages_n = (rounds as usize * batch) as f64;
+        t.row(vec![
+            rounds.to_string(),
+            format!("{:.0}", wall * 1000.0),
+            format!("{:.0}", pages_n / wall),
+            format!("{:.1}", wall / pages_n * 1e6),
+        ]);
+    }
+    t.emit();
+    println!(
+        "\nmemo: {} hits / {} misses across the bench",
+        cached.hits, cached.misses
+    );
+}

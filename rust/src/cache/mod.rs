@@ -1,0 +1,284 @@
+//! Generic set-associative LRU cache.
+//!
+//! Used for the device's metadata cache (Table 1: 16-way 96 KB), the
+//! MXT on-chip tag array, DyLeCT's pre-gathered/unified table caches and
+//! Fig 2's naive SRAM data cache. IBEX's demotion engine needs a
+//! *non-perturbing* [`SetAssocCache::probe`] (checking whether a page's
+//! metadata is cached must not refresh its recency), and the lazy
+//! reference-update scheme hooks cache *evictions*, so `insert` returns
+//! the victim line.
+
+/// A victim evicted to make room for an insertion.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Evicted<V> {
+    pub key: u64,
+    pub value: V,
+    pub dirty: bool,
+}
+
+#[derive(Clone, Debug)]
+struct Line<V> {
+    key: u64,
+    value: V,
+    lru: u64,
+    dirty: bool,
+}
+
+/// Set-associative cache with true-LRU replacement.
+#[derive(Clone, Debug)]
+pub struct SetAssocCache<V> {
+    sets: usize,
+    ways: usize,
+    tick: u64,
+    lines: Vec<Vec<Line<V>>>,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl<V> SetAssocCache<V> {
+    pub fn new(sets: usize, ways: usize) -> Self {
+        assert!(sets > 0 && ways > 0);
+        Self {
+            sets,
+            ways,
+            tick: 0,
+            lines: (0..sets).map(|_| Vec::with_capacity(ways)).collect(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Build from a capacity in bytes and a per-entry size.
+    pub fn with_capacity(capacity_bytes: usize, entry_bytes: usize, ways: usize) -> Self {
+        let entries = (capacity_bytes / entry_bytes).max(ways);
+        Self::new((entries / ways).max(1), ways)
+    }
+
+    pub fn sets(&self) -> usize {
+        self.sets
+    }
+
+    pub fn ways(&self) -> usize {
+        self.ways
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.sets * self.ways
+    }
+
+    #[inline]
+    fn set_of(&self, key: u64) -> usize {
+        // Mix the key so consecutive page numbers spread across sets even
+        // when `sets` is a power of two times a small factor.
+        let mut h = key.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        h ^= h >> 29;
+        (h % self.sets as u64) as usize
+    }
+
+    /// Hit: returns the value and refreshes recency. Counts hit/miss.
+    pub fn lookup(&mut self, key: u64) -> Option<&mut V> {
+        self.tick += 1;
+        let tick = self.tick;
+        let set = self.set_of(key);
+        match self.lines[set].iter_mut().find(|l| l.key == key) {
+            Some(line) => {
+                line.lru = tick;
+                self.hits += 1;
+                Some(&mut line.value)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Presence check that does NOT update recency or hit counters —
+    /// the demotion engine's metadata-cache probe (paper §4.4).
+    pub fn probe(&self, key: u64) -> bool {
+        self.lines[self.set_of(key)].iter().any(|l| l.key == key)
+    }
+
+    /// Read-only access without recency update.
+    pub fn peek(&self, key: u64) -> Option<&V> {
+        self.lines[self.set_of(key)]
+            .iter()
+            .find(|l| l.key == key)
+            .map(|l| &l.value)
+    }
+
+    /// Insert (or overwrite) an entry; returns the evicted victim if the
+    /// set was full. Overwriting refreshes recency and ORs dirtiness.
+    pub fn insert(&mut self, key: u64, value: V, dirty: bool) -> Option<Evicted<V>> {
+        self.tick += 1;
+        let tick = self.tick;
+        let set = self.set_of(key);
+        let lines = &mut self.lines[set];
+        if let Some(line) = lines.iter_mut().find(|l| l.key == key) {
+            line.value = value;
+            line.lru = tick;
+            line.dirty |= dirty;
+            return None;
+        }
+        let mut victim = None;
+        if lines.len() == self.ways {
+            let (idx, _) = lines
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, l)| l.lru)
+                .expect("full set");
+            let v = lines.swap_remove(idx);
+            self.evictions += 1;
+            victim = Some(Evicted {
+                key: v.key,
+                value: v.value,
+                dirty: v.dirty,
+            });
+        }
+        lines.push(Line {
+            key,
+            value,
+            lru: tick,
+            dirty,
+        });
+        victim
+    }
+
+    /// Mark an existing entry dirty (e.g., metadata mutated in cache).
+    pub fn set_dirty(&mut self, key: u64) -> bool {
+        let set = self.set_of(key);
+        if let Some(line) = self.lines[set].iter_mut().find(|l| l.key == key) {
+            line.dirty = true;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Remove an entry, returning its value and dirtiness.
+    pub fn invalidate(&mut self, key: u64) -> Option<(V, bool)> {
+        let set = self.set_of(key);
+        let lines = &mut self.lines[set];
+        if let Some(idx) = lines.iter().position(|l| l.key == key) {
+            let l = lines.swap_remove(idx);
+            Some((l.value, l.dirty))
+        } else {
+            None
+        }
+    }
+
+    /// Drain every resident entry (end-of-run writeback flush).
+    pub fn drain(&mut self) -> Vec<Evicted<V>> {
+        let mut out = Vec::new();
+        for set in &mut self.lines {
+            for l in set.drain(..) {
+                out.push(Evicted {
+                    key: l.key,
+                    value: l.value,
+                    dirty: l.dirty,
+                });
+            }
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.lines.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_after_insert() {
+        let mut c: SetAssocCache<u32> = SetAssocCache::new(4, 2);
+        assert!(c.lookup(1).is_none());
+        c.insert(1, 10, false);
+        assert_eq!(c.lookup(1), Some(&mut 10));
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut c: SetAssocCache<u32> = SetAssocCache::new(1, 2);
+        c.insert(1, 10, false);
+        c.insert(2, 20, false);
+        c.lookup(1); // 2 becomes LRU
+        let v = c.insert(3, 30, false).expect("eviction");
+        assert_eq!(v.key, 2);
+        assert!(c.probe(1) && c.probe(3) && !c.probe(2));
+    }
+
+    #[test]
+    fn probe_does_not_refresh_lru() {
+        let mut c: SetAssocCache<u32> = SetAssocCache::new(1, 2);
+        c.insert(1, 10, false);
+        c.insert(2, 20, false);
+        assert!(c.probe(1)); // must NOT make 1 most-recent
+        let v = c.insert(3, 30, false).expect("eviction");
+        assert_eq!(v.key, 1, "probe must not perturb recency");
+    }
+
+    #[test]
+    fn dirty_propagates_to_eviction() {
+        let mut c: SetAssocCache<u32> = SetAssocCache::new(1, 1);
+        c.insert(1, 10, false);
+        assert!(c.set_dirty(1));
+        let v = c.insert(2, 20, false).unwrap();
+        assert!(v.dirty);
+    }
+
+    #[test]
+    fn overwrite_keeps_single_copy_and_ors_dirty() {
+        let mut c: SetAssocCache<u32> = SetAssocCache::new(2, 2);
+        c.insert(5, 1, true);
+        assert!(c.insert(5, 2, false).is_none());
+        assert_eq!(c.len(), 1);
+        let (v, dirty) = c.invalidate(5).unwrap();
+        assert_eq!(v, 2);
+        assert!(dirty, "dirtiness must be sticky across overwrite");
+    }
+
+    #[test]
+    fn with_capacity_sizes_sets() {
+        // Table 1 metadata cache: 96KB of 32B entries, 16-way = 192 sets.
+        let c: SetAssocCache<()> = SetAssocCache::with_capacity(96 * 1024, 32, 16);
+        assert_eq!(c.capacity(), 96 * 1024 / 32);
+        assert_eq!(c.sets(), 192);
+    }
+
+    #[test]
+    fn drain_returns_everything() {
+        let mut c: SetAssocCache<u32> = SetAssocCache::new(8, 2);
+        for k in 0..10 {
+            c.insert(k, k as u32, k % 2 == 0);
+        }
+        let drained = c.drain();
+        assert_eq!(drained.len(), 10);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn invalidate_missing_is_none() {
+        let mut c: SetAssocCache<u32> = SetAssocCache::new(2, 2);
+        assert!(c.invalidate(99).is_none());
+    }
+}

@@ -1,0 +1,234 @@
+//! Hand-rolled CLI (no `clap` in the offline vendor set).
+//!
+//! ```text
+//! ibex run  --workload pr --scheme ibex [key=value ...]
+//! ibex sweep --workloads pr,cc --schemes ibex,tmcc [key=value ...]
+//! ibex config-dump [key=value ...]
+//! ibex list
+//! ```
+
+use crate::config::SimConfig;
+use crate::coordinator::{run_many, run_one, Job};
+use crate::stats::Table;
+use crate::workload;
+
+/// Parsed command line.
+#[derive(Clone, Debug)]
+pub struct Cli {
+    pub command: String,
+    pub workloads: Vec<String>,
+    pub schemes: Vec<String>,
+    pub config_file: Option<String>,
+    pub overrides: Vec<(String, String)>,
+}
+
+impl Cli {
+    pub fn parse(args: &[String]) -> Result<Self, String> {
+        let mut cli = Cli {
+            command: args.first().cloned().unwrap_or_else(|| "help".into()),
+            workloads: vec!["parest".into()],
+            schemes: vec!["ibex".into()],
+            config_file: None,
+            overrides: Vec::new(),
+        };
+        let mut it = args.iter().skip(1);
+        while let Some(arg) = it.next() {
+            let take = |it: &mut dyn Iterator<Item = &String>,
+                        flag: &str|
+             -> Result<String, String> {
+                it.next()
+                    .cloned()
+                    .ok_or_else(|| format!("{flag} needs a value"))
+            };
+            match arg.as_str() {
+                "--workload" | "--workloads" | "-w" => {
+                    cli.workloads = take(&mut it, arg)?
+                        .split(',')
+                        .map(|s| s.trim().to_string())
+                        .collect();
+                }
+                "--scheme" | "--schemes" | "-s" => {
+                    cli.schemes = take(&mut it, arg)?
+                        .split(',')
+                        .map(|s| s.trim().to_string())
+                        .collect();
+                }
+                "--config" | "-c" => cli.config_file = Some(take(&mut it, arg)?),
+                _ if arg.contains('=') => {
+                    let (k, v) = arg.split_once('=').unwrap();
+                    cli.overrides.push((k.to_string(), v.to_string()));
+                }
+                _ => return Err(format!("unknown argument {arg:?} (try `ibex help`)")),
+            }
+        }
+        Ok(cli)
+    }
+
+    /// Build the base config from file + overrides.
+    pub fn config(&self) -> Result<SimConfig, String> {
+        let mut cfg = SimConfig::table1();
+        if let Some(path) = &self.config_file {
+            cfg.load_ini(std::path::Path::new(path))?;
+        }
+        for (k, v) in &self.overrides {
+            cfg.set(k, v)?;
+        }
+        Ok(cfg)
+    }
+}
+
+pub const HELP: &str = "\
+ibex — CXL memory-expander compression simulator (IBEX, ICS'26)
+
+USAGE:
+  ibex run   [--workload W] [--scheme S] [--config FILE] [key=value ...]
+  ibex sweep [--workloads W1,W2,..] [--schemes S1,S2,..] [key=value ...]
+  ibex config-dump [key=value ...]     print the resolved configuration
+  ibex list                            list workloads and schemes
+  ibex help
+
+SCHEMES:   uncompressed ibex tmcc dylect mxt dmc compresso
+KEYS:      see `ibex config-dump` (e.g. promoted_mb=512, cxl.round_trip_ns=70,
+           ibex.shadow=true, instructions=20000000, footprint_scale=0.0625)
+";
+
+/// Entry point used by `main.rs`. Returns the process exit code.
+pub fn dispatch(args: &[String]) -> i32 {
+    let cli = match Cli::parse(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    match cli.command.as_str() {
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            0
+        }
+        "list" => {
+            println!("workloads: {}", workload::names().join(" "));
+            println!("schemes:   uncompressed ibex tmcc dylect mxt dmc compresso");
+            0
+        }
+        "config-dump" => match cli.config() {
+            Ok(cfg) => {
+                for (k, v) in cfg.dump() {
+                    println!("{k} = {v}");
+                }
+                0
+            }
+            Err(e) => {
+                eprintln!("error: {e}");
+                2
+            }
+        },
+        "run" => run_cmd(&cli, false),
+        "sweep" => run_cmd(&cli, true),
+        other => {
+            eprintln!("error: unknown command {other:?}\n{HELP}");
+            2
+        }
+    }
+}
+
+fn run_cmd(cli: &Cli, sweep: bool) -> i32 {
+    let base = match cli.config() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let mut jobs = Vec::new();
+    for w in &cli.workloads {
+        if workload::by_name(w).is_none() {
+            eprintln!("error: unknown workload {w:?}");
+            return 2;
+        }
+        for s in &cli.schemes {
+            let mut cfg = base.clone();
+            if let Err(e) = cfg.set("scheme", s) {
+                eprintln!("error: {e}");
+                return 2;
+            }
+            jobs.push(Job::new(format!("{s}"), cfg, w));
+        }
+    }
+    let results = if sweep && jobs.len() > 1 {
+        run_many(jobs)
+    } else {
+        jobs.iter().map(run_one).collect()
+    };
+
+    let mut t = Table::new(
+        "Run results",
+        &[
+            "workload", "scheme", "perf (inst/ns)", "mean lat (ns)", "p99 (ns)", "ratio",
+            "mem accesses", "promos", "demos", "clean demos",
+        ],
+    );
+    for r in &results {
+        t.row(vec![
+            r.workload.clone(),
+            r.scheme.clone(),
+            format!("{:.4}", r.metrics.perf()),
+            format!("{:.0}", r.device.mean_latency_ns),
+            r.device.p99_latency_ns.to_string(),
+            format!("{:.3}", r.metrics.compression_ratio),
+            r.metrics.mem_total.to_string(),
+            r.device.promotions.to_string(),
+            r.device.demotions.to_string(),
+            r.device.clean_demotions.to_string(),
+        ]);
+    }
+    t.emit();
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_run() {
+        let cli = Cli::parse(&s(&[
+            "run",
+            "--workload",
+            "pr",
+            "--scheme",
+            "tmcc",
+            "promoted_mb=64",
+        ]))
+        .unwrap();
+        assert_eq!(cli.command, "run");
+        assert_eq!(cli.workloads, vec!["pr"]);
+        assert_eq!(cli.schemes, vec!["tmcc"]);
+        let cfg = cli.config().unwrap();
+        assert_eq!(cfg.promoted_bytes, 64 << 20);
+    }
+
+    #[test]
+    fn parse_lists() {
+        let cli = Cli::parse(&s(&["sweep", "--schemes", "ibex,tmcc,dylect"])).unwrap();
+        assert_eq!(cli.schemes.len(), 3);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Cli::parse(&s(&["run", "--frobnicate"])).is_err());
+        let cli = Cli::parse(&s(&["run", "bogus_key=1"])).unwrap();
+        assert!(cli.config().is_err());
+    }
+
+    #[test]
+    fn help_and_list_exit_zero() {
+        assert_eq!(dispatch(&s(&["help"])), 0);
+        assert_eq!(dispatch(&s(&["list"])), 0);
+        assert_eq!(dispatch(&s(&["nope"])), 2);
+    }
+}

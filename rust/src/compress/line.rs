@@ -1,0 +1,148 @@
+//! BDI-style line-level compression (64 B cachelines).
+//!
+//! Compresso (the paper's line-level comparison point) and DMC's hot
+//! tier compress at cacheline granularity with simple pattern schemes —
+//! Base-Delta-Immediate [Pekhimenko+ PACT'12] plus a zero-line special
+//! case. We implement the size classes; the device model only consumes
+//! sizes (rounded to Compresso's storage classes).
+
+/// Compressed size in bytes of one 64 B line under BDI(+zero).
+pub fn bdi_line_size(line: &[u8]) -> u32 {
+    assert_eq!(line.len(), 64, "BDI operates on 64 B lines");
+    if line.iter().all(|&b| b == 0) {
+        return 1; // zero line: metadata-only encodings round up later
+    }
+    let words: Vec<u64> = line
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+
+    // Repeated 8-byte value.
+    if words.iter().all(|&w| w == words[0]) {
+        return 8;
+    }
+
+    // Base (8B) + per-word deltas of 1/2/4 bytes.
+    let base = words[0] as i128;
+    let fits = |bytes_per_delta: u32| -> bool {
+        let bound: i128 = 1i128 << (bytes_per_delta * 8 - 1);
+        words
+            .iter()
+            .all(|&w| ((w as i128) - base) >= -bound && ((w as i128) - base) < bound)
+    };
+    for (delta_bytes, total) in [(1u32, 8 + 8), (2, 8 + 16), (4, 8 + 32)] {
+        if fits(delta_bytes) {
+            return total;
+        }
+    }
+
+    // 4-byte-base variant (catches pointer-dense lines).
+    let dwords: Vec<u32> = line
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let base4 = dwords[0] as i64;
+    let fits4 = |bytes_per_delta: u32| -> bool {
+        let bound: i64 = 1i64 << (bytes_per_delta * 8 - 1);
+        dwords
+            .iter()
+            .all(|&w| ((w as i64) - base4) >= -bound && ((w as i64) - base4) < bound)
+    };
+    for (delta_bytes, total) in [(1u32, 4 + 16), (2, 4 + 32)] {
+        if fits4(delta_bytes) {
+            return total;
+        }
+    }
+
+    64 // incompressible line
+}
+
+/// Compresso stores lines in one of a few size classes; round up.
+pub const COMPRESSO_CLASSES: [u32; 4] = [8, 24, 40, 64];
+
+pub fn compresso_class(line_size: u32) -> u32 {
+    for c in COMPRESSO_CLASSES {
+        if line_size <= c {
+            return c;
+        }
+    }
+    64
+}
+
+/// Line-compressed size of a whole 4 KB page (sum of classed lines).
+/// Zero lines take a class-8 slot unless the entire page is zero.
+pub fn compresso_page_size(page: &[u8]) -> u32 {
+    assert_eq!(page.len(), 4096);
+    if page.iter().all(|&b| b == 0) {
+        return 0;
+    }
+    page.chunks_exact(64)
+        .map(|l| compresso_class(bdi_line_size(l)))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_line_minimal() {
+        assert_eq!(bdi_line_size(&[0u8; 64]), 1);
+        assert_eq!(compresso_class(1), 8);
+    }
+
+    #[test]
+    fn repeated_word_is_8() {
+        let mut line = [0u8; 64];
+        for c in line.chunks_exact_mut(8) {
+            c.copy_from_slice(&0xDEADBEEF_00C0FFEEu64.to_le_bytes());
+        }
+        assert_eq!(bdi_line_size(&line), 8);
+    }
+
+    #[test]
+    fn small_deltas_compress() {
+        // Base + small increments: fits 1-byte deltas → 16 B.
+        let mut line = [0u8; 64];
+        let base = 0x1000_0000_0000_0000u64;
+        for (i, c) in line.chunks_exact_mut(8).enumerate() {
+            c.copy_from_slice(&(base + i as u64).to_le_bytes());
+        }
+        assert_eq!(bdi_line_size(&line), 16);
+    }
+
+    #[test]
+    fn medium_deltas_compress_less() {
+        let mut line = [0u8; 64];
+        let base = 0x1000_0000_0000_0000u64;
+        for (i, c) in line.chunks_exact_mut(8).enumerate() {
+            c.copy_from_slice(&(base + (i as u64) * 1000).to_le_bytes());
+        }
+        assert_eq!(bdi_line_size(&line), 24);
+    }
+
+    #[test]
+    fn random_line_incompressible() {
+        let line: Vec<u8> = (0..64u32)
+            .map(|i| (i.wrapping_mul(2654435761) >> 13) as u8)
+            .collect();
+        assert_eq!(bdi_line_size(&line), 64);
+    }
+
+    #[test]
+    fn page_size_composition() {
+        assert_eq!(compresso_page_size(&[0u8; 4096]), 0);
+        let page = [0x77u8; 4096];
+        // 64 repeated-word lines → 64 * class(8) = 512.
+        assert_eq!(compresso_page_size(&page), 512);
+    }
+
+    #[test]
+    fn classes_are_monotone() {
+        assert_eq!(compresso_class(8), 8);
+        assert_eq!(compresso_class(9), 24);
+        assert_eq!(compresso_class(24), 24);
+        assert_eq!(compresso_class(40), 40);
+        assert_eq!(compresso_class(41), 64);
+    }
+}

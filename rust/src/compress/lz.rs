@@ -1,0 +1,208 @@
+//! A real LZ77 block codec.
+//!
+//! The paper's device runs an LZ-family block compressor (LZ77/LZ4/Zstd,
+//! §4.4); the simulator itself only needs compressed *sizes* (from the
+//! size model), but we still ship a working codec so that (a) the size
+//! model can be calibrated against genuine compressed output
+//! (`benches/calibration.rs`, pytest's zlib check), and (b) the
+//! `compression_explorer` example can round-trip real data.
+//!
+//! Format (byte-oriented, greedy hash-chain matcher):
+//!   token = 1 control byte
+//!     0x00..=0x7F : literal run of (ctrl + 1) bytes follows (1..128)
+//!     0x80..=0xFF : match; length = (ctrl & 0x7F) + MIN_MATCH,
+//!                   followed by 2-byte little-endian backward distance
+//!                   (1..=65535, relative to current output position)
+
+const MIN_MATCH: usize = 4;
+const MAX_MATCH: usize = 0x7F + MIN_MATCH; // 131
+const MAX_LITERAL_RUN: usize = 128;
+const WINDOW: usize = 65_535;
+const HASH_BITS: u32 = 13;
+
+#[inline]
+fn hash4(data: &[u8], i: usize) -> usize {
+    let v = u32::from_le_bytes(data[i..i + 4].try_into().unwrap());
+    (v.wrapping_mul(2654435761) >> (32 - HASH_BITS)) as usize
+}
+
+/// Compress `data`; output is self-delimiting given the original length.
+pub fn compress(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() / 2 + 16);
+    let mut head = vec![usize::MAX; 1 << HASH_BITS];
+    let mut lit_start = 0usize;
+    let mut i = 0usize;
+
+    let flush_literals = |out: &mut Vec<u8>, from: usize, to: usize, data: &[u8]| {
+        let mut s = from;
+        while s < to {
+            let run = (to - s).min(MAX_LITERAL_RUN);
+            out.push((run - 1) as u8);
+            out.extend_from_slice(&data[s..s + run]);
+            s += run;
+        }
+    };
+
+    while i + MIN_MATCH <= data.len() {
+        let h = hash4(data, i);
+        let cand = head[h];
+        head[h] = i;
+        let mut match_len = 0usize;
+        if cand != usize::MAX && i - cand <= WINDOW && data[cand..cand + 4] == data[i..i + 4] {
+            let max = (data.len() - i).min(MAX_MATCH);
+            let mut l = 4;
+            while l < max && data[cand + l] == data[i + l] {
+                l += 1;
+            }
+            match_len = l;
+        }
+        if match_len >= MIN_MATCH {
+            flush_literals(&mut out, lit_start, i, data);
+            let dist = i - cand;
+            out.push(0x80 | (match_len - MIN_MATCH) as u8);
+            out.extend_from_slice(&(dist as u16).to_le_bytes());
+            // Insert hash entries inside the match to keep chains warm.
+            let end = i + match_len;
+            let mut j = i + 1;
+            while j + MIN_MATCH <= data.len() && j < end {
+                head[hash4(data, j)] = j;
+                j += 1;
+            }
+            i = end;
+            lit_start = i;
+        } else {
+            i += 1;
+        }
+    }
+    flush_literals(&mut out, lit_start, data.len(), data);
+    out
+}
+
+/// Decompress into exactly `expected_len` bytes.
+pub fn decompress(mut input: &[u8], expected_len: usize) -> Result<Vec<u8>, String> {
+    let mut out = Vec::with_capacity(expected_len);
+    while out.len() < expected_len {
+        let (&ctrl, rest) = input
+            .split_first()
+            .ok_or_else(|| "truncated stream (control)".to_string())?;
+        input = rest;
+        if ctrl < 0x80 {
+            let run = ctrl as usize + 1;
+            if input.len() < run {
+                return Err("truncated literal run".into());
+            }
+            out.extend_from_slice(&input[..run]);
+            input = &input[run..];
+        } else {
+            let len = (ctrl & 0x7F) as usize + MIN_MATCH;
+            if input.len() < 2 {
+                return Err("truncated match distance".into());
+            }
+            let dist = u16::from_le_bytes([input[0], input[1]]) as usize;
+            input = &input[2..];
+            if dist == 0 || dist > out.len() {
+                return Err(format!("bad distance {dist} at {}", out.len()));
+            }
+            // Byte-wise copy: distances shorter than the length replicate
+            // (RLE-style), exactly like LZ77.
+            let start = out.len() - dist;
+            for k in 0..len {
+                let b = out[start + k];
+                out.push(b);
+            }
+        }
+    }
+    if out.len() != expected_len {
+        return Err(format!("length mismatch {} != {expected_len}", out.len()));
+    }
+    Ok(out)
+}
+
+/// Compressed size helper.
+pub fn compressed_size(data: &[u8]) -> usize {
+    compress(data).len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn roundtrip(data: &[u8]) {
+        let c = compress(data);
+        let d = decompress(&c, data.len()).expect("decompress");
+        assert_eq!(d, data, "round-trip mismatch");
+    }
+
+    #[test]
+    fn roundtrip_empty_and_tiny() {
+        roundtrip(b"");
+        roundtrip(b"a");
+        roundtrip(b"abc");
+        roundtrip(b"aaaa");
+    }
+
+    #[test]
+    fn roundtrip_repetitive_compresses() {
+        let data: Vec<u8> = b"hello world ".iter().cycle().take(4096).copied().collect();
+        let c = compress(&data);
+        assert!(c.len() < data.len() / 4, "repetitive data must compress 4x+ ({} B)", c.len());
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn roundtrip_zero_page() {
+        let data = vec![0u8; 4096];
+        let c = compress(&data);
+        assert!(c.len() < 200, "zero page should be tiny, got {}", c.len());
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn random_data_does_not_explode() {
+        let mut rng = Pcg64::new(1, 1);
+        let data: Vec<u8> = (0..4096).map(|_| rng.next_u64() as u8).collect();
+        let c = compress(&data);
+        // Worst case: +1 control byte per 128 literals.
+        assert!(c.len() <= data.len() + data.len() / 128 + 8);
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn roundtrip_randomized_structures() {
+        let mut rng = Pcg64::new(7, 3);
+        for case in 0..50 {
+            let len = 1 + rng.below(8192) as usize;
+            let mut data = Vec::with_capacity(len);
+            while data.len() < len {
+                if rng.chance(0.5) && !data.is_empty() {
+                    // Copy an earlier slice (creates matches).
+                    let start = rng.below(data.len() as u64) as usize;
+                    let run = 1 + rng.below(64) as usize;
+                    for k in 0..run.min(len - data.len()) {
+                        let b = data[start + k % (data.len() - start)];
+                        data.push(b);
+                    }
+                } else {
+                    data.push(rng.next_u64() as u8);
+                }
+            }
+            let _ = case;
+            roundtrip(&data);
+        }
+    }
+
+    #[test]
+    fn overlapping_match_semantics() {
+        // "abcabcabc..." exercises dist < len copies.
+        let data: Vec<u8> = b"abc".iter().cycle().take(1000).copied().collect();
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn decompress_rejects_garbage() {
+        assert!(decompress(&[0x85, 0xFF, 0xFF], 100).is_err()); // distance > produced
+        assert!(decompress(&[0x05], 6).is_err()); // truncated literals
+        assert!(decompress(&[], 1).is_err());
+    }
+}

@@ -1,0 +1,75 @@
+//! Compression substrate: size models, real codecs, engine timing.
+//!
+//! * [`size_model`] — the analytic mirror of the Layer-1 Pallas kernel
+//!   (bit-exact; cross-checked against the PJRT artifact in
+//!   `rust/tests/integration_runtime.rs`).
+//! * [`lz`] — a real LZ77 block codec (the paper's engine family); used
+//!   to validate that the size model tracks genuine compressed sizes and
+//!   by the `compression_explorer` example.
+//! * [`line`] — BDI-style line-level compression (Compresso, DMC's hot
+//!   tier).
+//! * [`EngineTiming`] — the device engine's latency model (Table 1:
+//!   4 B/cycle compression, 16 B/cycle decompression).
+
+pub mod line;
+pub mod lz;
+pub mod size_model;
+
+pub use size_model::{AnalyticSizeModel, PageSizes, SizeModel};
+
+use crate::sim::{device_cycles, Ps};
+
+/// Compression-engine latency model.
+///
+/// The paper configures 256-cycle compression and 64-cycle decompression
+/// for a 1 KB block (MXT's 4 B/ and 16 B/cycle throughputs); Fig 15
+/// sweeps the decompression cycles. Larger blocks scale linearly (§6.2
+/// configures 4× the latency for 4 KB blocks).
+#[derive(Clone, Copy, Debug)]
+pub struct EngineTiming {
+    pub comp_cycles_per_kb: u64,
+    pub decomp_cycles_per_kb: u64,
+}
+
+impl Default for EngineTiming {
+    fn default() -> Self {
+        Self {
+            comp_cycles_per_kb: 256,
+            decomp_cycles_per_kb: 64,
+        }
+    }
+}
+
+impl EngineTiming {
+    /// Latency to compress a block of `raw_bytes` of original data.
+    pub fn compress_ps(&self, raw_bytes: u64) -> Ps {
+        device_cycles(self.comp_cycles_per_kb * raw_bytes.div_ceil(1024).max(1))
+    }
+
+    /// Latency to decompress back to `raw_bytes` of original data.
+    pub fn decompress_ps(&self, raw_bytes: u64) -> Ps {
+        device_cycles(self.decomp_cycles_per_kb * raw_bytes.div_ceil(1024).max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::DEVICE_CLK_PS;
+
+    #[test]
+    fn table1_latencies() {
+        let t = EngineTiming::default();
+        assert_eq!(t.compress_ps(1024), 256 * DEVICE_CLK_PS);
+        assert_eq!(t.decompress_ps(1024), 64 * DEVICE_CLK_PS);
+        // 4 KB blocks are 4x (§6.2 Fig 13 baseline note).
+        assert_eq!(t.compress_ps(4096), 4 * 256 * DEVICE_CLK_PS);
+        assert_eq!(t.decompress_ps(4096), 4 * 64 * DEVICE_CLK_PS);
+    }
+
+    #[test]
+    fn zero_bytes_still_costs_one_block() {
+        let t = EngineTiming::default();
+        assert_eq!(t.decompress_ps(1), t.decompress_ps(1024));
+    }
+}

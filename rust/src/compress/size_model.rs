@@ -1,0 +1,241 @@
+//! Analytic compression-size model — the Rust mirror of the Pallas kernel.
+//!
+//! Semantics are defined once, in `python/compile/kernels/ref.py`; this
+//! file reimplements them scalar-wise and MUST match bit-exactly. The
+//! PJRT runtime (`crate::runtime`) executes the real AOT artifact and the
+//! integration suite asserts `AnalyticSizeModel == PjrtSizeModel` on a
+//! randomized corpus; unit tests and the pure-simulation paths use this
+//! model so `cargo test` works before `make artifacts`.
+
+/// Match window in 8-byte words (64 B backward window).
+pub const W: usize = 8;
+/// Literal word cost in quarter-bytes (8 B literal + 1 B tag).
+pub const LIT_QB: u32 = 36;
+/// New match token cost.
+pub const NEW_QB: u32 = 12;
+/// Run-extension cost.
+pub const EXT_QB: u32 = 1;
+/// Per-1KB-block header bytes.
+pub const HDR_1K: u32 = 4;
+/// Per-4KB-page header bytes.
+pub const HDR_4K: u32 = 16;
+
+pub const PAGE_BYTES: usize = 4096;
+const WORDS_PER_PAGE: usize = 512;
+const WORDS_PER_1K: usize = 128;
+const NO_MATCH: u8 = 99;
+
+/// Analysis result for one 4 KB page.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PageSizes {
+    /// Estimated compressed bytes per 1 KB block; 0 = all-zero block.
+    pub blocks: [u32; 4],
+    /// Estimated compressed bytes for the page as one block; 0 = zero page.
+    pub page: u32,
+}
+
+impl PageSizes {
+    /// A zero page (both granularities free).
+    pub const ZERO: PageSizes = PageSizes {
+        blocks: [0; 4],
+        page: 0,
+    };
+
+    /// Sum of the 1 KB block sizes (no zero exclusion).
+    pub fn blocks_total(&self) -> u32 {
+        self.blocks.iter().sum()
+    }
+}
+
+/// Something that can turn page contents into [`PageSizes`].
+pub trait SizeModel {
+    /// Analyze a batch of 4 KB pages.
+    fn analyze(&mut self, pages: &[&[u8]]) -> Vec<PageSizes>;
+
+    /// Convenience single-page entry point.
+    fn analyze_one(&mut self, page: &[u8]) -> PageSizes {
+        self.analyze(&[page])[0]
+    }
+}
+
+/// Per-word cost accumulation with the window confined to
+/// `block_words`-sized blocks. Returns total quarter-bytes per block of
+/// `out_blocks` (1 block of 512 words, or 4 blocks of 128 words).
+fn word_costs(words: &[u64; WORDS_PER_PAGE], block_words: usize, qb_out: &mut [u32]) {
+    debug_assert_eq!(qb_out.len() * block_words, WORDS_PER_PAGE);
+    let mut prev_matched = false;
+    let mut prev_bestd = NO_MATCH;
+    for i in 0..WORDS_PER_PAGE {
+        let in_block = i % block_words;
+        // Smallest matching backward distance within the window & block.
+        let dmax = W.min(in_block);
+        let mut bestd = NO_MATCH;
+        for d in 1..=dmax {
+            if words[i] == words[i - d] {
+                bestd = d as u8;
+                break;
+            }
+        }
+        let matched = bestd != NO_MATCH;
+        let extend = matched && prev_matched && bestd == prev_bestd && in_block != 0;
+        let cost = if matched {
+            if extend {
+                EXT_QB
+            } else {
+                NEW_QB
+            }
+        } else {
+            LIT_QB
+        };
+        qb_out[i / block_words] += cost;
+        prev_matched = matched;
+        prev_bestd = bestd;
+    }
+}
+
+/// Analyze one page (free function — the model is stateless).
+pub fn analyze_page(page: &[u8]) -> PageSizes {
+    assert_eq!(page.len(), PAGE_BYTES, "size model operates on 4 KB pages");
+    let mut words = [0u64; WORDS_PER_PAGE];
+    for (i, w) in words.iter_mut().enumerate() {
+        *w = u64::from_le_bytes(page[i * 8..i * 8 + 8].try_into().unwrap());
+    }
+
+    let mut qb1 = [0u32; 4];
+    word_costs(&words, WORDS_PER_1K, &mut qb1);
+    let mut blocks = [0u32; 4];
+    for (b, out) in blocks.iter_mut().enumerate() {
+        let zero = words[b * WORDS_PER_1K..(b + 1) * WORDS_PER_1K]
+            .iter()
+            .all(|&w| w == 0);
+        *out = if zero { 0 } else { qb1[b].div_ceil(4) + HDR_1K };
+    }
+
+    let mut qb4 = [0u32; 1];
+    word_costs(&words, WORDS_PER_PAGE, &mut qb4);
+    let zero_page = words.iter().all(|&w| w == 0);
+    let page_size = if zero_page {
+        0
+    } else {
+        qb4[0].div_ceil(4) + HDR_4K
+    };
+
+    PageSizes {
+        blocks,
+        page: page_size,
+    }
+}
+
+/// Stateless in-process model (no PJRT).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AnalyticSizeModel;
+
+impl SizeModel for AnalyticSizeModel {
+    fn analyze(&mut self, pages: &[&[u8]]) -> Vec<PageSizes> {
+        pages.iter().map(|p| analyze_page(p)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn const_page(v: u8) -> Vec<u8> {
+        vec![v; PAGE_BYTES]
+    }
+
+    #[test]
+    fn zero_page_is_free() {
+        assert_eq!(analyze_page(&const_page(0)), PageSizes::ZERO);
+    }
+
+    #[test]
+    fn constant_page_matches_python_pin() {
+        // Pinned in python/tests/test_kernel.py::test_constant_page_exact
+        let s = analyze_page(&const_page(0x5A));
+        assert_eq!(s.blocks, [48, 48, 48, 48]);
+        assert_eq!(s.page, 156);
+    }
+
+    #[test]
+    fn incompressible_page_matches_python_pin() {
+        // Same construction as test_incompressible_exact in pytest.
+        let mut page = vec![0u8; PAGE_BYTES];
+        for i in 0..512u32 {
+            let base = (i as usize) * 8;
+            page[base] = (i & 0xFF) as u8;
+            page[base + 1] = ((i >> 8) & 0xFF) as u8;
+            page[base + 2] = 1;
+        }
+        let s = analyze_page(&page);
+        assert_eq!(s.blocks, [1156; 4]);
+        assert_eq!(s.page, 36 * 512 / 4 + 16);
+    }
+
+    #[test]
+    fn period8_matches_constant_cost_shape() {
+        let mut page = vec![0u8; PAGE_BYTES];
+        let motif = [1u8, 2, 3, 4, 5, 6, 7, 8];
+        for (i, b) in page.iter_mut().enumerate() {
+            *b = motif[i % 8];
+        }
+        let s = analyze_page(&page);
+        assert_eq!(s.blocks, [48; 4]);
+        assert_eq!(s.page, 156);
+    }
+
+    #[test]
+    fn zero_block_inside_page() {
+        let mut page = vec![0xABu8; PAGE_BYTES];
+        page[1024..2048].fill(0);
+        let s = analyze_page(&page);
+        assert_eq!(s.blocks[1], 0);
+        assert!(s.blocks[0] > 0 && s.blocks[2] > 0 && s.blocks[3] > 0);
+        assert!(s.page > 0, "page with any nonzero byte is not a zero page");
+    }
+
+    #[test]
+    fn block_size_is_local_to_block() {
+        // Same 1 KB content must get the same size in any slot.
+        let motif: Vec<u8> = (0..24u8).collect();
+        let block: Vec<u8> = motif.iter().cycle().take(1024).copied().collect();
+        let mut sizes = vec![];
+        for slot in 0..4 {
+            // Different (incompressible-ish) filler around it.
+            let mut page: Vec<u8> = (0..PAGE_BYTES)
+                .map(|i| ((i as u64).wrapping_mul(2654435761).wrapping_add(slot as u64) >> 16) as u8)
+                .collect();
+            page[slot * 1024..(slot + 1) * 1024].copy_from_slice(&block);
+            sizes.push(analyze_page(&page).blocks[slot]);
+        }
+        assert!(sizes.windows(2).all(|w| w[0] == w[1]), "{sizes:?}");
+    }
+
+    #[test]
+    fn bounds_hold() {
+        let pages = [const_page(0), const_page(7), {
+            let mut p = vec![0u8; PAGE_BYTES];
+            for (i, b) in p.iter_mut().enumerate() {
+                *b = ((i as u64).wrapping_mul(0x9E3779B97F4A7C15) >> 24) as u8;
+            }
+            p
+        }];
+        for p in &pages {
+            let s = analyze_page(p);
+            for b in s.blocks {
+                assert!(b == 0 || (HDR_1K..=1156).contains(&b));
+            }
+            assert!(s.page == 0 || (HDR_4K..=4624).contains(&s.page));
+        }
+    }
+
+    #[test]
+    fn batch_equals_single() {
+        let a = const_page(3);
+        let b = const_page(0);
+        let mut m = AnalyticSizeModel;
+        let batch = m.analyze(&[&a, &b]);
+        assert_eq!(batch[0], analyze_page(&a));
+        assert_eq!(batch[1], PageSizes::ZERO);
+    }
+}

@@ -1,0 +1,407 @@
+//! System configuration: Table 1 defaults, INI-subset files, CLI overrides.
+//!
+//! Everything a figure sweeps is a field here, so bench binaries are
+//! pure "clone config, tweak field, run" loops.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::path::Path;
+
+use crate::cxl::CxlConfig;
+use crate::mem::DramTiming;
+
+/// Which device architecture handles requests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SchemeKind {
+    /// No compression: OSPA==MPA, one access per request.
+    Uncompressed,
+    /// This paper.
+    Ibex,
+    /// TMCC base system (Panwar+ MICRO'22) — zsmalloc variable chunks.
+    Tmcc,
+    /// DyLeCT (Panwar+ ISCA'24) — short+normal metadata tables.
+    Dylect,
+    /// IBM MXT (Tremaine+ 2001) — on-chip tag array caching region.
+    Mxt,
+    /// DMC (Kim+ PACT'17) — line+block hybrid, 32 KB migration unit.
+    Dmc,
+    /// Compresso (Choukse+ MICRO'18) — line-level compression.
+    Compresso,
+}
+
+pub const ALL_SCHEMES: [SchemeKind; 7] = [
+    SchemeKind::Uncompressed,
+    SchemeKind::Compresso,
+    SchemeKind::Mxt,
+    SchemeKind::Dmc,
+    SchemeKind::Tmcc,
+    SchemeKind::Dylect,
+    SchemeKind::Ibex,
+];
+
+impl SchemeKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SchemeKind::Uncompressed => "uncompressed",
+            SchemeKind::Ibex => "ibex",
+            SchemeKind::Tmcc => "tmcc",
+            SchemeKind::Dylect => "dylect",
+            SchemeKind::Mxt => "mxt",
+            SchemeKind::Dmc => "dmc",
+            SchemeKind::Compresso => "compresso",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "uncompressed" | "none" => SchemeKind::Uncompressed,
+            "ibex" => SchemeKind::Ibex,
+            "tmcc" => SchemeKind::Tmcc,
+            "dylect" => SchemeKind::Dylect,
+            "mxt" => SchemeKind::Mxt,
+            "dmc" => SchemeKind::Dmc,
+            "compresso" => SchemeKind::Compresso,
+            _ => return None,
+        })
+    }
+}
+
+impl fmt::Display for SchemeKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// IBEX optimization toggles (Fig 13 applies them incrementally).
+#[derive(Clone, Copy, Debug)]
+pub struct IbexOptions {
+    /// §4.5 shadowed promotion.
+    pub shadow: bool,
+    /// §4.6 block co-location (1 KB blocks, 4 per metadata entry).
+    pub colocate: bool,
+    /// §4.7 metadata compaction (32 B entries, sub-region pointers).
+    pub compact: bool,
+}
+
+impl Default for IbexOptions {
+    fn default() -> Self {
+        // Full IBEX: all optimizations on (§6.1).
+        Self {
+            shadow: true,
+            colocate: true,
+            compact: true,
+        }
+    }
+}
+
+impl IbexOptions {
+    pub fn baseline() -> Self {
+        Self {
+            shadow: false,
+            colocate: false,
+            compact: false,
+        }
+    }
+}
+
+/// Complete simulation configuration. Defaults reproduce Table 1.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    // ---- host (Table 1: 4-core ariel, 3.4 GHz, 4-issue) ----
+    pub cores: usize,
+    /// Retired instructions per core cycle between memory requests.
+    pub ipc: u64,
+    /// Outstanding-miss limit per core (MSHRs).
+    pub mshrs_per_core: usize,
+    /// Fraction of reads on the critical path (blocking loads): the
+    /// core waits for their completion. Models OoO dependency stalls
+    /// without a full pipeline model; gives the simulator first-order
+    /// latency sensitivity (Fig 14) and realistic demand throttling.
+    pub dep_fraction: f64,
+    /// Simulated instructions per core (after warmup).
+    pub instructions: u64,
+    /// Warmup instructions (caches/promoted region filling; excluded
+    /// from reported metrics).
+    pub warmup_instructions: u64,
+
+    // ---- CXL interface ----
+    pub cxl: CxlConfig,
+
+    // ---- device memory (Table 1: dual channel DDR5-5600) ----
+    pub channels: usize,
+    pub banks_per_channel: usize,
+    pub timing: DramTiming,
+    /// Total device capacity (scaled from the paper's 128 GB).
+    pub device_bytes: u64,
+    /// Promoted-region size (Table 1: 512 MB).
+    pub promoted_bytes: u64,
+    /// Fig 1: infinite internal bandwidth at identical latency.
+    pub unlimited_internal_bw: bool,
+
+    // ---- compression engine ----
+    /// Compression latency for a 1 KB block, device cycles (Table 1: 256).
+    pub comp_cycles_per_kb: u64,
+    /// Decompression latency for a 1 KB block, device cycles (Table 1: 64).
+    pub decomp_cycles_per_kb: u64,
+
+    // ---- metadata cache (Table 1: 16-way 96 KB, 4-cycle) ----
+    pub meta_cache_bytes: usize,
+    pub meta_cache_ways: usize,
+    pub meta_cache_cycles: u64,
+
+    // ---- scheme ----
+    pub scheme: SchemeKind,
+    pub ibex: IbexOptions,
+    /// Fig 2: naive device SRAM cache for decompressed blocks (bytes,
+    /// 0 disables). Paper: 16-way 8 MB.
+    pub data_sram_bytes: usize,
+    /// Fig 12 "miracle": demotion-engine background traffic is free.
+    pub background_free: bool,
+    /// Demotion low-water mark: demote when free P-chunks < this (§4.1.1).
+    pub demotion_low_water: u64,
+    /// Incompressible-page recompression write threshold (§4.1.2).
+    pub wr_cntr_threshold: u8,
+
+    // ---- workload ----
+    /// Scale factor applied to paper-sized footprints (keeps ratios).
+    pub footprint_scale: f64,
+    /// Override read fraction (Fig 16); NaN = workload default.
+    pub read_fraction_override: f64,
+
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            cores: 4,
+            ipc: 4,
+            mshrs_per_core: 16,
+            dep_fraction: 0.35,
+            instructions: 20_000_000,
+            warmup_instructions: 4_000_000,
+            cxl: CxlConfig::default(),
+            channels: 2,
+            banks_per_channel: 16,
+            timing: DramTiming::default(),
+            device_bytes: 16 << 30,
+            promoted_bytes: 512 << 20,
+            unlimited_internal_bw: false,
+            comp_cycles_per_kb: 256,
+            decomp_cycles_per_kb: 64,
+            meta_cache_bytes: 96 * 1024,
+            meta_cache_ways: 16,
+            meta_cache_cycles: 4,
+            scheme: SchemeKind::Ibex,
+            ibex: IbexOptions::default(),
+            data_sram_bytes: 0,
+            background_free: false,
+            demotion_low_water: 256,
+            wr_cntr_threshold: 16,
+            footprint_scale: 1.0 / 16.0,
+            read_fraction_override: f64::NAN,
+            seed: DEFAULT_SEED,
+        }
+    }
+}
+
+/// A readable default seed ("IBEX SEED").
+const DEFAULT_SEED: u64 = 0x1BE_C5EED;
+
+impl SimConfig {
+    /// Table 1 configuration (the default).
+    pub fn table1() -> Self {
+        Self::default()
+    }
+
+    /// Fast configuration for unit/integration tests.
+    pub fn test_small() -> Self {
+        Self {
+            cores: 1,
+            instructions: 200_000,
+            warmup_instructions: 20_000,
+            device_bytes: 256 << 20,
+            promoted_bytes: 8 << 20,
+            footprint_scale: 1.0 / 1024.0,
+            ..Self::default()
+        }
+    }
+
+    /// Apply a `key=value` override; returns Err on unknown key/bad value.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        fn p<T: std::str::FromStr>(v: &str, key: &str) -> Result<T, String> {
+            v.parse()
+                .map_err(|_| format!("bad value {v:?} for {key}"))
+        }
+        match key {
+            "cores" => self.cores = p(value, key)?,
+            "ipc" => self.ipc = p(value, key)?,
+            "mshrs" | "mshrs_per_core" => self.mshrs_per_core = p(value, key)?,
+            "dep_fraction" => self.dep_fraction = p(value, key)?,
+            "instructions" => self.instructions = p(value, key)?,
+            "warmup_instructions" => self.warmup_instructions = p(value, key)?,
+            "cxl.round_trip_ns" => self.cxl.round_trip_ns = p(value, key)?,
+            "cxl.gbps" => self.cxl.gbps_per_dir = p(value, key)?,
+            "channels" => self.channels = p(value, key)?,
+            "banks_per_channel" => self.banks_per_channel = p(value, key)?,
+            "device_mb" => self.device_bytes = p::<u64>(value, key)? << 20,
+            "promoted_mb" => self.promoted_bytes = p::<u64>(value, key)? << 20,
+            "unlimited_internal_bw" => self.unlimited_internal_bw = p(value, key)?,
+            "comp_cycles" => self.comp_cycles_per_kb = p(value, key)?,
+            "decomp_cycles" => self.decomp_cycles_per_kb = p(value, key)?,
+            "meta_cache_kb" => self.meta_cache_bytes = p::<usize>(value, key)? * 1024,
+            "meta_cache_ways" => self.meta_cache_ways = p(value, key)?,
+            "scheme" => {
+                self.scheme = SchemeKind::parse(value)
+                    .ok_or_else(|| format!("unknown scheme {value:?}"))?
+            }
+            "ibex.shadow" => self.ibex.shadow = p(value, key)?,
+            "ibex.colocate" => self.ibex.colocate = p(value, key)?,
+            "ibex.compact" => self.ibex.compact = p(value, key)?,
+            "data_sram_mb" => self.data_sram_bytes = p::<usize>(value, key)? << 20,
+            "background_free" => self.background_free = p(value, key)?,
+            "demotion_low_water" => self.demotion_low_water = p(value, key)?,
+            "wr_cntr_threshold" => self.wr_cntr_threshold = p(value, key)?,
+            "footprint_scale" => self.footprint_scale = p(value, key)?,
+            "read_fraction" => self.read_fraction_override = p(value, key)?,
+            "seed" => self.seed = p(value, key)?,
+            _ => return Err(format!("unknown config key {key:?}")),
+        }
+        Ok(())
+    }
+
+    /// Load overrides from an INI-subset file: `key = value` lines,
+    /// `[section]` headers prefix keys with `section.`, `#`/`;` comments.
+    pub fn load_ini(&mut self, path: &Path) -> Result<(), String> {
+        let text = fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        self.apply_ini(&text)
+    }
+
+    pub fn apply_ini(&mut self, text: &str) -> Result<(), String> {
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split(['#', ';']).next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(sec) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = sec.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key=value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            self.set(&key, v.trim())?;
+        }
+        Ok(())
+    }
+
+    /// Dump all fields (for `ibex config-dump` and run logs).
+    pub fn dump(&self) -> BTreeMap<String, String> {
+        let mut m = BTreeMap::new();
+        let mut put = |k: &str, v: String| {
+            m.insert(k.to_string(), v);
+        };
+        put("cores", self.cores.to_string());
+        put("ipc", self.ipc.to_string());
+        put("mshrs_per_core", self.mshrs_per_core.to_string());
+        put("dep_fraction", format!("{}", self.dep_fraction));
+        put("instructions", self.instructions.to_string());
+        put("warmup_instructions", self.warmup_instructions.to_string());
+        put("cxl.round_trip_ns", self.cxl.round_trip_ns.to_string());
+        put("cxl.gbps", format!("{}", self.cxl.gbps_per_dir));
+        put("channels", self.channels.to_string());
+        put("banks_per_channel", self.banks_per_channel.to_string());
+        put("device_bytes", self.device_bytes.to_string());
+        put("promoted_bytes", self.promoted_bytes.to_string());
+        put(
+            "unlimited_internal_bw",
+            self.unlimited_internal_bw.to_string(),
+        );
+        put("comp_cycles", self.comp_cycles_per_kb.to_string());
+        put("decomp_cycles", self.decomp_cycles_per_kb.to_string());
+        put("meta_cache_bytes", self.meta_cache_bytes.to_string());
+        put("meta_cache_ways", self.meta_cache_ways.to_string());
+        put("scheme", self.scheme.to_string());
+        put("ibex.shadow", self.ibex.shadow.to_string());
+        put("ibex.colocate", self.ibex.colocate.to_string());
+        put("ibex.compact", self.ibex.compact.to_string());
+        put("data_sram_bytes", self.data_sram_bytes.to_string());
+        put("background_free", self.background_free.to_string());
+        put("demotion_low_water", self.demotion_low_water.to_string());
+        put("wr_cntr_threshold", self.wr_cntr_threshold.to_string());
+        put("footprint_scale", format!("{}", self.footprint_scale));
+        put("seed", self.seed.to_string());
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table1() {
+        let c = SimConfig::table1();
+        assert_eq!(c.cores, 4);
+        assert_eq!(c.cxl.round_trip_ns, 70);
+        assert_eq!(c.channels, 2);
+        assert_eq!(c.comp_cycles_per_kb, 256);
+        assert_eq!(c.decomp_cycles_per_kb, 64);
+        assert_eq!(c.meta_cache_bytes, 96 * 1024);
+        assert_eq!(c.meta_cache_ways, 16);
+        assert_eq!(c.promoted_bytes, 512 << 20);
+    }
+
+    #[test]
+    fn set_roundtrip() {
+        let mut c = SimConfig::default();
+        c.set("scheme", "tmcc").unwrap();
+        c.set("promoted_mb", "1024").unwrap();
+        c.set("cxl.round_trip_ns", "250").unwrap();
+        c.set("ibex.shadow", "false").unwrap();
+        assert_eq!(c.scheme, SchemeKind::Tmcc);
+        assert_eq!(c.promoted_bytes, 1024 << 20);
+        assert_eq!(c.cxl.round_trip_ns, 250);
+        assert!(!c.ibex.shadow);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = SimConfig::default();
+        assert!(c.set("nope", "1").is_err());
+        assert!(c.set("scheme", "nope").is_err());
+    }
+
+    #[test]
+    fn ini_parsing() {
+        let mut c = SimConfig::default();
+        c.apply_ini(
+            "# comment\nscheme = dylect\n[cxl]\nround_trip_ns = 150 ; inline\n\n[ibex]\ncompact = false\n",
+        )
+        .unwrap();
+        assert_eq!(c.scheme, SchemeKind::Dylect);
+        assert_eq!(c.cxl.round_trip_ns, 150);
+        assert!(!c.ibex.compact);
+    }
+
+    #[test]
+    fn ini_errors_carry_line() {
+        let mut c = SimConfig::default();
+        let e = c.apply_ini("scheme = ibex\nbogus line\n").unwrap_err();
+        assert!(e.contains("line 2"), "{e}");
+    }
+
+    #[test]
+    fn scheme_names_roundtrip() {
+        for s in ALL_SCHEMES {
+            assert_eq!(SchemeKind::parse(s.name()), Some(s));
+        }
+    }
+}

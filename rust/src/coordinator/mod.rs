@@ -1,0 +1,191 @@
+//! Experiment coordinator: builds systems from configs, runs them
+//! (optionally across threads), and aggregates figure-shaped results.
+//!
+//! Every bench binary is a thin loop over [`run_one`] / [`run_many`];
+//! the coordinator owns engine-model selection (PJRT artifact when
+//! available, analytic mirror otherwise) and result bookkeeping.
+
+pub mod report;
+
+use std::sync::mpsc;
+use std::thread;
+
+use crate::config::SimConfig;
+use crate::expander::build_scheme;
+use crate::host::{HostSim, RunMetrics};
+use crate::runtime::SharedEngine;
+use crate::workload::{by_name, WorkloadOracle, WorkloadSpec};
+
+/// A labeled simulation job.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub label: String,
+    pub cfg: SimConfig,
+    pub workload: String,
+}
+
+impl Job {
+    pub fn new(label: impl Into<String>, cfg: SimConfig, workload: &str) -> Self {
+        Self {
+            label: label.into(),
+            cfg,
+            workload: workload.to_string(),
+        }
+    }
+}
+
+/// Result of a labeled run.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub label: String,
+    pub workload: String,
+    pub scheme: String,
+    pub metrics: RunMetrics,
+    pub device: DeviceSummary,
+}
+
+/// Flattened device statistics (so results can cross threads without
+/// dragging the device along).
+#[derive(Clone, Debug, Default)]
+pub struct DeviceSummary {
+    pub promotions: u64,
+    pub demotions: u64,
+    pub clean_demotions: u64,
+    pub random_victims: u64,
+    pub victim_selections: u64,
+    pub probe_skips: u64,
+    pub zero_serves: u64,
+    pub promoted_hits: u64,
+    pub compressed_serves: u64,
+    pub wrcnt_recompressions: u64,
+    pub mean_latency_ns: f64,
+    pub p99_latency_ns: u64,
+}
+
+/// Run one job on the calling thread.
+pub fn run_one(job: &Job) -> JobResult {
+    let spec: WorkloadSpec =
+        by_name(&job.workload).unwrap_or_else(|| panic!("unknown workload {}", job.workload));
+    let engine = SharedEngine::global();
+    let mut oracle = WorkloadOracle::new(spec.content, job.cfg.seed, engine);
+    let mut device = build_scheme(&job.cfg);
+    let mut sim = HostSim::new(&job.cfg, &spec);
+    let metrics = sim.run(device.as_mut(), &mut oracle);
+    let s = device.stats();
+    JobResult {
+        label: job.label.clone(),
+        workload: job.workload.clone(),
+        scheme: device.name().to_string(),
+        metrics,
+        device: DeviceSummary {
+            promotions: s.promotions,
+            demotions: s.demotions,
+            clean_demotions: s.clean_demotions,
+            random_victims: s.random_victims,
+            victim_selections: s.victim_selections,
+            probe_skips: s.probe_skips,
+            zero_serves: s.zero_serves,
+            promoted_hits: s.promoted_hits,
+            compressed_serves: s.compressed_serves,
+            wrcnt_recompressions: s.wrcnt_recompressions,
+            mean_latency_ns: s.latency.mean_ns(),
+            p99_latency_ns: s.latency.percentile_ns(0.99),
+        },
+    }
+}
+
+/// Thread-pool width (env-overridable; results are order-preserving and
+/// bit-identical regardless of width — all randomness is job-seeded).
+pub fn parallelism() -> usize {
+    std::env::var("IBEX_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| {
+            thread::available_parallelism()
+                .map(|n| n.get().min(8))
+                .unwrap_or(4)
+        })
+        .max(1)
+}
+
+/// Run jobs across a worker pool, preserving input order.
+pub fn run_many(jobs: Vec<Job>) -> Vec<JobResult> {
+    let width = parallelism().min(jobs.len().max(1));
+    if width <= 1 {
+        return jobs.iter().map(run_one).collect();
+    }
+    let (tx, rx) = mpsc::channel::<(usize, JobResult)>();
+    let jobs_arc = std::sync::Arc::new(jobs);
+    let counter = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    let mut handles = Vec::new();
+    for _ in 0..width {
+        let tx = tx.clone();
+        let jobs = jobs_arc.clone();
+        let counter = counter.clone();
+        handles.push(thread::spawn(move || loop {
+            let i = counter.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            if i >= jobs.len() {
+                break;
+            }
+            let r = run_one(&jobs[i]);
+            if tx.send((i, r)).is_err() {
+                break;
+            }
+        }));
+    }
+    drop(tx);
+    let mut slots: Vec<Option<JobResult>> = (0..jobs_arc.len()).map(|_| None).collect();
+    for (i, r) in rx {
+        slots[i] = Some(r);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    slots.into_iter().map(|s| s.expect("job lost")).collect()
+}
+
+/// Convenience: performance of `cfg` on `workload`, normalized to the
+/// uncompressed baseline with identical host/link settings.
+pub fn normalized_perf(cfg: &SimConfig, workload: &str) -> f64 {
+    let mut base_cfg = cfg.clone();
+    base_cfg.set("scheme", "uncompressed").unwrap();
+    base_cfg.data_sram_bytes = 0;
+    let base = run_one(&Job::new("base", base_cfg, workload));
+    let test = run_one(&Job::new("test", cfg.clone(), workload));
+    test.metrics.perf() / base.metrics.perf()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> SimConfig {
+        let mut c = SimConfig::test_small();
+        c.instructions = 60_000;
+        c.warmup_instructions = 6_000;
+        c
+    }
+
+    #[test]
+    fn run_one_works() {
+        let r = run_one(&Job::new("t", quick(), "parest"));
+        assert_eq!(r.scheme, "ibex");
+        assert!(r.metrics.perf() > 0.0);
+    }
+
+    #[test]
+    fn run_many_preserves_order_and_determinism() {
+        let jobs: Vec<Job> = ["parest", "omnetpp", "mcf", "parest"]
+            .iter()
+            .map(|w| Job::new(*w, quick(), w))
+            .collect();
+        let a = run_many(jobs.clone());
+        let b = run_many(jobs);
+        let ea: Vec<u64> = a.iter().map(|r| r.metrics.elapsed_ps).collect();
+        let eb: Vec<u64> = b.iter().map(|r| r.metrics.elapsed_ps).collect();
+        assert_eq!(ea, eb, "parallel runs must be deterministic");
+        assert_eq!(a[0].metrics.elapsed_ps, a[3].metrics.elapsed_ps);
+        assert_eq!(a[0].workload, "parest");
+        assert_eq!(a[2].workload, "mcf");
+    }
+}

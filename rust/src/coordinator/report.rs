@@ -1,0 +1,76 @@
+//! Figure/table assembly helpers shared by the bench binaries.
+
+use crate::stats::{geomean, Table};
+
+use super::JobResult;
+
+/// Normalized-performance table: rows = workloads, columns = labels,
+/// with a geomean row — the shape of Figs 1, 2, 9, 12, 14.
+pub fn perf_table(
+    title: &str,
+    workloads: &[&str],
+    labels: &[&str],
+    // results indexed [label][workload]; each normalized already.
+    norm: &[Vec<f64>],
+) -> Table {
+    let mut headers = vec!["workload"];
+    headers.extend_from_slice(labels);
+    let mut t = Table::new(title, &headers);
+    for (wi, w) in workloads.iter().enumerate() {
+        let mut row = vec![w.to_string()];
+        for series in norm {
+            row.push(format!("{:.3}", series[wi]));
+        }
+        t.row(row);
+    }
+    let mut gm = vec!["geomean".to_string()];
+    for series in norm {
+        gm.push(format!("{:.3}", geomean(series)));
+    }
+    t.row(gm);
+    t
+}
+
+/// Performance of each result relative to a baseline series.
+pub fn normalize(results: &[JobResult], baseline: &[JobResult]) -> Vec<f64> {
+    assert_eq!(results.len(), baseline.len());
+    results
+        .iter()
+        .zip(baseline)
+        .map(|(r, b)| r.metrics.perf() / b.metrics.perf())
+        .collect()
+}
+
+/// Memory-access breakdown rows (Fig 11/13 shape): control, promotion,
+/// demotion, final — normalized to `denom` accesses.
+pub fn breakdown_row(r: &JobResult, denom: f64) -> Vec<String> {
+    let k = &r.metrics.mem_by_kind;
+    let f = |x: u64| format!("{:.3}", x as f64 / denom);
+    vec![
+        r.workload.clone(),
+        r.label.clone(),
+        f(k[0]),
+        f(k[1]),
+        f(k[2]),
+        f(k[3]),
+        format!("{:.3}", r.metrics.mem_total as f64 / denom),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perf_table_shapes() {
+        let t = perf_table(
+            "Fig X",
+            &["a", "b"],
+            &["s1", "s2"],
+            &[vec![1.0, 2.0], vec![0.5, 0.5]],
+        );
+        assert_eq!(t.rows.len(), 3); // 2 workloads + geomean
+        assert_eq!(t.rows[2][1], "1.414"); // geomean(1,2)
+        assert_eq!(t.rows[2][2], "0.500");
+    }
+}

@@ -1,0 +1,153 @@
+//! Fixed-size chunk allocators for the compressed and promoted regions.
+//!
+//! §4.1.1: both regions are managed with free lists whose head pointer
+//! lives in a hardware register; popping/pushing a node touches the node
+//! itself in device memory (one 64 B control access — charged by the
+//! scheme, not here). §4.7 splits the compressed region into sub-regions
+//! so chunk pointers can share their MSBs; all C-chunks of one page must
+//! come from one sub-region.
+
+/// Free-list allocator over `total` fixed-size chunks.
+#[derive(Clone, Debug)]
+pub struct ChunkAllocator {
+    /// LIFO free list (models the linked list with a head register).
+    free: Vec<u32>,
+    total: u32,
+    chunk_bytes: u64,
+    base_addr: u64,
+    pub allocs: u64,
+    pub frees: u64,
+}
+
+impl ChunkAllocator {
+    pub fn new(base_addr: u64, chunk_bytes: u64, total: u32) -> Self {
+        assert!(total > 0, "empty region");
+        // Head of the Vec's tail = head of the free list; initialize in
+        // address order so early allocations are contiguous.
+        let free: Vec<u32> = (0..total).rev().collect();
+        Self {
+            free,
+            total,
+            chunk_bytes,
+            base_addr,
+            allocs: 0,
+            frees: 0,
+        }
+    }
+
+    pub fn alloc(&mut self) -> Option<u32> {
+        let c = self.free.pop()?;
+        self.allocs += 1;
+        Some(c)
+    }
+
+    /// Allocate `n` chunks, or none (all-or-nothing).
+    pub fn alloc_n(&mut self, n: usize) -> Option<Vec<u32>> {
+        if self.free.len() < n {
+            return None;
+        }
+        self.allocs += n as u64;
+        Some((0..n).map(|_| self.free.pop().unwrap()).collect())
+    }
+
+    pub fn free_chunk(&mut self, c: u32) {
+        debug_assert!(c < self.total, "chunk {c} out of range");
+        debug_assert!(!self.free.contains(&c), "double free of chunk {c}");
+        self.frees += 1;
+        self.free.push(c);
+    }
+
+    pub fn free_many(&mut self, chunks: &[u32]) {
+        for &c in chunks {
+            self.free_chunk(c);
+        }
+    }
+
+    pub fn free_count(&self) -> u32 {
+        self.free.len() as u32
+    }
+
+    pub fn used_count(&self) -> u32 {
+        self.total - self.free_count()
+    }
+
+    pub fn total(&self) -> u32 {
+        self.total
+    }
+
+    pub fn chunk_bytes(&self) -> u64 {
+        self.chunk_bytes
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used_count() as u64 * self.chunk_bytes
+    }
+
+    /// Device-physical address of a chunk (for DRAM bank routing).
+    #[inline]
+    pub fn addr(&self, chunk: u32) -> u64 {
+        self.base_addr + chunk as u64 * self.chunk_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut a = ChunkAllocator::new(0x1000, 512, 8);
+        let c1 = a.alloc().unwrap();
+        let c2 = a.alloc().unwrap();
+        assert_ne!(c1, c2);
+        assert_eq!(a.free_count(), 6);
+        a.free_chunk(c1);
+        assert_eq!(a.free_count(), 7);
+        assert_eq!(a.used_bytes(), 512);
+    }
+
+    #[test]
+    fn first_allocations_are_contiguous() {
+        let mut a = ChunkAllocator::new(0, 512, 16);
+        assert_eq!(a.alloc(), Some(0));
+        assert_eq!(a.alloc(), Some(1));
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let mut a = ChunkAllocator::new(0, 4096, 2);
+        assert!(a.alloc().is_some());
+        assert!(a.alloc().is_some());
+        assert!(a.alloc().is_none());
+        assert!(a.alloc_n(1).is_none());
+    }
+
+    #[test]
+    fn alloc_n_is_all_or_nothing() {
+        let mut a = ChunkAllocator::new(0, 512, 4);
+        assert!(a.alloc_n(5).is_none());
+        assert_eq!(a.free_count(), 4, "failed alloc_n must not leak");
+        let v = a.alloc_n(4).unwrap();
+        assert_eq!(v.len(), 4);
+        assert_eq!(a.free_count(), 0);
+        a.free_many(&v);
+        assert_eq!(a.free_count(), 4);
+    }
+
+    #[test]
+    fn addresses_are_disjoint() {
+        let a = ChunkAllocator::new(0x10_0000, 512, 100);
+        assert_eq!(a.addr(0), 0x10_0000);
+        assert_eq!(a.addr(1), 0x10_0200);
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)] // debug_assert-backed check
+    fn double_free_is_caught() {
+        let mut a = ChunkAllocator::new(0, 512, 4);
+        let c = a.alloc().unwrap();
+        a.free_chunk(c);
+        a.free_chunk(c);
+    }
+}

@@ -1,0 +1,5 @@
+//! DyLeCT is implemented as the dual-table variant of the TMCC base
+//! system — see [`crate::expander::tmcc`]. This module exists so the
+//! module tree matches the DESIGN.md inventory.
+
+pub use super::tmcc::Tmcc as Dylect;

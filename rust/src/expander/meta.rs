@@ -1,0 +1,139 @@
+//! Translation-metadata formats and their access-cost model.
+//!
+//! The *functional* page state lives in the schemes' page tables; this
+//! module models the formats' **cost**: entry size, how many 64 B
+//! fetches a miss needs, and the metadata-region footprint — the knobs
+//! §4.6/§4.7 turn:
+//!
+//! | format      | entry      | fetches/miss | covers |
+//! |-------------|------------|--------------|--------|
+//! | naive (§4.1.2)       | 64 B (265 b used) | 1    | 4 KB page, 4 KB block |
+//! | co-located (§4.6)    | 283 b unaligned   | ~1.5 | 4 KB page, 4×1 KB blocks |
+//! | compacted (§4.7)     | 32 B              | 1    | 4 KB page, 4×1 KB blocks |
+//!
+//! The co-located-but-uncompacted format packs 283-bit entries densely,
+//! so about half of them straddle a 64 B boundary and need two fetches —
+//! the 3.3% traffic the 'M' step removes in Fig 13.
+
+/// Metadata layout selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetaFormat {
+    /// Figure 4: type(2) + num_chunks(3) + wr_cntr(4) + 8×32 b pointers.
+    Naive,
+    /// Figure 7: 4×[block_type(2)+block_sz(3)] + num_chunks + wr_cntr +
+    /// 8×32 b pointers — 283 b, packed unaligned.
+    Colocated,
+    /// Figure 8(b): sub-region-relative 28 b pointers → 32 B entry.
+    Compacted,
+}
+
+impl MetaFormat {
+    /// Entry footprint in the metadata region, bytes.
+    pub fn entry_bytes(self) -> usize {
+        match self {
+            // Naive entries are padded to the 64 B access granule.
+            MetaFormat::Naive => 64,
+            // 283 b packed: average footprint (for region sizing).
+            MetaFormat::Colocated => 36,
+            MetaFormat::Compacted => 32,
+        }
+    }
+
+    /// 64 B fetches needed to read entry number `index` on a miss.
+    pub fn fetches(self, index: u64) -> u64 {
+        match self {
+            MetaFormat::Naive => 1,
+            // A 283 b entry at bit offset 283*index crosses a 512-bit
+            // boundary unless it fits entirely within one line.
+            MetaFormat::Colocated => {
+                let start_bit = 283 * index;
+                let end_bit = start_bit + 282;
+                if start_bit / 512 == end_bit / 512 {
+                    1
+                } else {
+                    2
+                }
+            }
+            // Two 32 B entries per 64 B line: always one fetch.
+            MetaFormat::Compacted => 1,
+        }
+    }
+
+    /// Expected fetches per miss (for reports).
+    pub fn avg_fetches(self) -> f64 {
+        match self {
+            MetaFormat::Naive | MetaFormat::Compacted => 1.0,
+            MetaFormat::Colocated => {
+                let n = 4096u64;
+                (0..n).map(|i| self.fetches(i)).sum::<u64>() as f64 / n as f64
+            }
+        }
+    }
+
+    /// Metadata-region bytes for a device holding `pages` pages.
+    pub fn region_bytes(self, pages: u64) -> u64 {
+        pages * self.entry_bytes() as u64
+    }
+
+    /// Pick the format IBEX's option set implies.
+    pub fn for_options(colocate: bool, compact: bool) -> Self {
+        match (colocate, compact) {
+            (false, _) => MetaFormat::Naive,
+            (true, false) => MetaFormat::Colocated,
+            (true, true) => MetaFormat::Compacted,
+        }
+    }
+}
+
+/// Page-activity-region entry (§4.4): allocated(1) + OSPN(30) +
+/// referenced(1) = 4 B; 16 entries per 64 B fetch.
+pub const ACTIVITY_ENTRY_BYTES: u64 = 4;
+pub const ACTIVITY_ENTRIES_PER_FETCH: u64 = 64 / ACTIVITY_ENTRY_BYTES;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn naive_always_single_fetch() {
+        for i in 0..100 {
+            assert_eq!(MetaFormat::Naive.fetches(i), 1);
+        }
+    }
+
+    #[test]
+    fn colocated_crosses_boundaries_about_half_the_time() {
+        let avg = MetaFormat::Colocated.avg_fetches();
+        assert!(
+            (1.4..1.6).contains(&avg),
+            "≈half of 283 b entries must straddle a 64 B line, avg={avg}"
+        );
+    }
+
+    #[test]
+    fn compacted_always_single_fetch() {
+        for i in 0..10_000 {
+            assert_eq!(MetaFormat::Compacted.fetches(i), 1);
+        }
+    }
+
+    #[test]
+    fn option_mapping() {
+        assert_eq!(MetaFormat::for_options(false, false), MetaFormat::Naive);
+        assert_eq!(MetaFormat::for_options(false, true), MetaFormat::Naive);
+        assert_eq!(MetaFormat::for_options(true, false), MetaFormat::Colocated);
+        assert_eq!(MetaFormat::for_options(true, true), MetaFormat::Compacted);
+    }
+
+    #[test]
+    fn region_sizing() {
+        // 1M pages: naive 64 MB vs compacted 32 MB.
+        assert_eq!(MetaFormat::Naive.region_bytes(1 << 20), 64 << 20);
+        assert_eq!(MetaFormat::Compacted.region_bytes(1 << 20), 32 << 20);
+    }
+
+    #[test]
+    fn activity_packing() {
+        assert_eq!(ACTIVITY_ENTRIES_PER_FETCH, 16); // §4.4: 64B/4B
+    }
+}

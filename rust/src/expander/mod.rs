@@ -1,0 +1,306 @@
+//! The CXL memory-expander device models.
+//!
+//! Everything behind the CXL link lives here: the OSPA→MPA translation
+//! machinery, metadata caching, chunk allocation, the compression-engine
+//! occupancy model, and the per-scheme control flow:
+//!
+//! * [`ibex`] — this paper (§4): second-chance page-activity region with
+//!   lazy reference updates, shadowed promotion, block co-location and
+//!   metadata compaction (each independently toggleable for Fig 13).
+//! * [`tmcc`] / [`dylect`] / [`mxt`] / [`dmc`] — the promotion-based
+//!   block-level comparison points (§5).
+//! * [`compresso`] — the line-level comparison point.
+//! * [`uncompressed`] — the normalization baseline.
+//! * [`naive_sram`] — Fig 2's motivation strawman (block compression
+//!   fronted by an 8 MB SRAM block cache, no promotion).
+//!
+//! All schemes implement [`Scheme`]; the host/coordinator drives them
+//! through [`Scheme::access`] and reads [`DeviceStats`] + the memory
+//! system's [`crate::mem::TrafficBreakdown`] afterwards.
+
+pub mod chunk;
+pub mod compresso;
+pub mod dmc;
+pub mod dylect;
+pub mod ibex;
+pub mod meta;
+pub mod mxt;
+pub mod naive_sram;
+pub mod tmcc;
+pub mod uncompressed;
+
+use crate::cache::SetAssocCache;
+use crate::compress::{EngineTiming, PageSizes};
+use crate::config::{SchemeKind, SimConfig};
+use crate::mem::{DramTiming, MemKind, MemorySystem};
+use crate::sim::{device_cycles, Bandwidth, Ps, Resource};
+use crate::stats::LatencyHist;
+
+/// 4 KB pages; 64 B lines; 512 B C-chunks (§4.1.2).
+pub const PAGE_BYTES: u64 = 4096;
+pub const LINE_BYTES: u64 = 64;
+pub const LINES_PER_PAGE: u64 = PAGE_BYTES / LINE_BYTES;
+pub const CCHUNK_BYTES: u64 = 512;
+pub const CCHUNKS_PER_PAGE: u64 = PAGE_BYTES / CCHUNK_BYTES;
+
+/// Supplies page contents' compressed sizes (and their evolution under
+/// writes) to the device. Implemented by the workload layer on top of
+/// the PJRT/analytic engine model.
+pub trait ContentOracle {
+    /// Sizes of the page's current contents.
+    fn sizes(&mut self, ospn: u64) -> PageSizes;
+
+    /// The page was written; contents (and sizes) may change.
+    /// Returns the new sizes.
+    fn on_write(&mut self, ospn: u64) -> PageSizes;
+
+    /// True if this page is all-zero at first touch.
+    fn is_zero_fill(&mut self, ospn: u64) -> bool {
+        self.sizes(ospn).page == 0
+    }
+}
+
+/// Device-side statistics common to all schemes.
+#[derive(Clone, Debug, Default)]
+pub struct DeviceStats {
+    pub reads: u64,
+    pub writes: u64,
+    /// Served purely from metadata type bits (zero pages).
+    pub zero_serves: u64,
+    /// Served from the promoted/caching region.
+    pub promoted_hits: u64,
+    /// Required fetching + decompressing compressed data.
+    pub compressed_serves: u64,
+    /// Served raw from C-chunks (incompressible pages).
+    pub incompressible_serves: u64,
+    /// Page- (or block-) granularity promotions performed.
+    pub promotions: u64,
+    /// Demotions performed.
+    pub demotions: u64,
+    /// Demotions satisfied by shadow pointers (no recompression).
+    pub clean_demotions: u64,
+    /// Demotion victims picked by the random fallback (§4.4).
+    pub random_victims: u64,
+    /// Victim-scan entries skipped due to metadata-cache probe hits.
+    pub probe_skips: u64,
+    /// Total victim selections (denominator for `random_victims`).
+    pub victim_selections: u64,
+    /// Recompressions triggered by the wr_cntr threshold (§4.1.2).
+    pub wrcnt_recompressions: u64,
+    /// Reply latency (device-internal, request arrival → data ready).
+    pub latency: LatencyHist,
+}
+
+/// Result of a metadata-cache access.
+#[derive(Clone, Copy, Debug)]
+pub struct MetaOutcome {
+    /// Time translation information is available.
+    pub ready: Ps,
+    /// Whether the lookup hit in the metadata cache.
+    pub hit: bool,
+    /// Key evicted to make room (miss path only).
+    pub evicted: Option<u64>,
+}
+
+/// Shared device substrate: internal DRAM, compression engine port,
+/// metadata cache and timing knobs. Schemes embed one of these.
+pub struct Substrate {
+    pub mem: MemorySystem,
+    /// Compression pipeline (4 B/cycle, used by demotion/recompression).
+    pub comp_engine: Bandwidth,
+    /// Decompression pipeline (16 B/cycle, on the read-serve path).
+    /// Separate units, per the paper's §5 throughput figures — so
+    /// background recompression bursts cannot stall foreground serves.
+    pub decomp_engine: Bandwidth,
+    pub timing: EngineTiming,
+    /// Metadata cache: key = ospn (or scheme-defined), value = scheme tag.
+    pub meta_cache: SetAssocCache<u64>,
+    pub meta_latency: Ps,
+    pub background_free: bool,
+    pub stats: DeviceStats,
+}
+
+impl Substrate {
+    pub fn new(cfg: &SimConfig, meta_entry_bytes: usize) -> Self {
+        let mut mem = MemorySystem::new(
+            cfg.channels,
+            cfg.banks_per_channel,
+            DramTiming {
+                ..cfg.timing
+            },
+        );
+        mem.unlimited = cfg.unlimited_internal_bw;
+        Self {
+            mem,
+            comp_engine: Bandwidth::new(),
+            decomp_engine: Bandwidth::new(),
+            timing: EngineTiming {
+                comp_cycles_per_kb: cfg.comp_cycles_per_kb,
+                decomp_cycles_per_kb: cfg.decomp_cycles_per_kb,
+            },
+            meta_cache: SetAssocCache::with_capacity(
+                cfg.meta_cache_bytes,
+                meta_entry_bytes,
+                cfg.meta_cache_ways,
+            ),
+            meta_latency: device_cycles(cfg.meta_cache_cycles),
+            background_free: cfg.background_free,
+            stats: DeviceStats::default(),
+        }
+    }
+
+    /// Charge a metadata access for `key`. On a miss, issues
+    /// `reads_on_miss` control reads at `meta_addr` and inserts the
+    /// entry; a dirty victim costs one control write-back. Returns the
+    /// time translation data is ready plus the evicted key (if any), so
+    /// schemes can hook evictions (IBEX's lazy reference update, §4.4).
+    pub fn meta_access(
+        &mut self,
+        now: Ps,
+        key: u64,
+        meta_addr: u64,
+        reads_on_miss: u64,
+        mark_dirty: bool,
+    ) -> MetaOutcome {
+        let t = now + self.meta_latency;
+        if self.meta_cache.lookup(key).is_some() {
+            if mark_dirty {
+                self.meta_cache.set_dirty(key);
+            }
+            return MetaOutcome {
+                ready: t,
+                hit: true,
+                evicted: None,
+            };
+        }
+        // Miss: fetch the entry (1 access for <=64 B entries; wider or
+        // unaligned formats charge more — see meta.rs).
+        let mut done = t;
+        for i in 0..reads_on_miss {
+            done = self
+                .mem
+                .access(t, meta_addr + i * LINE_BYTES, false, MemKind::Control);
+        }
+        let mut evicted = None;
+        if let Some(victim) = self.meta_cache.insert(key, 0, mark_dirty) {
+            if victim.dirty {
+                // Write-back of the victim's metadata line (posted).
+                self.mem
+                    .access(done, victim.key ^ 0x5A5A_0000, true, MemKind::Control);
+            }
+            evicted = Some(victim.key);
+        }
+        MetaOutcome {
+            ready: done,
+            hit: false,
+            evicted,
+        }
+    }
+
+    /// Occupy the compression pipeline for `occ` ps starting at `ready`.
+    pub fn compress_busy(&mut self, ready: Ps, occ: Ps) -> Ps {
+        self.comp_engine.acquire(ready, occ)
+    }
+
+    /// Occupy the decompression pipeline for `occ` ps starting at `ready`.
+    pub fn decompress_busy(&mut self, ready: Ps, occ: Ps) -> Ps {
+        self.decomp_engine.acquire(ready, occ)
+    }
+}
+
+/// A device scheme: handles 64 B host requests.
+pub trait Scheme {
+    /// Handle a request to byte offset `line_addr` (64 B-aligned) of OS
+    /// page `ospn`, arriving at device time `now`. Returns the time the
+    /// reply is ready at the device's egress port.
+    fn access(
+        &mut self,
+        now: Ps,
+        ospn: u64,
+        line: u32,
+        write: bool,
+        oracle: &mut dyn ContentOracle,
+    ) -> Ps;
+
+    /// Pre-populate a page as resident cold data (simulation setup —
+    /// charged no traffic, mirroring the paper's post-fast-forward
+    /// state: inputs loaded, promoted region empty).
+    fn populate(&mut self, ospn: u64, sizes: PageSizes);
+
+    fn stats(&self) -> &DeviceStats;
+    fn mem(&self) -> &MemorySystem;
+
+    /// Logical bytes of resident non-zero data.
+    fn logical_bytes(&self) -> u64;
+    /// Physical bytes backing them (chunks + promoted slots + shadows).
+    fn physical_bytes(&self) -> u64;
+
+    /// Effective compression ratio (zero/untouched regions excluded,
+    /// §6.1). 1.0 when nothing is resident.
+    fn compression_ratio(&self) -> f64 {
+        let p = self.physical_bytes();
+        if p == 0 {
+            1.0
+        } else {
+            self.logical_bytes() as f64 / p as f64
+        }
+    }
+
+    /// Scheme label for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Instantiate the configured scheme.
+pub fn build_scheme(cfg: &SimConfig) -> Box<dyn Scheme> {
+    if cfg.data_sram_bytes > 0 {
+        return Box::new(naive_sram::NaiveSram::new(cfg));
+    }
+    match cfg.scheme {
+        SchemeKind::Uncompressed => Box::new(uncompressed::Uncompressed::new(cfg)),
+        SchemeKind::Ibex => Box::new(ibex::Ibex::new(cfg)),
+        SchemeKind::Tmcc => Box::new(tmcc::Tmcc::new(cfg, false)),
+        SchemeKind::Dylect => Box::new(tmcc::Tmcc::new(cfg, true)),
+        SchemeKind::Mxt => Box::new(mxt::Mxt::new(cfg)),
+        SchemeKind::Dmc => Box::new(dmc::Dmc::new(cfg)),
+        SchemeKind::Compresso => Box::new(compresso::Compresso::new(cfg)),
+    }
+}
+
+/// Round a compressed size up to whole C-chunks, capped at the page's
+/// raw chunk count (incompressible ⇒ stored raw in 8 chunks).
+pub fn chunks_for(size_bytes: u32, raw_bytes: u64) -> u64 {
+    let needed = (size_bytes as u64).div_ceil(CCHUNK_BYTES);
+    let raw = raw_bytes / CCHUNK_BYTES;
+    needed.min(raw).max(if size_bytes == 0 { 0 } else { 1 })
+}
+
+/// Is a page (4 KB granularity) effectively incompressible? The naive
+/// format reserves only 7 pointers for compressed data (§4.5), so
+/// anything needing all 8 chunks is stored raw.
+pub fn incompressible_4k(size: u32) -> bool {
+    size as u64 > 7 * CCHUNK_BYTES
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_rounding() {
+        assert_eq!(chunks_for(0, PAGE_BYTES), 0);
+        assert_eq!(chunks_for(1, PAGE_BYTES), 1);
+        assert_eq!(chunks_for(512, PAGE_BYTES), 1);
+        assert_eq!(chunks_for(513, PAGE_BYTES), 2);
+        assert_eq!(chunks_for(2000, PAGE_BYTES), 4); // paper's example
+        assert_eq!(chunks_for(4096, PAGE_BYTES), 8);
+        assert_eq!(chunks_for(9999, PAGE_BYTES), 8); // capped at raw
+        assert_eq!(chunks_for(300, 1024), 1);
+        assert_eq!(chunks_for(1100, 1024), 2); // capped at raw for 1KB block
+    }
+
+    #[test]
+    fn incompressibility_threshold() {
+        assert!(!incompressible_4k(3584));
+        assert!(incompressible_4k(3585));
+    }
+}

@@ -1,0 +1,237 @@
+//! Fig 2's motivation strawman: block-compressed memory fronted by a
+//! device-side SRAM cache of decompressed blocks (16-way 8 MB in §3.2),
+//! with **no** promoted region.
+//!
+//! Hits are served from SRAM (no DRAM traffic at all); every miss pays
+//! the full compressed-block fetch + decompression; dirty SRAM evictions
+//! recompress and write back. Works for cache-friendly workloads,
+//! collapses for memory-intensive ones (omnetpp, pr, cc, XSBench) —
+//! reproducing the figure's 76% degradation cases.
+
+use std::collections::HashMap;
+
+use crate::cache::SetAssocCache;
+use crate::compress::PageSizes;
+use crate::config::SimConfig;
+use crate::expander::{
+    chunks_for, incompressible_4k, ContentOracle, DeviceStats, Scheme, Substrate, CCHUNK_BYTES,
+    LINE_BYTES, LINES_PER_PAGE, PAGE_BYTES,
+};
+use crate::mem::{MemKind, MemorySystem};
+use crate::sim::{device_cycles, Ps};
+
+/// SRAM access latency (a large on-device SRAM macro).
+const SRAM_CYCLES: u64 = 8;
+
+pub struct NaiveSram {
+    sub: Substrate,
+    /// SRAM block cache: key = ospn, value unused (dirty tracked by line).
+    sram: SetAssocCache<()>,
+    sizes: HashMap<u64, u32>,
+    logical: u64,
+    chunk_bytes_used: u64,
+}
+
+impl NaiveSram {
+    pub fn new(cfg: &SimConfig) -> Self {
+        let blocks = (cfg.data_sram_bytes as u64 / PAGE_BYTES).max(16) as usize;
+        let ways = 16.min(blocks);
+        Self {
+            sub: Substrate::new(cfg, 64),
+            sram: SetAssocCache::new((blocks / ways).max(1), ways),
+            sizes: HashMap::new(),
+            logical: 0,
+            chunk_bytes_used: 0,
+        }
+    }
+
+    fn ensure(&mut self, ospn: u64, sizes: PageSizes) {
+        if self.sizes.contains_key(&ospn) {
+            return;
+        }
+        let s = sizes.page;
+        self.sizes.insert(ospn, s);
+        if s != 0 {
+            self.logical += PAGE_BYTES;
+            self.chunk_bytes_used += if incompressible_4k(s) {
+                PAGE_BYTES
+            } else {
+                chunks_for(s, PAGE_BYTES) * CCHUNK_BYTES
+            };
+        }
+    }
+}
+
+impl Scheme for NaiveSram {
+    fn access(
+        &mut self,
+        now: Ps,
+        ospn: u64,
+        line: u32,
+        write: bool,
+        oracle: &mut dyn ContentOracle,
+    ) -> Ps {
+        if write {
+            self.sub.stats.writes += 1;
+        } else {
+            self.sub.stats.reads += 1;
+        }
+        if !self.sizes.contains_key(&ospn) {
+            let s = oracle.sizes(ospn);
+            self.ensure(ospn, s);
+        }
+        let _ = line;
+        let t = now + device_cycles(SRAM_CYCLES);
+
+        let reply = if self.sram.lookup(ospn).is_some() {
+            // SRAM hit: served on-chip, no memory access at all.
+            self.sub.stats.promoted_hits += 1;
+            if write {
+                self.sram.set_dirty(ospn);
+                let new = oracle.on_write(ospn);
+                self.sizes.insert(ospn, new.page);
+            }
+            t
+        } else {
+            let size = self.sizes[&ospn];
+            if size == 0 && !write {
+                // Zero page: metadata read to discover it.
+                self.sub.stats.zero_serves += 1;
+                let outcome = self.sub.meta_access(now, ospn, (ospn % (1 << 22)) * 64, 1, false);
+                outcome.ready
+            } else {
+                self.sub.stats.compressed_serves += 1;
+                let outcome = self.sub.meta_access(now, ospn, (ospn % (1 << 22)) * 64, 1, false);
+                let chunk_lines = if size == 0 {
+                    1
+                } else if incompressible_4k(size) {
+                    LINES_PER_PAGE
+                } else {
+                    (chunks_for(size, PAGE_BYTES) * CCHUNK_BYTES).div_ceil(LINE_BYTES)
+                };
+                let fetched = self.sub.mem.access_burst(
+                    outcome.ready,
+                    0xA000_0000 + (ospn % (1 << 20)) * PAGE_BYTES,
+                    chunk_lines,
+                    false,
+                    MemKind::Promotion,
+                );
+                let done = self
+                    .sub
+                    .decompress_busy(fetched, self.sub.timing.decompress_ps(PAGE_BYTES));
+                if write {
+                    let new = oracle.on_write(ospn);
+                    self.sizes.insert(ospn, new.page);
+                }
+                if let Some(victim) = self.sram.insert(ospn, (), write) {
+                    if victim.dirty {
+                        // Recompress + write back the dirty block.
+                        self.sub.stats.demotions += 1;
+                        let vsize = *self.sizes.get(&victim.key).unwrap_or(&0);
+                        let lines = if vsize == 0 {
+                            0
+                        } else if incompressible_4k(vsize) {
+                            LINES_PER_PAGE
+                        } else {
+                            (chunks_for(vsize, PAGE_BYTES) * CCHUNK_BYTES).div_ceil(LINE_BYTES)
+                        };
+                        self.sub
+                            .compress_busy(done, self.sub.timing.compress_ps(PAGE_BYTES));
+                        if lines > 0 {
+                            self.sub.mem.access_burst(
+                                done,
+                                0xA000_0000 + (victim.key % (1 << 20)) * PAGE_BYTES,
+                                lines,
+                                true,
+                                MemKind::Demotion,
+                            );
+                        }
+                    }
+                }
+                done
+            }
+        };
+        self.sub
+            .stats
+            .latency
+            .record_ns(reply.saturating_sub(now) / 1000);
+        reply
+    }
+
+    fn populate(&mut self, ospn: u64, sizes: PageSizes) {
+        self.ensure(ospn, sizes);
+    }
+
+    fn stats(&self) -> &DeviceStats {
+        &self.sub.stats
+    }
+
+    fn mem(&self) -> &MemorySystem {
+        &self.sub.mem
+    }
+
+    fn logical_bytes(&self) -> u64 {
+        self.logical
+    }
+
+    fn physical_bytes(&self) -> u64 {
+        self.chunk_bytes_used
+    }
+
+    fn name(&self) -> &'static str {
+        "naive-sram"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::content::FixedOracle;
+
+    fn cfg() -> SimConfig {
+        let mut c = SimConfig::test_small();
+        c.data_sram_bytes = 64 << 10; // 16 blocks
+        c
+    }
+
+    fn sizes() -> PageSizes {
+        PageSizes {
+            blocks: [300; 4],
+            page: 1200,
+        }
+    }
+
+    #[test]
+    fn hits_touch_no_dram() {
+        let mut dev = NaiveSram::new(&cfg());
+        let mut o = FixedOracle::new(sizes());
+        dev.access(0, 1, 0, false, &mut o);
+        let after_miss = dev.mem().total_accesses();
+        dev.access(1_000_000, 1, 5, false, &mut o);
+        assert_eq!(dev.mem().total_accesses(), after_miss, "SRAM hit = 0 DRAM");
+    }
+
+    #[test]
+    fn every_miss_is_a_full_block_fetch() {
+        let mut dev = NaiveSram::new(&cfg());
+        let mut o = FixedOracle::new(sizes());
+        // Thrash far beyond 16 blocks.
+        for p in 0..64u64 {
+            dev.access(p * 1_000_000, p, 0, false, &mut o);
+        }
+        assert_eq!(dev.stats().compressed_serves, 64);
+        // Each miss ≥ 1 meta + 3 chunk lines.
+        assert!(dev.mem().total_accesses() >= 64 * 4);
+    }
+
+    #[test]
+    fn dirty_evictions_write_back() {
+        let mut dev = NaiveSram::new(&cfg());
+        let mut o = FixedOracle::new(sizes());
+        for p in 0..64u64 {
+            dev.access(p * 1_000_000, p, 0, true, &mut o);
+        }
+        assert!(dev.stats().demotions > 0);
+        assert!(dev.mem().breakdown.get(MemKind::Demotion) > 0);
+    }
+}

@@ -1,0 +1,473 @@
+//! TMCC base system (Panwar+, MICRO'22) and DyLeCT (Panwar+, ISCA'24).
+//!
+//! TMCC as evaluated here is its *base system* without the page-table
+//! CTE embedding (§5: "we evaluate its base system without the page
+//! table modification so the design remains deployable within CXL
+//! memory"): decoupled per-page metadata, a promoted (caching) region,
+//! and a zsmalloc-style variable-size-chunk compressed region. Against
+//! IBEX it lacks all four of §4's mechanisms:
+//!
+//! * demotion victims come from a coarse FIFO over promotion order
+//!   (imprecise → hot pages get demoted and re-promoted),
+//! * every demotion recompresses (no shadow copies),
+//! * promotion is whole-page (4 KB),
+//! * zsmalloc must track fine-grained zspage occupancy: allocation and
+//!   free each cost an extra control access, and fragmentation
+//!   reclamation periodically migrates chunks (§4.1.1).
+//!
+//! DyLeCT = the same base system, plus a second (pre-gathered/short)
+//! metadata table: a metadata-cache miss must probe *both* tables
+//! (§4.2), doubling miss-path control reads.
+
+use std::collections::VecDeque;
+
+use crate::sim::FxHashMap;
+
+use crate::compress::PageSizes;
+use crate::config::SimConfig;
+use crate::expander::chunk::ChunkAllocator;
+use crate::expander::{
+    incompressible_4k, ContentOracle, DeviceStats, Scheme, Substrate, LINE_BYTES,
+    LINES_PER_PAGE, PAGE_BYTES,
+};
+use crate::mem::{MemKind, MemorySystem};
+use crate::sim::Ps;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum PState {
+    Zero,
+    /// Variable-size chunk in the zsmalloc region (`bytes` allocation).
+    Comp { bytes: u32 },
+    /// Raw in the zsmalloc region.
+    Raw,
+    /// In the promoted region.
+    Prom { slot: u32, dirty: bool },
+}
+
+struct PageEntry {
+    state: PState,
+    size: u32,
+}
+
+/// zsmalloc fragmentation model: every N frees, reclaim one zspage by
+/// migrating its live chunks (§4.1.1: "it must track fine-grained
+/// zspage occupancy and periodically reclaim these fragments").
+const COMPACTION_PERIOD: u64 = 32;
+const COMPACTION_MIGRATE_BYTES: u64 = 8192;
+
+pub struct Tmcc {
+    sub: Substrate,
+    pages: FxHashMap<u64, PageEntry>,
+    promoted: ChunkAllocator,
+    /// FIFO of (slot, ospn) promotion order — TMCC's recency proxy.
+    fifo: VecDeque<(u32, u64)>,
+    /// DyLeCT: dual metadata tables.
+    dual_table: bool,
+    low_water: u32,
+    /// zsmalloc byte accounting (variable chunks).
+    zs_used: u64,
+    frees_since_compaction: u64,
+    logical: u64,
+    pub compactions: u64,
+}
+
+impl Tmcc {
+    pub fn new(cfg: &SimConfig, dual_table: bool) -> Self {
+        let slots = (cfg.promoted_bytes / PAGE_BYTES).max(16) as u32;
+        Self {
+            sub: Substrate::new(cfg, 64),
+            pages: FxHashMap::default(),
+            promoted: ChunkAllocator::new(2 << 30, PAGE_BYTES, slots),
+            fifo: VecDeque::new(),
+            dual_table,
+            low_water: cfg.demotion_low_water as u32,
+            zs_used: 0,
+            frees_since_compaction: 0,
+            logical: 0,
+            compactions: 0,
+        }
+    }
+
+    /// zsmalloc allocation: exact-size chunk + occupancy bookkeeping.
+    fn zs_alloc(&mut self, t: Ps, bytes: u32, background: bool) {
+        self.zs_used += bytes as u64;
+        if !(background && self.sub.background_free) {
+            // Free-list pop + occupancy map update.
+            self.sub.mem.access(t, 0x7000_0000, false, MemKind::Control);
+            self.sub.mem.access(t, 0x7000_1000, true, MemKind::Control);
+        }
+    }
+
+    fn zs_free(&mut self, t: Ps, bytes: u32, background: bool) {
+        self.zs_used -= bytes as u64;
+        self.frees_since_compaction += 1;
+        if !(background && self.sub.background_free) {
+            self.sub.mem.access(t, 0x7000_2000, true, MemKind::Control);
+            self.sub.mem.access(t, 0x7000_3000, true, MemKind::Control);
+        }
+        if self.frees_since_compaction >= COMPACTION_PERIOD {
+            self.frees_since_compaction = 0;
+            self.compactions += 1;
+            if !self.sub.background_free {
+                // Migrate live chunks out of a fragmented zspage.
+                let lines = COMPACTION_MIGRATE_BYTES / LINE_BYTES;
+                self.sub
+                    .mem
+                    .access_burst(t, 0x7100_0000, lines, false, MemKind::Control);
+                self.sub
+                    .mem
+                    .access_burst(t, 0x7200_0000, lines, true, MemKind::Control);
+            }
+        }
+    }
+
+    /// Demote FIFO victims until the pool recovers. Always recompresses.
+    fn run_demotions(&mut self, t: Ps, oracle: &mut dyn ContentOracle) {
+        let target = self.low_water + 16;
+        while self.promoted.free_count() < target {
+            let Some((slot, ospn)) = self.fifo.pop_front() else {
+                return;
+            };
+            // FIFO entries can be stale (page already demoted+repromoted);
+            // skip entries whose slot no longer matches.
+            let matches = matches!(
+                self.pages.get(&ospn).map(|e| e.state),
+                Some(PState::Prom { slot: s, .. }) if s == slot
+            );
+            if !matches {
+                continue;
+            }
+            self.sub.stats.victim_selections += 1;
+            self.sub.stats.demotions += 1;
+            let size = oracle.sizes(ospn).page;
+            let bg = self.sub.background_free;
+            if !bg {
+                // Read back + recompress + write compressed image.
+                self.sub.mem.access_burst(
+                    t,
+                    self.promoted.addr(slot),
+                    LINES_PER_PAGE,
+                    false,
+                    MemKind::Demotion,
+                );
+                let occ = self.sub.timing.compress_ps(PAGE_BYTES);
+                self.sub.compress_busy(t, occ);
+            }
+            let entry = self.pages.get_mut(&ospn).unwrap();
+            let (new_state, stored) = if size == 0 {
+                (PState::Zero, 0)
+            } else if incompressible_4k(size) {
+                (PState::Raw, PAGE_BYTES as u32)
+            } else {
+                (PState::Comp { bytes: size }, size)
+            };
+            if size == 0 {
+                self.logical -= PAGE_BYTES;
+            }
+            entry.state = new_state;
+            entry.size = size;
+            if stored > 0 {
+                self.zs_alloc(t, stored, true);
+                if !bg {
+                    self.sub.mem.access_burst(
+                        t,
+                        0x6000_0000,
+                        (stored as u64).div_ceil(LINE_BYTES),
+                        true,
+                        MemKind::Demotion,
+                    );
+                }
+            }
+            self.promoted.free_chunk(slot);
+            self.sub.meta_cache.set_dirty(ospn);
+        }
+    }
+
+    fn promote(&mut self, t: Ps, ospn: u64, oracle: &mut dyn ContentOracle) -> Option<u32> {
+        if self.promoted.free_count() < self.low_water {
+            self.run_demotions(t, oracle);
+        }
+        let slot = self.promoted.alloc().or_else(|| {
+            self.run_demotions(t, oracle);
+            self.promoted.alloc()
+        })?;
+        self.sub.stats.promotions += 1;
+        self.fifo.push_back((slot, ospn));
+        // Install the whole 4 KB page.
+        self.sub.mem.access_burst(
+            t,
+            self.promoted.addr(slot),
+            LINES_PER_PAGE,
+            true,
+            MemKind::Promotion,
+        );
+        Some(slot)
+    }
+
+    fn ensure(&mut self, ospn: u64, sizes: PageSizes) {
+        if self.pages.contains_key(&ospn) {
+            return;
+        }
+        let size = sizes.page;
+        let state = if size == 0 {
+            PState::Zero
+        } else if incompressible_4k(size) {
+            self.zs_used += PAGE_BYTES;
+            PState::Raw
+        } else {
+            self.zs_used += size as u64;
+            PState::Comp { bytes: size }
+        };
+        if size != 0 {
+            self.logical += PAGE_BYTES;
+        }
+        self.pages.insert(ospn, PageEntry { state, size });
+    }
+}
+
+impl Scheme for Tmcc {
+    fn access(
+        &mut self,
+        now: Ps,
+        ospn: u64,
+        line: u32,
+        write: bool,
+        oracle: &mut dyn ContentOracle,
+    ) -> Ps {
+        if write {
+            self.sub.stats.writes += 1;
+        } else {
+            self.sub.stats.reads += 1;
+        }
+        if !self.pages.contains_key(&ospn) {
+            let s = oracle.sizes(ospn);
+            self.ensure(ospn, s);
+        }
+
+        // Translation: DyLeCT probes both short and normal tables on a
+        // miss (§4.2's dual-table lookup).
+        let fetches = if self.dual_table { 2 } else { 1 };
+        let meta_addr = (ospn % (1 << 22)) * 64;
+        let outcome = self.sub.meta_access(now, ospn, meta_addr, fetches, false);
+        let t = outcome.ready;
+
+        let state = self.pages[&ospn].state;
+        let reply = match (state, write) {
+            (PState::Zero, false) => {
+                self.sub.stats.zero_serves += 1;
+                t
+            }
+            (PState::Zero, true) => {
+                let sizes = oracle.on_write(ospn);
+                self.logical += PAGE_BYTES;
+                let entry = self.pages.get_mut(&ospn).unwrap();
+                entry.size = sizes.page;
+                match self.promote(t, ospn, oracle) {
+                    Some(slot) => {
+                        let entry = self.pages.get_mut(&ospn).unwrap();
+                        entry.state = PState::Prom { slot, dirty: true };
+                        self.sub.meta_cache.set_dirty(ospn);
+                        let addr = self.promoted.addr(slot) + line as u64 * LINE_BYTES;
+                        self.sub.mem.access(t, addr, true, MemKind::Final)
+                    }
+                    None => t,
+                }
+            }
+            (PState::Prom { slot, dirty }, _) => {
+                self.sub.stats.promoted_hits += 1;
+                let addr = self.promoted.addr(slot) + line as u64 * LINE_BYTES;
+                let done = self.sub.mem.access(t, addr, write, MemKind::Final);
+                if write {
+                    let _ = oracle.on_write(ospn);
+                    if !dirty {
+                        let entry = self.pages.get_mut(&ospn).unwrap();
+                        entry.state = PState::Prom { slot, dirty: true };
+                        self.sub.meta_cache.set_dirty(ospn);
+                    }
+                }
+                done
+            }
+            (PState::Raw, _) => {
+                self.sub.stats.incompressible_serves += 1;
+                let addr = 0x6800_0000 + (ospn % (1 << 20)) * PAGE_BYTES + line as u64 * LINE_BYTES;
+                let done = self.sub.mem.access(t, addr, write, MemKind::Final);
+                if write {
+                    let _ = oracle.on_write(ospn);
+                }
+                done
+            }
+            (PState::Comp { bytes }, _) => {
+                self.sub.stats.compressed_serves += 1;
+                // Fetch the variable-size chunk, decompress the page.
+                let lines = (bytes as u64).div_ceil(LINE_BYTES).max(1);
+                let fetched =
+                    self.sub
+                        .mem
+                        .access_burst(t, 0x6000_0000, lines, false, MemKind::Promotion);
+                let occ = self.sub.timing.decompress_ps(PAGE_BYTES);
+                let decompressed = self.sub.decompress_busy(fetched, occ);
+                match self.promote(decompressed, ospn, oracle) {
+                    Some(slot) => {
+                        // zsmalloc chunk freed immediately (no shadow).
+                        self.zs_free(decompressed, bytes, false);
+                        let entry = self.pages.get_mut(&ospn).unwrap();
+                        entry.state = PState::Prom { slot, dirty: write };
+                        self.sub.meta_cache.set_dirty(ospn);
+                        if write {
+                            let _ = oracle.on_write(ospn);
+                            let addr = self.promoted.addr(slot) + line as u64 * LINE_BYTES;
+                            return self
+                                .sub
+                                .mem
+                                .access(decompressed, addr, true, MemKind::Final);
+                        }
+                    }
+                    None => {
+                        if write {
+                            let _ = oracle.on_write(ospn);
+                        }
+                    }
+                }
+                decompressed
+            }
+        };
+        self.sub
+            .stats
+            .latency
+            .record_ns(reply.saturating_sub(now) / 1000);
+        reply
+    }
+
+    fn populate(&mut self, ospn: u64, sizes: PageSizes) {
+        self.ensure(ospn, sizes);
+    }
+
+    fn stats(&self) -> &DeviceStats {
+        &self.sub.stats
+    }
+
+    fn mem(&self) -> &MemorySystem {
+        &self.sub.mem
+    }
+
+    fn logical_bytes(&self) -> u64 {
+        self.logical
+    }
+
+    fn physical_bytes(&self) -> u64 {
+        // Capacity viewpoint: zsmalloc bytes in use + the compressed-
+        // equivalent size of currently-promoted pages (the promoted /
+        // caching region itself is fixed provisioned space; see
+        // ibex.rs::physical_bytes).
+        let promoted_equiv: u64 = self
+            .pages
+            .values()
+            .filter_map(|e| match e.state {
+                PState::Prom { .. } => Some((e.size as u64).max(64)),
+                _ => None,
+            })
+            .sum();
+        self.zs_used + promoted_equiv
+    }
+
+    fn name(&self) -> &'static str {
+        if self.dual_table {
+            "dylect"
+        } else {
+            "tmcc"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::content::FixedOracle;
+
+    fn cfg() -> SimConfig {
+        let mut c = SimConfig::test_small();
+        c.promoted_bytes = 1 << 20;
+        c.demotion_low_water = 8;
+        c
+    }
+
+    fn sizes() -> PageSizes {
+        PageSizes {
+            blocks: [300; 4],
+            page: 1200,
+        }
+    }
+
+    #[test]
+    fn promotes_whole_pages() {
+        let mut dev = Tmcc::new(&cfg(), false);
+        let mut o = FixedOracle::new(sizes());
+        dev.populate(1, sizes());
+        dev.access(0, 1, 0, false, &mut o);
+        assert_eq!(dev.stats().promotions, 1);
+        // 4 KB install = 64 promotion writes (+ compressed fetch reads).
+        assert!(dev.mem().breakdown.get(MemKind::Promotion) >= 64);
+    }
+
+    #[test]
+    fn demotions_always_recompress() {
+        let mut c = cfg();
+        c.promoted_bytes = 64 << 10;
+        c.demotion_low_water = 4;
+        let mut dev = Tmcc::new(&c, false);
+        let mut o = FixedOracle::new(sizes());
+        for p in 0..64 {
+            dev.populate(p, sizes());
+        }
+        for p in 0..64u64 {
+            dev.access(p * 1_000_000, p, 0, false, &mut o);
+        }
+        let s = dev.stats();
+        assert!(s.demotions > 0);
+        assert_eq!(s.clean_demotions, 0);
+        assert!(
+            dev.mem().breakdown.get(MemKind::Demotion) > 0,
+            "TMCC demotion must move data even for clean pages"
+        );
+    }
+
+    #[test]
+    fn dylect_pays_double_metadata_fetch() {
+        let mut base = Tmcc::new(&cfg(), false);
+        let mut dual = Tmcc::new(&cfg(), true);
+        let mut o = FixedOracle::new(PageSizes::ZERO);
+        base.populate(1, PageSizes::ZERO);
+        dual.populate(1, PageSizes::ZERO);
+        base.access(0, 1, 0, false, &mut o);
+        dual.access(0, 1, 0, false, &mut o);
+        let b = base.mem().breakdown.get(MemKind::Control);
+        let d = dual.mem().breakdown.get(MemKind::Control);
+        assert_eq!(d, b * 2, "DyLeCT must probe both tables on a miss");
+    }
+
+    #[test]
+    fn variable_chunks_pack_tighter_than_ibex_chunks() {
+        let mut dev = Tmcc::new(&cfg(), false);
+        for p in 0..10 {
+            dev.populate(p, sizes());
+        }
+        // 1200 B exact vs IBEX's 3×512 = 1536 B.
+        assert_eq!(dev.physical_bytes(), 12_000);
+    }
+
+    #[test]
+    fn zsmalloc_compaction_fires() {
+        let mut c = cfg();
+        c.promoted_bytes = 64 << 10;
+        c.demotion_low_water = 4;
+        let mut dev = Tmcc::new(&c, false);
+        let mut o = FixedOracle::new(sizes());
+        for p in 0..512 {
+            dev.populate(p, sizes());
+        }
+        for p in 0..512u64 {
+            dev.access(p * 500_000, p, 0, false, &mut o);
+        }
+        assert!(dev.compactions > 0, "fragmentation reclaim must trigger");
+    }
+}

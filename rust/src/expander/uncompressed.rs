@@ -1,0 +1,117 @@
+//! Uncompressed baseline: OSPA == MPA, one DRAM access per request.
+//!
+//! This is the normalization baseline for every performance figure and
+//! the capacity baseline for Fig 17. Zero pages still cost a DRAM
+//! access (there is no metadata to shortcut them) — which is exactly why
+//! zero-heavy workloads (lbm, bfs, tc) can *beat* this baseline under
+//! IBEX (§6.1).
+
+use std::collections::HashSet;
+
+
+use crate::compress::PageSizes;
+use crate::config::SimConfig;
+use crate::expander::{ContentOracle, DeviceStats, Scheme, Substrate, LINE_BYTES, PAGE_BYTES};
+use crate::mem::{MemKind, MemorySystem};
+use crate::sim::Ps;
+
+pub struct Uncompressed {
+    sub: Substrate,
+    resident: HashSet<u64>,
+    logical: u64,
+}
+
+impl Uncompressed {
+    pub fn new(cfg: &SimConfig) -> Self {
+        Self {
+            sub: Substrate::new(cfg, 64),
+            resident: HashSet::new(),
+            logical: 0,
+        }
+    }
+}
+
+impl Scheme for Uncompressed {
+    fn access(
+        &mut self,
+        now: Ps,
+        ospn: u64,
+        line: u32,
+        write: bool,
+        _oracle: &mut dyn ContentOracle,
+    ) -> Ps {
+        if write {
+            self.sub.stats.writes += 1;
+        } else {
+            self.sub.stats.reads += 1;
+        }
+        self.resident.insert(ospn);
+        let addr = ospn * PAGE_BYTES + line as u64 * LINE_BYTES;
+        let done = self.sub.mem.access(now, addr, write, MemKind::Final);
+        self.sub
+            .stats
+            .latency
+            .record_ns(done.saturating_sub(now) / 1000);
+        done
+    }
+
+    fn populate(&mut self, ospn: u64, sizes: PageSizes) {
+        self.resident.insert(ospn);
+        if sizes.page != 0 {
+            self.logical += PAGE_BYTES;
+        }
+    }
+
+    fn stats(&self) -> &DeviceStats {
+        &self.sub.stats
+    }
+
+    fn mem(&self) -> &MemorySystem {
+        &self.sub.mem
+    }
+
+    fn logical_bytes(&self) -> u64 {
+        self.logical
+    }
+
+    fn physical_bytes(&self) -> u64 {
+        self.logical // raw storage: physical == logical
+    }
+
+    fn name(&self) -> &'static str {
+        "uncompressed"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::content::FixedOracle;
+
+    #[test]
+    fn one_access_per_request() {
+        let cfg = SimConfig::test_small();
+        let mut dev = Uncompressed::new(&cfg);
+        let mut o = FixedOracle::new(PageSizes::ZERO);
+        for i in 0..10 {
+            dev.access(i * 1000, i, (i % 64) as u32, i % 2 == 0, &mut o);
+        }
+        assert_eq!(dev.mem().total_accesses(), 10);
+        assert_eq!(dev.mem().breakdown.get(MemKind::Final), 10);
+        assert_eq!(dev.mem().breakdown.get(MemKind::Control), 0);
+    }
+
+    #[test]
+    fn ratio_is_one() {
+        let cfg = SimConfig::test_small();
+        let mut dev = Uncompressed::new(&cfg);
+        dev.populate(
+            1,
+            PageSizes {
+                blocks: [100; 4],
+                page: 400,
+            },
+        );
+        assert_eq!(dev.compression_ratio(), 1.0);
+    }
+}

@@ -1,0 +1,194 @@
+//! Page-fault study (Fig 17, §7 "Implications in page fault rates").
+//!
+//! Models the paper's methodology: an LRU list of in-use pages under a
+//! physical-memory budget of 50% of the workload's working set, counting
+//! replacements (major faults). The IBEX configuration gets a larger
+//! *effective* budget = physical × measured compression ratio.
+
+use std::collections::HashMap;
+
+/// O(1) LRU over page numbers via an intrusive doubly-linked list.
+pub struct LruResidentSet {
+    capacity: usize,
+    map: HashMap<u64, usize>,
+    pages: Vec<u64>,
+    prev: Vec<usize>,
+    next: Vec<usize>,
+    head: usize,
+    tail: usize,
+    free: Vec<usize>,
+    /// Faults on pages never seen before (cold/compulsory).
+    pub cold_faults: u64,
+    /// Faults caused by capacity replacement (the metric of interest).
+    pub capacity_faults: u64,
+    pub hits: u64,
+    seen: HashMap<u64, ()>,
+}
+
+const NIL: usize = usize::MAX;
+
+impl LruResidentSet {
+    pub fn new(capacity_pages: usize) -> Self {
+        assert!(capacity_pages > 0);
+        Self {
+            capacity: capacity_pages,
+            map: HashMap::new(),
+            pages: Vec::new(),
+            prev: Vec::new(),
+            next: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            free: Vec::new(),
+            cold_faults: 0,
+            capacity_faults: 0,
+            hits: 0,
+            seen: HashMap::new(),
+        }
+    }
+
+    fn unlink(&mut self, n: usize) {
+        let (p, nx) = (self.prev[n], self.next[n]);
+        if p != NIL {
+            self.next[p] = nx;
+        } else {
+            self.head = nx;
+        }
+        if nx != NIL {
+            self.prev[nx] = p;
+        } else {
+            self.tail = p;
+        }
+    }
+
+    fn push_front(&mut self, n: usize) {
+        self.prev[n] = NIL;
+        self.next[n] = self.head;
+        if self.head != NIL {
+            self.prev[self.head] = n;
+        }
+        self.head = n;
+        if self.tail == NIL {
+            self.tail = n;
+        }
+    }
+
+    /// Touch a page; returns true if it faulted.
+    pub fn touch(&mut self, page: u64) -> bool {
+        if let Some(&n) = self.map.get(&page) {
+            self.hits += 1;
+            self.unlink(n);
+            self.push_front(n);
+            return false;
+        }
+        // Fault.
+        if self.seen.insert(page, ()).is_none() {
+            self.cold_faults += 1;
+        } else {
+            self.capacity_faults += 1;
+        }
+        let n = if self.map.len() >= self.capacity {
+            // Evict LRU.
+            let victim = self.tail;
+            self.unlink(victim);
+            self.map.remove(&self.pages[victim]);
+            victim
+        } else if let Some(n) = self.free.pop() {
+            n
+        } else {
+            self.pages.push(0);
+            self.prev.push(NIL);
+            self.next.push(NIL);
+            self.pages.len() - 1
+        };
+        self.pages[n] = page;
+        self.map.insert(page, n);
+        self.push_front(n);
+        true
+    }
+
+    pub fn total_faults(&self) -> u64 {
+        self.cold_faults + self.capacity_faults
+    }
+
+    pub fn resident(&self) -> usize {
+        self.map.len()
+    }
+}
+
+/// Fault counts for one configuration of the Fig 17 experiment.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultResult {
+    pub cold: u64,
+    pub capacity: u64,
+    pub accesses: u64,
+}
+
+impl FaultResult {
+    pub fn total(&self) -> u64 {
+        self.cold + self.capacity
+    }
+}
+
+/// Replay a page-access trace against a resident-set budget.
+pub fn replay<I: Iterator<Item = u64>>(trace: I, capacity_pages: usize) -> FaultResult {
+    let mut lru = LruResidentSet::new(capacity_pages);
+    let mut accesses = 0;
+    for page in trace {
+        lru.touch(page);
+        accesses += 1;
+    }
+    FaultResult {
+        cold: lru.cold_faults,
+        capacity: lru.capacity_faults,
+        accesses,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_entirely_no_capacity_faults() {
+        let r = replay((0..100u64).cycle().take(10_000), 128);
+        assert_eq!(r.cold, 100);
+        assert_eq!(r.capacity, 0);
+    }
+
+    #[test]
+    fn cyclic_thrash_faults_every_access() {
+        // LRU worst case: cycle over capacity+1 pages.
+        let r = replay((0..11u64).cycle().take(1100), 10);
+        assert_eq!(r.total(), 1100);
+    }
+
+    #[test]
+    fn bigger_capacity_never_hurts() {
+        let trace: Vec<u64> = (0..50u64)
+            .flat_map(|i| [i % 37, (i * 7) % 37, i % 11])
+            .collect();
+        let small = replay(trace.iter().copied(), 8);
+        let large = replay(trace.iter().copied(), 16);
+        assert!(large.total() <= small.total());
+    }
+
+    #[test]
+    fn lru_prefers_recent() {
+        let mut lru = LruResidentSet::new(2);
+        lru.touch(1);
+        lru.touch(2);
+        lru.touch(1); // 2 becomes LRU
+        lru.touch(3); // evicts 2
+        assert!(!lru.touch(1), "1 must still be resident");
+        assert!(lru.touch(2), "2 must have been evicted");
+    }
+
+    #[test]
+    fn resident_bounded_by_capacity() {
+        let mut lru = LruResidentSet::new(4);
+        for p in 0..100 {
+            lru.touch(p);
+        }
+        assert_eq!(lru.resident(), 4);
+    }
+}

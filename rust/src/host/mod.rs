@@ -1,0 +1,295 @@
+//! Host model: trace-driven cores issuing requests over the CXL link.
+//!
+//! Table 1's 4-core out-of-order host is modeled at the post-LLC level:
+//! each core retires instructions at up to `ipc` per cycle between its
+//! memory requests (rates set by Table 2 RPKI/WPKI) and sustains up to
+//! `mshrs_per_core` outstanding misses. When MSHRs are exhausted the
+//! core stalls until the oldest miss returns — this is what makes high
+//! CXL latency *reduce* internal-bandwidth pressure (§6.3's Fig 14
+//! observation: outstanding requests occupy MSHRs longer, throttling
+//! issue).
+
+use std::collections::BinaryHeap;
+use std::cmp::Reverse;
+
+use crate::config::SimConfig;
+use crate::cxl::CxlLink;
+use crate::expander::{ContentOracle, Scheme};
+use crate::rng::Pcg64;
+use crate::sim::{Ps, CORE_CLK_PS};
+use crate::workload::{RequestGen, WorkloadSpec};
+
+/// One simulated core's issue state.
+struct Core {
+    /// Local time: when the core can issue its next request.
+    t: Ps,
+    /// Completion times of outstanding misses.
+    outstanding: BinaryHeap<Reverse<Ps>>,
+    gen: RequestGen,
+    /// Blocking-load coin flips (dependency stalls).
+    dep_rng: Pcg64,
+    insts: u64,
+    reqs: u64,
+}
+
+/// Result of one simulation run.
+#[derive(Clone, Debug)]
+pub struct RunMetrics {
+    /// Total simulated instructions (all cores).
+    pub instructions: u64,
+    /// Wall-clock of the slowest core, ps.
+    pub elapsed_ps: Ps,
+    pub requests: u64,
+    /// Memory accesses inside the device, by traffic kind.
+    pub mem_by_kind: [u64; 4],
+    pub mem_total: u64,
+    pub compression_ratio: f64,
+}
+
+impl RunMetrics {
+    /// Instructions per nanosecond — the performance metric every
+    /// figure normalizes ("inverse of execution time", §6.1).
+    pub fn perf(&self) -> f64 {
+        self.instructions as f64 / self.elapsed_ps.max(1) as f64
+    }
+}
+
+/// Drive `device` with `spec`'s request stream until every core retires
+/// `cfg.instructions` (after `cfg.warmup_instructions` of warmup).
+pub struct HostSim<'a> {
+    cfg: &'a SimConfig,
+    spec: &'a WorkloadSpec,
+    link: CxlLink,
+    cores: Vec<Core>,
+}
+
+impl<'a> HostSim<'a> {
+    pub fn new(cfg: &'a SimConfig, spec: &'a WorkloadSpec) -> Self {
+        let pages = spec.pages(cfg.footprint_scale);
+        let read_frac = if cfg.read_fraction_override.is_nan() {
+            spec.read_fraction()
+        } else {
+            cfg.read_fraction_override
+        };
+        let cores = (0..cfg.cores)
+            .map(|c| Core {
+                t: 0,
+                outstanding: BinaryHeap::new(),
+                gen: RequestGen::new(spec.pattern, pages, read_frac, cfg.seed, c),
+                dep_rng: Pcg64::from_label(cfg.seed, &["dep", &c.to_string()]),
+                insts: 0,
+                reqs: 0,
+            })
+            .collect();
+        Self {
+            cfg,
+            spec,
+            link: CxlLink::new(cfg.cxl),
+            cores,
+        }
+    }
+
+    /// Run to completion; returns metrics for the *measured* phase only
+    /// (warmup traffic excluded by snapshot subtraction).
+    pub fn run(
+        &mut self,
+        device: &mut dyn Scheme,
+        oracle: &mut dyn ContentOracle,
+    ) -> RunMetrics {
+        // Pre-populate the footprint as resident cold data (§5: inputs
+        // loaded before the measured window, promoted region empty).
+        let pages = self.spec.pages(self.cfg.footprint_scale);
+        for p in 0..pages {
+            device.populate(p, oracle.sizes(p));
+        }
+
+        let inst_gap = {
+            // Instructions between requests (per core).
+            let rpi = self.spec.requests_per_inst();
+            if rpi <= 0.0 {
+                u64::MAX
+            } else {
+                (1.0 / rpi).max(1.0) as u64
+            }
+        };
+
+        self.phase(device, oracle, self.cfg.warmup_instructions, inst_gap);
+        // Snapshot after warmup.
+        let warm_kind = device.mem().breakdown.counts;
+        let warm_total = device.mem().total_accesses();
+        let warm_elapsed = self.elapsed();
+        let warm_insts: u64 = self.cores.iter().map(|c| c.insts).sum();
+        let warm_reqs: u64 = self.cores.iter().map(|c| c.reqs).sum();
+
+        self.phase(
+            device,
+            oracle,
+            self.cfg.warmup_instructions + self.cfg.instructions,
+            inst_gap,
+        );
+
+        let kinds = device.mem().breakdown.counts;
+        let mem_by_kind = [
+            kinds[0] - warm_kind[0],
+            kinds[1] - warm_kind[1],
+            kinds[2] - warm_kind[2],
+            kinds[3] - warm_kind[3],
+        ];
+        RunMetrics {
+            instructions: self.cores.iter().map(|c| c.insts).sum::<u64>() - warm_insts,
+            elapsed_ps: self.elapsed() - warm_elapsed,
+            requests: self.cores.iter().map(|c| c.reqs).sum::<u64>() - warm_reqs,
+            mem_by_kind,
+            mem_total: device.mem().total_accesses() - warm_total,
+            compression_ratio: device.compression_ratio(),
+        }
+    }
+
+    fn elapsed(&self) -> Ps {
+        self.cores.iter().map(|c| c.t).max().unwrap_or(0)
+    }
+
+    /// Advance every core to `insts_target` retired instructions.
+    fn phase(
+        &mut self,
+        device: &mut dyn Scheme,
+        oracle: &mut dyn ContentOracle,
+        insts_target: u64,
+        inst_gap: u64,
+    ) {
+        let ipc = self.cfg.ipc.max(1);
+        let mshrs = self.cfg.mshrs_per_core;
+        loop {
+            // Pick the core that is furthest behind (smallest local time
+            // among unfinished cores) to keep the interleaving causal.
+            let Some(ci) = self
+                .cores
+                .iter()
+                .enumerate()
+                .filter(|(_, c)| c.insts < insts_target)
+                .min_by_key(|(_, c)| c.t)
+                .map(|(i, _)| i)
+            else {
+                break;
+            };
+            let core = &mut self.cores[ci];
+
+            // Retire the instruction gap at `ipc`.
+            core.insts += inst_gap;
+            core.t += inst_gap * CORE_CLK_PS / ipc;
+
+            // Drain completed misses.
+            while let Some(&Reverse(done)) = core.outstanding.peek() {
+                if done <= core.t {
+                    core.outstanding.pop();
+                } else {
+                    break;
+                }
+            }
+            // MSHR full: stall until the oldest miss returns.
+            if core.outstanding.len() >= mshrs {
+                if let Some(Reverse(done)) = core.outstanding.pop() {
+                    core.t = core.t.max(done);
+                }
+            }
+
+            let req = core.gen.next();
+            core.reqs += 1;
+            let t_issue = core.t;
+            // Multi-programmed copies: give each core a disjoint OSPN
+            // space (§5: PIDs prevent sharing), interleaved so they
+            // stress the same device structures.
+            let ospn = req.ospn * self.cfg.cores as u64 + ci as u64;
+            let at_device = self.link.ingress(t_issue, 1);
+            let ready = device.access(at_device, ospn, req.line, req.write, oracle);
+            let done = self.link.egress(ready, 1);
+            let core = &mut self.cores[ci];
+            // Blocking load: a dependent instruction needs this value —
+            // the core stalls until the reply returns.
+            if !req.write && core.dep_rng.chance(self.cfg.dep_fraction) {
+                core.t = core.t.max(done);
+            } else {
+                core.outstanding.push(Reverse(done));
+            }
+        }
+        // Let every core drain (reply latency counts toward elapsed).
+        for core in &mut self.cores {
+            if let Some(&Reverse(last)) = core.outstanding.iter().max_by_key(|r| r.0).as_ref() {
+                core.t = core.t.max(*last);
+            }
+            core.outstanding.clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::AnalyticSizeModel;
+    use crate::expander::build_scheme;
+    use crate::workload::{by_name, WorkloadOracle};
+
+    fn quick_cfg() -> SimConfig {
+        let mut c = SimConfig::test_small();
+        c.cores = 2;
+        c.instructions = 100_000;
+        c.warmup_instructions = 10_000;
+        c
+    }
+
+    #[test]
+    fn run_produces_sane_metrics() {
+        let cfg = quick_cfg();
+        let spec = by_name("parest").unwrap();
+        let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
+        let mut device = build_scheme(&cfg);
+        let mut sim = HostSim::new(&cfg, &spec);
+        let m = sim.run(device.as_mut(), &mut oracle);
+        // Each core retires in inst_gap quanta, so totals land within one
+        // gap of the target.
+        assert!(m.instructions as f64 >= 1.95 * cfg.instructions as f64);
+        assert!(m.elapsed_ps > 0);
+        assert!(m.requests > 0);
+        assert!(m.perf() > 0.0);
+        // Request rate must track RPKI+WPKI within ~20%.
+        let per_kilo = m.requests as f64 / (m.instructions as f64 / 1000.0);
+        let target = spec.rpki + spec.wpki;
+        assert!(
+            (per_kilo - target).abs() / target < 0.2,
+            "got {per_kilo} vs table2 {target}"
+        );
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let cfg = quick_cfg();
+        let spec = by_name("omnetpp").unwrap();
+        let run = || {
+            let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
+            let mut device = build_scheme(&cfg);
+            let mut sim = HostSim::new(&cfg, &spec);
+            sim.run(device.as_mut(), &mut oracle).elapsed_ps
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn uncompressed_faster_than_thrashing_ibex() {
+        // A uniform workload much larger than the promoted region must
+        // run slower on a compressed device than on raw memory.
+        let mut cfg = quick_cfg();
+        cfg.promoted_bytes = 1 << 20;
+        let spec = by_name("pr").unwrap();
+        let perf_of = |scheme: &str| {
+            let mut c = cfg.clone();
+            c.set("scheme", scheme).unwrap();
+            let mut oracle = WorkloadOracle::new(spec.content, c.seed, AnalyticSizeModel);
+            let mut device = build_scheme(&c);
+            let mut sim = HostSim::new(&c, &spec);
+            sim.run(device.as_mut(), &mut oracle).perf()
+        };
+        let raw = perf_of("uncompressed");
+        let ibex = perf_of("ibex");
+        assert!(raw > ibex, "raw {raw} must beat thrashing ibex {ibex}");
+    }
+}

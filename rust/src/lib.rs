@@ -1,0 +1,44 @@
+//! # IBEX — Internal Bandwidth-Efficient Compression for CXL Memory
+//!
+//! Full-system reproduction of *"IBEX: Internal Bandwidth-Efficient
+//! Compression Architecture for Scalable CXL Memory Expansion"*
+//! (Ko, Park, Lee & Lee, ICS '26).
+//!
+//! This crate is the Layer-3 coordinator of a three-layer Rust + JAX +
+//! Pallas stack:
+//!
+//! * [`runtime`] loads the AOT-compiled compression-engine model
+//!   (`artifacts/ibex_size.hlo.txt`, produced by `python/compile/aot.py`
+//!   from the Layer-1 Pallas kernel) and executes it via PJRT — Python is
+//!   never on the simulation path.
+//! * [`expander`] implements the paper's device architecture: IBEX
+//!   (second-chance activity region, lazy reference updates, shadowed
+//!   promotion, block co-location, metadata compaction) plus the five
+//!   comparison schemes (TMCC, DyLeCT, MXT, DMC, Compresso) and the
+//!   uncompressed baseline.
+//! * [`sim`], [`mem`], [`cxl`], [`cache`], [`host`] are the substrate: a
+//!   request-level discrete-event simulator of the host cores, cache
+//!   hierarchy, CXL link and the expander's internal DDR5 channels.
+//! * [`workload`] generates the ten Table-2 workloads (access pattern +
+//!   page-content classes) and [`coordinator`] runs experiments/sweeps
+//!   and emits the paper's tables and figures.
+//!
+//! See `DESIGN.md` for the complete system inventory and experiment
+//! index, and `EXPERIMENTS.md` for measured-vs-paper results.
+
+pub mod cache;
+pub mod cli;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod cxl;
+pub mod expander;
+pub mod faults;
+pub mod host;
+pub mod mem;
+pub mod prop;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod workload;

@@ -1,0 +1,7 @@
+//! `ibex` — leader binary: run/sweep the CXL-expander simulator from the
+//! command line. See `ibex help`.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(ibex::cli::dispatch(&args));
+}

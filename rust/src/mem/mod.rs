@@ -1,0 +1,374 @@
+//! Device-internal DRAM model: DDR5 channels with bank-level timing.
+//!
+//! The paper's central constraint is the expander's *limited internal
+//! bandwidth* — dual-channel DDR5-5600 behind a form-factor-bound device
+//! (Table 1). We model each channel as a data bus (serializing 64 B
+//! bursts) plus 16 banks with open-row state and tCL/tRCD/tRP timing.
+//! A `MemKind` tag on every access feeds the Fig 11/13 traffic
+//! breakdowns (control vs. promotion vs. demotion vs. final access).
+
+use crate::sim::{Ps, DDR5_TCK_PS};
+
+/// Access classification for traffic-breakdown reporting (Fig 11/13).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MemKind {
+    /// Metadata reads/writes + recency (activity-region) tracking.
+    Control,
+    /// Reads of compressed chunks + writes into the promoted region.
+    Promotion,
+    /// Demotion traffic: re-reads, recompression writes.
+    Demotion,
+    /// The access that actually serves the host request.
+    Final,
+}
+
+pub const MEM_KINDS: [MemKind; 4] = [
+    MemKind::Control,
+    MemKind::Promotion,
+    MemKind::Demotion,
+    MemKind::Final,
+];
+
+impl MemKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            MemKind::Control => "control",
+            MemKind::Promotion => "promotion",
+            MemKind::Demotion => "demotion",
+            MemKind::Final => "final",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            MemKind::Control => 0,
+            MemKind::Promotion => 1,
+            MemKind::Demotion => 2,
+            MemKind::Final => 3,
+        }
+    }
+}
+
+/// DDR5 timing parameters in memory-clock ticks (Table 1: 40/40/40).
+#[derive(Clone, Copy, Debug)]
+pub struct DramTiming {
+    pub tck_ps: Ps,
+    pub tcl: u64,
+    pub trcd: u64,
+    pub trp: u64,
+    /// Bus beats for a 64 B burst (BL16 on a 32-bit subchannel ≈ 4 tCK;
+    /// we charge 4 tCK of data-bus occupancy per 64 B).
+    pub burst_tck: u64,
+}
+
+impl Default for DramTiming {
+    fn default() -> Self {
+        Self {
+            tck_ps: DDR5_TCK_PS,
+            tcl: 40,
+            trcd: 40,
+            trp: 40,
+            burst_tck: 4,
+        }
+    }
+}
+
+impl DramTiming {
+    #[inline]
+    pub fn burst_ps(&self) -> Ps {
+        self.burst_tck * self.tck_ps
+    }
+
+    #[inline]
+    pub fn row_hit_ps(&self) -> Ps {
+        self.tcl * self.tck_ps
+    }
+
+    #[inline]
+    pub fn row_miss_ps(&self) -> Ps {
+        (self.trp + self.trcd + self.tcl) * self.tck_ps
+    }
+}
+
+/// One DDR5 channel: per-bank open-row tracking + a serializing data bus.
+#[derive(Clone, Debug)]
+pub struct DramChannel {
+    timing: DramTiming,
+    bank_free: Vec<Ps>,
+    open_row: Vec<u64>,
+    bus_free: Ps,
+    pub reads: u64,
+    pub writes: u64,
+    pub row_hits: u64,
+    pub busy: Ps,
+}
+
+const ROW_BYTES: u64 = 8192;
+const NO_ROW: u64 = u64::MAX;
+
+impl DramChannel {
+    pub fn new(timing: DramTiming, banks: usize) -> Self {
+        Self {
+            timing,
+            bank_free: vec![0; banks],
+            open_row: vec![NO_ROW; banks],
+            bus_free: 0,
+            reads: 0,
+            writes: 0,
+            row_hits: 0,
+            busy: 0,
+        }
+    }
+
+    /// One 64 B access at device-physical address `addr`; returns the
+    /// completion time of the data burst.
+    ///
+    /// Column accesses to an open row *pipeline*: the bank is occupied
+    /// for one burst slot while the CAS latency overlaps with the next
+    /// command (real DDR streams row hits at burst rate). A row miss
+    /// occupies the bank through precharge+activate before the column
+    /// access can pipeline again.
+    pub fn access(&mut self, now: Ps, addr: u64, write: bool) -> Ps {
+        if write {
+            self.writes += 1;
+        } else {
+            self.reads += 1;
+        }
+        let nbanks = self.bank_free.len() as u64;
+        let row_id = addr / ROW_BYTES;
+        let bank = (row_id % nbanks) as usize;
+        let row = row_id / nbanks;
+
+        let hit = self.open_row[bank] == row;
+        if hit {
+            self.row_hits += 1;
+        }
+        self.open_row[bank] = row;
+        let burst = self.timing.burst_ps();
+
+        let bank_start = self.bank_free[bank].max(now);
+        let (occupancy, access_lat) = if hit {
+            (burst, self.timing.row_hit_ps())
+        } else {
+            // tRP+tRCD occupy the bank; CAS pipelines afterwards.
+            (
+                (self.timing.trp + self.timing.trcd) * self.timing.tck_ps + burst,
+                self.timing.row_miss_ps(),
+            )
+        };
+        self.bank_free[bank] = bank_start + occupancy;
+        let data_ready = bank_start + access_lat;
+
+        // The burst must win the shared data bus.
+        let bus_start = self.bus_free.max(data_ready);
+        let done = bus_start + burst;
+        self.bus_free = done;
+        self.busy += burst;
+        done
+    }
+
+    pub fn accesses(&self) -> u64 {
+        self.reads + self.writes
+    }
+}
+
+/// Per-kind access counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TrafficBreakdown {
+    pub counts: [u64; 4],
+}
+
+impl TrafficBreakdown {
+    #[inline]
+    pub fn add(&mut self, kind: MemKind, n: u64) {
+        self.counts[kind.index()] += n;
+    }
+
+    pub fn get(&self, kind: MemKind) -> u64 {
+        self.counts[kind.index()]
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+}
+
+/// The expander's internal memory system: N interleaved channels.
+///
+/// `unlimited` replicates Fig 1's idealized configuration: identical
+/// latency, but accesses never contend for banks or buses.
+#[derive(Clone, Debug)]
+pub struct MemorySystem {
+    channels: Vec<DramChannel>,
+    timing: DramTiming,
+    pub unlimited: bool,
+    pub breakdown: TrafficBreakdown,
+}
+
+/// Channel interleave granularity: 256 B keeps a 512 B chunk on at most
+/// two channels while spreading a 4 KB page across both (dual-channel).
+const INTERLEAVE_BYTES: u64 = 256;
+
+impl MemorySystem {
+    pub fn new(channels: usize, banks_per_channel: usize, timing: DramTiming) -> Self {
+        Self {
+            channels: (0..channels)
+                .map(|_| DramChannel::new(timing, banks_per_channel))
+                .collect(),
+            timing,
+            unlimited: false,
+            breakdown: TrafficBreakdown::default(),
+        }
+    }
+
+    pub fn channel_count(&self) -> usize {
+        self.channels.len()
+    }
+
+    /// One 64 B access; returns completion time.
+    pub fn access(&mut self, now: Ps, addr: u64, write: bool, kind: MemKind) -> Ps {
+        self.breakdown.add(kind, 1);
+        if self.unlimited {
+            // Latency-only model: fixed row-miss latency + one burst.
+            let idx = self.route(addr);
+            let ch = &mut self.channels[idx];
+            if write {
+                ch.writes += 1;
+            } else {
+                ch.reads += 1;
+            }
+            return now + self.timing.row_miss_ps() + self.timing.burst_ps();
+        }
+        let idx = self.route(addr);
+        self.channels[idx].access(now, addr, write)
+    }
+
+    /// A burst of `n` consecutive 64 B accesses starting at `addr`
+    /// (compressed-chunk fetches, promoted-page fills). Returns the time
+    /// the *last* line completes.
+    pub fn access_burst(&mut self, now: Ps, addr: u64, lines: u64, write: bool, kind: MemKind) -> Ps {
+        let mut done = now;
+        for i in 0..lines {
+            done = done.max(self.access(now, addr + i * 64, write, kind));
+        }
+        done
+    }
+
+    #[inline]
+    fn route(&self, addr: u64) -> usize {
+        ((addr / INTERLEAVE_BYTES) % self.channels.len() as u64) as usize
+    }
+
+    pub fn total_accesses(&self) -> u64 {
+        self.channels.iter().map(|c| c.accesses()).sum()
+    }
+
+    pub fn total_reads(&self) -> u64 {
+        self.channels.iter().map(|c| c.reads).sum()
+    }
+
+    pub fn total_writes(&self) -> u64 {
+        self.channels.iter().map(|c| c.writes).sum()
+    }
+
+    pub fn row_hit_rate(&self) -> f64 {
+        let hits: u64 = self.channels.iter().map(|c| c.row_hits).sum();
+        let total = self.total_accesses();
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+
+    pub fn bus_utilization(&self, horizon: Ps) -> f64 {
+        if horizon == 0 {
+            return 0.0;
+        }
+        let busy: Ps = self.channels.iter().map(|c| c.busy).sum();
+        busy as f64 / (horizon as f64 * self.channels.len() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mem() -> MemorySystem {
+        MemorySystem::new(2, 16, DramTiming::default())
+    }
+
+    #[test]
+    fn single_access_latency_is_row_miss() {
+        let mut m = mem();
+        let t = DramTiming::default();
+        let done = m.access(0, 0, false, MemKind::Final);
+        assert_eq!(done, t.row_miss_ps() + t.burst_ps());
+    }
+
+    #[test]
+    fn row_hit_is_faster() {
+        let mut m = mem();
+        let t = DramTiming::default();
+        let first = m.access(0, 0, false, MemKind::Final);
+        let second = m.access(first, 64, false, MemKind::Final);
+        assert_eq!(second - first, t.row_hit_ps() + t.burst_ps());
+    }
+
+    #[test]
+    fn channels_interleave() {
+        let m = mem();
+        assert_ne!(m.route(0), m.route(INTERLEAVE_BYTES));
+        assert_eq!(m.route(0), m.route(2 * INTERLEAVE_BYTES));
+    }
+
+    #[test]
+    fn contention_queues_on_bus() {
+        let mut m = mem();
+        // Two same-channel, different-bank accesses at t=0: second must
+        // wait for the bus even though banks differ.
+        let a = m.access(0, 0, false, MemKind::Final);
+        let b = m.access(0, 2 * ROW_BYTES * 16, false, MemKind::Final);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn unlimited_mode_never_queues() {
+        let mut m = mem();
+        m.unlimited = true;
+        let t = DramTiming::default();
+        let lat = t.row_miss_ps() + t.burst_ps();
+        for _ in 0..100 {
+            assert_eq!(m.access(0, 0, false, MemKind::Final), lat);
+        }
+    }
+
+    #[test]
+    fn burst_completes_after_all_lines() {
+        let mut m = mem();
+        let one = m.clone().access(0, 0, false, MemKind::Final);
+        let burst = m.access_burst(0, 0, 8, false, MemKind::Promotion);
+        assert!(burst > one);
+        assert_eq!(m.total_accesses(), 8);
+    }
+
+    #[test]
+    fn breakdown_tracks_kinds() {
+        let mut m = mem();
+        m.access(0, 0, false, MemKind::Control);
+        m.access(0, 64, false, MemKind::Control);
+        m.access(0, 128, true, MemKind::Demotion);
+        assert_eq!(m.breakdown.get(MemKind::Control), 2);
+        assert_eq!(m.breakdown.get(MemKind::Demotion), 1);
+        assert_eq!(m.breakdown.total(), 3);
+    }
+
+    #[test]
+    fn reads_writes_counted() {
+        let mut m = mem();
+        m.access(0, 0, false, MemKind::Final);
+        m.access(0, 64, true, MemKind::Final);
+        assert_eq!(m.total_reads(), 1);
+        assert_eq!(m.total_writes(), 1);
+    }
+}

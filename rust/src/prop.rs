@@ -1,0 +1,108 @@
+//! Minimal property-testing harness (offline `proptest` substitute).
+//!
+//! Runs a property over many deterministically-seeded random cases and,
+//! on failure, reports the seed so the case can be replayed exactly:
+//! `IBEX_PROP_SEED=<seed> cargo test <name>`. Case count scales with
+//! `IBEX_PROP_CASES` (default 256).
+
+use crate::rng::Pcg64;
+
+/// Number of cases to run (env-overridable).
+pub fn case_count() -> u64 {
+    std::env::var("IBEX_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256)
+}
+
+/// Run `property(case_rng, case_index)` for many seeds; panic with the
+/// reproducing seed on the first failure.
+pub fn forall<F: FnMut(&mut Pcg64, u64)>(name: &str, mut property: F) {
+    if let Ok(seed) = std::env::var("IBEX_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("IBEX_PROP_SEED must be a u64");
+        let mut rng = Pcg64::new(seed, 0x9e37);
+        property(&mut rng, 0);
+        return;
+    }
+    for case in 0..case_count() {
+        let seed = 0xF00D_0000u64 + case;
+        let mut rng = Pcg64::new(seed, 0x9e37);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut rng, case)
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "\nproperty {name:?} failed on case {case} — replay with \
+                 IBEX_PROP_SEED={seed}\n"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Sample helpers for common generator shapes.
+pub mod gen {
+    use crate::rng::Pcg64;
+
+    /// A random page with mixed per-1KB-block structure.
+    pub fn page(rng: &mut Pcg64) -> Vec<u8> {
+        let mut page = vec![0u8; 4096];
+        for b in 0..4 {
+            let block = &mut page[b * 1024..(b + 1) * 1024];
+            match rng.below(4) {
+                0 => {} // zero block
+                1 => {
+                    let v = rng.next_u64() as u8;
+                    block.fill(v);
+                }
+                2 => {
+                    // Word-aligned motif within the 64 B window.
+                    let period = 8 * (1 + rng.below(8)) as usize;
+                    let motif: Vec<u8> =
+                        (0..period).map(|_| rng.next_u64() as u8).collect();
+                    for (i, byte) in block.iter_mut().enumerate() {
+                        *byte = motif[i % period];
+                    }
+                    // Sparse word-level corruption.
+                    for _ in 0..rng.below(8) {
+                        let w = rng.below(128) as usize;
+                        for k in 0..8 {
+                            block[w * 8 + k] = rng.next_u64() as u8;
+                        }
+                    }
+                }
+                _ => {
+                    for byte in block.iter_mut() {
+                        *byte = rng.next_u64() as u8;
+                    }
+                }
+            }
+        }
+        page
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_and_passes() {
+        let mut runs = 0;
+        forall("trivial", |rng, _| {
+            let x = rng.below(100);
+            assert!(x < 100);
+            runs += 1;
+        });
+        assert_eq!(runs, case_count());
+    }
+
+    #[test]
+    fn gen_page_shapes() {
+        let mut rng = crate::rng::Pcg64::new(1, 2);
+        for _ in 0..32 {
+            let p = gen::page(&mut rng);
+            assert_eq!(p.len(), 4096);
+        }
+    }
+}

@@ -1,0 +1,292 @@
+//! Deterministic pseudo-random number generation for the simulator.
+//!
+//! No external `rand` crate is available in the offline vendor set, so we
+//! carry our own small, well-known generators: SplitMix64 for seeding and
+//! PCG64 (XSL-RR 128/64) for streams, plus the samplers the workload
+//! generators need (Zipf, binomial-ish coin flips, permutations).
+//!
+//! Every consumer derives its stream from `(experiment, workload,
+//! purpose)` labels via [`Pcg64::from_label`], so runs are bit-reproducible
+//! regardless of thread scheduling.
+
+/// SplitMix64: used to expand seeds; passes BigCrush as a 64-bit mixer.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG XSL-RR 128/64: 128-bit LCG state, 64-bit output. Fast, tiny,
+/// statistically solid — the simulator's workhorse generator.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MUL: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+
+impl Pcg64 {
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut sm = SplitMix64::new(seed ^ 0xD1B5_4A32_D192_ED03);
+        let s0 = sm.next_u64() as u128;
+        let s1 = sm.next_u64() as u128;
+        let mut sm2 = SplitMix64::new(stream ^ 0xA02B_DBF7_BB3C_0A7A);
+        let i0 = sm2.next_u64() as u128;
+        let i1 = sm2.next_u64() as u128;
+        let mut rng = Self {
+            state: (s0 << 64) | s1,
+            inc: (((i0 << 64) | i1) << 1) | 1,
+        };
+        rng.next_u64();
+        rng
+    }
+
+    /// Derive a stream from string labels (FNV-1a over the labels).
+    pub fn from_label(seed: u64, labels: &[&str]) -> Self {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for label in labels {
+            for b in label.bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x1_0000_0000_01b3);
+            }
+            h ^= 0xff; // label separator
+            h = h.wrapping_mul(0x1_0000_0000_01b3);
+        }
+        Self::new(seed, h)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MUL).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)` without modulo bias (Lemire's method).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform float in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, slice: &mut [T]) {
+        for i in (1..slice.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            slice.swap(i, j);
+        }
+    }
+
+    /// A random permutation of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<u32> {
+        let mut v: Vec<u32> = (0..n as u32).collect();
+        self.shuffle(&mut v);
+        v
+    }
+}
+
+/// Zipf sampler over `{0, .., n-1}` with exponent `s`, using the
+/// rejection-inversion method of Hörmann & Derflinger — O(1) per sample,
+/// suitable for the multi-million-page footprints of the graph workloads.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: u64,
+    s: f64,
+    /// hIntegral(1.5) - 1
+    h_integral_x1: f64,
+    /// hIntegral(n + 0.5)
+    h_integral_n: f64,
+    /// 2 - hIntegralInv(hIntegral(2.5) - h(2))
+    threshold: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, s: f64) -> Self {
+        assert!(n > 0, "zipf over empty domain");
+        let mut z = Self {
+            n,
+            s,
+            h_integral_x1: 0.0,
+            h_integral_n: 0.0,
+            threshold: 0.0,
+        };
+        z.h_integral_x1 = z.h_integral(1.5) - 1.0;
+        z.h_integral_n = z.h_integral(n as f64 + 0.5);
+        z.threshold = 2.0 - z.h_integral_inv(z.h_integral(2.5) - z.h(2.0));
+        z
+    }
+
+    /// ∫ x^-s dx with the s→1 limit handled.
+    fn h_integral(&self, x: f64) -> f64 {
+        let log_x = x.ln();
+        if (1.0 - self.s).abs() < 1e-9 {
+            log_x
+        } else {
+            ((1.0 - self.s) * log_x).exp_m1() / (1.0 - self.s)
+        }
+    }
+
+    fn h_integral_inv(&self, x: f64) -> f64 {
+        if (1.0 - self.s).abs() < 1e-9 {
+            x.exp()
+        } else {
+            let t = (x * (1.0 - self.s)).max(-1.0 + 1e-15);
+            ((1.0 / (1.0 - self.s)) * t.ln_1p()).exp()
+        }
+    }
+
+    fn h(&self, x: f64) -> f64 {
+        (-self.s * x.ln()).exp()
+    }
+
+    /// Sample a rank in `[0, n)`; rank 0 is the hottest item.
+    /// Rejection-inversion after Hörmann & Derflinger (1996).
+    pub fn sample(&self, rng: &mut Pcg64) -> u64 {
+        loop {
+            let u = self.h_integral_n + rng.f64() * (self.h_integral_x1 - self.h_integral_n);
+            let x = self.h_integral_inv(u);
+            let k = x.clamp(1.0, self.n as f64).round();
+            if k - x <= self.threshold || u >= self.h_integral(k + 0.5) - self.h(k) {
+                return (k as u64).clamp(1, self.n) - 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_values() {
+        let mut sm = SplitMix64::new(0);
+        // First output of SplitMix64(0) is a published test vector.
+        assert_eq!(sm.next_u64(), 0xE220_A839_7B1D_CDAF);
+    }
+
+    #[test]
+    fn pcg_deterministic_and_distinct_streams() {
+        let a: Vec<u64> = (0..8).map(|_| 0).collect::<Vec<_>>();
+        let _ = a;
+        let mut r1 = Pcg64::new(1, 2);
+        let mut r2 = Pcg64::new(1, 2);
+        let mut r3 = Pcg64::new(1, 3);
+        let s1: Vec<u64> = (0..16).map(|_| r1.next_u64()).collect();
+        let s2: Vec<u64> = (0..16).map(|_| r2.next_u64()).collect();
+        let s3: Vec<u64> = (0..16).map(|_| r3.next_u64()).collect();
+        assert_eq!(s1, s2);
+        assert_ne!(s1, s3);
+    }
+
+    #[test]
+    fn from_label_separates_purposes() {
+        let mut a = Pcg64::from_label(7, &["fig09", "pr", "access"]);
+        let mut b = Pcg64::from_label(7, &["fig09", "pr", "content"]);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn below_is_in_range_and_unbiased_enough() {
+        let mut rng = Pcg64::new(42, 0);
+        let mut counts = [0u32; 7];
+        for _ in 0..70_000 {
+            counts[rng.below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((9_000..11_000).contains(&c), "count {c} out of band");
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Pcg64::new(3, 9);
+        for _ in 0..10_000 {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut rng = Pcg64::new(5, 5);
+        let p = rng.permutation(1000);
+        let mut seen = vec![false; 1000];
+        for &x in &p {
+            assert!(!seen[x as usize]);
+            seen[x as usize] = true;
+        }
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_in_range() {
+        let mut rng = Pcg64::new(11, 0);
+        let z = Zipf::new(1000, 0.99);
+        let mut counts = vec![0u32; 1000];
+        for _ in 0..100_000 {
+            let k = z.sample(&mut rng);
+            assert!(k < 1000);
+            counts[k as usize] += 1;
+        }
+        // Rank 0 must dominate rank 100 heavily.
+        assert!(counts[0] > 20 * counts[100].max(1));
+        // And the tail must still be reachable.
+        assert!(counts[500..].iter().map(|&c| c as u64).sum::<u64>() > 100);
+    }
+
+    #[test]
+    fn zipf_uniformish_when_s_zero() {
+        let mut rng = Pcg64::new(13, 0);
+        let z = Zipf::new(100, 0.0);
+        let mut counts = vec![0u32; 100];
+        for _ in 0..100_000 {
+            counts[z.sample(&mut rng) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((600..1500).contains(&c), "count {c}");
+        }
+    }
+}

@@ -1,0 +1,403 @@
+//! PJRT runtime: load and execute the AOT-compiled engine model.
+//!
+//! `make artifacts` runs `python/compile/aot.py`, which lowers the
+//! Layer-2 JAX graph (wrapping the Layer-1 Pallas kernel) to HLO *text*.
+//! This module loads that text with the `xla` crate
+//! (`PjRtClient::cpu() → HloModuleProto::from_text_file → compile →
+//! execute`) so the simulator consumes the exact same computation the
+//! Python tests validated — with Python nowhere on the path.
+//!
+//! The simulator calls the engine once per *content class* (workload
+//! pages are drawn from a bounded family of generator classes) and
+//! memoizes, mirroring how a real device consults its compression engine
+//! on writes, not on every read.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::compress::size_model::{PageSizes, SizeModel, PAGE_BYTES};
+
+/// Default artifact location relative to the repo root.
+pub const DEFAULT_ARTIFACT: &str = "artifacts/ibex_size.hlo.txt";
+
+/// Metadata sidecar written by `aot.py`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    pub batch: usize,
+    pub page_bytes: usize,
+    pub outputs_per_page: usize,
+}
+
+impl ArtifactMeta {
+    /// Parse the tiny JSON sidecar (flat string/number object). A full
+    /// JSON parser is unnecessary for a fixed, machine-written schema.
+    pub fn parse(text: &str) -> Result<Self> {
+        fn field(text: &str, key: &str) -> Result<usize> {
+            let pat = format!("\"{key}\"");
+            let at = text
+                .find(&pat)
+                .ok_or_else(|| anyhow!("meta missing {key}"))?;
+            let rest = &text[at + pat.len()..];
+            let colon = rest.find(':').ok_or_else(|| anyhow!("bad meta"))?;
+            let num: String = rest[colon + 1..]
+                .trim_start()
+                .chars()
+                .take_while(|c| c.is_ascii_digit())
+                .collect();
+            num.parse().context("bad meta number")
+        }
+        Ok(Self {
+            batch: field(text, "batch")?,
+            page_bytes: field(text, "page_bytes")?,
+            outputs_per_page: field(text, "outputs_per_page")?,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+}
+
+/// Sidecar path for a given artifact path.
+pub fn meta_path(artifact: &Path) -> PathBuf {
+    let s = artifact.to_string_lossy();
+    let stem = s
+        .strip_suffix(".hlo.txt")
+        .map(|p| p.to_string())
+        .unwrap_or_else(|| s.to_string());
+    PathBuf::from(format!("{stem}.meta.json"))
+}
+
+/// The compiled engine model on the PJRT CPU client.
+pub struct PjrtSizeModel {
+    _client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    meta: ArtifactMeta,
+    /// Executed PJRT batches (for perf accounting).
+    pub batches_run: u64,
+}
+
+impl PjrtSizeModel {
+    /// Load + compile the artifact. Fails cleanly if `make artifacts`
+    /// has not run.
+    pub fn load(artifact: &Path) -> Result<Self> {
+        if !artifact.exists() {
+            bail!(
+                "artifact {} not found — run `make artifacts` first",
+                artifact.display()
+            );
+        }
+        let meta = ArtifactMeta::load(&meta_path(artifact))?;
+        if meta.page_bytes != PAGE_BYTES || meta.outputs_per_page != 5 {
+            bail!("artifact meta mismatch: {meta:?}");
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            artifact
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
+        )
+        .map_err(|e| anyhow!("parse HLO text: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile HLO: {e:?}"))?;
+        Ok(Self {
+            _client: client,
+            exe,
+            meta,
+            batches_run: 0,
+        })
+    }
+
+    pub fn load_default() -> Result<Self> {
+        Self::load(Path::new(DEFAULT_ARTIFACT))
+    }
+
+    pub fn batch(&self) -> usize {
+        self.meta.batch
+    }
+
+    /// Run exactly one padded batch.
+    fn run_batch(&mut self, pages: &[&[u8]]) -> Result<Vec<PageSizes>> {
+        let b = self.meta.batch;
+        assert!(pages.len() <= b);
+        let mut buf = vec![0f32; b * PAGE_BYTES];
+        for (i, page) in pages.iter().enumerate() {
+            assert_eq!(page.len(), PAGE_BYTES, "size model operates on 4 KB pages");
+            let dst = &mut buf[i * PAGE_BYTES..(i + 1) * PAGE_BYTES];
+            for (d, &s) in dst.iter_mut().zip(page.iter()) {
+                *d = s as f32;
+            }
+        }
+        let lit = xla::Literal::vec1(&buf)
+            .reshape(&[b as i64, PAGE_BYTES as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
+        let v = out
+            .to_vec::<i32>()
+            .map_err(|e| anyhow!("to_vec<i32>: {e:?}"))?;
+        if v.len() != b * 5 {
+            bail!("unexpected output length {}", v.len());
+        }
+        self.batches_run += 1;
+        Ok(pages
+            .iter()
+            .enumerate()
+            .map(|(i, _)| PageSizes {
+                blocks: [
+                    v[i * 5] as u32,
+                    v[i * 5 + 1] as u32,
+                    v[i * 5 + 2] as u32,
+                    v[i * 5 + 3] as u32,
+                ],
+                page: v[i * 5 + 4] as u32,
+            })
+            .collect())
+    }
+}
+
+impl SizeModel for PjrtSizeModel {
+    fn analyze(&mut self, pages: &[&[u8]]) -> Vec<PageSizes> {
+        let mut out = Vec::with_capacity(pages.len());
+        for chunk in pages.chunks(self.meta.batch) {
+            out.extend(
+                self.run_batch(chunk)
+                    .expect("PJRT execution failed on a validated artifact"),
+            );
+        }
+        out
+    }
+}
+
+/// Memoizing wrapper: one engine evaluation per distinct page content.
+///
+/// Keyed by FNV-1a over the page bytes; the workload layer produces
+/// pages from a bounded class family, so the table stays small and PJRT
+/// cost is off the simulated hot path (exactly like a real device, which
+/// compresses on write, not on every lookup).
+pub struct CachedSizeModel<M: SizeModel> {
+    inner: M,
+    memo: HashMap<u64, PageSizes>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl<M: SizeModel> CachedSizeModel<M> {
+    pub fn new(inner: M) -> Self {
+        Self {
+            inner,
+            memo: HashMap::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn inner(&self) -> &M {
+        &self.inner
+    }
+
+    fn hash(page: &[u8]) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for &b in page {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1_0000_0000_01b3);
+        }
+        h
+    }
+}
+
+impl<M: SizeModel> SizeModel for CachedSizeModel<M> {
+    fn analyze(&mut self, pages: &[&[u8]]) -> Vec<PageSizes> {
+        // Gather misses, run them as one inner batch, then zip back.
+        let keys: Vec<u64> = pages.iter().map(|p| Self::hash(p)).collect();
+        let mut miss_pages: Vec<&[u8]> = Vec::new();
+        let mut miss_keys: Vec<u64> = Vec::new();
+        for (i, &k) in keys.iter().enumerate() {
+            if !self.memo.contains_key(&k) && !miss_keys.contains(&k) {
+                miss_pages.push(pages[i]);
+                miss_keys.push(k);
+            }
+        }
+        if !miss_pages.is_empty() {
+            self.misses += miss_pages.len() as u64;
+            let sizes = self.inner.analyze(&miss_pages);
+            for (k, s) in miss_keys.into_iter().zip(sizes) {
+                self.memo.insert(k, s);
+            }
+        }
+        keys.iter()
+            .map(|k| {
+                let s = self.memo[k];
+                self.hits += 1;
+                s
+            })
+            .collect()
+    }
+}
+
+/// Load the PJRT model if the artifact exists, else fall back to the
+/// analytic mirror (bit-identical semantics). Returns the model plus a
+/// flag for logging.
+pub enum EngineModel {
+    Pjrt(CachedSizeModel<PjrtSizeModel>),
+    Analytic(CachedSizeModel<crate::compress::AnalyticSizeModel>),
+}
+
+impl EngineModel {
+    pub fn auto() -> Self {
+        Self::auto_from(Path::new(DEFAULT_ARTIFACT))
+    }
+
+    pub fn auto_from(artifact: &Path) -> Self {
+        match PjrtSizeModel::load(artifact) {
+            Ok(m) => EngineModel::Pjrt(CachedSizeModel::new(m)),
+            Err(e) => {
+                eprintln!(
+                    "note: PJRT artifact unavailable ({e}); using analytic size model"
+                );
+                EngineModel::Analytic(CachedSizeModel::new(
+                    crate::compress::AnalyticSizeModel,
+                ))
+            }
+        }
+    }
+
+    pub fn is_pjrt(&self) -> bool {
+        matches!(self, EngineModel::Pjrt(_))
+    }
+}
+
+impl SizeModel for EngineModel {
+    fn analyze(&mut self, pages: &[&[u8]]) -> Vec<PageSizes> {
+        match self {
+            EngineModel::Pjrt(m) => m.analyze(pages),
+            EngineModel::Analytic(m) => m.analyze(pages),
+        }
+    }
+}
+
+/// Process-wide shared engine service.
+///
+/// The `xla` crate's PJRT handles are `!Send` (Rc + raw pointers), and
+/// creating a client per simulation job is slow (recompilation) and
+/// memory-hungry (XLA runtime arenas) — quick Fig-9 sweeps were OOM-
+/// killed by 70 concurrent clients. Instead ONE dedicated thread owns
+/// the `EngineModel` (PJRT when the artifact exists) plus its memo
+/// table; worker threads talk to it over a channel. The workload
+/// oracles memoize per content class, so this path is off the hot loop.
+#[derive(Clone)]
+pub struct SharedEngine {
+    tx: std::sync::mpsc::Sender<EngineRequest>,
+    pjrt: bool,
+}
+
+type EngineRequest = (Vec<Vec<u8>>, std::sync::mpsc::Sender<Vec<PageSizes>>);
+
+impl SharedEngine {
+    /// Spawn the engine service thread.
+    pub fn spawn() -> SharedEngine {
+        let (tx, rx) = std::sync::mpsc::channel::<EngineRequest>();
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<bool>();
+        std::thread::Builder::new()
+            .name("ibex-engine".into())
+            .spawn(move || {
+                let mut model = EngineModel::auto();
+                let _ = ready_tx.send(model.is_pjrt());
+                while let Ok((pages, reply)) = rx.recv() {
+                    let refs: Vec<&[u8]> = pages.iter().map(|p| p.as_slice()).collect();
+                    let _ = reply.send(model.analyze(&refs));
+                }
+            })
+            .expect("spawn engine thread");
+        let pjrt = ready_rx.recv().unwrap_or(false);
+        SharedEngine { tx, pjrt }
+    }
+
+    /// The process-wide instance (loads the default artifact once).
+    pub fn global() -> SharedEngine {
+        static GLOBAL: std::sync::OnceLock<SharedEngine> = std::sync::OnceLock::new();
+        GLOBAL.get_or_init(SharedEngine::spawn).clone()
+    }
+
+    pub fn is_pjrt(&self) -> bool {
+        self.pjrt
+    }
+}
+
+impl SizeModel for SharedEngine {
+    fn analyze(&mut self, pages: &[&[u8]]) -> Vec<PageSizes> {
+        let owned: Vec<Vec<u8>> = pages.iter().map(|p| p.to_vec()).collect();
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        self.tx
+            .send((owned, reply_tx))
+            .expect("engine thread alive");
+        reply_rx.recv().expect("engine reply")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::AnalyticSizeModel;
+
+    #[test]
+    fn meta_parse() {
+        let m = ArtifactMeta::parse(
+            r#"{"artifact":"x","batch": 64, "page_bytes":4096,"outputs_per_page":5}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            m,
+            ArtifactMeta {
+                batch: 64,
+                page_bytes: 4096,
+                outputs_per_page: 5
+            }
+        );
+        assert!(ArtifactMeta::parse("{}").is_err());
+    }
+
+    #[test]
+    fn meta_path_derivation() {
+        assert_eq!(
+            meta_path(Path::new("artifacts/ibex_size.hlo.txt")),
+            PathBuf::from("artifacts/ibex_size.meta.json")
+        );
+    }
+
+    #[test]
+    fn cached_model_memoizes() {
+        let page_a = vec![1u8; PAGE_BYTES];
+        let page_b = vec![2u8; PAGE_BYTES];
+        let mut m = CachedSizeModel::new(AnalyticSizeModel);
+        let r1 = m.analyze(&[&page_a, &page_b, &page_a]);
+        assert_eq!(r1[0], r1[2]);
+        assert_eq!(m.misses, 2);
+        let _ = m.analyze(&[&page_a]);
+        assert_eq!(m.misses, 2, "second lookup must hit the memo");
+        assert_eq!(m.hits, 4);
+    }
+
+    #[test]
+    fn missing_artifact_fails_cleanly() {
+        let err = match PjrtSizeModel::load(Path::new("/nonexistent/x.hlo.txt")) {
+            Ok(_) => panic!("load must fail for a missing artifact"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

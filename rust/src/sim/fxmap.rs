@@ -1,0 +1,84 @@
+//! Fast hashing for hot-path page tables (§Perf L3).
+//!
+//! `std::collections::HashMap`'s default SipHash is DoS-resistant but
+//! slow for the simulator's u64-keyed page tables, which sit on every
+//! request's critical path. This is the classic Fx multiply-rotate
+//! hash (rustc's own table hasher); switching the page tables to it is
+//! logged in EXPERIMENTS.md §Perf.
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// FxHash64: multiply-xor per 8-byte word.
+#[derive(Default, Clone)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.write_u8(b);
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, n: u8) {
+        self.hash = (self.hash.rotate_left(5) ^ n as u64).wrapping_mul(SEED);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.hash = (self.hash.rotate_left(5) ^ n as u64).wrapping_mul(SEED);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ n).wrapping_mul(SEED);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.write_u64(n as u64);
+    }
+}
+
+/// Drop-in `HashMap` with Fx hashing.
+pub type FxHashMap<K, V> = std::collections::HashMap<K, V, BuildHasherDefault<FxHasher>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_works() {
+        let mut m: FxHashMap<u64, u32> = FxHashMap::default();
+        for i in 0..10_000u64 {
+            m.insert(i * 7919, i as u32);
+        }
+        for i in 0..10_000u64 {
+            assert_eq!(m.get(&(i * 7919)), Some(&(i as u32)));
+        }
+        assert_eq!(m.len(), 10_000);
+    }
+
+    #[test]
+    fn hash_spreads() {
+        use std::hash::{BuildHasher, BuildHasherDefault};
+        let bh: BuildHasherDefault<FxHasher> = Default::default();
+        let mut buckets = [0u32; 64];
+        for i in 0..64_000u64 {
+            buckets[(bh.hash_one(i) % 64) as usize] += 1;
+        }
+        for &b in &buckets {
+            assert!((700..1300).contains(&b), "bucket skew: {b}");
+        }
+    }
+}

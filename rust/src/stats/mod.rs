@@ -1,0 +1,211 @@
+//! Metrics plumbing: run summaries, aggregate math, table emitters.
+//!
+//! Every bench binary prints the same rows the paper's figure reports,
+//! via [`Table`] (markdown to stdout + optional CSV next to it), so
+//! EXPERIMENTS.md can quote results verbatim.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+/// Geometric mean of positive values (the paper's aggregate of choice).
+pub fn geomean(values: &[f64]) -> f64 {
+    assert!(!values.is_empty());
+    let log_sum: f64 = values
+        .iter()
+        .map(|&v| {
+            assert!(v > 0.0, "geomean needs positive values, got {v}");
+            v.ln()
+        })
+        .sum();
+    (log_sum / values.len() as f64).exp()
+}
+
+pub fn mean(values: &[f64]) -> f64 {
+    assert!(!values.is_empty());
+    values.iter().sum::<f64>() / values.len() as f64
+}
+
+/// A simple streaming histogram for latency distributions (fixed
+/// log2 buckets over nanoseconds).
+#[derive(Clone, Debug, Default)]
+pub struct LatencyHist {
+    buckets: [u64; 32],
+    pub count: u64,
+    pub sum_ns: u64,
+    pub max_ns: u64,
+}
+
+impl LatencyHist {
+    pub fn record_ns(&mut self, ns: u64) {
+        let b = (64 - ns.max(1).leading_zeros() as usize).min(31);
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum_ns += ns;
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+
+    /// Approximate percentile from bucket boundaries (upper bound).
+    pub fn percentile_ns(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (p * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 1u64 << i;
+            }
+        }
+        self.max_ns
+    }
+}
+
+/// A printable results table (markdown + CSV).
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "ragged table row");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn markdown(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n## {}\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for i in 0..ncol {
+                let _ = write!(line, " {:width$} |", cells[i], width = widths[i]);
+            }
+            line
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{:-<width$}|", "", width = w + 2);
+        }
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.headers.join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.join(","));
+        }
+        out
+    }
+
+    /// Print markdown to stdout and, if `IBEX_RESULTS_DIR` is set, also
+    /// write `<dir>/<slug>.csv`.
+    pub fn emit(&self) {
+        print!("{}", self.markdown());
+        if let Ok(dir) = std::env::var("IBEX_RESULTS_DIR") {
+            let slug: String = self
+                .title
+                .to_lowercase()
+                .chars()
+                .map(|c| if c.is_alphanumeric() { c } else { '_' })
+                .collect();
+            let path = Path::new(&dir).join(format!("{slug}.csv"));
+            let _ = fs::create_dir_all(&dir);
+            if let Err(e) = fs::write(&path, self.csv()) {
+                eprintln!("warn: could not write {}: {e}", path.display());
+            }
+        }
+    }
+}
+
+/// Format helpers.
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert!((geomean(&[1.0, 1.0, 1.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn geomean_rejects_nonpositive() {
+        geomean(&[1.0, 0.0]);
+    }
+
+    #[test]
+    fn hist_percentiles_monotone() {
+        let mut h = LatencyHist::default();
+        for i in 1..=1000u64 {
+            h.record_ns(i);
+        }
+        assert!(h.percentile_ns(0.5) <= h.percentile_ns(0.99));
+        assert_eq!(h.count, 1000);
+        assert!((h.mean_ns() - 500.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn table_renders_and_rejects_ragged() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+        let csv = t.csv();
+        assert!(csv.starts_with("a,b\n"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_row_panics() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

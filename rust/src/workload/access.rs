@@ -1,0 +1,222 @@
+//! Access-pattern generators: which (page, line) each request touches.
+
+use crate::rng::{Pcg64, Zipf};
+
+/// Locality family of a workload's post-LLC memory stream.
+#[derive(Clone, Copy, Debug)]
+pub enum AccessPattern {
+    /// Sequential sweep over the footprint (bwaves, lbm).
+    Stream { stride_lines: u64 },
+    /// Zipf-distributed page popularity; small `s` ≈ uniform with weak
+    /// locality (pr, cc), large `s` = concentrated (parest).
+    Zipf { s: f64 },
+    /// Pointer chasing over a random permutation cycle (mcf).
+    Chase,
+    /// Uniform random (XSBench's cross-section lookups).
+    Uniform,
+}
+
+/// One generated memory request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Request {
+    /// OS page number within the workload's footprint, already mapped
+    /// through the random OS page-allocation permutation (§5).
+    pub ospn: u64,
+    /// 64 B line index within the page (0..64).
+    pub line: u32,
+    pub write: bool,
+}
+
+/// Streaming request generator for one core.
+pub struct RequestGen {
+    pattern: AccessPattern,
+    pages: u64,
+    read_fraction: f64,
+    rng: Pcg64,
+    /// Random OS page allocation (§5): footprint index → OSPN. Stored as
+    /// a permutation over page *groups* to bound memory for huge
+    /// footprints while still destroying cross-page spatial locality.
+    perm: Vec<u32>,
+    /// Zipf sampler (rank → popularity).
+    zipf: Option<Zipf>,
+    /// Chase state: current position of the pointer walk.
+    chase_pos: u64,
+    /// Stream state.
+    stream_line: u64,
+    /// Line-level sequential run state (spatial locality within a page).
+    run_page: u64,
+    run_line: u32,
+    run_left: u32,
+}
+
+const PERM_GROUPS: usize = 1 << 16;
+
+impl RequestGen {
+    pub fn new(
+        pattern: AccessPattern,
+        pages: u64,
+        read_fraction: f64,
+        seed: u64,
+        core: usize,
+    ) -> Self {
+        let mut rng = Pcg64::from_label(seed, &["access", &core.to_string()]);
+        let perm = {
+            let mut p = Pcg64::from_label(seed, &["ospa-permutation"]);
+            p.permutation(PERM_GROUPS)
+        };
+        let zipf = match pattern {
+            AccessPattern::Zipf { s } => Some(Zipf::new(pages, s)),
+            _ => None,
+        };
+        let chase_pos = rng.below(pages.max(1));
+        Self {
+            pattern,
+            pages,
+            read_fraction,
+            rng,
+            perm,
+            zipf,
+            chase_pos,
+            stream_line: 0,
+            run_page: 0,
+            run_line: 0,
+            run_left: 0,
+        }
+    }
+
+    /// Map a footprint-index page to its OSPN under the random OS page
+    /// allocation policy: permute at group granularity + in-group mix.
+    #[inline]
+    fn map_ospn(&self, idx: u64) -> u64 {
+        let group = (idx % PERM_GROUPS as u64) as usize;
+        let within = idx / PERM_GROUPS as u64;
+        let g = self.perm[group] as u64;
+        // Stable per-group offset mixing keeps the mapping a bijection.
+        g + within * PERM_GROUPS as u64
+    }
+
+    /// Next request for this core.
+    pub fn next(&mut self) -> Request {
+        let write = !self.rng.chance(self.read_fraction);
+        // Short sequential line runs model residual spatial locality.
+        if self.run_left > 0 {
+            self.run_left -= 1;
+            self.run_line = (self.run_line + 1) % 64;
+            return Request {
+                ospn: self.run_page,
+                line: self.run_line,
+                write,
+            };
+        }
+        let (idx, line) = match self.pattern {
+            AccessPattern::Stream { stride_lines } => {
+                self.stream_line = self.stream_line.wrapping_add(stride_lines);
+                let total_lines = self.pages * 64;
+                let l = self.stream_line % total_lines;
+                (l / 64, (l % 64) as u32)
+            }
+            AccessPattern::Zipf { .. } => {
+                let rank = self.zipf.as_ref().unwrap().sample(&mut self.rng);
+                (rank, self.rng.below(64) as u32)
+            }
+            AccessPattern::Chase => {
+                // Multiplicative-walk permutation cycle: deterministic,
+                // full-period for odd multiplier, no O(pages) state.
+                self.chase_pos = (self
+                    .chase_pos
+                    .wrapping_mul(6364136223846793005)
+                    .wrapping_add(1442695040888963407))
+                    % self.pages.max(1);
+                (self.chase_pos, self.rng.below(64) as u32)
+            }
+            AccessPattern::Uniform => (self.rng.below(self.pages.max(1)), self.rng.below(64) as u32),
+        };
+        let ospn = self.map_ospn(idx) % self.pages.max(1);
+        // Begin a short run on this page with some probability.
+        if self.rng.chance(0.25) {
+            self.run_page = ospn;
+            self.run_line = line;
+            self.run_left = 1 + self.rng.below(3) as u32;
+        }
+        Request { ospn, line, write }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn collect(pattern: AccessPattern, n: usize) -> Vec<Request> {
+        let mut g = RequestGen::new(pattern, 1024, 0.8, 42, 0);
+        (0..n).map(|_| g.next()).collect()
+    }
+
+    #[test]
+    fn requests_stay_in_footprint() {
+        for pat in [
+            AccessPattern::Stream { stride_lines: 1 },
+            AccessPattern::Zipf { s: 0.8 },
+            AccessPattern::Chase,
+            AccessPattern::Uniform,
+        ] {
+            for r in collect(pat, 5000) {
+                assert!(r.ospn < 1024);
+                assert!(r.line < 64);
+            }
+        }
+    }
+
+    #[test]
+    fn read_fraction_respected() {
+        let reqs = collect(AccessPattern::Uniform, 20_000);
+        let reads = reqs.iter().filter(|r| !r.write).count();
+        let frac = reads as f64 / reqs.len() as f64;
+        assert!((frac - 0.8).abs() < 0.02, "read fraction {frac}");
+    }
+
+    #[test]
+    fn zipf_concentrates_and_uniform_spreads() {
+        let count_distinct = |pat| {
+            let reqs = collect(pat, 10_000);
+            let mut pages: Vec<u64> = reqs.iter().map(|r| r.ospn).collect();
+            pages.sort_unstable();
+            pages.dedup();
+            pages.len()
+        };
+        let z = count_distinct(AccessPattern::Zipf { s: 0.99 });
+        let u = count_distinct(AccessPattern::Uniform);
+        assert!(z < u, "zipf({z}) must touch fewer pages than uniform({u})");
+    }
+
+    #[test]
+    fn stream_is_sequentialish() {
+        let mut g = RequestGen::new(AccessPattern::Stream { stride_lines: 1 }, 64, 1.0, 1, 0);
+        // Consecutive requests on the same page most of the time.
+        let mut same = 0;
+        let mut prev = g.next().ospn;
+        for _ in 0..1000 {
+            let r = g.next();
+            if r.ospn == prev {
+                same += 1;
+            }
+            prev = r.ospn;
+        }
+        assert!(same > 800, "stream should mostly stay on a page: {same}");
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let a: Vec<Request> = collect(AccessPattern::Zipf { s: 0.7 }, 100);
+        let b: Vec<Request> = collect(AccessPattern::Zipf { s: 0.7 }, 100);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn cores_get_distinct_streams() {
+        let mut g0 = RequestGen::new(AccessPattern::Uniform, 1024, 1.0, 7, 0);
+        let mut g1 = RequestGen::new(AccessPattern::Uniform, 1024, 1.0, 7, 1);
+        let a: Vec<u64> = (0..50).map(|_| g0.next().ospn).collect();
+        let b: Vec<u64> = (0..50).map(|_| g1.next().ospn).collect();
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,350 @@
+//! Page-content modeling: what bytes live in each page, and therefore
+//! what the compression engine sees.
+//!
+//! Every OSPN is assigned a *content class* (deterministically hashed
+//! from the workload seed). A class renders to concrete 4 KB page bytes;
+//! the engine model (PJRT artifact or analytic mirror) analyzes each
+//! class once and the result is memoized — mirroring a real device,
+//! which runs its engine on writes, not on every lookup. Writes walk a
+//! page through noise levels (content-class transitions), so write-heavy
+//! phases genuinely degrade compressibility.
+
+use crate::sim::FxHashMap;
+
+use crate::compress::size_model::{PageSizes, SizeModel, PAGE_BYTES};
+use crate::expander::ContentOracle;
+use crate::rng::Pcg64;
+
+/// Distribution of page contents for one workload.
+#[derive(Clone, Copy, Debug)]
+pub struct ContentProfile {
+    /// Fraction of footprint pages that are all-zero.
+    pub zero_frac: f64,
+    /// Fraction that are incompressible (random bytes).
+    pub random_frac: f64,
+    /// Word-aligned motif periods (bytes) for the compressible rest.
+    pub periods: [u64; 4],
+    /// Initial corrupted-word count range for compressible pages.
+    pub base_noise_words: u64,
+    /// Probability that a host write bumps the page's noise level.
+    pub write_mutate_prob: f64,
+}
+
+impl ContentProfile {
+    /// Numeric/scientific arrays (SPEC fp, XSBench tables).
+    pub fn numeric(zero_frac: f64, random_frac: f64) -> Self {
+        Self {
+            zero_frac,
+            random_frac,
+            periods: [8, 16, 32, 64],
+            base_noise_words: 6,
+            write_mutate_prob: 0.3,
+        }
+    }
+
+    /// Pointer-dense heaps (mcf, omnetpp): short repeating structure.
+    pub fn pointer_rich(zero_frac: f64, random_frac: f64) -> Self {
+        Self {
+            zero_frac,
+            random_frac,
+            periods: [8, 8, 16, 24],
+            base_noise_words: 10,
+            write_mutate_prob: 0.4,
+        }
+    }
+
+    /// Fluid/stencil grids (lbm): mostly poorly-compressible floats.
+    pub fn fluid(zero_frac: f64, random_frac: f64) -> Self {
+        Self {
+            zero_frac,
+            random_frac,
+            periods: [16, 24, 48, 64],
+            base_noise_words: 40,
+            write_mutate_prob: 0.5,
+        }
+    }
+
+    /// Graph CSR structures (GAPBS): offsets compress well, payloads less.
+    pub fn graph(zero_frac: f64, random_frac: f64) -> Self {
+        Self {
+            zero_frac,
+            random_frac,
+            periods: [8, 16, 16, 32],
+            base_noise_words: 16,
+            write_mutate_prob: 0.35,
+        }
+    }
+}
+
+/// A content class: fully determines a page's bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+enum ContentClass {
+    Zero,
+    Random { variant: u8 },
+    Periodic { period: u64, noise_words: u16, variant: u8 },
+}
+
+const NOISE_CAP: u16 = 256;
+
+impl ContentClass {
+    /// Render the class to concrete page bytes (deterministic).
+    fn render(self, seed: u64) -> Vec<u8> {
+        match self {
+            ContentClass::Zero => vec![0u8; PAGE_BYTES],
+            ContentClass::Random { variant } => {
+                let mut rng =
+                    Pcg64::from_label(seed, &["content", "random", &variant.to_string()]);
+                (0..PAGE_BYTES).map(|_| rng.next_u64() as u8).collect()
+            }
+            ContentClass::Periodic {
+                period,
+                noise_words,
+                variant,
+            } => {
+                let mut rng = Pcg64::from_label(
+                    seed,
+                    &[
+                        "content",
+                        "periodic",
+                        &period.to_string(),
+                        &noise_words.to_string(),
+                        &variant.to_string(),
+                    ],
+                );
+                let motif: Vec<u8> = (0..period).map(|_| rng.next_u64() as u8).collect();
+                let mut page: Vec<u8> = (0..PAGE_BYTES)
+                    .map(|i| motif[i % period as usize])
+                    .collect();
+                // Corrupt whole words (word-aligned noise — the unit the
+                // engine model credits, see DESIGN.md §Hardware-Adaptation).
+                for _ in 0..noise_words {
+                    let w = rng.below((PAGE_BYTES / 8) as u64) as usize;
+                    for k in 0..8 {
+                        page[w * 8 + k] = rng.next_u64() as u8;
+                    }
+                }
+                page
+            }
+        }
+    }
+}
+
+/// The workload-facing oracle: OSPN → sizes, with write transitions.
+pub struct WorkloadOracle<M: SizeModel> {
+    profile: ContentProfile,
+    seed: u64,
+    model: M,
+    /// Current class per (written-to) page; untouched pages are derived
+    /// from the hash alone.
+    overrides: FxHashMap<u64, ContentClass>,
+    /// Memoized engine results per class.
+    memo: FxHashMap<ContentClass, PageSizes>,
+    rng: Pcg64,
+    /// Engine invocations (≡ distinct classes analyzed).
+    pub engine_calls: u64,
+}
+
+impl<M: SizeModel> WorkloadOracle<M> {
+    pub fn new(profile: ContentProfile, seed: u64, model: M) -> Self {
+        Self {
+            profile,
+            seed,
+            model,
+            overrides: FxHashMap::default(),
+            memo: FxHashMap::default(),
+            rng: Pcg64::from_label(seed, &["oracle", "mutate"]),
+            engine_calls: 0,
+        }
+    }
+
+    /// Deterministic base class for a page.
+    fn base_class(&self, ospn: u64) -> ContentClass {
+        let mut h = Pcg64::from_label(self.seed, &["class", &ospn.to_string()]);
+        let u = h.f64();
+        if u < self.profile.zero_frac {
+            ContentClass::Zero
+        } else if u < self.profile.zero_frac + self.profile.random_frac {
+            ContentClass::Random {
+                variant: (h.next_u64() % 8) as u8,
+            }
+        } else {
+            let period = self.profile.periods[(h.next_u64() % 4) as usize];
+            let noise = (h.below(self.profile.base_noise_words.max(1) * 2 + 1)) as u16;
+            ContentClass::Periodic {
+                period,
+                noise_words: noise,
+                variant: (h.next_u64() % 4) as u8,
+            }
+        }
+    }
+
+    fn class_of(&self, ospn: u64) -> ContentClass {
+        self.overrides
+            .get(&ospn)
+            .copied()
+            .unwrap_or_else(|| self.base_class(ospn))
+    }
+
+    fn sizes_of_class(&mut self, class: ContentClass) -> PageSizes {
+        if let Some(&s) = self.memo.get(&class) {
+            return s;
+        }
+        let page = class.render(self.seed);
+        let s = self.model.analyze(&[&page])[0];
+        self.engine_calls += 1;
+        self.memo.insert(class, s);
+        s
+    }
+
+    /// Number of distinct classes analyzed so far.
+    pub fn classes_analyzed(&self) -> usize {
+        self.memo.len()
+    }
+}
+
+impl<M: SizeModel> ContentOracle for WorkloadOracle<M> {
+    fn sizes(&mut self, ospn: u64) -> PageSizes {
+        let class = self.class_of(ospn);
+        self.sizes_of_class(class)
+    }
+
+    fn on_write(&mut self, ospn: u64) -> PageSizes {
+        let class = self.class_of(ospn);
+        let next = match class {
+            // Writing a zero page materializes compressible data.
+            ContentClass::Zero => ContentClass::Periodic {
+                period: self.profile.periods[0],
+                noise_words: self.profile.base_noise_words as u16,
+                variant: 0,
+            },
+            ContentClass::Random { .. } => class,
+            ContentClass::Periodic {
+                period,
+                noise_words,
+                variant,
+            } => {
+                if self.rng.chance(self.profile.write_mutate_prob) {
+                    ContentClass::Periodic {
+                        period,
+                        noise_words: (noise_words + 4).min(NOISE_CAP),
+                        variant,
+                    }
+                } else {
+                    class
+                }
+            }
+        };
+        if next != class {
+            self.overrides.insert(ospn, next);
+        }
+        self.sizes_of_class(next)
+    }
+}
+
+/// Test helper: a constant-size oracle.
+pub struct FixedOracle {
+    sizes: PageSizes,
+    pub writes_seen: u64,
+}
+
+impl FixedOracle {
+    pub fn new(sizes: PageSizes) -> Self {
+        Self {
+            sizes,
+            writes_seen: 0,
+        }
+    }
+}
+
+impl ContentOracle for FixedOracle {
+    fn sizes(&mut self, _ospn: u64) -> PageSizes {
+        self.sizes
+    }
+
+    fn on_write(&mut self, _ospn: u64) -> PageSizes {
+        self.writes_seen += 1;
+        self.sizes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::AnalyticSizeModel;
+
+    fn oracle(zero: f64, random: f64) -> WorkloadOracle<AnalyticSizeModel> {
+        WorkloadOracle::new(
+            ContentProfile::numeric(zero, random),
+            42,
+            AnalyticSizeModel,
+        )
+    }
+
+    #[test]
+    fn zero_fraction_is_respected() {
+        let mut o = oracle(0.3, 0.1);
+        let zeros = (0..2000u64)
+            .filter(|&p| o.sizes(p).page == 0)
+            .count();
+        let frac = zeros as f64 / 2000.0;
+        assert!((frac - 0.3).abs() < 0.05, "zero fraction {frac}");
+    }
+
+    #[test]
+    fn classes_are_memoized() {
+        let mut o = oracle(0.2, 0.1);
+        for p in 0..500u64 {
+            o.sizes(p);
+        }
+        let calls_after_first_pass = o.engine_calls;
+        for p in 0..500u64 {
+            o.sizes(p);
+        }
+        assert_eq!(o.engine_calls, calls_after_first_pass);
+        assert!(
+            calls_after_first_pass < 200,
+            "bounded class family, got {calls_after_first_pass}"
+        );
+    }
+
+    #[test]
+    fn sizes_deterministic_per_page() {
+        let mut a = oracle(0.2, 0.1);
+        let mut b = oracle(0.2, 0.1);
+        for p in [0u64, 17, 99, 1234] {
+            assert_eq!(a.sizes(p), b.sizes(p));
+        }
+    }
+
+    #[test]
+    fn writes_degrade_compressibility() {
+        let mut o = oracle(0.0, 0.0);
+        // Find a compressible page and hammer it with writes.
+        let p = 5u64;
+        let before = o.sizes(p).page;
+        for _ in 0..64 {
+            o.on_write(p);
+        }
+        let after = o.sizes(p).page;
+        assert!(
+            after >= before,
+            "noise must not shrink compressed size: {before} → {after}"
+        );
+        assert!(after > before, "64 writes should mutate at least once");
+    }
+
+    #[test]
+    fn zero_page_write_materializes_data() {
+        let mut o = oracle(1.0, 0.0); // all pages zero
+        assert_eq!(o.sizes(3).page, 0);
+        let s = o.on_write(3);
+        assert!(s.page > 0, "written zero page must become data");
+    }
+
+    #[test]
+    fn random_pages_are_incompressible() {
+        let mut o = oracle(0.0, 1.0);
+        let s = o.sizes(0);
+        assert!(s.page > 3500, "random page size {}", s.page);
+    }
+}

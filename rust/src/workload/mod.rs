@@ -1,0 +1,212 @@
+//! Workload generation: the ten Table-2 workloads as parameterized
+//! synthetic generators.
+//!
+//! The paper drives its simulator with SPEC CPU2017, GAPBS(+Twitter) and
+//! XSBench traces; those inputs are not available here, so each workload
+//! is modeled by the properties the evaluation actually exercises
+//! (DESIGN.md §3): memory read/write intensity (Table 2 RPKI/WPKI),
+//! footprint vs. promoted-region size, access locality (streaming /
+//! zipf / pointer-chase / uniform), zero-page fraction, and page-content
+//! compressibility. `benches/table2_workloads.rs` verifies the generated
+//! streams reproduce Table 2's RPKI/WPKI and DESIGN.md's target ratios.
+
+pub mod access;
+pub mod content;
+
+pub use access::{AccessPattern, RequestGen};
+pub use content::{ContentProfile, WorkloadOracle};
+
+/// One workload's full parameterization.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    pub name: &'static str,
+    pub suite: &'static str,
+    /// Memory reads / writes per kilo-instruction (Table 2).
+    pub rpki: f64,
+    pub wpki: f64,
+    /// Paper-scale resident footprint in bytes (estimate; scaled by
+    /// `SimConfig::footprint_scale` at run time).
+    pub footprint_bytes: u64,
+    pub pattern: AccessPattern,
+    pub content: ContentProfile,
+}
+
+impl WorkloadSpec {
+    /// Footprint in 4 KB pages after scaling.
+    pub fn pages(&self, scale: f64) -> u64 {
+        (((self.footprint_bytes as f64 * scale) / 4096.0).ceil() as u64).max(64)
+    }
+
+    /// Probability a generated request is a read.
+    pub fn read_fraction(&self) -> f64 {
+        if self.rpki + self.wpki == 0.0 {
+            1.0
+        } else {
+            self.rpki / (self.rpki + self.wpki)
+        }
+    }
+
+    /// Memory requests per instruction.
+    pub fn requests_per_inst(&self) -> f64 {
+        (self.rpki + self.wpki) / 1000.0
+    }
+}
+
+/// Table 2, with locality/content parameters from each workload's
+/// published characterization (see DESIGN.md §3 for the derivation).
+///
+/// `footprint_bytes` is the per-process working set *touched within the
+/// paper's measured window* (1 B instructions after fast-forward), not
+/// the program's total allocation — that is the quantity whose ratio to
+/// the 512 MB promoted region drives every promotion/demotion effect.
+/// With 4 multiprogrammed copies (§5), bwaves/mcf/parest/lbm fit the
+/// promoted region; omnetpp slightly overflows it (and recovers at
+/// 1 GB, §6.1); pr/cc overflow heavily; bfs/tc are saved by their
+/// zero-page fractions and skewed locality.
+pub fn table2() -> Vec<WorkloadSpec> {
+    use AccessPattern::*;
+    let gb = |x: f64| (x * (1u64 << 30) as f64) as u64;
+    vec![
+        WorkloadSpec {
+            name: "bwaves",
+            suite: "CPU2017",
+            rpki: 13.4,
+            wpki: 2.1,
+            footprint_bytes: gb(0.12),
+            pattern: Stream { stride_lines: 1 },
+            content: ContentProfile::numeric(0.08, 0.10),
+        },
+        WorkloadSpec {
+            name: "mcf",
+            suite: "CPU2017",
+            rpki: 55.0,
+            wpki: 9.6,
+            footprint_bytes: gb(0.11),
+            pattern: Chase,
+            content: ContentProfile::pointer_rich(0.05, 0.05),
+        },
+        WorkloadSpec {
+            name: "parest",
+            suite: "CPU2017",
+            rpki: 14.5,
+            wpki: 0.2,
+            footprint_bytes: gb(0.08),
+            pattern: Zipf { s: 0.9 },
+            content: ContentProfile::numeric(0.10, 0.08),
+        },
+        WorkloadSpec {
+            name: "lbm",
+            suite: "CPU2017",
+            rpki: 23.9,
+            wpki: 17.8,
+            footprint_bytes: gb(0.18),
+            pattern: Stream { stride_lines: 2 },
+            content: ContentProfile::fluid(0.42, 0.35),
+        },
+        WorkloadSpec {
+            name: "omnetpp",
+            suite: "CPU2017",
+            rpki: 8.8,
+            wpki: 4.1,
+            footprint_bytes: gb(0.24),
+            pattern: Zipf { s: 0.55 },
+            content: ContentProfile::pointer_rich(0.06, 0.04),
+        },
+        WorkloadSpec {
+            name: "bfs",
+            suite: "GAPBS",
+            rpki: 41.9,
+            wpki: 2.7,
+            footprint_bytes: gb(0.12),
+            pattern: Zipf { s: 0.8 },
+            content: ContentProfile::graph(0.34, 0.12),
+        },
+        WorkloadSpec {
+            name: "pr",
+            suite: "GAPBS",
+            rpki: 126.8,
+            wpki: 2.3,
+            footprint_bytes: gb(0.28),
+            pattern: Zipf { s: 0.42 },
+            content: ContentProfile::graph(0.10, 0.18),
+        },
+        WorkloadSpec {
+            name: "cc",
+            suite: "GAPBS",
+            rpki: 33.3,
+            wpki: 3.8,
+            footprint_bytes: gb(0.26),
+            pattern: Zipf { s: 0.38 },
+            content: ContentProfile::graph(0.08, 0.20),
+        },
+        WorkloadSpec {
+            name: "tc",
+            suite: "GAPBS",
+            rpki: 16.7,
+            wpki: 11.6,
+            footprint_bytes: gb(0.11),
+            pattern: Zipf { s: 0.8 },
+            content: ContentProfile::graph(0.30, 0.15),
+        },
+        WorkloadSpec {
+            name: "XSBench",
+            suite: "XSBench",
+            rpki: 37.7,
+            wpki: 0.0,
+            footprint_bytes: gb(0.3),
+            pattern: Uniform,
+            content: ContentProfile::numeric(0.04, 0.25),
+        },
+    ]
+}
+
+/// Look a workload up by name.
+pub fn by_name(name: &str) -> Option<WorkloadSpec> {
+    table2().into_iter().find(|w| w.name.eq_ignore_ascii_case(name))
+}
+
+pub fn names() -> Vec<&'static str> {
+    table2().iter().map(|w| w.name).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_has_ten_workloads() {
+        let t = table2();
+        assert_eq!(t.len(), 10);
+        let names: Vec<_> = t.iter().map(|w| w.name).collect();
+        for n in [
+            "bwaves", "mcf", "parest", "lbm", "omnetpp", "bfs", "pr", "cc", "tc", "XSBench",
+        ] {
+            assert!(names.contains(&n), "missing {n}");
+        }
+    }
+
+    #[test]
+    fn rpki_wpki_match_paper() {
+        let pr = by_name("pr").unwrap();
+        assert!((pr.rpki - 126.8).abs() < 1e-9);
+        let xs = by_name("XSBench").unwrap();
+        assert_eq!(xs.wpki, 0.0);
+        assert_eq!(xs.read_fraction(), 1.0);
+        let lbm = by_name("lbm").unwrap();
+        assert!((lbm.wpki - 17.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn footprints_scale() {
+        let pr = by_name("pr").unwrap();
+        let full = pr.pages(1.0);
+        let scaled = pr.pages(1.0 / 16.0);
+        assert!(full / scaled >= 15 && full / scaled <= 17);
+    }
+
+    #[test]
+    fn lookup_is_case_insensitive() {
+        assert!(by_name("xsbench").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,78 @@
+//! PJRT integration: the AOT-compiled artifact (Pallas kernel → HLO
+//! text → `xla` crate) must agree **bit-exactly** with the Rust
+//! analytic mirror on a randomized corpus.
+//!
+//! Requires `make artifacts`; tests self-skip with a message otherwise
+//! (the Makefile `test` target builds artifacts first).
+
+use ibex::compress::size_model::{analyze_page, SizeModel, PAGE_BYTES};
+use ibex::prop::gen;
+use ibex::rng::Pcg64;
+use ibex::runtime::{CachedSizeModel, PjrtSizeModel};
+
+fn load() -> Option<PjrtSizeModel> {
+    match PjrtSizeModel::load_default() {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn pjrt_matches_analytic_on_structured_corpus() {
+    let Some(mut m) = load() else { return };
+    let mut rng = Pcg64::new(777, 1);
+    let pages: Vec<Vec<u8>> = (0..96).map(|_| gen::page(&mut rng)).collect();
+    let refs: Vec<&[u8]> = pages.iter().map(|p| p.as_slice()).collect();
+    let got = m.analyze(&refs);
+    for (i, page) in pages.iter().enumerate() {
+        let want = analyze_page(page);
+        assert_eq!(got[i], want, "page {i} diverged (PJRT vs analytic)");
+    }
+}
+
+#[test]
+fn pjrt_handles_edge_pages() {
+    let Some(mut m) = load() else { return };
+    let zero = vec![0u8; PAGE_BYTES];
+    let ff = vec![0xFFu8; PAGE_BYTES];
+    let mut one_bit = vec![0u8; PAGE_BYTES];
+    one_bit[4095] = 1;
+    let refs: Vec<&[u8]> = vec![&zero, &ff, &one_bit];
+    let got = m.analyze(&refs);
+    assert_eq!(got[0], analyze_page(&zero));
+    assert_eq!(got[1], analyze_page(&ff));
+    assert_eq!(got[2], analyze_page(&one_bit));
+    assert_eq!(got[0].page, 0, "zero page must be free");
+    assert!(got[2].page > 0, "one nonzero byte ⇒ nonzero page");
+}
+
+#[test]
+fn pjrt_partial_batches_pad_correctly() {
+    let Some(m) = load() else { return };
+    let batch = m.batch();
+    let mut cached = CachedSizeModel::new(m);
+    let mut rng = Pcg64::new(778, 2);
+    // Sizes that do not divide the batch: 1, batch-1, batch+3.
+    for n in [1usize, batch - 1, batch + 3] {
+        let pages: Vec<Vec<u8>> = (0..n).map(|_| gen::page(&mut rng)).collect();
+        let refs: Vec<&[u8]> = pages.iter().map(|p| p.as_slice()).collect();
+        let got = cached.analyze(&refs);
+        assert_eq!(got.len(), n);
+        for (i, page) in pages.iter().enumerate() {
+            assert_eq!(got[i], analyze_page(page), "n={n} page {i}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_deterministic_across_invocations() {
+    let Some(mut m) = load() else { return };
+    let mut rng = Pcg64::new(779, 3);
+    let page = gen::page(&mut rng);
+    let a = m.analyze(&[&page]);
+    let b = m.analyze(&[&page]);
+    assert_eq!(a, b);
+}

@@ -1,0 +1,130 @@
+//! Cross-scheme behavioural contracts: the qualitative orderings the
+//! paper's figures rely on must hold in the simulator.
+
+use ibex::compress::AnalyticSizeModel;
+use ibex::config::SimConfig;
+use ibex::expander::build_scheme;
+use ibex::host::HostSim;
+use ibex::workload::{by_name, WorkloadOracle};
+
+fn run(cfg: &SimConfig, workload: &str) -> (f64, f64, u64) {
+    let spec = by_name(workload).unwrap();
+    let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
+    let mut dev = build_scheme(cfg);
+    let mut sim = HostSim::new(cfg, &spec);
+    let m = sim.run(dev.as_mut(), &mut oracle);
+    (m.perf(), m.compression_ratio, m.mem_total)
+}
+
+fn cfg_for(scheme: &str) -> SimConfig {
+    let mut c = SimConfig::test_small();
+    c.cores = 2;
+    c.instructions = 150_000;
+    c.warmup_instructions = 15_000;
+    // Keep the bench-scale working-set : promoted ratios at test size so
+    // the thrashing workloads (pr/omnetpp) actually overflow the region.
+    c.footprint_scale = 1.0 / 256.0;
+    c.promoted_bytes = 256 << 10;
+    c.meta_cache_bytes = 4 * 1024;
+    c.set("scheme", scheme).unwrap();
+    c
+}
+
+#[test]
+fn compresso_has_lowest_ratio_of_compressed_schemes() {
+    let workload = "parest";
+    let (_, r_compresso, _) = run(&cfg_for("compresso"), workload);
+    let (_, r_ibex, _) = run(&cfg_for("ibex"), workload);
+    let (_, r_tmcc, _) = run(&cfg_for("tmcc"), workload);
+    assert!(
+        r_compresso < r_ibex && r_compresso < r_tmcc,
+        "line-level must trail block-level ratios: compresso {r_compresso}, ibex {r_ibex}, tmcc {r_tmcc}"
+    );
+}
+
+#[test]
+fn ibex_beats_tmcc_and_dylect_on_thrashers() {
+    // The headline claim (Fig 9): on promotion/demotion-heavy workloads
+    // IBEX's bandwidth savings win.
+    for workload in ["pr", "omnetpp"] {
+        let (p_ibex, _, t_ibex) = run(&cfg_for("ibex"), workload);
+        let (p_tmcc, _, t_tmcc) = run(&cfg_for("tmcc"), workload);
+        let (p_dylect, _, _) = run(&cfg_for("dylect"), workload);
+        assert!(
+            p_ibex > p_tmcc,
+            "{workload}: ibex {p_ibex} must beat tmcc {p_tmcc}"
+        );
+        assert!(
+            p_ibex > p_dylect,
+            "{workload}: ibex {p_ibex} must beat dylect {p_dylect}"
+        );
+        assert!(
+            t_ibex < t_tmcc,
+            "{workload}: ibex traffic {t_ibex} must undercut tmcc {t_tmcc}"
+        );
+    }
+}
+
+#[test]
+fn dmc_is_slowest_block_scheme_under_thrash() {
+    let workload = "pr";
+    let (p_dmc, _, _) = run(&cfg_for("dmc"), workload);
+    let (p_ibex, _, _) = run(&cfg_for("ibex"), workload);
+    assert!(
+        p_ibex > 1.5 * p_dmc,
+        "32KB migrations must sink DMC: ibex {p_ibex} vs dmc {p_dmc}"
+    );
+}
+
+#[test]
+fn tmcc_ratio_beats_ibex_4kb_chunk_rounding() {
+    // Variable-size chunks pack tighter than 512 B chunk rounding.
+    let workload = "parest";
+    let mut c_ibex = cfg_for("ibex");
+    c_ibex.ibex.colocate = false; // 4 KB blocks, full chunk rounding
+    let (_, r_ibex4k, _) = run(&c_ibex, workload);
+    let (_, r_tmcc, _) = run(&cfg_for("tmcc"), workload);
+    assert!(
+        r_tmcc >= r_ibex4k * 0.98,
+        "zsmalloc exact packing should match/beat 512B rounding: tmcc {r_tmcc} vs ibex-4k {r_ibex4k}"
+    );
+}
+
+#[test]
+fn ibex_1kb_beats_mxt_ratio_at_same_block_size() {
+    // Fig 10's pinned claim: at the same 1 KB block size, IBEX's 128 B
+    // sub-chunk packing beats MXT's 256 B sectors ("thanks to its
+    // finer-grained chunk allocation", §6.1). The 1 KB-vs-4 KB ordering
+    // itself is the §4.6 tradeoff (larger blocks → higher ratio, higher
+    // latency) and is reported, not asserted.
+    for workload in ["mcf", "parest"] {
+        let (_, r_ibex, _) = run(&cfg_for("ibex"), workload);
+        let (_, r_mxt, _) = run(&cfg_for("mxt"), workload);
+        assert!(
+            r_ibex > r_mxt,
+            "{workload}: IBEX-1KB {r_ibex} must beat MXT {r_mxt}"
+        );
+    }
+}
+
+#[test]
+fn compaction_reduces_control_traffic() {
+    let workload = "pr";
+    let spec = by_name(workload).unwrap();
+    let run_ctl = |compact: bool| {
+        let mut cfg = cfg_for("ibex");
+        cfg.ibex.compact = compact;
+        // Small metadata cache so metadata misses actually happen.
+        cfg.meta_cache_bytes = 4 * 1024;
+        let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
+        let mut dev = build_scheme(&cfg);
+        let mut sim = HostSim::new(&cfg, &spec);
+        sim.run(dev.as_mut(), &mut oracle).mem_by_kind[0]
+    };
+    let compacted = run_ctl(true);
+    let packed = run_ctl(false);
+    assert!(
+        compacted < packed,
+        "32B entries must cut metadata fetches: {compacted} vs {packed}"
+    );
+}

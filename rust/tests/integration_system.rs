@@ -1,0 +1,170 @@
+//! End-to-end system integration: host → CXL → device → DRAM with all
+//! schemes, checking the cross-cutting behaviours the paper's
+//! evaluation depends on.
+
+use ibex::compress::AnalyticSizeModel;
+use ibex::config::{SchemeKind, SimConfig, ALL_SCHEMES};
+use ibex::coordinator::{run_one, Job};
+use ibex::expander::build_scheme;
+use ibex::host::HostSim;
+use ibex::workload::{by_name, WorkloadOracle};
+
+fn quick_cfg() -> SimConfig {
+    let mut c = SimConfig::test_small();
+    c.cores = 2;
+    c.instructions = 150_000;
+    c.warmup_instructions = 15_000;
+    // Bench-scale working-set : promoted : metadata-cache ratios at test
+    // size, so thrash/metadata-pressure regimes exist (DESIGN.md §6b).
+    c.footprint_scale = 1.0 / 256.0;
+    c.promoted_bytes = 256 << 10;
+    c.meta_cache_bytes = 4 * 1024;
+    c
+}
+
+#[test]
+fn all_schemes_run_all_sane() {
+    for scheme in ALL_SCHEMES {
+        let mut cfg = quick_cfg();
+        cfg.scheme = scheme;
+        let spec = by_name("omnetpp").unwrap();
+        let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
+        let mut dev = build_scheme(&cfg);
+        let mut sim = HostSim::new(&cfg, &spec);
+        let m = sim.run(dev.as_mut(), &mut oracle);
+        assert!(m.elapsed_ps > 0, "{scheme}: no time elapsed");
+        assert!(m.requests > 1000, "{scheme}: too few requests");
+        if scheme != SchemeKind::Uncompressed {
+            assert!(
+                m.compression_ratio > 1.0,
+                "{scheme}: ratio {} must exceed 1 on compressible data",
+                m.compression_ratio
+            );
+        }
+        assert!(
+            m.mem_total > 0,
+            "{scheme}: device memory must see traffic"
+        );
+    }
+}
+
+#[test]
+fn zero_heavy_workload_beats_uncompressed_on_ibex() {
+    // lbm has ~42% zero pages: IBEX serves those from metadata type
+    // bits while raw memory pays DRAM for them (§6.1's speedup cases).
+    // Steady-state regime, like the paper's 1B-instruction runs: the
+    // footprint fits the promoted region and is revisited many times
+    // (Fig 11 notes lbm incurs no demotion traffic).
+    let mut cfg = quick_cfg();
+    cfg.promoted_bytes = 8 << 20;
+    cfg.footprint_scale = 1.0 / 8192.0;
+    cfg.instructions = 400_000;
+    cfg.warmup_instructions = 100_000;
+    let perf = |scheme: &str| {
+        let mut c = cfg.clone();
+        c.set("scheme", scheme).unwrap();
+        run_one(&Job::new(scheme, c, "lbm")).metrics.perf()
+    };
+    let raw = perf("uncompressed");
+    let ib = perf("ibex");
+    assert!(
+        ib > raw * 0.95,
+        "zero-heavy lbm should be competitive or better on ibex: {ib} vs {raw}"
+    );
+}
+
+#[test]
+fn shadow_removes_demotion_traffic_for_readonly() {
+    // XSBench is read-only: with shadowed promotion its demotion
+    // traffic must be (near) zero; without, it must not be.
+    let spec = by_name("XSBench").unwrap();
+    let run = |shadow: bool| {
+        let mut cfg = quick_cfg();
+        cfg.promoted_bytes = 1 << 20; // force thrash
+        cfg.ibex.shadow = shadow;
+        let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
+        let mut dev = build_scheme(&cfg);
+        let mut sim = HostSim::new(&cfg, &spec);
+        sim.run(dev.as_mut(), &mut oracle).mem_by_kind[2] // demotion kind
+    };
+    let with_shadow = run(true);
+    let without = run(false);
+    assert!(
+        without > 10 * with_shadow.max(1) || with_shadow == 0,
+        "shadow must kill read-only demotion traffic: {with_shadow} vs {without}"
+    );
+}
+
+#[test]
+fn unlimited_internal_bw_is_never_slower() {
+    let spec = by_name("pr").unwrap();
+    let run = |unlimited: bool| {
+        let mut cfg = quick_cfg();
+        cfg.unlimited_internal_bw = unlimited;
+        let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
+        let mut dev = build_scheme(&cfg);
+        let mut sim = HostSim::new(&cfg, &spec);
+        let m = sim.run(dev.as_mut(), &mut oracle);
+        m.perf()
+    };
+    let ideal = run(true);
+    let limited = run(false);
+    assert!(
+        ideal >= limited * 0.999,
+        "ideal bandwidth must not lose: {ideal} vs {limited}"
+    );
+}
+
+#[test]
+fn higher_cxl_latency_hurts_absolute_perf() {
+    let spec = by_name("mcf").unwrap();
+    let run = |rt: u64| {
+        let mut cfg = quick_cfg();
+        cfg.cxl.round_trip_ns = rt;
+        let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
+        let mut dev = build_scheme(&cfg);
+        let mut sim = HostSim::new(&cfg, &spec);
+        sim.run(dev.as_mut(), &mut oracle).perf()
+    };
+    let fast = run(70);
+    let slow = run(400);
+    assert!(fast > slow, "400ns CXL must be slower: {fast} vs {slow}");
+}
+
+#[test]
+fn bigger_promoted_region_helps_thrashers() {
+    let spec = by_name("omnetpp").unwrap();
+    let run = |kb: u64| {
+        let mut cfg = quick_cfg();
+        cfg.promoted_bytes = kb << 10;
+        let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
+        let mut dev = build_scheme(&cfg);
+        let mut sim = HostSim::new(&cfg, &spec);
+        sim.run(dev.as_mut(), &mut oracle).perf()
+    };
+    let small = run(128);
+    let large = run(2048);
+    assert!(
+        large > small,
+        "2MB promoted region must beat 128KB on a thrasher: {large} vs {small}"
+    );
+}
+
+#[test]
+fn dylect_pays_more_control_traffic_than_tmcc() {
+    let spec = by_name("pr").unwrap();
+    let run = |scheme: &str| {
+        let mut cfg = quick_cfg();
+        cfg.set("scheme", scheme).unwrap();
+        let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
+        let mut dev = build_scheme(&cfg);
+        let mut sim = HostSim::new(&cfg, &spec);
+        sim.run(dev.as_mut(), &mut oracle).mem_by_kind[0]
+    };
+    let tmcc = run("tmcc");
+    let dylect = run("dylect");
+    assert!(
+        dylect > tmcc,
+        "dual-table probing must cost control traffic: {dylect} vs {tmcc}"
+    );
+}

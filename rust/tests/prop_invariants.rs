@@ -1,0 +1,165 @@
+//! Randomized property tests over the device invariants (offline
+//! substitute for proptest — see `ibex::prop`).
+
+use ibex::compress::size_model::analyze_page;
+use ibex::compress::{lz, PageSizes};
+use ibex::config::SimConfig;
+use ibex::expander::chunk::ChunkAllocator;
+use ibex::expander::ibex::Ibex;
+use ibex::expander::{build_scheme, Scheme};
+use ibex::prop::{forall, gen};
+use ibex::workload::content::FixedOracle;
+use ibex::workload::{ContentProfile, WorkloadOracle};
+use ibex::compress::AnalyticSizeModel;
+use ibex::expander::ContentOracle;
+
+#[test]
+fn prop_lz_roundtrip_on_structured_pages() {
+    forall("lz roundtrip", |rng, _| {
+        let page = gen::page(rng);
+        let c = lz::compress(&page);
+        let d = lz::decompress(&c, page.len()).expect("decompress");
+        assert_eq!(d, page);
+    });
+}
+
+#[test]
+fn prop_size_model_bounds_and_zero_consistency() {
+    forall("size model bounds", |rng, _| {
+        let page = gen::page(rng);
+        let s = analyze_page(&page);
+        for (b, &size) in s.blocks.iter().enumerate() {
+            let zero = page[b * 1024..(b + 1) * 1024].iter().all(|&x| x == 0);
+            assert_eq!(zero, size == 0, "zero-block flag mismatch in block {b}");
+            assert!(size <= 1156);
+        }
+        let zero_page = page.iter().all(|&x| x == 0);
+        assert_eq!(zero_page, s.page == 0);
+        assert!(s.page <= 4624);
+    });
+}
+
+#[test]
+fn prop_chunk_allocator_conservation() {
+    forall("chunk conservation", |rng, _| {
+        let total = 16 + rng.below(256) as u32;
+        let mut a = ChunkAllocator::new(0, 512, total);
+        let mut held: Vec<u32> = Vec::new();
+        for _ in 0..400 {
+            if rng.chance(0.55) {
+                if let Some(c) = a.alloc() {
+                    assert!(!held.contains(&c), "allocator handed out a held chunk");
+                    held.push(c);
+                }
+            } else if !held.is_empty() {
+                let i = rng.below(held.len() as u64) as usize;
+                a.free_chunk(held.swap_remove(i));
+            }
+            assert_eq!(
+                a.free_count() as usize + held.len(),
+                total as usize,
+                "chunks must be conserved"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_ibex_physical_accounting_consistent() {
+    // Drive IBEX with random request sequences; allocator byte
+    // accounting must stay consistent and the device must never panic.
+    forall("ibex accounting", |rng, _| {
+        let mut cfg = SimConfig::test_small();
+        cfg.promoted_bytes = 256 << 10;
+        cfg.demotion_low_water = 8;
+        cfg.meta_cache_bytes = 2048;
+        cfg.ibex.shadow = rng.chance(0.5);
+        cfg.ibex.colocate = rng.chance(0.5);
+        cfg.ibex.compact = cfg.ibex.colocate && rng.chance(0.5);
+        let mut dev = Ibex::new(&cfg);
+        let sizes = PageSizes {
+            blocks: [
+                rng.below(1100) as u32 + 8,
+                0,
+                rng.below(1100) as u32 + 8,
+                rng.below(1100) as u32 + 8,
+            ],
+            page: rng.below(4000) as u32 + 20,
+        };
+        let mut oracle = FixedOracle::new(sizes);
+        let npages = 64;
+        for p in 0..npages {
+            dev.populate(p, sizes);
+        }
+        let mut t = 0u64;
+        for _ in 0..600 {
+            t += 50_000;
+            let p = rng.below(npages);
+            let line = rng.below(64) as u32;
+            let write = rng.chance(0.3);
+            dev.access(t, p, line, write, &mut oracle);
+        }
+        // Physical bytes bounded by regions; logical bounded by footprint.
+        assert!(dev.physical_bytes() <= (4u64 << 30) + cfg.promoted_bytes);
+        assert!(dev.logical_bytes() <= npages * 4096);
+        let s = dev.stats();
+        assert!(s.clean_demotions <= s.demotions);
+        assert!(s.random_victims <= s.victim_selections);
+        assert_eq!(s.reads + s.writes, 600);
+    });
+}
+
+#[test]
+fn prop_all_schemes_survive_random_traffic() {
+    forall("scheme fuzz", |rng, case| {
+        let schemes = ["ibex", "tmcc", "dylect", "mxt", "dmc", "compresso", "uncompressed"];
+        let scheme = schemes[(case % schemes.len() as u64) as usize];
+        let mut cfg = SimConfig::test_small();
+        cfg.promoted_bytes = (64 + rng.below(512)) << 10;
+        cfg.demotion_low_water = 4;
+        cfg.set("scheme", scheme).unwrap();
+        let mut dev = build_scheme(&cfg);
+        let mut oracle = WorkloadOracle::new(
+            ContentProfile::graph(0.2, 0.15),
+            rng.next_u64(),
+            AnalyticSizeModel,
+        );
+        let mut t = 0u64;
+        for _ in 0..400 {
+            t += 30_000 + rng.below(200_000);
+            let p = rng.below(512);
+            let reply = dev.access(t, p, rng.below(64) as u32, rng.chance(0.4), &mut oracle);
+            assert!(reply >= t, "{scheme}: reply before request");
+            assert!(
+                reply - t < 2_000_000_000,
+                "{scheme}: implausible 2ms device latency"
+            );
+        }
+        if scheme != "uncompressed" {
+            assert!(dev.compression_ratio() >= 0.5, "{scheme}: ratio collapsed");
+        }
+    });
+}
+
+#[test]
+fn prop_oracle_write_monotonicity() {
+    // Writes can only keep or degrade a page's compressibility (until
+    // the noise cap), never improve it spontaneously.
+    forall("oracle monotone", |rng, _| {
+        let mut oracle = WorkloadOracle::new(
+            ContentProfile::numeric(0.1, 0.1),
+            rng.next_u64(),
+            AnalyticSizeModel,
+        );
+        let p = rng.below(256);
+        let mut last = oracle.sizes(p).page;
+        for _ in 0..10 {
+            let s = oracle.on_write(p).page;
+            assert!(
+                s >= last || last == 0,
+                "write shrank compressed size {last} → {s}"
+            );
+            last = s;
+        }
+    });
+}
