@@ -1,0 +1,24 @@
+# IBEX repo tasks. The Rust simulator needs none of these to build or
+# test (the default analytic backend is pure Rust) — `artifacts` is only
+# for the PJRT path (`cargo build --features pjrt`, backend=pjrt|auto).
+
+.PHONY: artifacts golden test pytest
+
+# AOT-compile the Layer-1 Pallas kernel to HLO text + meta sidecar
+# (requires JAX; see python/compile/aot.py).
+artifacts:
+	mkdir -p artifacts
+	cd python && python3 -m compile.aot --out ../artifacts/ibex_size.hlo.txt
+
+# Regenerate the Rust golden size-model corpus from the JAX reference
+# (only needed when the size model itself changes).
+golden:
+	python3 python/tests/gen_golden.py
+
+# Tier-1 verification: build + full Rust suite, no Python required.
+test:
+	cargo build --release && cargo test -q
+
+# Python-side suite (tier 2; needs jax + pytest + hypothesis).
+pytest:
+	cd python && python3 -m pytest tests -q

@@ -30,11 +30,11 @@ fn packing(sizes: &PageSizes) -> (u64, u64) {
 fn main() {
     let mut engine = EngineModel::auto();
     println!(
-        "engine model: {}",
+        "engine backend: {}",
         if engine.is_pjrt() {
-            "PJRT artifact (AOT-compiled Pallas kernel)"
+            "pjrt (AOT-compiled Pallas kernel artifact)"
         } else {
-            "analytic mirror (run `make artifacts` for the PJRT path)"
+            "analytic mirror (build with --features pjrt + `make artifacts` for PJRT)"
         }
     );
 

@@ -1,32 +1,48 @@
-//! §Perf L1/L2: PJRT artifact throughput.
+//! §Perf L1/L2: size-backend throughput.
 //!
-//! Measures the AOT-compiled engine model's batch throughput on the
-//! PJRT CPU client (compile time, per-batch latency, pages/s) and the
-//! memoized oracle's effective hit rate in a realistic run — the knobs
-//! the §Perf log tracks for the compile-path layers.
+//! Measures the configured size backend's batch throughput (setup time,
+//! per-batch latency, pages/s) and the memoizing cache's hit behaviour —
+//! the knobs the §Perf log tracks for the compile-path layers.
+//!
+//! Runs the analytic backend by default. Select another with
+//! `IBEX_BACKEND=pjrt|auto` (PJRT needs `--features pjrt` and
+//! `make artifacts`); prints SKIP when the requested backend can't load.
 
 mod common;
 
 use std::time::Instant;
 
 use ibex::compress::size_model::{SizeModel, PAGE_BYTES};
+use ibex::config::SimConfig;
 use ibex::rng::Pcg64;
-use ibex::runtime::{CachedSizeModel, PjrtSizeModel};
+use ibex::runtime::backend::BackendSpec;
+use ibex::runtime::EngineModel;
 use ibex::stats::Table;
 
 fn main() {
-    common::banner("Perf L1/L2", "PJRT engine-model throughput");
+    common::banner("Perf L1/L2", "size-backend throughput");
+    let mut cfg = SimConfig::table1();
+    if let Ok(b) = std::env::var("IBEX_BACKEND") {
+        if let Err(e) = cfg.set("backend", &b) {
+            println!("SKIP: {e}");
+            return;
+        }
+    }
+    let spec = BackendSpec::from_config(&cfg);
     let t0 = Instant::now();
-    let model = match PjrtSizeModel::load_default() {
+    let mut model = match EngineModel::from_spec(&spec) {
         Ok(m) => m,
         Err(e) => {
             println!("SKIP: {e}");
             return;
         }
     };
-    let compile_ms = t0.elapsed().as_secs_f64() * 1000.0;
-    let batch = model.batch();
-    println!("artifact loaded+compiled in {compile_ms:.0} ms (batch={batch})");
+    let setup_ms = t0.elapsed().as_secs_f64() * 1000.0;
+    let batch = model.batch_hint();
+    println!(
+        "backend `{}` ready in {setup_ms:.0} ms (batch hint = {batch})",
+        model.backend_name()
+    );
 
     let mut rng = Pcg64::new(5, 5);
     let pages: Vec<Vec<u8>> = (0..batch)
@@ -34,12 +50,11 @@ fn main() {
         .collect();
     let refs: Vec<&[u8]> = pages.iter().map(|p| p.as_slice()).collect();
 
-    let mut cached = CachedSizeModel::new(model);
     // Warm (memoized path untested here: all distinct).
-    let _ = cached.analyze(&refs);
+    let _ = model.analyze(&refs);
 
     let mut t = Table::new(
-        "PJRT batch throughput",
+        "size-backend batch throughput",
         &["batches", "wall ms", "pages/s", "µs/page"],
     );
     for rounds in [4u32, 16] {
@@ -53,7 +68,7 @@ fn main() {
         let start = Instant::now();
         for chunk in fresh.chunks(batch) {
             let refs: Vec<&[u8]> = chunk.iter().map(|p| p.as_slice()).collect();
-            let _ = cached.analyze(&refs);
+            let _ = model.analyze(&refs);
         }
         let wall = start.elapsed().as_secs_f64();
         let pages_n = (rounds as usize * batch) as f64;
@@ -65,8 +80,6 @@ fn main() {
         ]);
     }
     t.emit();
-    println!(
-        "\nmemo: {} hits / {} misses across the bench",
-        cached.hits, cached.misses
-    );
+    let (hits, misses) = model.cache_stats();
+    println!("\nmemo: {hits} hits / {misses} misses across the bench");
 }

@@ -88,6 +88,8 @@ USAGE:
   ibex help
 
 SCHEMES:   uncompressed ibex tmcc dylect mxt dmc compresso
+BACKENDS:  backend=analytic (default, pure Rust) | pjrt (needs --features pjrt
+           and `make artifacts`) | auto; artifact=PATH overrides the HLO path
 KEYS:      see `ibex config-dump` (e.g. promoted_mb=512, cxl.round_trip_ns=70,
            ibex.shadow=true, instructions=20000000, footprint_scale=0.0625)
 ";
@@ -109,6 +111,10 @@ pub fn dispatch(args: &[String]) -> i32 {
         "list" => {
             println!("workloads: {}", workload::names().join(" "));
             println!("schemes:   uncompressed ibex tmcc dylect mxt dmc compresso");
+            println!(
+                "backends:  analytic pjrt auto (pjrt compiled {})",
+                if cfg!(feature = "pjrt") { "in" } else { "out" }
+            );
             0
         }
         "config-dump" => match cli.config() {

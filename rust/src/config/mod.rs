@@ -73,6 +73,52 @@ impl fmt::Display for SchemeKind {
     }
 }
 
+/// Which size-model backend computes compressed-page sizes
+/// (see `crate::runtime::backend`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum SizeBackendKind {
+    /// Pure-Rust analytic mirror of the Pallas kernel (the default:
+    /// needs no artifacts, no XLA, no Python).
+    #[default]
+    Analytic,
+    /// Execute the AOT-compiled HLO artifact via PJRT. Requires
+    /// building with `--features pjrt` and running `make artifacts`.
+    Pjrt,
+    /// PJRT when available, analytic otherwise.
+    Auto,
+}
+
+pub const ALL_BACKENDS: [SizeBackendKind; 3] = [
+    SizeBackendKind::Analytic,
+    SizeBackendKind::Pjrt,
+    SizeBackendKind::Auto,
+];
+
+impl SizeBackendKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SizeBackendKind::Analytic => "analytic",
+            SizeBackendKind::Pjrt => "pjrt",
+            SizeBackendKind::Auto => "auto",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "analytic" | "rust" => SizeBackendKind::Analytic,
+            "pjrt" | "xla" => SizeBackendKind::Pjrt,
+            "auto" => SizeBackendKind::Auto,
+            _ => return None,
+        })
+    }
+}
+
+impl fmt::Display for SizeBackendKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// IBEX optimization toggles (Fig 13 applies them incrementally).
 #[derive(Clone, Copy, Debug)]
 pub struct IbexOptions {
@@ -140,6 +186,10 @@ pub struct SimConfig {
     pub unlimited_internal_bw: bool,
 
     // ---- compression engine ----
+    /// Which size-model backend computes compressed sizes.
+    pub backend: SizeBackendKind,
+    /// HLO artifact path for the PJRT backend.
+    pub artifact: String,
     /// Compression latency for a 1 KB block, device cycles (Table 1: 256).
     pub comp_cycles_per_kb: u64,
     /// Decompression latency for a 1 KB block, device cycles (Table 1: 64).
@@ -188,6 +238,8 @@ impl Default for SimConfig {
             device_bytes: 16 << 30,
             promoted_bytes: 512 << 20,
             unlimited_internal_bw: false,
+            backend: SizeBackendKind::default(),
+            artifact: crate::runtime::DEFAULT_ARTIFACT.to_string(),
             comp_cycles_per_kb: 256,
             decomp_cycles_per_kb: 64,
             meta_cache_bytes: 96 * 1024,
@@ -248,6 +300,11 @@ impl SimConfig {
             "device_mb" => self.device_bytes = p::<u64>(value, key)? << 20,
             "promoted_mb" => self.promoted_bytes = p::<u64>(value, key)? << 20,
             "unlimited_internal_bw" => self.unlimited_internal_bw = p(value, key)?,
+            "backend" => {
+                self.backend = SizeBackendKind::parse(value)
+                    .ok_or_else(|| format!("unknown backend {value:?}"))?
+            }
+            "artifact" => self.artifact = value.to_string(),
             "comp_cycles" => self.comp_cycles_per_kb = p(value, key)?,
             "decomp_cycles" => self.decomp_cycles_per_kb = p(value, key)?,
             "meta_cache_kb" => self.meta_cache_bytes = p::<usize>(value, key)? * 1024,
@@ -324,6 +381,8 @@ impl SimConfig {
             "unlimited_internal_bw",
             self.unlimited_internal_bw.to_string(),
         );
+        put("backend", self.backend.to_string());
+        put("artifact", self.artifact.clone());
         put("comp_cycles", self.comp_cycles_per_kb.to_string());
         put("decomp_cycles", self.decomp_cycles_per_kb.to_string());
         put("meta_cache_bytes", self.meta_cache_bytes.to_string());
@@ -357,6 +416,8 @@ mod tests {
         assert_eq!(c.meta_cache_bytes, 96 * 1024);
         assert_eq!(c.meta_cache_ways, 16);
         assert_eq!(c.promoted_bytes, 512 << 20);
+        assert_eq!(c.backend, SizeBackendKind::Analytic);
+        assert_eq!(c.artifact, crate::runtime::DEFAULT_ARTIFACT);
     }
 
     #[test]
@@ -403,5 +464,26 @@ mod tests {
         for s in ALL_SCHEMES {
             assert_eq!(SchemeKind::parse(s.name()), Some(s));
         }
+    }
+
+    #[test]
+    fn backend_names_roundtrip() {
+        for b in ALL_BACKENDS {
+            assert_eq!(SizeBackendKind::parse(b.name()), Some(b));
+        }
+        assert_eq!(SizeBackendKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn backend_keys_set_and_dump() {
+        let mut c = SimConfig::default();
+        c.set("backend", "auto").unwrap();
+        c.set("artifact", "out/custom.hlo.txt").unwrap();
+        assert_eq!(c.backend, SizeBackendKind::Auto);
+        assert_eq!(c.artifact, "out/custom.hlo.txt");
+        assert!(c.set("backend", "magic").is_err());
+        let d = c.dump();
+        assert_eq!(d["backend"], "auto");
+        assert_eq!(d["artifact"], "out/custom.hlo.txt");
     }
 }

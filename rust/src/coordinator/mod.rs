@@ -2,8 +2,9 @@
 //! (optionally across threads), and aggregates figure-shaped results.
 //!
 //! Every bench binary is a thin loop over [`run_one`] / [`run_many`];
-//! the coordinator owns engine-model selection (PJRT artifact when
-//! available, analytic mirror otherwise) and result bookkeeping.
+//! the coordinator owns engine selection (the size backend each job's
+//! config names — analytic by default, PJRT with `--features pjrt`)
+//! and result bookkeeping.
 
 pub mod report;
 
@@ -62,11 +63,14 @@ pub struct DeviceSummary {
     pub p99_latency_ns: u64,
 }
 
-/// Run one job on the calling thread.
+/// Run one job on the calling thread. The size backend comes from the
+/// job's config (`backend=` key); engines are pooled per backend spec,
+/// so jobs sharing a spec share one memo table.
 pub fn run_one(job: &Job) -> JobResult {
     let spec: WorkloadSpec =
         by_name(&job.workload).unwrap_or_else(|| panic!("unknown workload {}", job.workload));
-    let engine = SharedEngine::global();
+    let engine = SharedEngine::for_config(&job.cfg)
+        .unwrap_or_else(|e| panic!("job {:?}: cannot start size backend: {e}", job.label));
     let mut oracle = WorkloadOracle::new(spec.content, job.cfg.seed, engine);
     let mut device = build_scheme(&job.cfg);
     let mut sim = HostSim::new(&job.cfg, &spec);

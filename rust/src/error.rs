@@ -1,0 +1,111 @@
+//! Minimal string-backed error type (std-only `anyhow` substitute).
+//!
+//! The offline build carries no external dependencies, so fallible IBEX
+//! APIs (artifact parsing, backend construction) use this instead of
+//! `anyhow`: a single flattened message with `context`/`with_context`
+//! combinators and `err!`/`bail!` macros.
+
+use std::fmt;
+
+/// A human-readable error message, with context prepended as it
+/// propagates up (`"reading artifacts/x.meta.json: No such file"`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Error(String);
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error(message.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context`-style combinators for `Result` and `Option`.
+pub trait Context<T> {
+    /// Prepend `message` to the error (or replace `None`).
+    fn context<M: fmt::Display>(self, message: M) -> Result<T>;
+
+    /// Like [`Context::context`], computing the message lazily.
+    fn with_context<M: fmt::Display, F: FnOnce() -> M>(self, message: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<M: fmt::Display>(self, message: M) -> Result<T> {
+        self.map_err(|e| Error(format!("{message}: {e}")))
+    }
+
+    fn with_context<M: fmt::Display, F: FnOnce() -> M>(self, message: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", message())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<M: fmt::Display>(self, message: M) -> Result<T> {
+        self.ok_or_else(|| Error::msg(message))
+    }
+
+    fn with_context<M: fmt::Display, F: FnOnce() -> M>(self, message: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(message()))
+    }
+}
+
+/// Construct an [`Error`] from a format string: `err!("bad {x}")`.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return an [`Error`] from a format string: `bail!("bad {x}")`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_u8(s: &str) -> Result<u8> {
+        s.parse::<u8>().with_context(|| format!("parsing {s:?}"))
+    }
+
+    #[test]
+    fn context_flattens_messages() {
+        let e = parse_u8("nope").unwrap_err();
+        assert!(e.to_string().starts_with("parsing \"nope\": "), "{e}");
+        assert_eq!(parse_u8("7").unwrap(), 7);
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u8> = None;
+        assert_eq!(none.context("missing").unwrap_err(), Error::msg("missing"));
+        assert_eq!(Some(3u8).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_build_and_return_errors() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("failed with code {}", 42);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(true).unwrap_err(), err!("failed with code 42"));
+        assert_eq!(f(false).unwrap(), 1);
+    }
+}

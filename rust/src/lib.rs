@@ -7,10 +7,16 @@
 //! This crate is the Layer-3 coordinator of a three-layer Rust + JAX +
 //! Pallas stack:
 //!
-//! * [`runtime`] loads the AOT-compiled compression-engine model
-//!   (`artifacts/ibex_size.hlo.txt`, produced by `python/compile/aot.py`
-//!   from the Layer-1 Pallas kernel) and executes it via PJRT — Python is
-//!   never on the simulation path.
+//! * [`runtime`] owns the pluggable size-model backend
+//!   ([`runtime::SizeBackend`]). The default
+//!   [`runtime::AnalyticBackend`] is a pure-Rust, bit-exact mirror of
+//!   the Layer-1 Pallas kernel (`python/compile/kernels/ref.py`), so
+//!   `cargo build && cargo test` need no Python, JAX, XLA, or artifact
+//!   files. Building with `--features pjrt` adds a backend that executes
+//!   the AOT-compiled HLO artifact (`artifacts/ibex_size.hlo.txt`,
+//!   produced by `python/compile/aot.py`) on a PJRT CPU client — Python
+//!   is never on the simulation path. Selection is a config key:
+//!   `backend = analytic|pjrt|auto`.
 //! * [`expander`] implements the paper's device architecture: IBEX
 //!   (second-chance activity region, lazy reference updates, shadowed
 //!   promotion, block co-location, metadata compaction) plus the five
@@ -23,8 +29,15 @@
 //!   page-content classes) and [`coordinator`] runs experiments/sweeps
 //!   and emits the paper's tables and figures.
 //!
-//! See `DESIGN.md` for the complete system inventory and experiment
-//! index, and `EXPERIMENTS.md` for measured-vs-paper results.
+//! The analytic backend is cross-validated against the Python reference
+//! on a golden corpus checked into `rust/tests/fixtures/` (see
+//! `rust/tests/golden_sizes.rs`); with `--features pjrt` and artifacts
+//! present, `rust/tests/integration_runtime.rs` additionally asserts
+//! bit-exact agreement between the two backends on randomized pages.
+//!
+//! See `rust/README.md` for build/test instructions and the `pjrt`
+//! feature flag, `DESIGN.md` for the complete system inventory and
+//! experiment index, and `EXPERIMENTS.md` for measured-vs-paper results.
 
 pub mod cache;
 pub mod cli;
@@ -32,6 +45,7 @@ pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod cxl;
+pub mod error;
 pub mod expander;
 pub mod faults;
 pub mod host;

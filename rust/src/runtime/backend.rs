@@ -1,0 +1,167 @@
+//! Pluggable size-model backends.
+//!
+//! The simulator consumes compressed-size estimates through the
+//! [`SizeBackend`] trait; which implementation computes them is a
+//! configuration choice ([`crate::config::SizeBackendKind`]), not a
+//! compile-time assumption:
+//!
+//! * [`AnalyticBackend`] (default) — the pure-Rust mirror of the
+//!   Layer-1 Pallas kernel (`python/compile/kernels/ref.py`), bit-exact
+//!   by construction and cross-validated against a golden corpus in
+//!   `rust/tests/fixtures/`. Needs no artifacts, no XLA, no Python.
+//! * `PjrtBackend` (feature `pjrt`) — executes the AOT-compiled HLO
+//!   artifact via a PJRT CPU client, exactly the computation the Python
+//!   test suite validated.
+//!
+//! [`BackendSpec`] is the `Send + Hash` value that names a backend
+//! (kind + artifact path); it crosses threads so the engine service can
+//! construct the possibly-`!Send` backend on its own thread.
+
+use std::path::PathBuf;
+
+use crate::compress::size_model::{analyze_page, PageSizes};
+use crate::config::{SimConfig, SizeBackendKind};
+use crate::error::Result;
+
+/// A compression-size engine: turns 4 KB page contents into
+/// [`PageSizes`]. Implementations may batch internally; `analyze` must
+/// return exactly one result per input page, in order.
+pub trait SizeBackend {
+    /// Stable short name ("analytic", "pjrt") for logs and reports.
+    fn name(&self) -> &'static str;
+
+    /// Analyze a batch of 4 KB pages.
+    fn analyze(&mut self, pages: &[&[u8]]) -> Result<Vec<PageSizes>>;
+
+    /// Preferred batch size for throughput (callers may ignore).
+    fn batch_hint(&self) -> usize {
+        64
+    }
+}
+
+/// The default pure-Rust backend: scalar mirror of the Pallas kernel's
+/// size model. Stateless and infallible.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AnalyticBackend;
+
+impl SizeBackend for AnalyticBackend {
+    fn name(&self) -> &'static str {
+        "analytic"
+    }
+
+    fn analyze(&mut self, pages: &[&[u8]]) -> Result<Vec<PageSizes>> {
+        Ok(pages.iter().map(|p| analyze_page(p)).collect())
+    }
+}
+
+/// A thread-safe description of which backend to build. Construction
+/// happens where the backend will live (see
+/// [`crate::runtime::SharedEngine`]), because PJRT handles are `!Send`.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct BackendSpec {
+    pub kind: SizeBackendKind,
+    /// HLO-text artifact path (only the PJRT backend reads it).
+    pub artifact: PathBuf,
+}
+
+impl BackendSpec {
+    /// The spec a [`SimConfig`] selects. An untouched default artifact
+    /// path is resolved against both the current directory and the repo
+    /// checkout (see [`crate::runtime::default_artifact`]); an explicit
+    /// `artifact=` override is taken verbatim.
+    pub fn from_config(cfg: &SimConfig) -> Self {
+        Self {
+            kind: cfg.backend,
+            artifact: if cfg.artifact == crate::runtime::DEFAULT_ARTIFACT {
+                crate::runtime::default_artifact()
+            } else {
+                PathBuf::from(&cfg.artifact)
+            },
+        }
+    }
+
+    /// Auto-detecting spec with the default artifact location: PJRT when
+    /// compiled in and loadable, analytic otherwise.
+    pub fn auto() -> Self {
+        Self {
+            kind: SizeBackendKind::Auto,
+            artifact: crate::runtime::default_artifact(),
+        }
+    }
+
+    /// Build the backend this spec names. `Analytic` and `Auto` never
+    /// fail; an explicit `Pjrt` fails when the feature is compiled out
+    /// or the artifact cannot be loaded.
+    pub fn build(&self) -> Result<Box<dyn SizeBackend>> {
+        match self.kind {
+            SizeBackendKind::Analytic => Ok(Box::new(AnalyticBackend)),
+            SizeBackendKind::Pjrt => self.build_pjrt(),
+            SizeBackendKind::Auto => Ok(self.build_pjrt().unwrap_or_else(|e| {
+                if cfg!(feature = "pjrt") {
+                    eprintln!("note: pjrt backend unavailable ({e}); using analytic size backend");
+                }
+                Box::new(AnalyticBackend)
+            })),
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn build_pjrt(&self) -> Result<Box<dyn SizeBackend>> {
+        Ok(Box::new(crate::runtime::pjrt::PjrtBackend::load(
+            &self.artifact,
+        )?))
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn build_pjrt(&self) -> Result<Box<dyn SizeBackend>> {
+        Err(crate::err!(
+            "backend `pjrt` requires building with `--features pjrt` \
+             (this binary has only the analytic backend; see rust/README.md)"
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::size_model::PAGE_BYTES;
+
+    #[test]
+    fn analytic_backend_matches_free_function() {
+        let page = vec![0x5Au8; PAGE_BYTES];
+        let zero = vec![0u8; PAGE_BYTES];
+        let mut b = AnalyticBackend;
+        let got = b.analyze(&[&page, &zero]).unwrap();
+        assert_eq!(got[0], analyze_page(&page));
+        assert_eq!(got[1], PageSizes::ZERO);
+        assert_eq!(b.name(), "analytic");
+    }
+
+    #[test]
+    fn spec_from_default_config_builds_analytic() {
+        let spec = BackendSpec::from_config(&SimConfig::default());
+        assert_eq!(spec.kind, SizeBackendKind::Analytic);
+        let backend = spec.build().expect("default backend must build");
+        assert_eq!(backend.name(), "analytic");
+    }
+
+    #[test]
+    fn auto_spec_always_builds() {
+        let backend = BackendSpec::auto().build().expect("auto never fails");
+        // Without `make artifacts` (and without the feature) this is
+        // the analytic mirror.
+        assert!(!backend.name().is_empty());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn explicit_pjrt_without_feature_is_an_error() {
+        let mut cfg = SimConfig::default();
+        cfg.set("backend", "pjrt").unwrap();
+        let e = match BackendSpec::from_config(&cfg).build() {
+            Ok(_) => panic!("explicit pjrt must fail without the feature"),
+            Err(e) => e,
+        };
+        assert!(e.to_string().contains("--features pjrt"), "{e}");
+    }
+}

@@ -1,26 +1,56 @@
-//! PJRT runtime: load and execute the AOT-compiled engine model.
+//! Engine runtime: size-backend selection, memoization, and the shared
+//! engine service.
 //!
-//! `make artifacts` runs `python/compile/aot.py`, which lowers the
-//! Layer-2 JAX graph (wrapping the Layer-1 Pallas kernel) to HLO *text*.
-//! This module loads that text with the `xla` crate
-//! (`PjRtClient::cpu() → HloModuleProto::from_text_file → compile →
-//! execute`) so the simulator consumes the exact same computation the
-//! Python tests validated — with Python nowhere on the path.
+//! The compression-engine size model is pluggable (see [`backend`]): the
+//! default [`AnalyticBackend`] is the pure-Rust mirror of the Layer-1
+//! Pallas kernel, and the `pjrt` feature adds a backend that executes
+//! the AOT-compiled HLO artifact (`artifacts/ibex_size.hlo.txt`,
+//! produced by `python/compile/aot.py`) on a PJRT CPU client. Which one
+//! runs is a config key (`backend = analytic|pjrt|auto`), resolved here.
 //!
 //! The simulator calls the engine once per *content class* (workload
 //! pages are drawn from a bounded family of generator classes) and
 //! memoizes, mirroring how a real device consults its compression engine
 //! on writes, not on every read.
 
+pub mod backend;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::{mpsc, Mutex, OnceLock};
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::compress::size_model::{PageSizes, SizeModel};
+use crate::config::SimConfig;
+use crate::err;
+use crate::error::{Context, Result};
 
-use crate::compress::size_model::{PageSizes, SizeModel, PAGE_BYTES};
+pub use backend::{AnalyticBackend, BackendSpec, SizeBackend};
+#[cfg(feature = "pjrt")]
+pub use pjrt::{PjrtBackend, PjrtSizeModel};
 
 /// Default artifact location relative to the repo root.
 pub const DEFAULT_ARTIFACT: &str = "artifacts/ibex_size.hlo.txt";
+
+/// Default artifact path resolved against the current directory first
+/// and the repo checkout (parent of this crate's manifest) second, so
+/// both repo-root invocations and `cargo test` (cwd = `rust/`) find the
+/// output of `make artifacts`.
+pub fn default_artifact() -> PathBuf {
+    let cwd_rel = PathBuf::from(DEFAULT_ARTIFACT);
+    if cwd_rel.exists() {
+        return cwd_rel;
+    }
+    let repo_rel = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join(DEFAULT_ARTIFACT);
+    if repo_rel.exists() {
+        repo_rel
+    } else {
+        cwd_rel
+    }
+}
 
 /// Metadata sidecar written by `aot.py`.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -38,9 +68,9 @@ impl ArtifactMeta {
             let pat = format!("\"{key}\"");
             let at = text
                 .find(&pat)
-                .ok_or_else(|| anyhow!("meta missing {key}"))?;
+                .ok_or_else(|| err!("meta missing {key}"))?;
             let rest = &text[at + pat.len()..];
-            let colon = rest.find(':').ok_or_else(|| anyhow!("bad meta"))?;
+            let colon = rest.find(':').ok_or_else(|| err!("bad meta"))?;
             let num: String = rest[colon + 1..]
                 .trim_start()
                 .chars()
@@ -62,7 +92,8 @@ impl ArtifactMeta {
     }
 }
 
-/// Sidecar path for a given artifact path.
+/// Sidecar path for a given artifact path: `.hlo.txt → .meta.json`; a
+/// path without the suffix gets `.meta.json` appended whole.
 pub fn meta_path(artifact: &Path) -> PathBuf {
     let s = artifact.to_string_lossy();
     let stem = s
@@ -72,123 +103,12 @@ pub fn meta_path(artifact: &Path) -> PathBuf {
     PathBuf::from(format!("{stem}.meta.json"))
 }
 
-/// The compiled engine model on the PJRT CPU client.
-pub struct PjrtSizeModel {
-    _client: xla::PjRtClient,
-    exe: xla::PjRtLoadedExecutable,
-    meta: ArtifactMeta,
-    /// Executed PJRT batches (for perf accounting).
-    pub batches_run: u64,
-}
-
-impl PjrtSizeModel {
-    /// Load + compile the artifact. Fails cleanly if `make artifacts`
-    /// has not run.
-    pub fn load(artifact: &Path) -> Result<Self> {
-        if !artifact.exists() {
-            bail!(
-                "artifact {} not found — run `make artifacts` first",
-                artifact.display()
-            );
-        }
-        let meta = ArtifactMeta::load(&meta_path(artifact))?;
-        if meta.page_bytes != PAGE_BYTES || meta.outputs_per_page != 5 {
-            bail!("artifact meta mismatch: {meta:?}");
-        }
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        let proto = xla::HloModuleProto::from_text_file(
-            artifact
-                .to_str()
-                .ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
-        )
-        .map_err(|e| anyhow!("parse HLO text: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile HLO: {e:?}"))?;
-        Ok(Self {
-            _client: client,
-            exe,
-            meta,
-            batches_run: 0,
-        })
-    }
-
-    pub fn load_default() -> Result<Self> {
-        Self::load(Path::new(DEFAULT_ARTIFACT))
-    }
-
-    pub fn batch(&self) -> usize {
-        self.meta.batch
-    }
-
-    /// Run exactly one padded batch.
-    fn run_batch(&mut self, pages: &[&[u8]]) -> Result<Vec<PageSizes>> {
-        let b = self.meta.batch;
-        assert!(pages.len() <= b);
-        let mut buf = vec![0f32; b * PAGE_BYTES];
-        for (i, page) in pages.iter().enumerate() {
-            assert_eq!(page.len(), PAGE_BYTES, "size model operates on 4 KB pages");
-            let dst = &mut buf[i * PAGE_BYTES..(i + 1) * PAGE_BYTES];
-            for (d, &s) in dst.iter_mut().zip(page.iter()) {
-                *d = s as f32;
-            }
-        }
-        let lit = xla::Literal::vec1(&buf)
-            .reshape(&[b as i64, PAGE_BYTES as i64])
-            .map_err(|e| anyhow!("reshape: {e:?}"))?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&[lit])
-            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = result
-            .to_tuple1()
-            .map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
-        let v = out
-            .to_vec::<i32>()
-            .map_err(|e| anyhow!("to_vec<i32>: {e:?}"))?;
-        if v.len() != b * 5 {
-            bail!("unexpected output length {}", v.len());
-        }
-        self.batches_run += 1;
-        Ok(pages
-            .iter()
-            .enumerate()
-            .map(|(i, _)| PageSizes {
-                blocks: [
-                    v[i * 5] as u32,
-                    v[i * 5 + 1] as u32,
-                    v[i * 5 + 2] as u32,
-                    v[i * 5 + 3] as u32,
-                ],
-                page: v[i * 5 + 4] as u32,
-            })
-            .collect())
-    }
-}
-
-impl SizeModel for PjrtSizeModel {
-    fn analyze(&mut self, pages: &[&[u8]]) -> Vec<PageSizes> {
-        let mut out = Vec::with_capacity(pages.len());
-        for chunk in pages.chunks(self.meta.batch) {
-            out.extend(
-                self.run_batch(chunk)
-                    .expect("PJRT execution failed on a validated artifact"),
-            );
-        }
-        out
-    }
-}
-
 /// Memoizing wrapper: one engine evaluation per distinct page content.
 ///
 /// Keyed by FNV-1a over the page bytes; the workload layer produces
-/// pages from a bounded class family, so the table stays small and PJRT
-/// cost is off the simulated hot path (exactly like a real device, which
-/// compresses on write, not on every lookup).
+/// pages from a bounded class family, so the table stays small and
+/// backend cost is off the simulated hot path (exactly like a real
+/// device, which compresses on write, not on every lookup).
 pub struct CachedSizeModel<M: SizeModel> {
     inner: M,
     memo: HashMap<u64, PageSizes>,
@@ -232,116 +152,174 @@ impl<M: SizeModel> SizeModel for CachedSizeModel<M> {
                 miss_keys.push(k);
             }
         }
-        if !miss_pages.is_empty() {
-            self.misses += miss_pages.len() as u64;
+        let fresh = miss_pages.len();
+        if fresh > 0 {
+            self.misses += fresh as u64;
             let sizes = self.inner.analyze(&miss_pages);
             for (k, s) in miss_keys.into_iter().zip(sizes) {
                 self.memo.insert(k, s);
             }
         }
-        keys.iter()
-            .map(|k| {
-                let s = self.memo[k];
-                self.hits += 1;
-                s
-            })
-            .collect()
+        // Every lookup that wasn't a fresh backend call is a memo hit
+        // (including batch-internal duplicates), so hits + misses equals
+        // total lookups.
+        self.hits += (keys.len() - fresh) as u64;
+        keys.iter().map(|k| self.memo[k]).collect()
     }
 }
 
-/// Load the PJRT model if the artifact exists, else fall back to the
-/// analytic mirror (bit-identical semantics). Returns the model plus a
-/// flag for logging.
-pub enum EngineModel {
-    Pjrt(CachedSizeModel<PjrtSizeModel>),
-    Analytic(CachedSizeModel<crate::compress::AnalyticSizeModel>),
+/// Adapter: a boxed backend as an infallible [`SizeModel`]. Backends
+/// validate their inputs at construction time (artifact checks), so a
+/// runtime failure is a bug, not an expected condition.
+struct BoxedBackend(Box<dyn SizeBackend>);
+
+impl SizeModel for BoxedBackend {
+    fn analyze(&mut self, pages: &[&[u8]]) -> Vec<PageSizes> {
+        self.0
+            .analyze(pages)
+            .expect("size backend failed after successful construction")
+    }
+}
+
+/// A memoized size engine built from a [`BackendSpec`] — the unit the
+/// simulator, benches and examples consume.
+pub struct EngineModel {
+    name: &'static str,
+    cached: CachedSizeModel<BoxedBackend>,
 }
 
 impl EngineModel {
-    pub fn auto() -> Self {
-        Self::auto_from(Path::new(DEFAULT_ARTIFACT))
+    /// Build the backend a spec names (fails for an explicit `pjrt`
+    /// request the build can't satisfy).
+    pub fn from_spec(spec: &BackendSpec) -> Result<Self> {
+        let inner = spec.build()?;
+        Ok(Self {
+            name: inner.name(),
+            cached: CachedSizeModel::new(BoxedBackend(inner)),
+        })
     }
 
-    pub fn auto_from(artifact: &Path) -> Self {
-        match PjrtSizeModel::load(artifact) {
-            Ok(m) => EngineModel::Pjrt(CachedSizeModel::new(m)),
-            Err(e) => {
-                eprintln!(
-                    "note: PJRT artifact unavailable ({e}); using analytic size model"
-                );
-                EngineModel::Analytic(CachedSizeModel::new(
-                    crate::compress::AnalyticSizeModel,
-                ))
-            }
-        }
+    /// Build the backend a config selects.
+    pub fn from_config(cfg: &SimConfig) -> Result<Self> {
+        Self::from_spec(&BackendSpec::from_config(cfg))
+    }
+
+    /// Auto-detect: PJRT when compiled in and the default artifact
+    /// loads, analytic mirror otherwise. Never fails.
+    pub fn auto() -> Self {
+        Self::from_spec(&BackendSpec::auto()).expect("auto backend construction cannot fail")
+    }
+
+    /// Short backend name ("analytic", "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        self.name
     }
 
     pub fn is_pjrt(&self) -> bool {
-        matches!(self, EngineModel::Pjrt(_))
+        self.name == "pjrt"
+    }
+
+    /// The backend's preferred batch size.
+    pub fn batch_hint(&self) -> usize {
+        self.cached.inner().0.batch_hint()
+    }
+
+    /// Memo-table counters: `(hits, misses)`.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.cached.hits, self.cached.misses)
     }
 }
 
 impl SizeModel for EngineModel {
     fn analyze(&mut self, pages: &[&[u8]]) -> Vec<PageSizes> {
-        match self {
-            EngineModel::Pjrt(m) => m.analyze(pages),
-            EngineModel::Analytic(m) => m.analyze(pages),
-        }
+        self.cached.analyze(pages)
     }
 }
 
-/// Process-wide shared engine service.
+/// Process-wide shared engine service, one per [`BackendSpec`].
 ///
-/// The `xla` crate's PJRT handles are `!Send` (Rc + raw pointers), and
-/// creating a client per simulation job is slow (recompilation) and
-/// memory-hungry (XLA runtime arenas) — quick Fig-9 sweeps were OOM-
-/// killed by 70 concurrent clients. Instead ONE dedicated thread owns
-/// the `EngineModel` (PJRT when the artifact exists) plus its memo
-/// table; worker threads talk to it over a channel. The workload
-/// oracles memoize per content class, so this path is off the hot loop.
+/// PJRT handles are `!Send` (Rc + raw pointers), and creating a client
+/// per simulation job is slow (recompilation) and memory-hungry (XLA
+/// runtime arenas) — quick Fig-9 sweeps were OOM-killed by 70 concurrent
+/// clients. Instead ONE dedicated thread owns the [`EngineModel`] plus
+/// its memo table; worker threads talk to it over a channel. The
+/// workload oracles memoize per content class, so this path is off the
+/// hot loop.
 #[derive(Clone)]
 pub struct SharedEngine {
-    tx: std::sync::mpsc::Sender<EngineRequest>,
-    pjrt: bool,
+    tx: mpsc::Sender<EngineRequest>,
+    backend: &'static str,
 }
 
-type EngineRequest = (Vec<Vec<u8>>, std::sync::mpsc::Sender<Vec<PageSizes>>);
+type EngineRequest = (Vec<Vec<u8>>, mpsc::Sender<Vec<PageSizes>>);
+
+fn engine_pool() -> &'static Mutex<HashMap<BackendSpec, SharedEngine>> {
+    static POOL: OnceLock<Mutex<HashMap<BackendSpec, SharedEngine>>> = OnceLock::new();
+    POOL.get_or_init(|| Mutex::new(HashMap::new()))
+}
 
 impl SharedEngine {
-    /// Spawn the engine service thread.
-    pub fn spawn() -> SharedEngine {
-        let (tx, rx) = std::sync::mpsc::channel::<EngineRequest>();
-        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<bool>();
+    /// Spawn a dedicated engine service thread for `spec`. Fails when
+    /// the spec's backend cannot be constructed (e.g. explicit `pjrt`
+    /// without the feature or the artifact).
+    pub fn spawn(spec: BackendSpec) -> Result<SharedEngine> {
+        let (tx, rx) = mpsc::channel::<EngineRequest>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<&'static str>>();
         std::thread::Builder::new()
             .name("ibex-engine".into())
             .spawn(move || {
-                let mut model = EngineModel::auto();
-                let _ = ready_tx.send(model.is_pjrt());
+                // Construct on this thread: the backend may be !Send.
+                let mut model = match EngineModel::from_spec(&spec) {
+                    Ok(m) => m,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let _ = ready_tx.send(Ok(model.backend_name()));
                 while let Ok((pages, reply)) = rx.recv() {
                     let refs: Vec<&[u8]> = pages.iter().map(|p| p.as_slice()).collect();
                     let _ = reply.send(model.analyze(&refs));
                 }
             })
             .expect("spawn engine thread");
-        let pjrt = ready_rx.recv().unwrap_or(false);
-        SharedEngine { tx, pjrt }
+        let backend = ready_rx
+            .recv()
+            .map_err(|_| err!("engine thread exited before reporting readiness"))??;
+        Ok(SharedEngine { tx, backend })
     }
 
-    /// The process-wide instance (loads the default artifact once).
-    pub fn global() -> SharedEngine {
-        static GLOBAL: std::sync::OnceLock<SharedEngine> = std::sync::OnceLock::new();
-        GLOBAL.get_or_init(SharedEngine::spawn).clone()
+    /// The shared engine for a spec (spawned once per process, then
+    /// cloned — requests from all jobs share one memo table).
+    pub fn for_spec(spec: BackendSpec) -> Result<SharedEngine> {
+        let mut pool = engine_pool().lock().expect("engine pool poisoned");
+        if let Some(engine) = pool.get(&spec) {
+            return Ok(engine.clone());
+        }
+        let engine = Self::spawn(spec.clone())?;
+        pool.insert(spec, engine.clone());
+        Ok(engine)
+    }
+
+    /// The shared engine a config selects.
+    pub fn for_config(cfg: &SimConfig) -> Result<SharedEngine> {
+        Self::for_spec(BackendSpec::from_config(cfg))
+    }
+
+    /// Short backend name ("analytic", "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend
     }
 
     pub fn is_pjrt(&self) -> bool {
-        self.pjrt
+        self.backend == "pjrt"
     }
 }
 
 impl SizeModel for SharedEngine {
     fn analyze(&mut self, pages: &[&[u8]]) -> Vec<PageSizes> {
         let owned: Vec<Vec<u8>> = pages.iter().map(|p| p.to_vec()).collect();
-        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        let (reply_tx, reply_rx) = mpsc::channel();
         self.tx
             .send((owned, reply_tx))
             .expect("engine thread alive");
@@ -352,6 +330,7 @@ impl SizeModel for SharedEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::size_model::{analyze_page, PAGE_BYTES};
     use crate::compress::AnalyticSizeModel;
 
     #[test]
@@ -372,10 +351,41 @@ mod tests {
     }
 
     #[test]
+    fn meta_parse_reports_missing_key() {
+        let e = ArtifactMeta::parse(r#"{"batch":64,"page_bytes":4096}"#).unwrap_err();
+        assert!(e.to_string().contains("outputs_per_page"), "{e}");
+    }
+
+    #[test]
+    fn meta_parse_rejects_non_numeric_value() {
+        let e = ArtifactMeta::parse(
+            r#"{"batch":"sixty-four","page_bytes":4096,"outputs_per_page":5}"#,
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("bad meta number"), "{e}");
+        // A negative number is likewise non-numeric for these fields.
+        let e = ArtifactMeta::parse(r#"{"batch":-1,"page_bytes":4096,"outputs_per_page":5}"#)
+            .unwrap_err();
+        assert!(e.to_string().contains("bad meta number"), "{e}");
+    }
+
+    #[test]
     fn meta_path_derivation() {
         assert_eq!(
             meta_path(Path::new("artifacts/ibex_size.hlo.txt")),
             PathBuf::from("artifacts/ibex_size.meta.json")
+        );
+    }
+
+    #[test]
+    fn meta_path_without_hlo_suffix_appends() {
+        assert_eq!(
+            meta_path(Path::new("models/engine.bin")),
+            PathBuf::from("models/engine.bin.meta.json")
+        );
+        assert_eq!(
+            meta_path(Path::new("bare")),
+            PathBuf::from("bare.meta.json")
         );
     }
 
@@ -387,17 +397,40 @@ mod tests {
         let r1 = m.analyze(&[&page_a, &page_b, &page_a]);
         assert_eq!(r1[0], r1[2]);
         assert_eq!(m.misses, 2);
+        assert_eq!(m.hits, 1, "batch-internal duplicate is a hit");
         let _ = m.analyze(&[&page_a]);
         assert_eq!(m.misses, 2, "second lookup must hit the memo");
-        assert_eq!(m.hits, 4);
+        assert_eq!(m.hits, 2);
     }
 
     #[test]
-    fn missing_artifact_fails_cleanly() {
-        let err = match PjrtSizeModel::load(Path::new("/nonexistent/x.hlo.txt")) {
-            Ok(_) => panic!("load must fail for a missing artifact"),
-            Err(e) => e,
-        };
-        assert!(err.to_string().contains("make artifacts"));
+    fn engine_model_from_default_config_is_analytic() {
+        let mut m = EngineModel::from_config(&SimConfig::default()).unwrap();
+        assert_eq!(m.backend_name(), "analytic");
+        assert!(!m.is_pjrt());
+        let page = vec![0x5Au8; PAGE_BYTES];
+        assert_eq!(m.analyze(&[&page])[0], analyze_page(&page));
+        let (hits, misses) = m.cache_stats();
+        assert_eq!(
+            (hits, misses),
+            (0, 1),
+            "a first-time page is a miss, not a hit"
+        );
+    }
+
+    #[test]
+    fn shared_engine_serves_analytic_requests() {
+        let mut cfg = SimConfig::default();
+        cfg.set("backend", "analytic").unwrap();
+        let mut engine = SharedEngine::for_config(&cfg).unwrap();
+        assert_eq!(engine.backend_name(), "analytic");
+        let zero = vec![0u8; PAGE_BYTES];
+        let page = vec![9u8; PAGE_BYTES];
+        let got = engine.analyze(&[&zero, &page]);
+        assert_eq!(got[0], PageSizes::ZERO);
+        assert_eq!(got[1], analyze_page(&page));
+        // Same spec → same pooled engine.
+        let again = SharedEngine::for_config(&cfg).unwrap();
+        assert_eq!(again.backend_name(), "analytic");
     }
 }

@@ -1,0 +1,164 @@
+//! PJRT size backend (feature `pjrt`): load and execute the
+//! AOT-compiled engine model.
+//!
+//! `make artifacts` runs `python/compile/aot.py`, which lowers the
+//! Layer-2 JAX graph (wrapping the Layer-1 Pallas kernel) to HLO *text*.
+//! This module loads that text with the `xla` crate
+//! (`PjRtClient::cpu() → HloModuleProto::from_text_file → compile →
+//! execute`) so the simulator consumes the exact same computation the
+//! Python tests validated — with Python nowhere on the path.
+//!
+//! In the offline build the `xla` dependency is the vendored stub
+//! (`rust/vendor/xla`), which fails at client creation; [`PjrtBackend::load`]
+//! then errors cleanly and `Auto` backend selection falls back to the
+//! analytic mirror.
+
+use std::path::Path;
+
+use crate::compress::size_model::{PageSizes, SizeModel, PAGE_BYTES};
+use crate::error::Result;
+use crate::err;
+use crate::runtime::backend::SizeBackend;
+use crate::runtime::{meta_path, ArtifactMeta};
+
+/// The compiled engine model on the PJRT CPU client.
+pub struct PjrtBackend {
+    _client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    meta: ArtifactMeta,
+    /// Executed PJRT batches (for perf accounting).
+    pub batches_run: u64,
+}
+
+/// Pre-refactor name, kept for the integration suite and benches.
+pub type PjrtSizeModel = PjrtBackend;
+
+impl PjrtBackend {
+    /// Load + compile the artifact. Fails cleanly if `make artifacts`
+    /// has not run (or the `xla` dependency is the vendored stub).
+    pub fn load(artifact: &Path) -> Result<Self> {
+        if !artifact.exists() {
+            return Err(err!(
+                "artifact {} not found — run `make artifacts` first",
+                artifact.display()
+            ));
+        }
+        let meta = ArtifactMeta::load(&meta_path(artifact))?;
+        if meta.page_bytes != PAGE_BYTES || meta.outputs_per_page != 5 {
+            return Err(err!("artifact meta mismatch: {meta:?}"));
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| err!("pjrt cpu client: {e:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            artifact
+                .to_str()
+                .ok_or_else(|| err!("non-utf8 artifact path"))?,
+        )
+        .map_err(|e| err!("parse HLO text: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| err!("compile HLO: {e:?}"))?;
+        Ok(Self {
+            _client: client,
+            exe,
+            meta,
+            batches_run: 0,
+        })
+    }
+
+    pub fn load_default() -> Result<Self> {
+        Self::load(&crate::runtime::default_artifact())
+    }
+
+    pub fn batch(&self) -> usize {
+        self.meta.batch
+    }
+
+    /// Run exactly one padded batch.
+    fn run_batch(&mut self, pages: &[&[u8]]) -> Result<Vec<PageSizes>> {
+        let b = self.meta.batch;
+        assert!(pages.len() <= b);
+        let mut buf = vec![0f32; b * PAGE_BYTES];
+        for (i, page) in pages.iter().enumerate() {
+            assert_eq!(page.len(), PAGE_BYTES, "size model operates on 4 KB pages");
+            let dst = &mut buf[i * PAGE_BYTES..(i + 1) * PAGE_BYTES];
+            for (d, &s) in dst.iter_mut().zip(page.iter()) {
+                *d = s as f32;
+            }
+        }
+        let lit = xla::Literal::vec1(&buf)
+            .reshape(&[b as i64, PAGE_BYTES as i64])
+            .map_err(|e| err!("reshape: {e:?}"))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| err!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| err!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result
+            .to_tuple1()
+            .map_err(|e| err!("to_tuple1: {e:?}"))?;
+        let v = out
+            .to_vec::<i32>()
+            .map_err(|e| err!("to_vec<i32>: {e:?}"))?;
+        if v.len() != b * 5 {
+            return Err(err!("unexpected output length {}", v.len()));
+        }
+        self.batches_run += 1;
+        Ok(pages
+            .iter()
+            .enumerate()
+            .map(|(i, _)| PageSizes {
+                blocks: [
+                    v[i * 5] as u32,
+                    v[i * 5 + 1] as u32,
+                    v[i * 5 + 2] as u32,
+                    v[i * 5 + 3] as u32,
+                ],
+                page: v[i * 5 + 4] as u32,
+            })
+            .collect())
+    }
+}
+
+impl SizeBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn analyze(&mut self, pages: &[&[u8]]) -> Result<Vec<PageSizes>> {
+        let mut out = Vec::with_capacity(pages.len());
+        for chunk in pages.chunks(self.meta.batch) {
+            out.extend(self.run_batch(chunk)?);
+        }
+        Ok(out)
+    }
+
+    fn batch_hint(&self) -> usize {
+        self.meta.batch
+    }
+}
+
+/// Infallible [`SizeModel`] view for call sites that validated the
+/// artifact at load time (benches, the integration suite).
+impl SizeModel for PjrtBackend {
+    fn analyze(&mut self, pages: &[&[u8]]) -> Vec<PageSizes> {
+        SizeBackend::analyze(self, pages)
+            .expect("PJRT execution failed on a validated artifact")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifact_fails_cleanly() {
+        let err = match PjrtBackend::load(Path::new("/nonexistent/x.hlo.txt")) {
+            Ok(_) => panic!("load must fail for a missing artifact"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

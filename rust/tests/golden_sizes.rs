@@ -1,0 +1,126 @@
+//! Cross-validation: the pure-Rust analytic backend must reproduce the
+//! Python reference model (`python/compile/kernels/ref.py`) bit-exactly
+//! on the golden corpus checked into `tests/fixtures/`.
+//!
+//! The fixture stores page bytes AND expected sizes, so this test needs
+//! no Python, JAX, or artifacts. Regenerate with
+//! `python3 python/tests/gen_golden.py` when the size model changes.
+
+use ibex::compress::size_model::{analyze_page, PageSizes, SizeModel, PAGE_BYTES};
+use ibex::config::SimConfig;
+use ibex::runtime::backend::{AnalyticBackend, SizeBackend};
+use ibex::runtime::EngineModel;
+
+struct Golden {
+    name: String,
+    page: Vec<u8>,
+    expect: PageSizes,
+}
+
+fn fixture_path() -> &'static str {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/golden_sizes.tsv")
+}
+
+fn hex_decode(s: &str) -> Vec<u8> {
+    assert!(s.len() % 2 == 0, "odd hex length");
+    let nibble = |c: u8| -> u8 {
+        match c {
+            b'0'..=b'9' => c - b'0',
+            b'a'..=b'f' => c - b'a' + 10,
+            b'A'..=b'F' => c - b'A' + 10,
+            _ => panic!("bad hex byte {c:?}"),
+        }
+    };
+    s.as_bytes()
+        .chunks(2)
+        .map(|p| (nibble(p[0]) << 4) | nibble(p[1]))
+        .collect()
+}
+
+fn load_corpus() -> Vec<Golden> {
+    let text = std::fs::read_to_string(fixture_path())
+        .unwrap_or_else(|e| panic!("reading {}: {e}", fixture_path()));
+    let mut out = Vec::new();
+    for line in text.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let cols: Vec<&str> = line.split('\t').collect();
+        assert_eq!(cols.len(), 4, "bad fixture line: {line:.60}");
+        let page = hex_decode(cols[1]);
+        assert_eq!(page.len(), PAGE_BYTES, "{}: bad page length", cols[0]);
+        let blocks: Vec<u32> = cols[2]
+            .split(',')
+            .map(|v| v.parse().expect("block size"))
+            .collect();
+        assert_eq!(blocks.len(), 4, "{}: need 4 block sizes", cols[0]);
+        out.push(Golden {
+            name: cols[0].to_string(),
+            page,
+            expect: PageSizes {
+                blocks: [blocks[0], blocks[1], blocks[2], blocks[3]],
+                page: cols[3].parse().expect("page size"),
+            },
+        });
+    }
+    out
+}
+
+#[test]
+fn corpus_is_substantial_and_covers_edges() {
+    let corpus = load_corpus();
+    assert!(corpus.len() >= 10, "golden corpus shrank to {}", corpus.len());
+    assert!(corpus.iter().any(|g| g.expect == PageSizes::ZERO));
+    assert!(corpus.iter().any(|g| g.expect.blocks == [1156; 4]));
+    assert!(corpus
+        .iter()
+        .any(|g| g.expect.blocks.contains(&0) && g.expect.page > 0));
+}
+
+#[test]
+fn analytic_backend_matches_python_reference() {
+    let corpus = load_corpus();
+    let refs: Vec<&[u8]> = corpus.iter().map(|g| g.page.as_slice()).collect();
+    let mut backend = AnalyticBackend;
+    let got = backend.analyze(&refs).expect("analytic backend is infallible");
+    for (g, s) in corpus.iter().zip(&got) {
+        assert_eq!(*s, g.expect, "{}: analytic backend diverged from ref.py", g.name);
+        assert_eq!(analyze_page(&g.page), g.expect, "{}: free function diverged", g.name);
+    }
+}
+
+#[test]
+fn default_config_engine_matches_python_reference() {
+    // The full selection path: SimConfig → BackendSpec → EngineModel.
+    let mut engine = EngineModel::from_config(&SimConfig::default()).unwrap();
+    assert_eq!(engine.backend_name(), "analytic");
+    for g in load_corpus() {
+        assert_eq!(
+            engine.analyze(&[&g.page])[0],
+            g.expect,
+            "{}: engine model diverged from ref.py",
+            g.name
+        );
+    }
+}
+
+/// With the `pjrt` feature and artifacts present, the PJRT backend must
+/// agree with the same golden corpus; self-skips otherwise.
+#[cfg(feature = "pjrt")]
+#[test]
+fn pjrt_backend_matches_golden_corpus_when_available() {
+    use ibex::runtime::PjrtBackend;
+    let mut backend = match PjrtBackend::load_default() {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            return;
+        }
+    };
+    let corpus = load_corpus();
+    let refs: Vec<&[u8]> = corpus.iter().map(|g| g.page.as_slice()).collect();
+    let got = SizeBackend::analyze(&mut backend, &refs).expect("validated artifact");
+    for (g, s) in corpus.iter().zip(&got) {
+        assert_eq!(*s, g.expect, "{}: PJRT diverged from golden corpus", g.name);
+    }
+}

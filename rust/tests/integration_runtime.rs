@@ -1,78 +1,176 @@
-//! PJRT integration: the AOT-compiled artifact (Pallas kernel → HLO
-//! text → `xla` crate) must agree **bit-exactly** with the Rust
-//! analytic mirror on a randomized corpus.
-//!
-//! Requires `make artifacts`; tests self-skip with a message otherwise
-//! (the Makefile `test` target builds artifacts first).
+//! Runtime integration: backend selection from config, the shared
+//! engine service, and memoization — all on the default analytic
+//! backend (no artifacts, no XLA). With `--features pjrt` and
+//! `make artifacts`, the PJRT path must additionally agree
+//! **bit-exactly** with the Rust analytic mirror on a randomized corpus.
 
 use ibex::compress::size_model::{analyze_page, SizeModel, PAGE_BYTES};
+use ibex::config::{SimConfig, SizeBackendKind};
 use ibex::prop::gen;
 use ibex::rng::Pcg64;
-use ibex::runtime::{CachedSizeModel, PjrtSizeModel};
-
-fn load() -> Option<PjrtSizeModel> {
-    match PjrtSizeModel::load_default() {
-        Ok(m) => Some(m),
-        Err(e) => {
-            eprintln!("SKIP (run `make artifacts`): {e}");
-            None
-        }
-    }
-}
+use ibex::runtime::backend::BackendSpec;
+use ibex::runtime::{EngineModel, SharedEngine};
 
 #[test]
-fn pjrt_matches_analytic_on_structured_corpus() {
-    let Some(mut m) = load() else { return };
-    let mut rng = Pcg64::new(777, 1);
-    let pages: Vec<Vec<u8>> = (0..96).map(|_| gen::page(&mut rng)).collect();
+fn default_build_selects_analytic_backend() {
+    let cfg = SimConfig::table1();
+    assert_eq!(cfg.backend, SizeBackendKind::Analytic);
+    let spec = BackendSpec::from_config(&cfg);
+    let mut engine = EngineModel::from_spec(&spec).expect("analytic backend always builds");
+    assert_eq!(engine.backend_name(), "analytic");
+
+    let mut rng = Pcg64::new(101, 1);
+    let pages: Vec<Vec<u8>> = (0..32).map(|_| gen::page(&mut rng)).collect();
     let refs: Vec<&[u8]> = pages.iter().map(|p| p.as_slice()).collect();
-    let got = m.analyze(&refs);
+    let got = engine.analyze(&refs);
     for (i, page) in pages.iter().enumerate() {
-        let want = analyze_page(page);
-        assert_eq!(got[i], want, "page {i} diverged (PJRT vs analytic)");
+        assert_eq!(got[i], analyze_page(page), "page {i} diverged");
     }
 }
 
 #[test]
-fn pjrt_handles_edge_pages() {
-    let Some(mut m) = load() else { return };
-    let zero = vec![0u8; PAGE_BYTES];
-    let ff = vec![0xFFu8; PAGE_BYTES];
-    let mut one_bit = vec![0u8; PAGE_BYTES];
-    one_bit[4095] = 1;
-    let refs: Vec<&[u8]> = vec![&zero, &ff, &one_bit];
-    let got = m.analyze(&refs);
-    assert_eq!(got[0], analyze_page(&zero));
-    assert_eq!(got[1], analyze_page(&ff));
-    assert_eq!(got[2], analyze_page(&one_bit));
-    assert_eq!(got[0].page, 0, "zero page must be free");
-    assert!(got[2].page > 0, "one nonzero byte ⇒ nonzero page");
+fn engine_model_memoizes_repeated_content() {
+    let mut engine = EngineModel::from_config(&SimConfig::table1()).unwrap();
+    let page = vec![0x42u8; PAGE_BYTES];
+    let a = engine.analyze(&[&page, &page]);
+    assert_eq!(a[0], a[1]);
+    let _ = engine.analyze(&[&page]);
+    let (hits, misses) = engine.cache_stats();
+    assert_eq!(misses, 1, "one distinct page content ⇒ one backend call");
+    assert_eq!(hits, 2, "hits + misses == total lookups");
 }
 
 #[test]
-fn pjrt_partial_batches_pad_correctly() {
-    let Some(m) = load() else { return };
-    let batch = m.batch();
-    let mut cached = CachedSizeModel::new(m);
-    let mut rng = Pcg64::new(778, 2);
-    // Sizes that do not divide the batch: 1, batch-1, batch+3.
-    for n in [1usize, batch - 1, batch + 3] {
-        let pages: Vec<Vec<u8>> = (0..n).map(|_| gen::page(&mut rng)).collect();
-        let refs: Vec<&[u8]> = pages.iter().map(|p| p.as_slice()).collect();
-        let got = cached.analyze(&refs);
-        assert_eq!(got.len(), n);
-        for (i, page) in pages.iter().enumerate() {
-            assert_eq!(got[i], analyze_page(page), "n={n} page {i}");
+fn shared_engine_pools_by_spec_and_serves_jobs() {
+    let mut cfg = SimConfig::test_small();
+    cfg.set("backend", "analytic").unwrap();
+    let mut engine = SharedEngine::for_config(&cfg).expect("analytic engine");
+    assert_eq!(engine.backend_name(), "analytic");
+    assert!(!engine.is_pjrt());
+
+    let mut rng = Pcg64::new(102, 2);
+    let pages: Vec<Vec<u8>> = (0..8).map(|_| gen::page(&mut rng)).collect();
+    let refs: Vec<&[u8]> = pages.iter().map(|p| p.as_slice()).collect();
+    let got = engine.analyze(&refs);
+    assert_eq!(got.len(), refs.len());
+    for (i, page) in pages.iter().enumerate() {
+        assert_eq!(got[i], analyze_page(page), "page {i} diverged via service");
+    }
+
+    // A second lookup with the same spec reuses the pooled engine, and
+    // clones of it serve concurrent callers.
+    let clone = SharedEngine::for_config(&cfg).unwrap();
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let mut e = clone.clone();
+            std::thread::spawn(move || {
+                let page = vec![t as u8 + 1; PAGE_BYTES];
+                (e.analyze(&[&page])[0], analyze_page(&page))
+            })
+        })
+        .collect();
+    for h in handles {
+        let (got, want) = h.join().unwrap();
+        assert_eq!(got, want);
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn explicit_pjrt_backend_fails_cleanly_without_feature() {
+    let mut cfg = SimConfig::test_small();
+    cfg.set("backend", "pjrt").unwrap();
+    let e = match SharedEngine::for_config(&cfg) {
+        Ok(_) => panic!("explicit pjrt must fail without the feature"),
+        Err(e) => e,
+    };
+    assert!(e.to_string().contains("--features pjrt"), "{e}");
+}
+
+#[test]
+fn auto_backend_never_fails_to_build() {
+    let mut cfg = SimConfig::test_small();
+    cfg.set("backend", "auto").unwrap();
+    // Without artifacts (or without the feature) this resolves to the
+    // analytic mirror rather than erroring.
+    let mut engine = SharedEngine::for_config(&cfg).expect("auto must fall back");
+    let zero = vec![0u8; PAGE_BYTES];
+    assert_eq!(engine.analyze(&[&zero])[0].page, 0);
+}
+
+// ---------------------------------------------------------------------
+// PJRT ↔ analytic equivalence (requires `--features pjrt` + artifacts;
+// tests self-skip with a message otherwise).
+// ---------------------------------------------------------------------
+#[cfg(feature = "pjrt")]
+mod pjrt_equivalence {
+    use super::*;
+    use ibex::runtime::{CachedSizeModel, PjrtSizeModel};
+
+    fn load() -> Option<PjrtSizeModel> {
+        match PjrtSizeModel::load_default() {
+            Ok(m) => Some(m),
+            Err(e) => {
+                eprintln!("SKIP (run `make artifacts`): {e}");
+                None
+            }
         }
     }
-}
 
-#[test]
-fn pjrt_deterministic_across_invocations() {
-    let Some(mut m) = load() else { return };
-    let mut rng = Pcg64::new(779, 3);
-    let page = gen::page(&mut rng);
-    let a = m.analyze(&[&page]);
-    let b = m.analyze(&[&page]);
-    assert_eq!(a, b);
+    #[test]
+    fn pjrt_matches_analytic_on_structured_corpus() {
+        let Some(mut m) = load() else { return };
+        let mut rng = Pcg64::new(777, 1);
+        let pages: Vec<Vec<u8>> = (0..96).map(|_| gen::page(&mut rng)).collect();
+        let refs: Vec<&[u8]> = pages.iter().map(|p| p.as_slice()).collect();
+        let got = SizeModel::analyze(&mut m, &refs);
+        for (i, page) in pages.iter().enumerate() {
+            let want = analyze_page(page);
+            assert_eq!(got[i], want, "page {i} diverged (PJRT vs analytic)");
+        }
+    }
+
+    #[test]
+    fn pjrt_handles_edge_pages() {
+        let Some(mut m) = load() else { return };
+        let zero = vec![0u8; PAGE_BYTES];
+        let ff = vec![0xFFu8; PAGE_BYTES];
+        let mut one_bit = vec![0u8; PAGE_BYTES];
+        one_bit[4095] = 1;
+        let refs: Vec<&[u8]> = vec![&zero, &ff, &one_bit];
+        let got = SizeModel::analyze(&mut m, &refs);
+        assert_eq!(got[0], analyze_page(&zero));
+        assert_eq!(got[1], analyze_page(&ff));
+        assert_eq!(got[2], analyze_page(&one_bit));
+        assert_eq!(got[0].page, 0, "zero page must be free");
+        assert!(got[2].page > 0, "one nonzero byte ⇒ nonzero page");
+    }
+
+    #[test]
+    fn pjrt_partial_batches_pad_correctly() {
+        let Some(m) = load() else { return };
+        let batch = m.batch();
+        let mut cached = CachedSizeModel::new(m);
+        let mut rng = Pcg64::new(778, 2);
+        // Sizes that do not divide the batch: 1, batch-1, batch+3.
+        for n in [1usize, batch - 1, batch + 3] {
+            let pages: Vec<Vec<u8>> = (0..n).map(|_| gen::page(&mut rng)).collect();
+            let refs: Vec<&[u8]> = pages.iter().map(|p| p.as_slice()).collect();
+            let got = cached.analyze(&refs);
+            assert_eq!(got.len(), n);
+            for (i, page) in pages.iter().enumerate() {
+                assert_eq!(got[i], analyze_page(page), "n={n} page {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn pjrt_deterministic_across_invocations() {
+        let Some(mut m) = load() else { return };
+        let mut rng = Pcg64::new(779, 3);
+        let page = gen::page(&mut rng);
+        let a = SizeModel::analyze(&mut m, &[&page]);
+        let b = SizeModel::analyze(&mut m, &[&page]);
+        assert_eq!(a, b);
+    }
 }

@@ -1,5 +1,10 @@
 //! Randomized property tests over the device invariants (offline
 //! substitute for proptest — see `ibex::prop`).
+//!
+//! Every property here runs under the **default analytic backend**: no
+//! artifact files, XLA, or Python are required on disk. Properties that
+//! need the AOT artifact belong in `integration_runtime.rs` behind the
+//! `pjrt` feature, not here.
 
 use ibex::compress::size_model::analyze_page;
 use ibex::compress::{lz, PageSizes};
@@ -20,6 +25,22 @@ fn prop_lz_roundtrip_on_structured_pages() {
         let c = lz::compress(&page);
         let d = lz::decompress(&c, page.len()).expect("decompress");
         assert_eq!(d, page);
+    });
+}
+
+#[test]
+fn prop_backend_selection_matches_free_function() {
+    // The configured backend (default: analytic) must agree with the
+    // scalar reference on arbitrary structured pages — the end-to-end
+    // config → spec → backend path, not just `analyze_page`.
+    use ibex::runtime::backend::{BackendSpec, SizeBackend};
+    let mut backend = BackendSpec::from_config(&SimConfig::test_small())
+        .build()
+        .expect("default backend builds with no artifacts on disk");
+    forall("backend matches reference", |rng, _| {
+        let page = gen::page(rng);
+        let got = backend.analyze(&[&page]).expect("analytic is infallible");
+        assert_eq!(got[0], analyze_page(&page));
     });
 }
 

@@ -1,0 +1,126 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The ibex `pjrt` feature compiles against the exact API surface it
+//! needs from the real `xla` crate (PJRT CPU client, HLO-text loading,
+//! executable compilation and execution, literal conversion). This stub
+//! provides that surface so `cargo build --features pjrt` succeeds with
+//! no XLA toolchain installed; every entry point that would touch a real
+//! runtime returns [`Error`] at the first call (`PjRtClient::cpu`), and
+//! ibex falls back to its analytic size backend.
+//!
+//! To execute real AOT artifacts, edit the `xla` entry in
+//! `rust/Cargo.toml` to point at a real PJRT binding (git/path source);
+//! the call sites in `ibex::runtime::pjrt` were written against that
+//! crate.
+
+use std::fmt;
+
+/// Error produced by every stubbed runtime entry point.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias matching the real crate's fallible API.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: vendored `xla` stub — no real XLA/PJRT runtime is linked \
+         (see rust/README.md, section \"The pjrt feature\")"
+    ))
+}
+
+/// PJRT client handle (stub).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// The real binding constructs a CPU PJRT client; the stub fails
+    /// here, which is the earliest point on the load path.
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Host literal (stub).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_values: &[T]) -> Self {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable("Literal::reshape"))
+    }
+
+    // By-value `to_` matches the real binding's signature.
+    #[allow(clippy::wrong_self_convention)]
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_at_client_creation() {
+        let err = match PjRtClient::cpu() {
+            Ok(_) => panic!("stub must not succeed"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("stub"));
+    }
+}
