@@ -1,16 +1,21 @@
 //! Hand-rolled CLI (no `clap` in the offline vendor set).
 //!
 //! ```text
-//! ibex run  --workload pr --scheme ibex [key=value ...]
-//! ibex sweep --workloads pr,cc --schemes ibex,tmcc [key=value ...]
+//! ibex run    --workload pr --scheme ibex [key=value ...]
+//! ibex run    --mix pr:2,mcf:2 --scheme ibex
+//! ibex run    --trace run.trace
+//! ibex sweep  --workloads pr,cc --schemes ibex,tmcc [key=value ...]
+//! ibex record --workload pr --out run.trace [key=value ...]
 //! ibex config-dump [key=value ...]
 //! ibex list
 //! ```
 
+use std::path::Path;
+
 use crate::config::SimConfig;
 use crate::coordinator::{run_many, run_one, Job};
 use crate::stats::Table;
-use crate::workload;
+use crate::workload::{self, mix::Mix, trace};
 
 /// Parsed command line.
 #[derive(Clone, Debug)]
@@ -20,6 +25,12 @@ pub struct Cli {
     pub schemes: Vec<String>,
     pub config_file: Option<String>,
     pub overrides: Vec<(String, String)>,
+    /// `--mix pr:2,mcf:2` — heterogeneous multi-programmed tenants.
+    pub mix: Option<String>,
+    /// `--trace FILE` — replay a recorded request trace.
+    pub trace: Option<String>,
+    /// `--out FILE` — where `record` writes its trace.
+    pub out: Option<String>,
 }
 
 impl Cli {
@@ -30,6 +41,9 @@ impl Cli {
             schemes: vec!["ibex".into()],
             config_file: None,
             overrides: Vec::new(),
+            mix: None,
+            trace: None,
+            out: None,
         };
         let mut it = args.iter().skip(1);
         while let Some(arg) = it.next() {
@@ -54,6 +68,9 @@ impl Cli {
                         .collect();
                 }
                 "--config" | "-c" => cli.config_file = Some(take(&mut it, arg)?),
+                "--mix" | "-m" => cli.mix = Some(take(&mut it, arg)?),
+                "--trace" | "-t" => cli.trace = Some(take(&mut it, arg)?),
+                "--out" | "-o" => cli.out = Some(take(&mut it, arg)?),
                 _ if arg.contains('=') => {
                     let (k, v) = arg.split_once('=').unwrap();
                     cli.overrides.push((k.to_string(), v.to_string()));
@@ -64,7 +81,7 @@ impl Cli {
         Ok(cli)
     }
 
-    /// Build the base config from file + overrides.
+    /// Build the base config from file + overrides + composition flags.
     pub fn config(&self) -> Result<SimConfig, String> {
         let mut cfg = SimConfig::table1();
         if let Some(path) = &self.config_file {
@@ -72,6 +89,12 @@ impl Cli {
         }
         for (k, v) in &self.overrides {
             cfg.set(k, v)?;
+        }
+        if let Some(m) = &self.mix {
+            cfg.set("mix", m)?;
+        }
+        if let Some(t) = &self.trace {
+            cfg.set("trace", t)?;
         }
         Ok(cfg)
     }
@@ -81,8 +104,16 @@ pub const HELP: &str = "\
 ibex — CXL memory-expander compression simulator (IBEX, ICS'26)
 
 USAGE:
-  ibex run   [--workload W] [--scheme S] [--config FILE] [key=value ...]
-  ibex sweep [--workloads W1,W2,..] [--schemes S1,S2,..] [key=value ...]
+  ibex run    [--workload W] [--scheme S] [--config FILE] [key=value ...]
+  ibex run    --mix W1:N1,W2:N2 [--scheme S]   multi-programmed tenants, one
+                                               core per copy, partitioned OSPN
+                                               ranges, per-tenant result rows
+  ibex run    --trace FILE [--scheme S]        replay a recorded trace
+                                               (bit-deterministic)
+  ibex sweep  [--workloads W1,W2,..] [--schemes S1,S2,..] [key=value ...]
+  ibex record (--workload W | --mix ..) --out FILE [key=value ...]
+                                               dump the synthetic request
+                                               streams to a replayable trace
   ibex config-dump [key=value ...]     print the resolved configuration
   ibex list                            list workloads and schemes
   ibex help
@@ -91,7 +122,8 @@ SCHEMES:   uncompressed ibex tmcc dylect mxt dmc compresso
 BACKENDS:  backend=analytic (default, pure Rust) | pjrt (needs --features pjrt
            and `make artifacts`) | auto; artifact=PATH overrides the HLO path
 KEYS:      see `ibex config-dump` (e.g. promoted_mb=512, cxl.round_trip_ns=70,
-           ibex.shadow=true, instructions=20000000, footprint_scale=0.0625)
+           ibex.shadow=true, instructions=20000000, footprint_scale=0.0625,
+           mix=pr:2,mcf:2, trace=run.trace)
 ";
 
 /// Entry point used by `main.rs`. Returns the process exit code.
@@ -129,8 +161,8 @@ pub fn dispatch(args: &[String]) -> i32 {
                 2
             }
         },
-        "run" => run_cmd(&cli, false),
-        "sweep" => run_cmd(&cli, true),
+        "run" | "sweep" => run_cmd(&cli),
+        "record" => record_cmd(&cli),
         other => {
             eprintln!("error: unknown command {other:?}\n{HELP}");
             2
@@ -138,7 +170,7 @@ pub fn dispatch(args: &[String]) -> i32 {
     }
 }
 
-fn run_cmd(cli: &Cli, sweep: bool) -> i32 {
+fn run_cmd(cli: &Cli) -> i32 {
     let base = match cli.config() {
         Ok(c) => c,
         Err(e) => {
@@ -146,22 +178,62 @@ fn run_cmd(cli: &Cli, sweep: bool) -> i32 {
             return 2;
         }
     };
+    let composed = !base.trace.is_empty() || !base.mix.is_empty();
     let mut jobs = Vec::new();
-    for w in &cli.workloads {
-        if workload::by_name(w).is_none() {
-            eprintln!("error: unknown workload {w:?}");
-            return 2;
-        }
+    if composed {
+        // Load the trace once up front: a bad path/file is a clean CLI
+        // error (not a panic inside a worker thread) and all scheme
+        // jobs share one parsed copy.
+        let loaded = if !base.trace.is_empty() {
+            match trace::Trace::load(Path::new(&base.trace)) {
+                Ok(t) => Some(std::sync::Arc::new(t)),
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            }
+        } else {
+            None
+        };
+        // One composition (trace or mix), swept over schemes only.
+        let w = if !base.trace.is_empty() {
+            format!("trace:{}", base.trace)
+        } else {
+            base.mix.clone()
+        };
         for s in &cli.schemes {
             let mut cfg = base.clone();
             if let Err(e) = cfg.set("scheme", s) {
                 eprintln!("error: {e}");
                 return 2;
             }
-            jobs.push(Job::new(format!("{s}"), cfg, w));
+            let mut job = Job::new(format!("{w}/{s}"), cfg, &w);
+            if let Some(t) = &loaded {
+                job = job.with_trace(t.clone());
+            }
+            jobs.push(job);
+        }
+    } else {
+        for w in &cli.workloads {
+            if workload::by_name(w).is_none() {
+                eprintln!("error: unknown workload {w:?}");
+                return 2;
+            }
+            for s in &cli.schemes {
+                let mut cfg = base.clone();
+                if let Err(e) = cfg.set("scheme", s) {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+                // Label carries workload AND scheme so multi-workload
+                // sweeps cannot collide rows.
+                jobs.push(Job::new(format!("{w}/{s}"), cfg, w));
+            }
         }
     }
-    let results = if sweep && jobs.len() > 1 {
+    // Every multi-job invocation goes through the worker pool (results
+    // stay order-preserving and deterministic).
+    let results = if jobs.len() > 1 {
         run_many(jobs)
     } else {
         jobs.iter().map(run_one).collect()
@@ -189,6 +261,90 @@ fn run_cmd(cli: &Cli, sweep: bool) -> i32 {
         ]);
     }
     t.emit();
+
+    // Per-tenant rows whenever a composition was requested (or a run
+    // actually had more than one tenant).
+    if composed || results.iter().any(|r| r.metrics.tenants.len() > 1) {
+        let mut tt = Table::new(
+            "Per-tenant results",
+            &[
+                "workload", "scheme", "tenant", "cores", "insts", "requests", "reads",
+                "writes", "req/kinst", "perf (inst/ns)", "mean lat (ns)", "p99 (ns)",
+            ],
+        );
+        for r in &results {
+            for (ti, tn) in r.metrics.tenants.iter().enumerate() {
+                tt.row(vec![
+                    r.workload.clone(),
+                    r.scheme.clone(),
+                    format!("{}#{ti}", tn.name),
+                    tn.cores.to_string(),
+                    tn.instructions.to_string(),
+                    tn.requests.to_string(),
+                    tn.reads.to_string(),
+                    tn.writes.to_string(),
+                    format!("{:.1}", tn.requests_per_kilo_inst()),
+                    format!("{:.4}", tn.perf()),
+                    format!("{:.0}", tn.mean_latency_ns),
+                    tn.p99_latency_ns.to_string(),
+                ]);
+            }
+        }
+        tt.emit();
+    }
+    0
+}
+
+fn record_cmd(cli: &Cli) -> i32 {
+    let cfg = match cli.config() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let Some(out) = &cli.out else {
+        eprintln!("error: record needs --out FILE");
+        return 2;
+    };
+    if !cfg.trace.is_empty() {
+        eprintln!("error: record synthesizes streams; --trace makes no sense here");
+        return 2;
+    }
+    if cli.mix.is_none() && cli.workloads.len() > 1 {
+        eprintln!(
+            "error: record takes one --workload (or use --mix W1:N1,W2:N2 for a composition)"
+        );
+        return 2;
+    }
+    let mix = if !cfg.mix.is_empty() {
+        match Mix::parse(&cfg.mix) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 2;
+            }
+        }
+    } else {
+        let w = &cli.workloads[0];
+        let Some(spec) = workload::by_name(w) else {
+            eprintln!("error: unknown workload {w:?}");
+            return 2;
+        };
+        Mix::homogeneous(spec, cfg.cores)
+    };
+    let t = trace::record(&cfg, &mix);
+    if let Err(e) = t.save(Path::new(out)) {
+        eprintln!("error: {e}");
+        return 2;
+    }
+    println!(
+        "recorded {} requests across {} cores of {} to {out}",
+        t.requests(),
+        t.per_core.len(),
+        t.mix.canonical(),
+    );
+    println!("replay with: ibex run --trace {out}");
     0
 }
 
@@ -225,6 +381,23 @@ mod tests {
     }
 
     #[test]
+    fn parse_mix_trace_out_flags() {
+        let cli = Cli::parse(&s(&["run", "--mix", "pr:2,mcf:2"])).unwrap();
+        assert_eq!(cli.mix.as_deref(), Some("pr:2,mcf:2"));
+        let cfg = cli.config().unwrap();
+        assert_eq!(cfg.mix, "pr:2,mcf:2");
+
+        let bad = Cli::parse(&s(&["run", "--mix", "nope:2"])).unwrap();
+        assert!(bad.config().is_err(), "mix validated at config time");
+
+        let cli = Cli::parse(&s(&["record", "--workload", "pr", "--out", "x.trace"])).unwrap();
+        assert_eq!(cli.out.as_deref(), Some("x.trace"));
+
+        let cli = Cli::parse(&s(&["run", "--trace", "x.trace"])).unwrap();
+        assert_eq!(cli.config().unwrap().trace, "x.trace");
+    }
+
+    #[test]
     fn rejects_garbage() {
         assert!(Cli::parse(&s(&["run", "--frobnicate"])).is_err());
         let cli = Cli::parse(&s(&["run", "bogus_key=1"])).unwrap();
@@ -236,5 +409,61 @@ mod tests {
         assert_eq!(dispatch(&s(&["help"])), 0);
         assert_eq!(dispatch(&s(&["list"])), 0);
         assert_eq!(dispatch(&s(&["nope"])), 2);
+    }
+
+    #[test]
+    fn record_requires_out() {
+        assert_eq!(dispatch(&s(&["record", "--workload", "parest"])), 2);
+    }
+
+    #[test]
+    fn record_rejects_ambiguous_inputs() {
+        // Multiple workloads without a mix would silently drop all but
+        // the first; conflicting --trace makes no sense for record.
+        assert_eq!(
+            dispatch(&s(&["record", "--workloads", "pr,mcf", "--out", "/tmp/x.trace"])),
+            2
+        );
+        assert_eq!(
+            dispatch(&s(&["record", "--trace", "a.trace", "--out", "/tmp/x.trace"])),
+            2
+        );
+    }
+
+    #[test]
+    fn missing_trace_file_is_a_clean_error() {
+        assert_eq!(
+            dispatch(&s(&["run", "--trace", "/nonexistent/ibex.trace"])),
+            2
+        );
+    }
+
+    #[test]
+    fn record_then_replay_roundtrip_via_cli() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("ibex_cli_record_{}.trace", std::process::id()));
+        let path_s = path.to_string_lossy().into_owned();
+        let code = dispatch(&s(&[
+            "record",
+            "--workload",
+            "parest",
+            "--out",
+            &path_s,
+            "instructions=5000",
+            "warmup_instructions=500",
+            "cores=1",
+            "footprint_scale=0.0001",
+        ]));
+        assert_eq!(code, 0);
+        let code = dispatch(&s(&[
+            "run",
+            "--trace",
+            &path_s,
+            "instructions=5000",
+            "warmup_instructions=500",
+            "footprint_scale=0.0001",
+        ]));
+        assert_eq!(code, 0);
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -218,6 +218,16 @@ pub struct SimConfig {
     pub footprint_scale: f64,
     /// Override read fraction (Fig 16); NaN = workload default.
     pub read_fraction_override: f64,
+    /// Multi-programmed mix (`pr:2,mcf:2`-style, see
+    /// `workload::mix::Mix::parse`). Empty = classic homogeneous run of
+    /// the job's workload on `cores` cores. When set, the core count
+    /// comes from the mix.
+    pub mix: String,
+    /// Replay a recorded request trace from this path instead of
+    /// synthesizing streams (see `workload::trace`). Empty = disabled.
+    /// Takes precedence over `mix`; run geometry comes from the trace
+    /// header.
+    pub trace: String,
 
     pub seed: u64,
 }
@@ -253,6 +263,8 @@ impl Default for SimConfig {
             wr_cntr_threshold: 16,
             footprint_scale: 1.0 / 16.0,
             read_fraction_override: f64::NAN,
+            mix: String::new(),
+            trace: String::new(),
             seed: DEFAULT_SEED,
         }
     }
@@ -322,6 +334,14 @@ impl SimConfig {
             "wr_cntr_threshold" => self.wr_cntr_threshold = p(value, key)?,
             "footprint_scale" => self.footprint_scale = p(value, key)?,
             "read_fraction" => self.read_fraction_override = p(value, key)?,
+            "mix" => {
+                if !value.is_empty() {
+                    // Validate eagerly so bad mixes fail at parse time.
+                    crate::workload::mix::Mix::parse(value)?;
+                }
+                self.mix = value.to_string();
+            }
+            "trace" => self.trace = value.to_string(),
             "seed" => self.seed = p(value, key)?,
             _ => return Err(format!("unknown config key {key:?}")),
         }
@@ -396,6 +416,8 @@ impl SimConfig {
         put("demotion_low_water", self.demotion_low_water.to_string());
         put("wr_cntr_threshold", self.wr_cntr_threshold.to_string());
         put("footprint_scale", format!("{}", self.footprint_scale));
+        put("mix", self.mix.clone());
+        put("trace", self.trace.clone());
         put("seed", self.seed.to_string());
         m
     }
@@ -438,6 +460,22 @@ mod tests {
         let mut c = SimConfig::default();
         assert!(c.set("nope", "1").is_err());
         assert!(c.set("scheme", "nope").is_err());
+    }
+
+    #[test]
+    fn mix_and_trace_keys() {
+        let mut c = SimConfig::default();
+        c.set("mix", "pr:2,mcf:2").unwrap();
+        assert_eq!(c.mix, "pr:2,mcf:2");
+        assert!(c.set("mix", "bogus:2").is_err(), "unknown workload");
+        assert!(c.set("mix", "pr:0").is_err(), "zero cores");
+        c.set("mix", "").unwrap(); // clearing is allowed
+        assert!(c.mix.is_empty());
+        c.set("trace", "out/run.trace").unwrap();
+        assert_eq!(c.trace, "out/run.trace");
+        let d = c.dump();
+        assert_eq!(d["trace"], "out/run.trace");
+        assert_eq!(d["mix"], "");
     }
 
     #[test]

@@ -8,14 +8,16 @@
 
 pub mod report;
 
+use std::path::Path;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread;
 
 use crate::config::SimConfig;
 use crate::expander::build_scheme;
-use crate::host::{HostSim, RunMetrics};
+use crate::host::{HostSim, RunMetrics, TenantMetrics};
 use crate::runtime::SharedEngine;
-use crate::workload::{by_name, WorkloadOracle, WorkloadSpec};
+use crate::workload::{by_name, Mix, MixOracle, RunPlan, Trace};
 
 /// A labeled simulation job.
 #[derive(Clone, Debug)]
@@ -23,6 +25,10 @@ pub struct Job {
     pub label: String,
     pub cfg: SimConfig,
     pub workload: String,
+    /// Pre-loaded trace shared across jobs (e.g. one file replayed
+    /// under several schemes) — avoids re-reading and re-parsing the
+    /// file per job. When absent, `cfg.trace` (if set) is loaded here.
+    pub trace_data: Option<Arc<Trace>>,
 }
 
 impl Job {
@@ -31,7 +37,14 @@ impl Job {
             label: label.into(),
             cfg,
             workload: workload.to_string(),
+            trace_data: None,
         }
+    }
+
+    /// Attach an already-loaded trace (shared, not copied).
+    pub fn with_trace(mut self, trace: Arc<Trace>) -> Self {
+        self.trace_data = Some(trace);
+        self
     }
 }
 
@@ -61,26 +74,82 @@ pub struct DeviceSummary {
     pub wrcnt_recompressions: u64,
     pub mean_latency_ns: f64,
     pub p99_latency_ns: u64,
+    /// Per-tenant service rows (host-measured request round trips over
+    /// link + device, measured phase; one row for homogeneous runs).
+    /// Mirrors the service-facing subset of `RunMetrics::tenants` so
+    /// device reports are self-contained; the host rows stay the source
+    /// of truth.
+    pub tenants: Vec<TenantSummary>,
+}
+
+/// One tenant's service summary (see [`DeviceSummary::tenants`]).
+#[derive(Clone, Debug, Default)]
+pub struct TenantSummary {
+    pub name: String,
+    pub cores: usize,
+    pub requests: u64,
+    pub mean_latency_ns: f64,
+    pub p99_latency_ns: u64,
+}
+
+impl From<&TenantMetrics> for TenantSummary {
+    fn from(t: &TenantMetrics) -> Self {
+        TenantSummary {
+            name: t.name.clone(),
+            cores: t.cores,
+            requests: t.requests,
+            mean_latency_ns: t.mean_latency_ns,
+            p99_latency_ns: t.p99_latency_ns,
+        }
+    }
+}
+
+/// Resolve the workload composition a job describes: a trace replay
+/// (`cfg.trace`), a heterogeneous mix (`cfg.mix`), or the classic
+/// homogeneous run of `job.workload` on `cfg.cores` cores.
+fn run_sim(job: &Job, engine: SharedEngine) -> (RunMetrics, Box<dyn crate::expander::Scheme>) {
+    let mut device = build_scheme(&job.cfg);
+    if job.trace_data.is_some() || !job.cfg.trace.is_empty() {
+        let trace: Arc<Trace> = match &job.trace_data {
+            Some(t) => Arc::clone(t),
+            None => Arc::new(
+                Trace::load(Path::new(&job.cfg.trace))
+                    .unwrap_or_else(|e| panic!("job {:?}: {e}", job.label)),
+            ),
+        };
+        let plan = RunPlan::new(&trace.mix, trace.scale);
+        let mut oracle = MixOracle::new(&plan, trace.seed, engine);
+        let mut sim = HostSim::from_trace(&job.cfg, &trace)
+            .unwrap_or_else(|e| panic!("job {:?}: {e}", job.label));
+        let metrics = sim.run(device.as_mut(), &mut oracle);
+        return (metrics, device);
+    }
+    let mix = if !job.cfg.mix.is_empty() {
+        Mix::parse(&job.cfg.mix).unwrap_or_else(|e| panic!("job {:?}: {e}", job.label))
+    } else {
+        let spec = by_name(&job.workload)
+            .unwrap_or_else(|| panic!("unknown workload {}", job.workload));
+        Mix::homogeneous(spec, job.cfg.cores)
+    };
+    let plan = RunPlan::new(&mix, job.cfg.footprint_scale);
+    let mut oracle = MixOracle::new(&plan, job.cfg.seed, engine);
+    let mut sim = HostSim::from_mix(&job.cfg, &mix);
+    let metrics = sim.run(device.as_mut(), &mut oracle);
+    (metrics, device)
 }
 
 /// Run one job on the calling thread. The size backend comes from the
 /// job's config (`backend=` key); engines are pooled per backend spec,
 /// so jobs sharing a spec share one memo table.
 pub fn run_one(job: &Job) -> JobResult {
-    let spec: WorkloadSpec =
-        by_name(&job.workload).unwrap_or_else(|| panic!("unknown workload {}", job.workload));
     let engine = SharedEngine::for_config(&job.cfg)
         .unwrap_or_else(|e| panic!("job {:?}: cannot start size backend: {e}", job.label));
-    let mut oracle = WorkloadOracle::new(spec.content, job.cfg.seed, engine);
-    let mut device = build_scheme(&job.cfg);
-    let mut sim = HostSim::new(&job.cfg, &spec);
-    let metrics = sim.run(device.as_mut(), &mut oracle);
+    let (metrics, device) = run_sim(job, engine);
     let s = device.stats();
     JobResult {
         label: job.label.clone(),
         workload: job.workload.clone(),
         scheme: device.name().to_string(),
-        metrics,
         device: DeviceSummary {
             promotions: s.promotions,
             demotions: s.demotions,
@@ -94,19 +163,24 @@ pub fn run_one(job: &Job) -> JobResult {
             wrcnt_recompressions: s.wrcnt_recompressions,
             mean_latency_ns: s.latency.mean_ns(),
             p99_latency_ns: s.latency.percentile_ns(0.99),
+            tenants: metrics.tenants.iter().map(TenantSummary::from).collect(),
         },
+        metrics,
     }
 }
 
 /// Thread-pool width (env-overridable; results are order-preserving and
 /// bit-identical regardless of width — all randomness is job-seeded).
+/// Uses the machine's full `available_parallelism`: sweeps are
+/// embarrassingly parallel, and the old hard cap of 8 threads throttled
+/// large machines for no benefit.
 pub fn parallelism() -> usize {
     std::env::var("IBEX_THREADS")
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or_else(|| {
             thread::available_parallelism()
-                .map(|n| n.get().min(8))
+                .map(|n| n.get())
                 .unwrap_or(4)
         })
         .max(1)
@@ -175,6 +249,21 @@ mod tests {
         let r = run_one(&Job::new("t", quick(), "parest"));
         assert_eq!(r.scheme, "ibex");
         assert!(r.metrics.perf() > 0.0);
+        // Homogeneous runs carry a single tenant row.
+        assert_eq!(r.device.tenants.len(), 1);
+        assert_eq!(r.device.tenants[0].name, "parest");
+    }
+
+    #[test]
+    fn run_one_mix_has_tenant_rows() {
+        let mut c = quick();
+        c.set("mix", "parest:1,mcf:1").unwrap();
+        let r = run_one(&Job::new("t", c, "parest:1,mcf:1"));
+        assert_eq!(r.device.tenants.len(), 2);
+        assert_eq!(r.device.tenants[0].name, "parest");
+        assert_eq!(r.device.tenants[1].name, "mcf");
+        assert!(r.device.tenants.iter().all(|t| t.requests > 0));
+        assert_eq!(r.metrics.tenants.len(), 2);
     }
 
     #[test]

@@ -39,12 +39,18 @@ impl Bandwidth {
         }
     }
 
-    /// Utilization over `[0, horizon]`.
+    /// Utilization over `[0, horizon]`, clamped to 1.0.
+    ///
+    /// An `unlimited` resource admits overlapping acquisitions, so its
+    /// accumulated `busy` time can exceed the horizon — reporting that
+    /// raw ratio showed utilizations above 100% in sweep tables. A
+    /// saturated (or infinitely wide, fully overlapped) resource reports
+    /// exactly 1.0; use [`Bandwidth::busy`] for the raw occupancy sum.
     pub fn utilization(&self, horizon: Ps) -> f64 {
         if horizon == 0 {
             0.0
         } else {
-            self.busy as f64 / horizon as f64
+            (self.busy as f64 / horizon as f64).min(1.0)
         }
     }
 }
@@ -167,5 +173,19 @@ mod tests {
         bw.acquire(0, 500);
         bw.acquire(0, 500);
         assert!((bw.utilization(2000) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unlimited_utilization_never_exceeds_one() {
+        // Overlapping acquisitions on an infinitely wide resource pile
+        // up more busy time than wall clock; the report must clamp.
+        let mut bw = Bandwidth::unlimited();
+        for _ in 0..10 {
+            bw.acquire(0, 1000);
+        }
+        assert_eq!(bw.busy, 10_000, "raw occupancy stays available");
+        assert!((bw.utilization(1000) - 1.0).abs() < 1e-12);
+        assert!(bw.utilization(40_000) <= 1.0);
+        assert!((bw.utilization(40_000) - 0.25).abs() < 1e-12);
     }
 }

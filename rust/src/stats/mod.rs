@@ -45,6 +45,16 @@ impl LatencyHist {
         self.max_ns = self.max_ns.max(ns);
     }
 
+    /// Fold another histogram into this one (per-tenant aggregation).
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
     pub fn mean_ns(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -123,10 +133,17 @@ impl Table {
     }
 
     pub fn csv(&self) -> String {
+        let quote_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .map(|c| csv_cell(c))
+                .collect::<Vec<_>>()
+                .join(",")
+        };
         let mut out = String::new();
-        let _ = writeln!(out, "{}", self.headers.join(","));
+        let _ = writeln!(out, "{}", quote_row(&self.headers));
         for row in &self.rows {
-            let _ = writeln!(out, "{}", row.join(","));
+            let _ = writeln!(out, "{}", quote_row(row));
         }
         out
     }
@@ -148,6 +165,17 @@ impl Table {
                 eprintln!("warn: could not write {}: {e}", path.display());
             }
         }
+    }
+}
+
+/// RFC-4180 CSV field quoting: fields containing commas, quotes or line
+/// breaks are wrapped in double quotes with embedded quotes doubled —
+/// mix labels like `pr:2,mcf:2` must not shift columns.
+fn csv_cell(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') || s.contains('\r') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
     }
 }
 
@@ -207,5 +235,34 @@ mod tests {
     fn ragged_row_panics() {
         let mut t = Table::new("Demo", &["a", "b"]);
         t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn csv_quotes_special_cells() {
+        let mut t = Table::new("Demo", &["workload", "note"]);
+        t.row(vec!["pr:2,mcf:2".into(), "plain".into()]);
+        t.row(vec!["say \"hi\"".into(), "multi\nline".into()]);
+        let csv = t.csv();
+        let mut lines = csv.lines();
+        assert_eq!(lines.next().unwrap(), "workload,note");
+        assert_eq!(lines.next().unwrap(), "\"pr:2,mcf:2\",plain");
+        // Embedded quotes doubled, embedded newline kept inside quotes.
+        assert!(csv.contains("\"say \"\"hi\"\"\",\"multi\nline\""));
+    }
+
+    #[test]
+    fn hist_merge_accumulates() {
+        let mut a = LatencyHist::default();
+        let mut b = LatencyHist::default();
+        for i in 1..=100u64 {
+            a.record_ns(i);
+            b.record_ns(i * 10);
+        }
+        let mean_a = a.mean_ns();
+        a.merge(&b);
+        assert_eq!(a.count, 200);
+        assert!(a.mean_ns() > mean_a);
+        assert_eq!(a.max_ns, 1000);
+        assert!(a.percentile_ns(0.99) >= b.percentile_ns(0.5));
     }
 }

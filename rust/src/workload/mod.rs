@@ -12,9 +12,33 @@
 
 pub mod access;
 pub mod content;
+pub mod mix;
+pub mod trace;
 
 pub use access::{AccessPattern, RequestGen};
 pub use content::{ContentProfile, WorkloadOracle};
+pub use mix::{Mix, MixOracle, RunPlan};
+pub use trace::Trace;
+
+/// One request of a per-core stream, paced in instructions: the unit the
+/// host consumes regardless of where the stream comes from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TimedRequest {
+    /// Global device OSPN (already placed in the run's address space).
+    pub ospn: u64,
+    /// 64 B line index within the page (0..64).
+    pub line: u32,
+    pub write: bool,
+    /// Instructions the core retires before issuing this request.
+    pub inst_gap: u64,
+}
+
+/// A per-core request stream with instruction gaps — implemented by the
+/// synthetic generators ([`mix::SyntheticSource`]) and by trace replay
+/// ([`trace::TraceSource`]).
+pub trait RequestSource {
+    fn next(&mut self) -> TimedRequest;
+}
 
 /// One workload's full parameterization.
 #[derive(Clone, Debug)]

@@ -1,0 +1,313 @@
+//! Line-based request traces: record a synthetic run's streams, replay
+//! them bit-deterministically.
+//!
+//! Format (`#`-prefixed header, then per-core sections):
+//!
+//! ```text
+//! #ibex-trace v1
+//! #mix pr:2,mcf:2
+//! #scale 0.0625
+//! #seed 29281773
+//! core 0
+//! R 1a2f40 7        <- R|W <hex byte address> <instruction gap>
+//! W 3c80 8
+//! core 1
+//! ...
+//! ```
+//!
+//! The byte address encodes `(ospn << 12) | (line << 6)`; the gap is the
+//! instructions the core retires before issuing the request. The header
+//! pins everything replay needs to rebuild the run's geometry — the mix
+//! (content profiles + partition layout), the footprint scale and the
+//! content seed — so replaying a recorded synthetic run reproduces its
+//! metrics bit-identically under the same host/device configuration.
+
+use std::fmt::Write as _;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::config::SimConfig;
+use crate::workload::mix::{Mix, RunPlan};
+use crate::workload::{RequestSource, TimedRequest};
+
+use crate::expander::{LINE_BYTES, PAGE_BYTES};
+
+/// A fully-parsed trace: run geometry plus per-core request streams.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    /// The mix the trace was recorded from (partition layout + content).
+    pub mix: Mix,
+    /// Footprint scale the OSPN layout was computed at.
+    pub scale: f64,
+    /// Content/oracle seed of the recorded run.
+    pub seed: u64,
+    /// One stream per core, in [`RunPlan`] slot order. `Arc` so replay
+    /// sources share the streams instead of cloning them per run.
+    pub per_core: Vec<Arc<Vec<TimedRequest>>>,
+}
+
+impl Trace {
+    pub fn requests(&self) -> usize {
+        self.per_core.iter().map(|c| c.len()).sum()
+    }
+
+    /// Serialize to the line format above.
+    pub fn serialize(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "#ibex-trace v1");
+        let _ = writeln!(out, "#mix {}", self.mix.canonical());
+        let _ = writeln!(out, "#scale {}", self.scale);
+        let _ = writeln!(out, "#seed {}", self.seed);
+        for (ci, stream) in self.per_core.iter().enumerate() {
+            let _ = writeln!(out, "core {ci}");
+            for r in stream.iter() {
+                let addr = r.ospn * PAGE_BYTES + r.line as u64 * LINE_BYTES;
+                let kind = if r.write { 'W' } else { 'R' };
+                let _ = writeln!(out, "{kind} {addr:x} {}", r.inst_gap);
+            }
+        }
+        out
+    }
+
+    /// Parse the line format; errors carry a line number.
+    pub fn parse(text: &str) -> Result<Trace, String> {
+        let mut lines = text.lines().enumerate();
+        match lines.next() {
+            Some((_, l)) if l.trim() == "#ibex-trace v1" => {}
+            _ => return Err("not an ibex trace (missing `#ibex-trace v1` header)".to_string()),
+        }
+        let mut mix: Option<Mix> = None;
+        let mut scale: Option<f64> = None;
+        let mut seed: Option<u64> = None;
+        let mut sections: Vec<Vec<TimedRequest>> = Vec::new();
+        let mut current: Option<usize> = None;
+        for (i, raw) in lines {
+            let line = raw.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let lineno = i + 1;
+            if let Some(rest) = line.strip_prefix('#') {
+                let rest = rest.trim();
+                if let Some(v) = rest.strip_prefix("mix ") {
+                    mix = Some(Mix::parse(v.trim()).map_err(|e| format!("line {lineno}: {e}"))?);
+                } else if let Some(v) = rest.strip_prefix("scale ") {
+                    scale = Some(
+                        v.trim()
+                            .parse()
+                            .map_err(|_| format!("line {lineno}: bad scale {v:?}"))?,
+                    );
+                } else if let Some(v) = rest.strip_prefix("seed ") {
+                    seed = Some(
+                        v.trim()
+                            .parse()
+                            .map_err(|_| format!("line {lineno}: bad seed {v:?}"))?,
+                    );
+                }
+                // Unknown # lines are comments (forward compatibility).
+                continue;
+            }
+            if let Some(v) = line.strip_prefix("core ") {
+                let ci: usize = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("line {lineno}: bad core index {v:?}"))?;
+                if ci != sections.len() {
+                    return Err(format!(
+                        "line {lineno}: core sections must be sequential (expected {}, got {ci})",
+                        sections.len()
+                    ));
+                }
+                sections.push(Vec::new());
+                current = Some(ci);
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let kind = parts.next().unwrap_or("");
+            let write = match kind {
+                "R" | "r" => false,
+                "W" | "w" => true,
+                _ => return Err(format!("line {lineno}: expected `R|W <addr> <gap>`")),
+            };
+            let addr = parts
+                .next()
+                .and_then(|a| u64::from_str_radix(a, 16).ok())
+                .ok_or_else(|| format!("line {lineno}: bad hex address"))?;
+            let gap: u64 = parts
+                .next()
+                .and_then(|g| g.parse().ok())
+                .ok_or_else(|| format!("line {lineno}: bad instruction gap"))?;
+            if parts.next().is_some() {
+                return Err(format!("line {lineno}: trailing tokens"));
+            }
+            let ci = current.ok_or_else(|| {
+                format!("line {lineno}: request before any `core N` section")
+            })?;
+            sections[ci].push(TimedRequest {
+                ospn: addr / PAGE_BYTES,
+                line: ((addr % PAGE_BYTES) / LINE_BYTES) as u32,
+                write,
+                inst_gap: gap.max(1),
+            });
+        }
+        let mix = mix.ok_or("trace missing `#mix` header")?;
+        let trace = Trace {
+            scale: scale.ok_or("trace missing `#scale` header")?,
+            seed: seed.ok_or("trace missing `#seed` header")?,
+            per_core: sections.into_iter().map(Arc::new).collect(),
+            mix,
+        };
+        if trace.per_core.len() != trace.mix.total_cores() {
+            return Err(format!(
+                "trace has {} core sections but mix {:?} needs {}",
+                trace.per_core.len(),
+                trace.mix.canonical(),
+                trace.mix.total_cores()
+            ));
+        }
+        if trace.per_core.iter().any(|c| c.is_empty()) {
+            return Err("trace has an empty core section".to_string());
+        }
+        Ok(trace)
+    }
+
+    pub fn load(path: &Path) -> Result<Trace, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        std::fs::write(path, self.serialize()).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Per-core replay sources, in slot order. Streams are shared with
+    /// the trace (no copy) and wrap around when the run outlives the
+    /// recording.
+    pub fn sources(&self) -> Vec<Box<dyn RequestSource>> {
+        self.per_core
+            .iter()
+            .map(|stream| {
+                Box::new(TraceSource {
+                    entries: Arc::clone(stream),
+                    pos: 0,
+                }) as Box<dyn RequestSource>
+            })
+            .collect()
+    }
+}
+
+/// Replays one core's recorded stream (wrapping at the end).
+pub struct TraceSource {
+    entries: Arc<Vec<TimedRequest>>,
+    pos: usize,
+}
+
+impl RequestSource for TraceSource {
+    fn next(&mut self) -> TimedRequest {
+        let e = self.entries[self.pos];
+        self.pos += 1;
+        if self.pos == self.entries.len() {
+            self.pos = 0;
+        }
+        e
+    }
+}
+
+/// Record the exact synthetic streams `cfg` + `mix` would drive: the
+/// same per-core generators and gap pacing the host consumes, run to
+/// the same `warmup + instructions` stopping rule — so replaying the
+/// trace under the same configuration is bit-identical to the
+/// synthetic run.
+pub fn record(cfg: &SimConfig, mix: &Mix) -> Trace {
+    let plan = RunPlan::new(mix, cfg.footprint_scale);
+    let target = cfg.warmup_instructions + cfg.instructions;
+    let mut sources = plan.synthetic_sources(cfg.seed, cfg.read_fraction_override);
+    let mut per_core = Vec::with_capacity(sources.len());
+    for src in &mut sources {
+        let mut insts = 0u64;
+        let mut stream = Vec::new();
+        while insts < target {
+            let tr = src.next();
+            insts = insts.saturating_add(tr.inst_gap);
+            stream.push(tr);
+        }
+        per_core.push(Arc::new(stream));
+    }
+    Trace {
+        mix: mix.clone(),
+        scale: cfg.footprint_scale,
+        seed: cfg.seed,
+        per_core,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::by_name;
+
+    fn tiny_cfg() -> SimConfig {
+        let mut c = SimConfig::test_small();
+        c.instructions = 20_000;
+        c.warmup_instructions = 2_000;
+        c
+    }
+
+    #[test]
+    fn record_covers_the_instruction_target() {
+        let cfg = tiny_cfg();
+        let mix = Mix::homogeneous(by_name("mcf").unwrap(), 2);
+        let t = record(&cfg, &mix);
+        assert_eq!(t.per_core.len(), 2);
+        for stream in &t.per_core {
+            let insts: u64 = stream.iter().map(|r| r.inst_gap).sum();
+            assert!(insts >= cfg.warmup_instructions + cfg.instructions);
+        }
+    }
+
+    #[test]
+    fn serialize_parse_roundtrip_is_exact() {
+        let cfg = tiny_cfg();
+        let mix = Mix::parse("parest:1,mcf:1").unwrap();
+        let t = record(&cfg, &mix);
+        let text = t.serialize();
+        let back = Trace::parse(&text).unwrap();
+        assert_eq!(back.mix.canonical(), t.mix.canonical());
+        assert_eq!(back.scale, t.scale);
+        assert_eq!(back.seed, t.seed);
+        assert_eq!(back.per_core, t.per_core);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_traces() {
+        assert!(Trace::parse("").is_err());
+        assert!(Trace::parse("#ibex-trace v1\n").is_err()); // no mix/scale/seed
+        let hdr = "#ibex-trace v1\n#mix parest:1\n#scale 0.001\n#seed 1\n";
+        assert!(Trace::parse(&format!("{hdr}R 0 1\n")).is_err()); // before `core`
+        assert!(Trace::parse(&format!("{hdr}core 1\nR 0 1\n")).is_err()); // gap in sections
+        assert!(Trace::parse(&format!("{hdr}core 0\nX 0 1\n")).is_err()); // bad kind
+        assert!(Trace::parse(&format!("{hdr}core 0\nR zz 1\n")).is_err()); // bad addr
+        assert!(Trace::parse(&format!("{hdr}core 0\n")).is_err()); // empty core
+        // A minimal valid trace parses.
+        let ok = Trace::parse(&format!("{hdr}core 0\nR 1040 7\nW 80 8\n")).unwrap();
+        assert_eq!(ok.per_core[0].len(), 2);
+        assert_eq!(ok.per_core[0][0].ospn, 1);
+        assert_eq!(ok.per_core[0][0].line, 1);
+        assert!(!ok.per_core[0][0].write);
+        assert!(ok.per_core[0][1].write);
+        assert_eq!(ok.per_core[0][1].line, 2);
+    }
+
+    #[test]
+    fn trace_source_wraps() {
+        let hdr = "#ibex-trace v1\n#mix parest:1\n#scale 0.001\n#seed 1\n";
+        let t = Trace::parse(&format!("{hdr}core 0\nR 0 3\nW 1000 4\n")).unwrap();
+        let mut src = t.sources().remove(0);
+        let a = src.next();
+        let b = src.next();
+        let c = src.next();
+        assert_eq!(a, c, "stream must wrap");
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,146 @@
+//! Multi-programmed mixes and trace record/replay: the scenario classes
+//! the workload-composition subsystem opens.
+//!
+//! * A recorded synthetic run must replay **bit-identically** (same
+//!   `elapsed_ps`, same `mem_by_kind`) under the same configuration.
+//! * 4 multiprogrammed copies of omnetpp slightly overflow the promoted
+//!   region and recover when it doubles — §6.1's observation, here at
+//!   test scale with the working-set : promoted ratios preserved.
+
+use ibex::config::SimConfig;
+use ibex::coordinator::{run_one, Job};
+use ibex::workload::mix::Mix;
+use ibex::workload::{by_name, trace};
+
+fn quick_cfg() -> SimConfig {
+    let mut c = SimConfig::test_small();
+    c.cores = 2;
+    c.instructions = 60_000;
+    c.warmup_instructions = 6_000;
+    c
+}
+
+fn temp_trace(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("ibex_{tag}_{}.trace", std::process::id()))
+}
+
+#[test]
+fn record_replay_is_bit_identical() {
+    let cfg = quick_cfg();
+    let synth = run_one(&Job::new("synth", cfg.clone(), "mcf"));
+
+    let mix = Mix::homogeneous(by_name("mcf").unwrap(), cfg.cores);
+    let t = trace::record(&cfg, &mix);
+    let path = temp_trace("roundtrip");
+    t.save(&path).unwrap();
+
+    let mut rcfg = cfg.clone();
+    rcfg.trace = path.to_string_lossy().into_owned();
+    let replay = run_one(&Job::new("replay", rcfg, "trace"));
+    let _ = std::fs::remove_file(&path);
+
+    assert_eq!(
+        synth.metrics.elapsed_ps, replay.metrics.elapsed_ps,
+        "replayed elapsed time must be bit-identical"
+    );
+    assert_eq!(
+        synth.metrics.mem_by_kind, replay.metrics.mem_by_kind,
+        "replayed device traffic must be bit-identical"
+    );
+    assert_eq!(synth.metrics.requests, replay.metrics.requests);
+    assert_eq!(synth.metrics.instructions, replay.metrics.instructions);
+    assert_eq!(synth.metrics.mem_total, replay.metrics.mem_total);
+    assert_eq!(synth.device.promotions, replay.device.promotions);
+    assert_eq!(synth.device.demotions, replay.device.demotions);
+}
+
+#[test]
+fn record_replay_roundtrips_a_mix() {
+    let mut cfg = quick_cfg();
+    cfg.instructions = 40_000;
+    cfg.warmup_instructions = 4_000;
+    cfg.set("mix", "parest:1,omnetpp:1").unwrap();
+    let synth = run_one(&Job::new("synth", cfg.clone(), "parest:1,omnetpp:1"));
+
+    let mix = Mix::parse("parest:1,omnetpp:1").unwrap();
+    let t = trace::record(&cfg, &mix);
+    let path = temp_trace("mix_roundtrip");
+    t.save(&path).unwrap();
+
+    let mut rcfg = cfg.clone();
+    rcfg.set("mix", "").unwrap();
+    rcfg.trace = path.to_string_lossy().into_owned();
+    let replay = run_one(&Job::new("replay", rcfg, "trace"));
+    let _ = std::fs::remove_file(&path);
+
+    assert_eq!(synth.metrics.elapsed_ps, replay.metrics.elapsed_ps);
+    assert_eq!(synth.metrics.mem_by_kind, replay.metrics.mem_by_kind);
+    // Tenant rows survive the roundtrip (names from the trace header).
+    assert_eq!(replay.metrics.tenants.len(), 2);
+    assert_eq!(replay.metrics.tenants[0].name, "parest");
+    assert_eq!(replay.metrics.tenants[1].name, "omnetpp");
+    for (a, b) in synth.metrics.tenants.iter().zip(&replay.metrics.tenants) {
+        assert_eq!(a.requests, b.requests);
+        assert_eq!(a.elapsed_ps, b.elapsed_ps);
+    }
+}
+
+#[test]
+fn four_omnetpp_copies_overflow_then_recover() {
+    // §6.1: omnetpp's combined 4-copy footprint slightly overflows the
+    // 512 MB promoted region and the demotion engine churns; a larger
+    // region absorbs it. Test scale 1/256: 4 × ~0.96 MB ≈ 3.8 MB of
+    // combined footprint vs. a 1 MB promoted region (overflow) and an
+    // 8 MB one (fits).
+    let mut cfg = SimConfig::test_small();
+    cfg.instructions = 150_000;
+    cfg.warmup_instructions = 15_000;
+    cfg.footprint_scale = 1.0 / 256.0;
+    cfg.meta_cache_bytes = 4 * 1024;
+    cfg.set("mix", "omnetpp:4").unwrap();
+
+    let mut small = cfg.clone();
+    small.promoted_bytes = 1 << 20;
+    let mut large = cfg.clone();
+    large.promoted_bytes = 8 << 20;
+    let overflow = run_one(&Job::new("1MB", small, "omnetpp:4"));
+    let roomy = run_one(&Job::new("8MB", large, "omnetpp:4"));
+
+    assert_eq!(overflow.metrics.tenants.len(), 1);
+    assert_eq!(overflow.metrics.tenants[0].cores, 4);
+    assert!(
+        overflow.device.demotions > 0,
+        "combined footprint must overflow the promoted region"
+    );
+    assert!(
+        roomy.device.demotions * 10 < overflow.device.demotions.max(10),
+        "larger promoted region must absorb the churn: {} vs {}",
+        roomy.device.demotions,
+        overflow.device.demotions
+    );
+    assert!(
+        roomy.metrics.perf() > overflow.metrics.perf(),
+        "recovery must show up as performance: {} vs {}",
+        roomy.metrics.perf(),
+        overflow.metrics.perf()
+    );
+}
+
+#[test]
+fn heterogeneous_mix_keeps_tenant_rates_apart() {
+    let mut cfg = quick_cfg();
+    cfg.instructions = 100_000;
+    cfg.set("mix", "pr:2,mcf:2").unwrap();
+    let r = run_one(&Job::new("mix", cfg, "pr:2,mcf:2"));
+    assert_eq!(r.metrics.tenants.len(), 2);
+    let pr = &r.metrics.tenants[0];
+    let mcf = &r.metrics.tenants[1];
+    assert_eq!((pr.name.as_str(), pr.cores), ("pr", 2));
+    assert_eq!((mcf.name.as_str(), mcf.cores), ("mcf", 2));
+    // Each tenant issues at its own Table-2 rate on the shared device.
+    assert!((pr.requests_per_kilo_inst() - 129.1).abs() / 129.1 < 0.02);
+    assert!((mcf.requests_per_kilo_inst() - 64.6).abs() / 64.6 < 0.02);
+    // And the device sees the union of both request streams.
+    assert_eq!(r.metrics.requests, pr.requests + mcf.requests);
+    assert!(r.device.tenants.len() == 2 && r.device.tenants[0].requests == pr.requests);
+}
