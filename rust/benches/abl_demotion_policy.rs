@@ -10,9 +10,9 @@ mod common;
 
 use ibex::compress::AnalyticSizeModel;
 use ibex::expander::ibex::{DemotionPolicy, Ibex};
-use ibex::expander::Scheme;
 use ibex::host::HostSim;
 use ibex::stats::Table;
+use ibex::topology::DevicePool;
 use ibex::workload::{by_name, WorkloadOracle};
 
 fn main() {
@@ -43,10 +43,11 @@ fn main() {
         for (name, policy) in policies {
             let cfg = common::bench_cfg();
             let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
-            let mut dev = Ibex::with_policy(&cfg, policy);
+            let mut dev =
+                DevicePool::single(&cfg, Box::new(Ibex::with_policy(&cfg, policy)));
             let mut sim = HostSim::new(&cfg, &spec);
             let m = sim.run(&mut dev, &mut oracle);
-            let s = dev.stats();
+            let s = dev.merged_stats();
             let rand_pct = if s.victim_selections > 0 {
                 100.0 * s.random_victims as f64 / s.victim_selections as f64
             } else {

@@ -11,7 +11,7 @@ use std::time::Instant;
 
 use ibex::compress::size_model::analyze_page;
 use ibex::compress::AnalyticSizeModel;
-use ibex::expander::build_scheme;
+use ibex::topology::DevicePool;
 use ibex::host::HostSim;
 use ibex::stats::Table;
 use ibex::workload::{by_name, WorkloadOracle};
@@ -37,10 +37,10 @@ fn main() {
         cfg.set("scheme", scheme).unwrap();
         let spec = by_name("pr").unwrap();
         let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
-        let mut dev = build_scheme(&cfg);
+        let mut dev = DevicePool::build(&cfg);
         let mut sim = HostSim::new(&cfg, &spec);
         let start = Instant::now();
-        let m = sim.run(dev.as_mut(), &mut oracle);
+        let m = sim.run(&mut dev, &mut oracle);
         let wall = start.elapsed();
         t.row(vec![
             scheme.to_string(),

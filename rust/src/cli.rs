@@ -3,6 +3,7 @@
 //! ```text
 //! ibex run    --workload pr --scheme ibex [key=value ...]
 //! ibex run    --mix pr:2,mcf:2 --scheme ibex
+//! ibex run    --devices 4 --interleave page --workload pr
 //! ibex run    --trace run.trace
 //! ibex sweep  --workloads pr,cc --schemes ibex,tmcc [key=value ...]
 //! ibex record --workload pr --out run.trace [key=value ...]
@@ -13,7 +14,8 @@
 use std::path::Path;
 
 use crate::config::SimConfig;
-use crate::coordinator::{run_many, run_one, Job};
+use crate::coordinator::{run_many, run_one, Job, JobResult};
+use crate::host::DeviceLaneMetrics;
 use crate::stats::Table;
 use crate::workload::{self, mix::Mix, trace};
 
@@ -31,6 +33,10 @@ pub struct Cli {
     pub trace: Option<String>,
     /// `--out FILE` — where `record` writes its trace.
     pub out: Option<String>,
+    /// `--devices N` — expander pool width (validated by `SimConfig`).
+    pub devices: Option<String>,
+    /// `--interleave MODE` — pooled-address-space sharding policy.
+    pub interleave: Option<String>,
 }
 
 impl Cli {
@@ -44,6 +50,8 @@ impl Cli {
             mix: None,
             trace: None,
             out: None,
+            devices: None,
+            interleave: None,
         };
         let mut it = args.iter().skip(1);
         while let Some(arg) = it.next() {
@@ -71,6 +79,8 @@ impl Cli {
                 "--mix" | "-m" => cli.mix = Some(take(&mut it, arg)?),
                 "--trace" | "-t" => cli.trace = Some(take(&mut it, arg)?),
                 "--out" | "-o" => cli.out = Some(take(&mut it, arg)?),
+                "--devices" | "-d" => cli.devices = Some(take(&mut it, arg)?),
+                "--interleave" | "-i" => cli.interleave = Some(take(&mut it, arg)?),
                 _ if arg.contains('=') => {
                     let (k, v) = arg.split_once('=').unwrap();
                     cli.overrides.push((k.to_string(), v.to_string()));
@@ -96,6 +106,12 @@ impl Cli {
         if let Some(t) = &self.trace {
             cfg.set("trace", t)?;
         }
+        if let Some(d) = &self.devices {
+            cfg.set("devices", d)?;
+        }
+        if let Some(i) = &self.interleave {
+            cfg.set("interleave", i)?;
+        }
         Ok(cfg)
     }
 }
@@ -108,8 +124,15 @@ USAGE:
   ibex run    --mix W1:N1,W2:N2 [--scheme S]   multi-programmed tenants, one
                                                core per copy, partitioned OSPN
                                                ranges, per-tenant result rows
+  ibex run    --devices N [--interleave M]     shard the pooled address space
+                                               across N expander devices, each
+                                               behind its own CXL link;
+                                               per-device result rows
   ibex run    --trace FILE [--scheme S]        replay a recorded trace
-                                               (bit-deterministic)
+                                               (bit-deterministic; adopts the
+                                               recorded topology — explicit
+                                               --devices/--interleave must
+                                               match the trace header)
   ibex sweep  [--workloads W1,W2,..] [--schemes S1,S2,..] [key=value ...]
   ibex record (--workload W | --mix ..) --out FILE [key=value ...]
                                                dump the synthetic request
@@ -118,12 +141,18 @@ USAGE:
   ibex list                            list workloads and schemes
   ibex help
 
+TOPOLOGY:  --devices N (1..=64, default 1 — the paper's single expander);
+           --interleave page (page-granule round-robin, default) | contiguous
+           (equal per-device capacity extents). devices=/interleave= work as
+           config keys too. devices=1 is bit-identical to the classic system;
+           N>1 adds a per-device results table (requests, latency, peak
+           outstanding misses, internal accesses, link utilization).
 SCHEMES:   uncompressed ibex tmcc dylect mxt dmc compresso
 BACKENDS:  backend=analytic (default, pure Rust) | pjrt (needs --features pjrt
            and `make artifacts`) | auto; artifact=PATH overrides the HLO path
 KEYS:      see `ibex config-dump` (e.g. promoted_mb=512, cxl.round_trip_ns=70,
            ibex.shadow=true, instructions=20000000, footprint_scale=0.0625,
-           mix=pr:2,mcf:2, trace=run.trace)
+           mix=pr:2,mcf:2, trace=run.trace, devices=4, interleave=page)
 ";
 
 /// Entry point used by `main.rs`. Returns the process exit code.
@@ -171,7 +200,7 @@ pub fn dispatch(args: &[String]) -> i32 {
 }
 
 fn run_cmd(cli: &Cli) -> i32 {
-    let base = match cli.config() {
+    let mut base = match cli.config() {
         Ok(c) => c,
         Err(e) => {
             eprintln!("error: {e}");
@@ -195,6 +224,36 @@ fn run_cmd(cli: &Cli) -> i32 {
         } else {
             None
         };
+        if let Some(t) = &loaded {
+            // Replay adopts the recorded topology (like the mix, scale
+            // and seed pinned in the header) unless the user explicitly
+            // requested one — via flag, key=value override, or a config
+            // file that moved the key off its default; an explicit
+            // mismatch is refused up front, because the per-device
+            // routing would silently diverge from the recorded run.
+            let dflt = SimConfig::table1();
+            let explicit_devices = cli.devices.is_some()
+                || cli.overrides.iter().any(|(k, _)| k == "devices")
+                || base.devices != dflt.devices;
+            let explicit_interleave = cli.interleave.is_some()
+                || cli.overrides.iter().any(|(k, _)| k == "interleave")
+                || base.interleave != dflt.interleave;
+            if !explicit_devices {
+                base.devices = t.devices;
+            }
+            if !explicit_interleave {
+                base.interleave = t.interleave;
+            }
+            if t.devices != base.devices || t.interleave != base.interleave {
+                eprintln!(
+                    "error: trace was recorded with devices={} interleave={} but the \
+                     run requests devices={} interleave={}; replay must use the \
+                     recorded topology",
+                    t.devices, t.interleave, base.devices, base.interleave
+                );
+                return 2;
+            }
+        }
         // One composition (trace or mix), swept over schemes only.
         let w = if !base.trace.is_empty() {
             format!("trace:{}", base.trace)
@@ -292,7 +351,62 @@ fn run_cmd(cli: &Cli) -> i32 {
         }
         tt.emit();
     }
+
+    // Per-device rows (plus a folded aggregate row) for sharded runs.
+    if results.iter().any(|r| r.metrics.devices.len() > 1) {
+        let mut dt = Table::new("Per-device results", DEVICE_TABLE_HEADERS);
+        for r in &results {
+            for row in device_rows(r) {
+                dt.row(row);
+            }
+        }
+        dt.emit();
+    }
     0
+}
+
+const DEVICE_TABLE_HEADERS: &[&str] = &[
+    "workload", "scheme", "device", "requests", "share", "mean lat (ns)", "p99 (ns)",
+    "peak outst", "mem accesses", "ratio", "link util", "promos", "demos",
+];
+
+/// The per-device rows of one result, ending with the folded aggregate
+/// row. Per-device and aggregate rows go through the same formatter
+/// ([`device_row`]) so the table cannot drift between them.
+fn device_rows(r: &JobResult) -> Vec<Vec<String>> {
+    let total = r.metrics.requests;
+    let mut rows: Vec<Vec<String>> = r
+        .metrics
+        .devices
+        .iter()
+        .map(|d| device_row(r, d, total))
+        .collect();
+    rows.push(device_row(
+        r,
+        &DeviceLaneMetrics::aggregate(&r.metrics.devices),
+        total,
+    ));
+    rows
+}
+
+/// One formatted row of the per-device table (`device: None` is the
+/// aggregate row).
+fn device_row(r: &JobResult, d: &DeviceLaneMetrics, total_requests: u64) -> Vec<String> {
+    vec![
+        r.workload.clone(),
+        r.scheme.clone(),
+        d.label(),
+        d.requests.to_string(),
+        d.share_cell(total_requests),
+        format!("{:.0}", d.mean_latency_ns),
+        d.p99_latency_ns.to_string(),
+        d.peak_outstanding.to_string(),
+        d.mem_accesses.to_string(),
+        format!("{:.3}", d.compression_ratio()),
+        d.link_util_cell(),
+        d.promotions.to_string(),
+        d.demotions.to_string(),
+    ]
 }
 
 fn record_cmd(cli: &Cli) -> i32 {
@@ -405,6 +519,25 @@ mod tests {
     }
 
     #[test]
+    fn parse_topology_flags() {
+        let cli = Cli::parse(&s(&["run", "--devices", "4", "--interleave", "contiguous"]))
+            .unwrap();
+        assert_eq!(cli.devices.as_deref(), Some("4"));
+        let cfg = cli.config().unwrap();
+        assert_eq!(cfg.devices, 4);
+        assert_eq!(cfg.interleave, crate::topology::InterleaveKind::Contiguous);
+
+        // Validation goes through SimConfig::set, so bad values carry
+        // the accepted ranges/spellings.
+        let bad = Cli::parse(&s(&["run", "--devices", "0"])).unwrap();
+        let e = bad.config().unwrap_err();
+        assert!(e.contains("1..="), "{e}");
+        let bad = Cli::parse(&s(&["run", "--interleave", "diagonal"])).unwrap();
+        let e = bad.config().unwrap_err();
+        assert!(e.contains("page"), "{e}");
+    }
+
+    #[test]
     fn help_and_list_exit_zero() {
         assert_eq!(dispatch(&s(&["help"])), 0);
         assert_eq!(dispatch(&s(&["list"])), 0);
@@ -436,6 +569,40 @@ mod tests {
             dispatch(&s(&["run", "--trace", "/nonexistent/ibex.trace"])),
             2
         );
+    }
+
+    #[test]
+    fn replay_adopts_recorded_topology_and_refuses_mismatch() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("ibex_cli_topo_{}.trace", std::process::id()));
+        let path_s = path.to_string_lossy().into_owned();
+        let code = dispatch(&s(&[
+            "record",
+            "--workload",
+            "parest",
+            "--devices",
+            "2",
+            "--out",
+            &path_s,
+            "instructions=5000",
+            "warmup_instructions=500",
+            "cores=2",
+            "footprint_scale=0.0001",
+        ]));
+        assert_eq!(code, 0);
+        // No topology flags: the replay adopts devices=2 from the header.
+        let code = dispatch(&s(&[
+            "run",
+            "--trace",
+            &path_s,
+            "instructions=5000",
+            "warmup_instructions=500",
+        ]));
+        assert_eq!(code, 0, "replay must adopt the recorded topology");
+        // An explicit conflicting topology is refused cleanly.
+        let code = dispatch(&s(&["run", "--trace", &path_s, "--devices", "1"]));
+        assert_eq!(code, 2, "explicit topology mismatch must be refused");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

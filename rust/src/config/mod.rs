@@ -10,6 +10,7 @@ use std::path::Path;
 
 use crate::cxl::CxlConfig;
 use crate::mem::DramTiming;
+use crate::topology::{InterleaveKind, MAX_DEVICES};
 
 /// Which device architecture handles requests.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -171,8 +172,14 @@ pub struct SimConfig {
     /// from reported metrics).
     pub warmup_instructions: u64,
 
-    // ---- CXL interface ----
+    // ---- CXL interface / topology ----
     pub cxl: CxlConfig,
+    /// Expander devices in the pool, each behind its own CXL link with
+    /// its own `device_bytes` of capacity (pooled capacity scales
+    /// linearly). 1 = the paper's single-expander system.
+    pub devices: usize,
+    /// Host-side policy sharding the pooled page space across devices.
+    pub interleave: InterleaveKind,
 
     // ---- device memory (Table 1: dual channel DDR5-5600) ----
     pub channels: usize,
@@ -242,6 +249,8 @@ impl Default for SimConfig {
             instructions: 20_000_000,
             warmup_instructions: 4_000_000,
             cxl: CxlConfig::default(),
+            devices: 1,
+            interleave: InterleaveKind::default(),
             channels: 2,
             banks_per_channel: 16,
             timing: DramTiming::default(),
@@ -307,6 +316,23 @@ impl SimConfig {
             "warmup_instructions" => self.warmup_instructions = p(value, key)?,
             "cxl.round_trip_ns" => self.cxl.round_trip_ns = p(value, key)?,
             "cxl.gbps" => self.cxl.gbps_per_dir = p(value, key)?,
+            "devices" => {
+                let n: usize = p(value, key)?;
+                if !(1..=MAX_DEVICES).contains(&n) {
+                    return Err(format!(
+                        "devices must be in 1..={MAX_DEVICES}, got {n}"
+                    ));
+                }
+                self.devices = n;
+            }
+            "interleave" => {
+                self.interleave = InterleaveKind::parse(value).ok_or_else(|| {
+                    format!(
+                        "unknown interleave {value:?} (accepted: {})",
+                        InterleaveKind::accepted()
+                    )
+                })?
+            }
             "channels" => self.channels = p(value, key)?,
             "banks_per_channel" => self.banks_per_channel = p(value, key)?,
             "device_mb" => self.device_bytes = p::<u64>(value, key)? << 20,
@@ -393,6 +419,8 @@ impl SimConfig {
         put("warmup_instructions", self.warmup_instructions.to_string());
         put("cxl.round_trip_ns", self.cxl.round_trip_ns.to_string());
         put("cxl.gbps", format!("{}", self.cxl.gbps_per_dir));
+        put("devices", self.devices.to_string());
+        put("interleave", self.interleave.to_string());
         put("channels", self.channels.to_string());
         put("banks_per_channel", self.banks_per_channel.to_string());
         put("device_bytes", self.device_bytes.to_string());
@@ -476,6 +504,31 @@ mod tests {
         let d = c.dump();
         assert_eq!(d["trace"], "out/run.trace");
         assert_eq!(d["mix"], "");
+    }
+
+    #[test]
+    fn topology_keys_validate_and_dump() {
+        let mut c = SimConfig::default();
+        assert_eq!(c.devices, 1, "single device is the default");
+        assert_eq!(c.interleave, InterleaveKind::PageRoundRobin);
+        c.set("devices", "4").unwrap();
+        c.set("interleave", "contiguous").unwrap();
+        assert_eq!(c.devices, 4);
+        assert_eq!(c.interleave, InterleaveKind::Contiguous);
+        c.set("interleave", "rr").unwrap();
+        assert_eq!(c.interleave, InterleaveKind::PageRoundRobin);
+        // Clear errors that name the accepted values / range.
+        let e = c.set("devices", "0").unwrap_err();
+        assert!(e.contains("1..="), "{e}");
+        let e = c.set("devices", "65").unwrap_err();
+        assert!(e.contains("1..="), "{e}");
+        assert!(c.set("devices", "x").is_err());
+        let e = c.set("interleave", "diagonal").unwrap_err();
+        assert!(e.contains("page") && e.contains("contiguous"), "{e}");
+        assert_eq!(c.devices, 4, "failed sets must not clobber");
+        let d = c.dump();
+        assert_eq!(d["devices"], "4");
+        assert_eq!(d["interleave"], "page");
     }
 
     #[test]

@@ -14,9 +14,9 @@ use std::sync::Arc;
 use std::thread;
 
 use crate::config::SimConfig;
-use crate::expander::build_scheme;
 use crate::host::{HostSim, RunMetrics, TenantMetrics};
 use crate::runtime::SharedEngine;
+use crate::topology::DevicePool;
 use crate::workload::{by_name, Mix, MixOracle, RunPlan, Trace};
 
 /// A labeled simulation job.
@@ -106,9 +106,11 @@ impl From<&TenantMetrics> for TenantSummary {
 
 /// Resolve the workload composition a job describes: a trace replay
 /// (`cfg.trace`), a heterogeneous mix (`cfg.mix`), or the classic
-/// homogeneous run of `job.workload` on `cfg.cores` cores.
-fn run_sim(job: &Job, engine: SharedEngine) -> (RunMetrics, Box<dyn crate::expander::Scheme>) {
-    let mut device = build_scheme(&job.cfg);
+/// homogeneous run of `job.workload` on `cfg.cores` cores. The device
+/// pool is `cfg.devices` instances of the configured scheme (1 — the
+/// classic single expander — by default).
+fn run_sim(job: &Job, engine: SharedEngine) -> (RunMetrics, DevicePool) {
+    let mut pool = DevicePool::build(&job.cfg);
     if job.trace_data.is_some() || !job.cfg.trace.is_empty() {
         let trace: Arc<Trace> = match &job.trace_data {
             Some(t) => Arc::clone(t),
@@ -121,8 +123,8 @@ fn run_sim(job: &Job, engine: SharedEngine) -> (RunMetrics, Box<dyn crate::expan
         let mut oracle = MixOracle::new(&plan, trace.seed, engine);
         let mut sim = HostSim::from_trace(&job.cfg, &trace)
             .unwrap_or_else(|e| panic!("job {:?}: {e}", job.label));
-        let metrics = sim.run(device.as_mut(), &mut oracle);
-        return (metrics, device);
+        let metrics = sim.run(&mut pool, &mut oracle);
+        return (metrics, pool);
     }
     let mix = if !job.cfg.mix.is_empty() {
         Mix::parse(&job.cfg.mix).unwrap_or_else(|e| panic!("job {:?}: {e}", job.label))
@@ -134,8 +136,8 @@ fn run_sim(job: &Job, engine: SharedEngine) -> (RunMetrics, Box<dyn crate::expan
     let plan = RunPlan::new(&mix, job.cfg.footprint_scale);
     let mut oracle = MixOracle::new(&plan, job.cfg.seed, engine);
     let mut sim = HostSim::from_mix(&job.cfg, &mix);
-    let metrics = sim.run(device.as_mut(), &mut oracle);
-    (metrics, device)
+    let metrics = sim.run(&mut pool, &mut oracle);
+    (metrics, pool)
 }
 
 /// Run one job on the calling thread. The size backend comes from the
@@ -144,12 +146,14 @@ fn run_sim(job: &Job, engine: SharedEngine) -> (RunMetrics, Box<dyn crate::expan
 pub fn run_one(job: &Job) -> JobResult {
     let engine = SharedEngine::for_config(&job.cfg)
         .unwrap_or_else(|e| panic!("job {:?}: cannot start size backend: {e}", job.label));
-    let (metrics, device) = run_sim(job, engine);
-    let s = device.stats();
+    let (metrics, pool) = run_sim(job, engine);
+    // Aggregate scheme statistics across the pool (identical to the
+    // single device's stats when `devices = 1`).
+    let s = pool.merged_stats();
     JobResult {
         label: job.label.clone(),
         workload: job.workload.clone(),
-        scheme: device.name().to_string(),
+        scheme: pool.scheme_name().to_string(),
         device: DeviceSummary {
             promotions: s.promotions,
             demotions: s.demotions,
@@ -264,6 +268,21 @@ mod tests {
         assert_eq!(r.device.tenants[1].name, "mcf");
         assert!(r.device.tenants.iter().all(|t| t.requests > 0));
         assert_eq!(r.metrics.tenants.len(), 2);
+    }
+
+    #[test]
+    fn run_one_multi_device_carries_device_rows() {
+        let mut c = quick();
+        c.set("devices", "2").unwrap();
+        let r = run_one(&Job::new("t", c, "pr"));
+        assert_eq!(r.metrics.devices.len(), 2);
+        let reqs: u64 = r.metrics.devices.iter().map(|d| d.requests).sum();
+        assert_eq!(reqs, r.metrics.requests);
+        // Merged device summary folds both devices' serve counters.
+        let served: u64 = r.device.zero_serves
+            + r.device.promoted_hits
+            + r.device.compressed_serves;
+        assert!(served > 0);
     }
 
     #[test]

@@ -91,6 +91,28 @@ pub struct DeviceStats {
     pub latency: LatencyHist,
 }
 
+impl DeviceStats {
+    /// Fold another device's statistics into this one: counters sum,
+    /// latency histograms merge. Used to build the aggregate row of
+    /// multi-device reports (`topology::DevicePool::merged_stats`).
+    pub fn merge(&mut self, other: &DeviceStats) {
+        self.reads += other.reads;
+        self.writes += other.writes;
+        self.zero_serves += other.zero_serves;
+        self.promoted_hits += other.promoted_hits;
+        self.compressed_serves += other.compressed_serves;
+        self.incompressible_serves += other.incompressible_serves;
+        self.promotions += other.promotions;
+        self.demotions += other.demotions;
+        self.clean_demotions += other.clean_demotions;
+        self.random_victims += other.random_victims;
+        self.probe_skips += other.probe_skips;
+        self.victim_selections += other.victim_selections;
+        self.wrcnt_recompressions += other.wrcnt_recompressions;
+        self.latency.merge(&other.latency);
+    }
+}
+
 /// Result of a metadata-cache access.
 #[derive(Clone, Copy, Debug)]
 pub struct MetaOutcome {
@@ -302,5 +324,30 @@ mod tests {
     fn incompressibility_threshold() {
         assert!(!incompressible_4k(3584));
         assert!(incompressible_4k(3585));
+    }
+
+    #[test]
+    fn device_stats_merge_sums_counters_and_histograms() {
+        let mut a = DeviceStats {
+            reads: 10,
+            writes: 2,
+            promotions: 3,
+            ..Default::default()
+        };
+        a.latency.record_ns(100);
+        let mut b = DeviceStats {
+            reads: 5,
+            writes: 1,
+            demotions: 7,
+            ..Default::default()
+        };
+        b.latency.record_ns(900);
+        a.merge(&b);
+        assert_eq!(a.reads, 15);
+        assert_eq!(a.writes, 3);
+        assert_eq!(a.promotions, 3);
+        assert_eq!(a.demotions, 7);
+        assert_eq!(a.latency.count, 2);
+        assert_eq!(a.latency.max_ns, 900);
     }
 }

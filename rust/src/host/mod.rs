@@ -1,4 +1,5 @@
-//! Host model: trace-driven cores issuing requests over the CXL link.
+//! Host model: trace-driven cores issuing requests over per-device CXL
+//! links.
 //!
 //! Table 1's 4-core out-of-order host is modeled at the post-LLC level:
 //! each core retires instructions at up to `ipc` per cycle between its
@@ -12,26 +13,36 @@
 //! Each core consumes a [`RequestSource`]: a paced synthetic generator
 //! (possibly a heterogeneous multi-tenant [`Mix`]) or a recorded trace
 //! replayed bit-deterministically (`workload::trace`). Cores are placed
-//! in the device address space by a [`RunPlan`], which also keys the
-//! per-tenant metric rows in [`RunMetrics`].
+//! in the pooled device address space by a [`RunPlan`], which also keys
+//! the per-tenant metric rows in [`RunMetrics`].
+//!
+//! Requests are routed to one of N expander devices by the host-side
+//! [`Interleave`] policy (`topology`): each device has its own link
+//! serialization, and the host tracks per-device request counts,
+//! round-trip latency and outstanding-miss occupancy — the per-device
+//! rows in [`RunMetrics::devices`]. With `devices = 1` (the default)
+//! the routing is the identity map and the run is bit-identical to the
+//! historical single-device host.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+use crate::compress::PageSizes;
 use crate::config::SimConfig;
-use crate::cxl::CxlLink;
-use crate::expander::{ContentOracle, Scheme};
+use crate::expander::ContentOracle;
 use crate::rng::Pcg64;
 use crate::sim::{Ps, CORE_CLK_PS, PS_PER_NS};
 use crate::stats::LatencyHist;
+use crate::topology::{DevicePool, Interleave};
 use crate::workload::{Mix, RequestSource, RunPlan, Trace, WorkloadSpec};
 
 /// One simulated core's issue state.
 struct Core {
     /// Local time: when the core can issue its next request.
     t: Ps,
-    /// Completion times of outstanding misses.
-    outstanding: BinaryHeap<Reverse<Ps>>,
+    /// Completion times of outstanding misses, tagged with the device
+    /// that serves them (so per-device occupancy can be tracked).
+    outstanding: BinaryHeap<Reverse<(Ps, u32)>>,
     src: Box<dyn RequestSource>,
     /// Blocking-load coin flips (dependency stalls).
     dep_rng: Pcg64,
@@ -52,6 +63,20 @@ struct CoreSnap {
     reads: u64,
     writes: u64,
     t: Ps,
+}
+
+/// Host-side per-device tracking: requests routed, host-observed
+/// round trips, and outstanding-miss occupancy on that device.
+#[derive(Clone, Default)]
+struct Lane {
+    reqs: u64,
+    reads: u64,
+    writes: u64,
+    lat: LatencyHist,
+    /// Misses currently outstanding on this device (all cores).
+    outstanding: usize,
+    /// Peak of `outstanding` over the measured phase.
+    peak_outstanding: usize,
 }
 
 /// One tenant's share of a run (measured phase only).
@@ -88,6 +113,108 @@ impl TenantMetrics {
     }
 }
 
+/// One device's share of a run (measured phase only): host-side routing
+/// counts + the device's own internal traffic and residency.
+#[derive(Clone, Debug)]
+pub struct DeviceLaneMetrics {
+    /// Device index; `None` marks the folded aggregate row.
+    pub device: Option<usize>,
+    pub requests: u64,
+    pub reads: u64,
+    pub writes: u64,
+    /// Host-observed round trip for requests served by this device, ns.
+    pub mean_latency_ns: f64,
+    pub p99_latency_ns: u64,
+    /// Peak outstanding misses on this device across all cores.
+    pub peak_outstanding: usize,
+    /// Internal (device-side) memory accesses.
+    pub mem_accesses: u64,
+    /// Resident logical/physical bytes at run end (ratio inputs).
+    pub logical_bytes: u64,
+    pub physical_bytes: u64,
+    /// Whole-run totals (warmup included), like `DeviceSummary`'s.
+    pub promotions: u64,
+    pub demotions: u64,
+    /// Link busy fraction over the measured window. Every request
+    /// currently serializes one flit per direction, so up == down and
+    /// one number describes the link; split it per direction only when
+    /// reply payloads grow beyond a flit.
+    pub link_utilization: f64,
+}
+
+impl DeviceLaneMetrics {
+    /// Device column for report tables: `#i`, or `all` for the
+    /// aggregate row. Shared by the CLI and bench tables so the label
+    /// cannot drift between them.
+    pub fn label(&self) -> String {
+        match self.device {
+            Some(i) => format!("#{i}"),
+            None => "all".to_string(),
+        }
+    }
+
+    /// Request-share table cell (percent of `total_requests`).
+    pub fn share_cell(&self, total_requests: u64) -> String {
+        format!("{:.1}%", 100.0 * self.request_share(total_requests))
+    }
+
+    /// Link-utilization table cell (percent busy).
+    pub fn link_util_cell(&self) -> String {
+        format!("{:.1}%", 100.0 * self.link_utilization)
+    }
+
+    /// Effective compression ratio on this device (1.0 when empty).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.physical_bytes == 0 {
+            1.0
+        } else {
+            self.logical_bytes as f64 / self.physical_bytes as f64
+        }
+    }
+
+    /// Fraction of the run's requests this device served.
+    pub fn request_share(&self, total_requests: u64) -> f64 {
+        if total_requests == 0 {
+            0.0
+        } else {
+            self.requests as f64 / total_requests as f64
+        }
+    }
+
+    /// Fold per-device rows into one aggregate row (`device: None`):
+    /// counts sum, mean latency is request-weighted, p99 is the
+    /// per-device maximum (an upper bound), peak outstanding sums (all
+    /// devices concurrently), link utilization averages across devices.
+    pub fn aggregate(rows: &[DeviceLaneMetrics]) -> DeviceLaneMetrics {
+        let n = rows.len().max(1);
+        let requests: u64 = rows.iter().map(|r| r.requests).sum();
+        let weighted: f64 = rows
+            .iter()
+            .map(|r| r.mean_latency_ns * r.requests as f64)
+            .sum();
+        DeviceLaneMetrics {
+            device: None,
+            requests,
+            reads: rows.iter().map(|r| r.reads).sum(),
+            writes: rows.iter().map(|r| r.writes).sum(),
+            mean_latency_ns: if requests == 0 {
+                0.0
+            } else {
+                weighted / requests as f64
+            },
+            p99_latency_ns: rows.iter().map(|r| r.p99_latency_ns).max().unwrap_or(0),
+            peak_outstanding: rows.iter().map(|r| r.peak_outstanding).sum(),
+            mem_accesses: rows.iter().map(|r| r.mem_accesses).sum(),
+            logical_bytes: rows.iter().map(|r| r.logical_bytes).sum(),
+            physical_bytes: rows.iter().map(|r| r.physical_bytes).sum(),
+            promotions: rows.iter().map(|r| r.promotions).sum(),
+            demotions: rows.iter().map(|r| r.demotions).sum(),
+            link_utilization: rows.iter().map(|r| r.link_utilization).sum::<f64>()
+                / n as f64,
+        }
+    }
+}
+
 /// Result of one simulation run.
 #[derive(Clone, Debug)]
 pub struct RunMetrics {
@@ -96,12 +223,14 @@ pub struct RunMetrics {
     /// Wall-clock of the slowest core, ps.
     pub elapsed_ps: Ps,
     pub requests: u64,
-    /// Memory accesses inside the device, by traffic kind.
+    /// Memory accesses inside the device pool, by traffic kind.
     pub mem_by_kind: [u64; 4],
     pub mem_total: u64,
     pub compression_ratio: f64,
     /// Per-tenant rows (one entry for a classic homogeneous run).
     pub tenants: Vec<TenantMetrics>,
+    /// Per-device rows (one entry for a classic single-device run).
+    pub devices: Vec<DeviceLaneMetrics>,
 }
 
 impl RunMetrics {
@@ -114,14 +243,39 @@ impl RunMetrics {
     }
 }
 
-/// Drive `device` with the planned request streams until every core
-/// retires `cfg.instructions` (after `cfg.warmup_instructions` of
+/// Translates a device's local OSPNs back to pooled OSPNs before
+/// querying the run's content oracle, so every device sees the content
+/// profile of the pages it actually holds (and tenants' profiles stay
+/// keyed by the pooled space regardless of the interleave).
+struct RoutedOracle<'a> {
+    inner: &'a mut dyn ContentOracle,
+    map: Interleave,
+    dev: usize,
+}
+
+impl ContentOracle for RoutedOracle<'_> {
+    fn sizes(&mut self, local: u64) -> PageSizes {
+        self.inner.sizes(self.map.global(self.dev, local))
+    }
+
+    fn on_write(&mut self, local: u64) -> PageSizes {
+        self.inner.on_write(self.map.global(self.dev, local))
+    }
+
+    fn is_zero_fill(&mut self, local: u64) -> bool {
+        self.inner.is_zero_fill(self.map.global(self.dev, local))
+    }
+}
+
+/// Drive a [`DevicePool`] with the planned request streams until every
+/// core retires `cfg.instructions` (after `cfg.warmup_instructions` of
 /// warmup).
 pub struct HostSim<'a> {
     cfg: &'a SimConfig,
     plan: RunPlan,
-    link: CxlLink,
+    interleave: Interleave,
     cores: Vec<Core>,
+    lanes: Vec<Lane>,
 }
 
 impl<'a> HostSim<'a> {
@@ -138,11 +292,20 @@ impl<'a> HostSim<'a> {
         Self::with_sources(cfg, plan, sources, cfg.seed)
     }
 
-    /// Deterministic replay of a recorded trace. Geometry (mix, scale)
-    /// and the dependency-coin seed come from the trace header, so a
-    /// recorded synthetic run replays bit-identically under the same
-    /// host/device configuration.
+    /// Deterministic replay of a recorded trace. Geometry (mix, scale,
+    /// topology) and the dependency-coin seed come from the trace
+    /// header, so a recorded synthetic run replays bit-identically
+    /// under the same host/device configuration. Replaying under a
+    /// different topology than the recording is refused: the routing
+    /// (and thus every per-device queue) would diverge silently.
     pub fn from_trace(cfg: &'a SimConfig, trace: &Trace) -> Result<Self, String> {
+        if trace.devices != cfg.devices || trace.interleave != cfg.interleave {
+            return Err(format!(
+                "trace topology (devices={}, interleave={}) does not match \
+                 configured topology (devices={}, interleave={})",
+                trace.devices, trace.interleave, cfg.devices, cfg.interleave
+            ));
+        }
         let plan = RunPlan::new(&trace.mix, trace.scale);
         if trace.per_core.len() != plan.cores() {
             return Err(format!(
@@ -176,11 +339,13 @@ impl<'a> HostSim<'a> {
                 lat: LatencyHist::default(),
             })
             .collect();
+        let interleave = Interleave::new(cfg.interleave, cfg.devices, plan.total_pages);
         Self {
             cfg,
             plan,
-            link: CxlLink::new(cfg.cxl),
+            interleave,
             cores,
+            lanes: vec![Lane::default(); cfg.devices],
         }
     }
 
@@ -189,26 +354,54 @@ impl<'a> HostSim<'a> {
         &self.plan
     }
 
+    /// The resolved host-side interleave.
+    pub fn interleave(&self) -> Interleave {
+        self.interleave
+    }
+
     /// Run to completion; returns metrics for the *measured* phase only
     /// (warmup traffic excluded by snapshot subtraction).
     pub fn run(
         &mut self,
-        device: &mut dyn Scheme,
+        pool: &mut DevicePool,
         oracle: &mut dyn ContentOracle,
     ) -> RunMetrics {
+        assert_eq!(
+            pool.len(),
+            self.interleave.devices(),
+            "pool width must match the configured topology"
+        );
         // Pre-populate one copy's footprint per tenant as resident cold
         // data (§5: inputs loaded before the measured window, promoted
-        // region empty).
+        // region empty), routed to each page's home device.
         for &(base, pages, _copies) in &self.plan.regions {
             for p in 0..pages {
-                device.populate(base + p, oracle.sizes(base + p));
+                let g = base + p;
+                let (dev, local) = self.interleave.route(g);
+                let sizes = oracle.sizes(g);
+                pool.devices[dev].scheme.populate(local, sizes);
             }
         }
 
-        self.phase(device, oracle, self.cfg.warmup_instructions, false);
+        self.phase(pool, oracle, self.cfg.warmup_instructions, false);
         // Snapshot after warmup.
-        let warm_kind = device.mem().breakdown.counts;
-        let warm_total = device.mem().total_accesses();
+        let warm_kind = pool.mem_breakdown();
+        let warm_total = pool.mem_total();
+        let warm_dev: Vec<(u64, Ps)> = pool
+            .devices
+            .iter()
+            .map(|d| (d.scheme.mem().total_accesses(), d.link.down.busy))
+            .collect();
+        let warm_lane: Vec<(u64, u64, u64)> = self
+            .lanes
+            .iter()
+            .map(|l| (l.reqs, l.reads, l.writes))
+            .collect();
+        for lane in &mut self.lanes {
+            // phase() drains every lane at its end, so occupancy is 0
+            // here; the peak restarts for the measured phase.
+            lane.peak_outstanding = 0;
+        }
         let warm: Vec<CoreSnap> = self
             .cores
             .iter()
@@ -222,13 +415,13 @@ impl<'a> HostSim<'a> {
             .collect();
 
         self.phase(
-            device,
+            pool,
             oracle,
             self.cfg.warmup_instructions + self.cfg.instructions,
             true,
         );
 
-        let kinds = device.mem().breakdown.counts;
+        let kinds = pool.mem_breakdown();
         let mem_by_kind = [
             kinds[0] - warm_kind[0],
             kinds[1] - warm_kind[1],
@@ -272,14 +465,46 @@ impl<'a> HostSim<'a> {
         }
 
         let warm_elapsed = warm.iter().map(|s| s.t).max().unwrap_or(0);
+        let elapsed_ps = self.elapsed() - warm_elapsed;
+        let horizon = elapsed_ps.max(1);
+        let devices: Vec<DeviceLaneMetrics> = pool
+            .devices
+            .iter()
+            .enumerate()
+            .map(|(di, d)| {
+                let lane = &self.lanes[di];
+                let (wmem, wdown) = warm_dev[di];
+                let (wreqs, wreads, wwrites) = warm_lane[di];
+                let s = d.scheme.stats();
+                DeviceLaneMetrics {
+                    device: Some(di),
+                    requests: lane.reqs - wreqs,
+                    reads: lane.reads - wreads,
+                    writes: lane.writes - wwrites,
+                    mean_latency_ns: lane.lat.mean_ns(),
+                    p99_latency_ns: lane.lat.percentile_ns(0.99),
+                    peak_outstanding: lane.peak_outstanding,
+                    mem_accesses: d.scheme.mem().total_accesses() - wmem,
+                    logical_bytes: d.scheme.logical_bytes(),
+                    physical_bytes: d.scheme.physical_bytes(),
+                    promotions: s.promotions,
+                    demotions: s.demotions,
+                    link_utilization: ((d.link.down.busy - wdown) as f64
+                        / horizon as f64)
+                        .min(1.0),
+                }
+            })
+            .collect();
+
         RunMetrics {
             instructions: tenants.iter().map(|t| t.instructions).sum(),
-            elapsed_ps: self.elapsed() - warm_elapsed,
+            elapsed_ps,
             requests: tenants.iter().map(|t| t.requests).sum(),
             mem_by_kind,
-            mem_total: device.mem().total_accesses() - warm_total,
-            compression_ratio: device.compression_ratio(),
+            mem_total: pool.mem_total() - warm_total,
+            compression_ratio: pool.compression_ratio(),
             tenants,
+            devices,
         }
     }
 
@@ -291,7 +516,7 @@ impl<'a> HostSim<'a> {
     /// `measure` enables per-request latency recording (off in warmup).
     fn phase(
         &mut self,
-        device: &mut dyn Scheme,
+        pool: &mut DevicePool,
         oracle: &mut dyn ContentOracle,
         insts_target: u64,
         measure: bool,
@@ -321,17 +546,19 @@ impl<'a> HostSim<'a> {
             core.t += tr.inst_gap.saturating_mul(CORE_CLK_PS) / ipc;
 
             // Drain completed misses.
-            while let Some(&Reverse(done)) = core.outstanding.peek() {
+            while let Some(&Reverse((done, pdev))) = core.outstanding.peek() {
                 if done <= core.t {
                     core.outstanding.pop();
+                    self.lanes[pdev as usize].outstanding -= 1;
                 } else {
                     break;
                 }
             }
             // MSHR full: stall until the oldest miss returns.
             if core.outstanding.len() >= mshrs {
-                if let Some(Reverse(done)) = core.outstanding.pop() {
+                if let Some(Reverse((done, pdev))) = core.outstanding.pop() {
                     core.t = core.t.max(done);
+                    self.lanes[pdev as usize].outstanding -= 1;
                 }
             }
 
@@ -342,27 +569,61 @@ impl<'a> HostSim<'a> {
                 core.reads += 1;
             }
             let t_issue = core.t;
-            let at_device = self.link.ingress(t_issue, 1);
-            let ready = device.access(at_device, tr.ospn, tr.line, tr.write, oracle);
-            let done = self.link.egress(ready, 1);
+            let (dev, local) = self.interleave.route(tr.ospn);
+            let device = &mut pool.devices[dev];
+            let at_device = device.link.ingress(t_issue, 1);
+            let ready = if self.interleave.devices() == 1 {
+                // Identity routing: skip the translation wrapper on the
+                // default single-device hot path.
+                device
+                    .scheme
+                    .access(at_device, local, tr.line, tr.write, oracle)
+            } else {
+                let mut routed = RoutedOracle {
+                    // Explicit reborrow: the wrapper lives one request.
+                    inner: &mut *oracle,
+                    map: self.interleave,
+                    dev,
+                };
+                device
+                    .scheme
+                    .access(at_device, local, tr.line, tr.write, &mut routed)
+            };
+            let done = device.link.egress(ready, 1);
+            let lane = &mut self.lanes[dev];
+            lane.reqs += 1;
+            if tr.write {
+                lane.writes += 1;
+            } else {
+                lane.reads += 1;
+            }
             let core = &mut self.cores[ci];
             if measure {
-                core.lat.record_ns(done.saturating_sub(t_issue) / PS_PER_NS);
+                let ns = done.saturating_sub(t_issue) / PS_PER_NS;
+                core.lat.record_ns(ns);
+                lane.lat.record_ns(ns);
             }
             // Blocking load: a dependent instruction needs this value —
             // the core stalls until the reply returns.
             if !tr.write && core.dep_rng.chance(self.cfg.dep_fraction) {
                 core.t = core.t.max(done);
             } else {
-                core.outstanding.push(Reverse(done));
+                core.outstanding.push(Reverse((done, dev as u32)));
+                lane.outstanding += 1;
+                if lane.outstanding > lane.peak_outstanding {
+                    lane.peak_outstanding = lane.outstanding;
+                }
             }
         }
         // Let every core drain (reply latency counts toward elapsed).
         for core in &mut self.cores {
-            if let Some(&Reverse(last)) = core.outstanding.iter().max_by_key(|r| r.0).as_ref() {
-                core.t = core.t.max(*last);
+            if let Some(last) = core.outstanding.iter().map(|r| r.0 .0).max() {
+                core.t = core.t.max(last);
             }
             core.outstanding.clear();
+        }
+        for lane in &mut self.lanes {
+            lane.outstanding = 0;
         }
     }
 }
@@ -371,7 +632,6 @@ impl<'a> HostSim<'a> {
 mod tests {
     use super::*;
     use crate::compress::AnalyticSizeModel;
-    use crate::expander::build_scheme;
     use crate::workload::{by_name, WorkloadOracle};
 
     fn quick_cfg() -> SimConfig {
@@ -387,9 +647,9 @@ mod tests {
         let cfg = quick_cfg();
         let spec = by_name("parest").unwrap();
         let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
-        let mut device = build_scheme(&cfg);
+        let mut pool = DevicePool::build(&cfg);
         let mut sim = HostSim::new(&cfg, &spec);
-        let m = sim.run(device.as_mut(), &mut oracle);
+        let m = sim.run(&mut pool, &mut oracle);
         // Each core retires in inst_gap quanta, so totals land within one
         // gap of the target.
         assert!(m.instructions as f64 >= 1.95 * cfg.instructions as f64);
@@ -417,9 +677,9 @@ mod tests {
         for name in ["pr", "mcf", "bfs"] {
             let spec = by_name(name).unwrap();
             let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
-            let mut device = build_scheme(&cfg);
+            let mut pool = DevicePool::build(&cfg);
             let mut sim = HostSim::new(&cfg, &spec);
-            let m = sim.run(device.as_mut(), &mut oracle);
+            let m = sim.run(&mut pool, &mut oracle);
             let per_kilo = m.requests as f64 / (m.instructions as f64 / 1000.0);
             let target = spec.rpki + spec.wpki;
             assert!(
@@ -430,13 +690,13 @@ mod tests {
     }
 
     #[test]
-    fn homogeneous_run_reports_one_tenant() {
+    fn homogeneous_run_reports_one_tenant_and_one_device() {
         let cfg = quick_cfg();
         let spec = by_name("parest").unwrap();
         let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
-        let mut device = build_scheme(&cfg);
+        let mut pool = DevicePool::build(&cfg);
         let mut sim = HostSim::new(&cfg, &spec);
-        let m = sim.run(device.as_mut(), &mut oracle);
+        let m = sim.run(&mut pool, &mut oracle);
         assert_eq!(m.tenants.len(), 1);
         let t = &m.tenants[0];
         assert_eq!(t.name, "parest");
@@ -447,6 +707,46 @@ mod tests {
         assert_eq!(t.elapsed_ps, m.elapsed_ps);
         assert!(t.mean_latency_ns > 0.0);
         assert!(t.p99_latency_ns > 0);
+        // Single-device run: one device row carrying the full traffic.
+        assert_eq!(m.devices.len(), 1);
+        let d = &m.devices[0];
+        assert_eq!(d.device, Some(0));
+        assert_eq!(d.requests, m.requests);
+        assert_eq!(d.reads + d.writes, d.requests);
+        assert_eq!(d.mem_accesses, m.mem_total);
+        assert!(d.mean_latency_ns > 0.0);
+        assert!(d.link_utilization > 0.0 && d.link_utilization <= 1.0);
+    }
+
+    #[test]
+    fn multi_device_run_routes_all_traffic() {
+        let mut cfg = quick_cfg();
+        cfg.devices = 4;
+        let spec = by_name("pr").unwrap();
+        let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
+        let mut pool = DevicePool::build(&cfg);
+        let mut sim = HostSim::new(&cfg, &spec);
+        let m = sim.run(&mut pool, &mut oracle);
+        assert_eq!(m.devices.len(), 4);
+        let total: u64 = m.devices.iter().map(|d| d.requests).sum();
+        assert_eq!(total, m.requests, "every request lands on exactly one device");
+        let mem: u64 = m.devices.iter().map(|d| d.mem_accesses).sum();
+        assert_eq!(mem, m.mem_total);
+        // Page round-robin over a Zipf stream: every device sees real
+        // traffic (hot pages spread across the pool).
+        for d in &m.devices {
+            assert!(
+                d.request_share(m.requests) > 0.05,
+                "device {:?} starved: {:?}",
+                d.device,
+                d.requests
+            );
+        }
+        let agg = DeviceLaneMetrics::aggregate(&m.devices);
+        assert_eq!(agg.device, None, "aggregate row carries no index");
+        assert_eq!(agg.requests, m.requests);
+        assert_eq!(agg.mem_accesses, m.mem_total);
+        assert!((agg.compression_ratio() - m.compression_ratio).abs() < 1e-9);
     }
 
     #[test]
@@ -455,9 +755,24 @@ mod tests {
         let spec = by_name("omnetpp").unwrap();
         let run = || {
             let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
-            let mut device = build_scheme(&cfg);
+            let mut pool = DevicePool::build(&cfg);
             let mut sim = HostSim::new(&cfg, &spec);
-            sim.run(device.as_mut(), &mut oracle).elapsed_ps
+            sim.run(&mut pool, &mut oracle).elapsed_ps
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn multi_device_runs_are_deterministic() {
+        let mut cfg = quick_cfg();
+        cfg.devices = 2;
+        let spec = by_name("omnetpp").unwrap();
+        let run = || {
+            let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
+            let mut pool = DevicePool::build(&cfg);
+            let mut sim = HostSim::new(&cfg, &spec);
+            let m = sim.run(&mut pool, &mut oracle);
+            (m.elapsed_ps, m.mem_by_kind, m.devices[0].requests)
         };
         assert_eq!(run(), run());
     }
@@ -473,9 +788,9 @@ mod tests {
             let mut c = cfg.clone();
             c.set("scheme", scheme).unwrap();
             let mut oracle = WorkloadOracle::new(spec.content, c.seed, AnalyticSizeModel);
-            let mut device = build_scheme(&c);
+            let mut pool = DevicePool::build(&c);
             let mut sim = HostSim::new(&c, &spec);
-            sim.run(device.as_mut(), &mut oracle).perf()
+            sim.run(&mut pool, &mut oracle).perf()
         };
         let raw = perf_of("uncompressed");
         let ibex = perf_of("ibex");
@@ -491,9 +806,9 @@ mod tests {
         let mix = Mix::parse("pr:1,mcf:1").unwrap();
         let plan = RunPlan::new(&mix, cfg.footprint_scale);
         let mut oracle = crate::workload::MixOracle::new(&plan, cfg.seed, AnalyticSizeModel);
-        let mut device = build_scheme(&cfg);
+        let mut pool = DevicePool::build(&cfg);
         let mut sim = HostSim::from_mix(&cfg, &mix);
-        let m = sim.run(device.as_mut(), &mut oracle);
+        let m = sim.run(&mut pool, &mut oracle);
         assert_eq!(m.tenants.len(), 2);
         let pr = &m.tenants[0];
         let mcf = &m.tenants[1];

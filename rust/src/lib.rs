@@ -25,6 +25,10 @@
 //! * [`sim`], [`mem`], [`cxl`], [`cache`], [`host`] are the substrate: a
 //!   request-level discrete-event simulator of the host cores, cache
 //!   hierarchy, CXL link and the expander's internal DDR5 channels.
+//! * [`topology`] shards the pooled address space across N device
+//!   instances (each behind its own CXL link) with a host-side
+//!   interleave policy — `devices = 1` reproduces the single-expander
+//!   system bit-identically.
 //! * [`workload`] generates the ten Table-2 workloads (access pattern +
 //!   page-content classes) and [`coordinator`] runs experiments/sweeps
 //!   and emits the paper's tables and figures.
@@ -55,4 +59,5 @@ pub mod rng;
 pub mod runtime;
 pub mod sim;
 pub mod stats;
+pub mod topology;
 pub mod workload;

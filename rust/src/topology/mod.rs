@@ -1,0 +1,325 @@
+//! Multi-device expander topology: N independent IBEX devices behind
+//! per-device CXL links, sharded by a host-side interleave policy.
+//!
+//! The paper evaluates one expander; hyperscale CXL deployments attach
+//! *pools* of expanders and interleave host pages across them, so the
+//! fleet-scale questions — per-device internal-bandwidth pressure under
+//! interleaving, aggregate effective capacity, per-device hot-set skew —
+//! need a topology layer:
+//!
+//! * [`InterleaveKind`] / [`Interleave`] — the host-side policy mapping
+//!   the pooled (device-spanning) OSPN space bijectively onto
+//!   `(device, local OSPN)` pairs. Page-granule round-robin spreads
+//!   consecutive pages across devices (bandwidth-oriented, the default);
+//!   contiguous carves the space into per-device capacity extents
+//!   (locality/blast-radius-oriented).
+//! * [`DevicePool`] — owns the N `(CxlLink, Box<dyn Scheme>)` instances.
+//!   Every device has its own link serialization, metadata cache,
+//!   promoted region, compression engines and internal DRAM channels;
+//!   nothing is shared, so per-device contention is modeled faithfully.
+//!
+//! `devices = 1` (the default) routes through the identity mapping and
+//! reproduces the historical single-device results bit-identically —
+//! asserted by `tests/topology.rs` against a re-implementation of the
+//! pre-refactor host loop.
+
+use std::fmt;
+
+use crate::config::SimConfig;
+use crate::cxl::CxlLink;
+use crate::expander::{build_scheme, DeviceStats, Scheme};
+
+/// Hard cap on pool width — far above the paper-scale sweeps (1→8) but
+/// low enough that a typo'd `devices=` fails loudly instead of
+/// allocating hundreds of DRAM models.
+pub const MAX_DEVICES: usize = 64;
+
+/// How the host shards the pooled page space across devices.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum InterleaveKind {
+    /// Page-granule round-robin: global page `g` lives on device
+    /// `g % N` at local page `g / N`. Spreads every tenant's footprint
+    /// (and its bandwidth demand) across all devices.
+    #[default]
+    PageRoundRobin,
+    /// Contiguous capacity extents: the pooled space is cut into N
+    /// equal runs; global page `g` lives on device `g / ceil(P/N)`.
+    /// Keeps each tenant's pages (and its hot set) on few devices.
+    Contiguous,
+}
+
+pub const ALL_INTERLEAVES: [InterleaveKind; 2] =
+    [InterleaveKind::PageRoundRobin, InterleaveKind::Contiguous];
+
+impl InterleaveKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            InterleaveKind::PageRoundRobin => "page",
+            InterleaveKind::Contiguous => "contiguous",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "page" | "rr" | "round_robin" | "round-robin" => InterleaveKind::PageRoundRobin,
+            "contiguous" | "linear" | "capacity" => InterleaveKind::Contiguous,
+            _ => return None,
+        })
+    }
+
+    /// Accepted spellings, for error messages (mirrors
+    /// `DemotionPolicy::parse`'s alias style).
+    pub fn accepted() -> &'static str {
+        "page|rr|round_robin|round-robin, contiguous|linear|capacity"
+    }
+}
+
+impl fmt::Display for InterleaveKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A resolved interleave: bijectively maps the pooled OSPN space onto
+/// per-device local pages (and back). `Copy` so request-path routing
+/// carries no indirection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interleave {
+    kind: InterleaveKind,
+    devices: u64,
+    /// Extent length for [`InterleaveKind::Contiguous`] (ceil(P/N));
+    /// unused by round-robin.
+    pages_per_device: u64,
+}
+
+impl Interleave {
+    /// Resolve `kind` over `devices` devices for a run spanning
+    /// `total_pages` pooled pages (contiguous extents are sized from
+    /// the run's footprint, not raw capacity, so every device gets an
+    /// equal share of the *used* space).
+    pub fn new(kind: InterleaveKind, devices: usize, total_pages: u64) -> Interleave {
+        assert!(
+            (1..=MAX_DEVICES).contains(&devices),
+            "devices must be in 1..={MAX_DEVICES}, got {devices}"
+        );
+        Interleave {
+            kind,
+            devices: devices as u64,
+            pages_per_device: total_pages.div_ceil(devices as u64).max(1),
+        }
+    }
+
+    pub fn kind(&self) -> InterleaveKind {
+        self.kind
+    }
+
+    pub fn devices(&self) -> usize {
+        self.devices as usize
+    }
+
+    /// Route a pooled OSPN to its `(device, local OSPN)` home.
+    #[inline]
+    pub fn route(&self, ospn: u64) -> (usize, u64) {
+        if self.devices == 1 {
+            return (0, ospn);
+        }
+        match self.kind {
+            InterleaveKind::PageRoundRobin => {
+                ((ospn % self.devices) as usize, ospn / self.devices)
+            }
+            InterleaveKind::Contiguous => {
+                // Pages past the nominal extent map onto the last device
+                // (footprints are planned inside the extent; clamping
+                // keeps arbitrary trace addresses routable).
+                let d = (ospn / self.pages_per_device).min(self.devices - 1);
+                (d as usize, ospn - d * self.pages_per_device)
+            }
+        }
+    }
+
+    /// Invert [`Interleave::route`]: the pooled OSPN of a device-local
+    /// page. `route(global(d, l)) == (d, l)` for every pair `route`
+    /// produces.
+    #[inline]
+    pub fn global(&self, device: usize, local: u64) -> u64 {
+        match self.kind {
+            InterleaveKind::PageRoundRobin => local * self.devices + device as u64,
+            InterleaveKind::Contiguous => device as u64 * self.pages_per_device + local,
+        }
+    }
+}
+
+/// One expander instance: a private CXL link plus the device model
+/// behind it.
+pub struct Device {
+    pub link: CxlLink,
+    pub scheme: Box<dyn Scheme>,
+}
+
+/// The pool of expander devices a run drives. Built from `cfg.devices`
+/// identical instances (each with `cfg.device_bytes` of capacity, so
+/// pooled capacity scales linearly with the pool width).
+pub struct DevicePool {
+    pub devices: Vec<Device>,
+}
+
+impl DevicePool {
+    /// `cfg.devices` instances of the configured scheme, each behind
+    /// its own link.
+    pub fn build(cfg: &SimConfig) -> DevicePool {
+        assert!(
+            (1..=MAX_DEVICES).contains(&cfg.devices),
+            "devices must be in 1..={MAX_DEVICES}, got {}",
+            cfg.devices
+        );
+        DevicePool {
+            devices: (0..cfg.devices)
+                .map(|_| Device {
+                    link: CxlLink::new(cfg.cxl),
+                    scheme: build_scheme(cfg),
+                })
+                .collect(),
+        }
+    }
+
+    /// Wrap a caller-built scheme as a single-device pool (ablations
+    /// that construct schemes directly, e.g. `Ibex::with_policy`).
+    pub fn single(cfg: &SimConfig, scheme: Box<dyn Scheme>) -> DevicePool {
+        DevicePool {
+            devices: vec![Device {
+                link: CxlLink::new(cfg.cxl),
+                scheme,
+            }],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Scheme label (all devices run the same scheme).
+    pub fn scheme_name(&self) -> &'static str {
+        self.devices[0].scheme.name()
+    }
+
+    /// Device statistics folded across the pool (counter sums, merged
+    /// latency histograms) — the aggregate row device reports print.
+    pub fn merged_stats(&self) -> DeviceStats {
+        let mut merged = DeviceStats::default();
+        for d in &self.devices {
+            merged.merge(d.scheme.stats());
+        }
+        merged
+    }
+
+    /// Internal memory accesses summed across devices, by traffic kind.
+    pub fn mem_breakdown(&self) -> [u64; 4] {
+        let mut sum = [0u64; 4];
+        for d in &self.devices {
+            let counts = d.scheme.mem().breakdown.counts;
+            for (s, c) in sum.iter_mut().zip(counts.iter()) {
+                *s += c;
+            }
+        }
+        sum
+    }
+
+    /// Total internal memory accesses summed across devices.
+    pub fn mem_total(&self) -> u64 {
+        self.devices
+            .iter()
+            .map(|d| d.scheme.mem().total_accesses())
+            .sum()
+    }
+
+    pub fn logical_bytes(&self) -> u64 {
+        self.devices.iter().map(|d| d.scheme.logical_bytes()).sum()
+    }
+
+    pub fn physical_bytes(&self) -> u64 {
+        self.devices.iter().map(|d| d.scheme.physical_bytes()).sum()
+    }
+
+    /// Pool-wide effective compression ratio (zero/untouched regions
+    /// excluded, like [`Scheme::compression_ratio`]).
+    pub fn compression_ratio(&self) -> f64 {
+        let p = self.physical_bytes();
+        if p == 0 {
+            1.0
+        } else {
+            self.logical_bytes() as f64 / p as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interleave_names_roundtrip() {
+        for k in ALL_INTERLEAVES {
+            assert_eq!(InterleaveKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(InterleaveKind::parse("rr"), Some(InterleaveKind::PageRoundRobin));
+        assert_eq!(InterleaveKind::parse("linear"), Some(InterleaveKind::Contiguous));
+        assert_eq!(InterleaveKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn single_device_is_identity() {
+        for kind in ALL_INTERLEAVES {
+            let il = Interleave::new(kind, 1, 1000);
+            for g in [0u64, 1, 63, 999, 123_456] {
+                assert_eq!(il.route(g), (0, g));
+                assert_eq!(il.global(0, g), g);
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_spreads_consecutive_pages() {
+        let il = Interleave::new(InterleaveKind::PageRoundRobin, 4, 1000);
+        assert_eq!(il.route(0), (0, 0));
+        assert_eq!(il.route(1), (1, 0));
+        assert_eq!(il.route(2), (2, 0));
+        assert_eq!(il.route(3), (3, 0));
+        assert_eq!(il.route(4), (0, 1));
+        assert_eq!(il.global(2, 7), 30);
+    }
+
+    #[test]
+    fn contiguous_carves_extents() {
+        let il = Interleave::new(InterleaveKind::Contiguous, 4, 100);
+        // ceil(100/4) = 25 pages per extent.
+        assert_eq!(il.route(0), (0, 0));
+        assert_eq!(il.route(24), (0, 24));
+        assert_eq!(il.route(25), (1, 0));
+        assert_eq!(il.route(99), (3, 24));
+        // Out-of-plan addresses clamp onto the last device.
+        assert_eq!(il.route(1000).0, 3);
+    }
+
+    #[test]
+    fn pool_builds_n_devices() {
+        let mut cfg = SimConfig::test_small();
+        cfg.devices = 3;
+        let pool = DevicePool::build(&cfg);
+        assert_eq!(pool.len(), 3);
+        assert_eq!(pool.scheme_name(), "ibex");
+        assert_eq!(pool.mem_total(), 0);
+        assert_eq!(pool.compression_ratio(), 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pool_rejects_zero_devices() {
+        let mut cfg = SimConfig::test_small();
+        cfg.devices = 0;
+        let _ = DevicePool::build(&cfg);
+    }
+}

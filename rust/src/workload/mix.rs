@@ -118,6 +118,13 @@ impl CoreSlot {
 
 /// A mix resolved against a footprint scale: per-core slots plus the
 /// per-tenant partition table.
+///
+/// The plan's OSPNs live in the *pooled* address space: with a
+/// multi-device topology (`SimConfig::devices > 1`) the host-side
+/// `topology::Interleave` maps each pooled page onto its
+/// `(device, local page)` home at request time, so tenant partitioning
+/// and device sharding compose without the generators knowing about
+/// either. `total_pages` sizes contiguous interleave extents.
 #[derive(Clone, Debug)]
 pub struct RunPlan {
     pub mix: Mix,

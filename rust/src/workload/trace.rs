@@ -8,6 +8,8 @@
 //! #mix pr:2,mcf:2
 //! #scale 0.0625
 //! #seed 29281773
+//! #devices 2
+//! #interleave page
 //! core 0
 //! R 1a2f40 7        <- R|W <hex byte address> <instruction gap>
 //! W 3c80 8
@@ -15,18 +17,24 @@
 //! ...
 //! ```
 //!
-//! The byte address encodes `(ospn << 12) | (line << 6)`; the gap is the
-//! instructions the core retires before issuing the request. The header
-//! pins everything replay needs to rebuild the run's geometry — the mix
-//! (content profiles + partition layout), the footprint scale and the
-//! content seed — so replaying a recorded synthetic run reproduces its
-//! metrics bit-identically under the same host/device configuration.
+//! The byte address encodes `(ospn << 12) | (line << 6)` in the *pooled*
+//! address space; the gap is the instructions the core retires before
+//! issuing the request. The header pins everything replay needs to
+//! rebuild the run's geometry — the mix (content profiles + partition
+//! layout), the footprint scale, the content seed and the device
+//! topology (`#devices`/`#interleave`, absent in pre-topology traces and
+//! defaulting to the classic single device) — so replaying a recorded
+//! synthetic run reproduces its metrics bit-identically under the same
+//! host/device configuration. Replay under a *different* topology is
+//! refused by `HostSim::from_trace` (the routing would silently
+//! diverge from the recorded run).
 
 use std::fmt::Write as _;
 use std::path::Path;
 use std::sync::Arc;
 
 use crate::config::SimConfig;
+use crate::topology::{InterleaveKind, MAX_DEVICES};
 use crate::workload::mix::{Mix, RunPlan};
 use crate::workload::{RequestSource, TimedRequest};
 
@@ -41,6 +49,11 @@ pub struct Trace {
     pub scale: f64,
     /// Content/oracle seed of the recorded run.
     pub seed: u64,
+    /// Device-pool width the run was recorded under (1 for pre-topology
+    /// traces, which carry no `#devices` line).
+    pub devices: usize,
+    /// Interleave policy of the recorded run.
+    pub interleave: InterleaveKind,
     /// One stream per core, in [`RunPlan`] slot order. `Arc` so replay
     /// sources share the streams instead of cloning them per run.
     pub per_core: Vec<Arc<Vec<TimedRequest>>>,
@@ -58,6 +71,8 @@ impl Trace {
         let _ = writeln!(out, "#mix {}", self.mix.canonical());
         let _ = writeln!(out, "#scale {}", self.scale);
         let _ = writeln!(out, "#seed {}", self.seed);
+        let _ = writeln!(out, "#devices {}", self.devices);
+        let _ = writeln!(out, "#interleave {}", self.interleave);
         for (ci, stream) in self.per_core.iter().enumerate() {
             let _ = writeln!(out, "core {ci}");
             for r in stream.iter() {
@@ -79,6 +94,8 @@ impl Trace {
         let mut mix: Option<Mix> = None;
         let mut scale: Option<f64> = None;
         let mut seed: Option<u64> = None;
+        let mut devices: usize = 1;
+        let mut interleave = InterleaveKind::default();
         let mut sections: Vec<Vec<TimedRequest>> = Vec::new();
         let mut current: Option<usize> = None;
         for (i, raw) in lines {
@@ -103,6 +120,24 @@ impl Trace {
                             .parse()
                             .map_err(|_| format!("line {lineno}: bad seed {v:?}"))?,
                     );
+                } else if let Some(v) = rest.strip_prefix("devices ") {
+                    devices = v
+                        .trim()
+                        .parse()
+                        .ok()
+                        .filter(|&n| (1..=MAX_DEVICES).contains(&n))
+                        .ok_or_else(|| {
+                            format!(
+                                "line {lineno}: bad device count {v:?} (1..={MAX_DEVICES})"
+                            )
+                        })?;
+                } else if let Some(v) = rest.strip_prefix("interleave ") {
+                    interleave = InterleaveKind::parse(v.trim()).ok_or_else(|| {
+                        format!(
+                            "line {lineno}: unknown interleave {v:?} (accepted: {})",
+                            InterleaveKind::accepted()
+                        )
+                    })?;
                 }
                 // Unknown # lines are comments (forward compatibility).
                 continue;
@@ -154,6 +189,8 @@ impl Trace {
         let trace = Trace {
             scale: scale.ok_or("trace missing `#scale` header")?,
             seed: seed.ok_or("trace missing `#seed` header")?,
+            devices,
+            interleave,
             per_core: sections.into_iter().map(Arc::new).collect(),
             mix,
         };
@@ -238,6 +275,8 @@ pub fn record(cfg: &SimConfig, mix: &Mix) -> Trace {
         mix: mix.clone(),
         scale: cfg.footprint_scale,
         seed: cfg.seed,
+        devices: cfg.devices,
+        interleave: cfg.interleave,
         per_core,
     }
 }
@@ -268,15 +307,38 @@ mod tests {
 
     #[test]
     fn serialize_parse_roundtrip_is_exact() {
-        let cfg = tiny_cfg();
+        let mut cfg = tiny_cfg();
+        cfg.devices = 2;
+        cfg.interleave = InterleaveKind::Contiguous;
         let mix = Mix::parse("parest:1,mcf:1").unwrap();
         let t = record(&cfg, &mix);
         let text = t.serialize();
+        assert!(text.contains("#devices 2"));
+        assert!(text.contains("#interleave contiguous"));
         let back = Trace::parse(&text).unwrap();
         assert_eq!(back.mix.canonical(), t.mix.canonical());
         assert_eq!(back.scale, t.scale);
         assert_eq!(back.seed, t.seed);
+        assert_eq!(back.devices, 2);
+        assert_eq!(back.interleave, InterleaveKind::Contiguous);
         assert_eq!(back.per_core, t.per_core);
+    }
+
+    #[test]
+    fn pre_topology_traces_default_to_one_device() {
+        // Traces written before the topology header existed carry no
+        // `#devices`/`#interleave` lines: they replay as the classic
+        // single-device system.
+        let hdr = "#ibex-trace v1\n#mix parest:1\n#scale 0.001\n#seed 1\n";
+        let t = Trace::parse(&format!("{hdr}core 0\nR 1040 7\n")).unwrap();
+        assert_eq!(t.devices, 1);
+        assert_eq!(t.interleave, InterleaveKind::PageRoundRobin);
+        // Malformed topology headers are rejected with a line number.
+        let bad = format!("{hdr}#devices 0\ncore 0\nR 0 1\n");
+        assert!(Trace::parse(&bad).is_err());
+        let bad = format!("{hdr}#interleave diagonal\ncore 0\nR 0 1\n");
+        let e = Trace::parse(&bad).unwrap_err();
+        assert!(e.contains("interleave"), "{e}");
     }
 
     #[test]

@@ -3,16 +3,16 @@
 
 use ibex::compress::AnalyticSizeModel;
 use ibex::config::SimConfig;
-use ibex::expander::build_scheme;
+use ibex::topology::DevicePool;
 use ibex::host::HostSim;
 use ibex::workload::{by_name, WorkloadOracle};
 
 fn run(cfg: &SimConfig, workload: &str) -> (f64, f64, u64) {
     let spec = by_name(workload).unwrap();
     let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
-    let mut dev = build_scheme(cfg);
+    let mut dev = DevicePool::build(cfg);
     let mut sim = HostSim::new(cfg, &spec);
-    let m = sim.run(dev.as_mut(), &mut oracle);
+    let m = sim.run(&mut dev, &mut oracle);
     (m.perf(), m.compression_ratio, m.mem_total)
 }
 
@@ -117,9 +117,9 @@ fn compaction_reduces_control_traffic() {
         // Small metadata cache so metadata misses actually happen.
         cfg.meta_cache_bytes = 4 * 1024;
         let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
-        let mut dev = build_scheme(&cfg);
+        let mut dev = DevicePool::build(&cfg);
         let mut sim = HostSim::new(&cfg, &spec);
-        sim.run(dev.as_mut(), &mut oracle).mem_by_kind[0]
+        sim.run(&mut dev, &mut oracle).mem_by_kind[0]
     };
     let compacted = run_ctl(true);
     let packed = run_ctl(false);

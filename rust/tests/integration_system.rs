@@ -5,7 +5,7 @@
 use ibex::compress::AnalyticSizeModel;
 use ibex::config::{SchemeKind, SimConfig, ALL_SCHEMES};
 use ibex::coordinator::{run_one, Job};
-use ibex::expander::build_scheme;
+use ibex::topology::DevicePool;
 use ibex::host::HostSim;
 use ibex::workload::{by_name, WorkloadOracle};
 
@@ -29,9 +29,9 @@ fn all_schemes_run_all_sane() {
         cfg.scheme = scheme;
         let spec = by_name("omnetpp").unwrap();
         let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
-        let mut dev = build_scheme(&cfg);
+        let mut dev = DevicePool::build(&cfg);
         let mut sim = HostSim::new(&cfg, &spec);
-        let m = sim.run(dev.as_mut(), &mut oracle);
+        let m = sim.run(&mut dev, &mut oracle);
         assert!(m.elapsed_ps > 0, "{scheme}: no time elapsed");
         assert!(m.requests > 1000, "{scheme}: too few requests");
         if scheme != SchemeKind::Uncompressed {
@@ -83,9 +83,9 @@ fn shadow_removes_demotion_traffic_for_readonly() {
         cfg.promoted_bytes = 1 << 20; // force thrash
         cfg.ibex.shadow = shadow;
         let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
-        let mut dev = build_scheme(&cfg);
+        let mut dev = DevicePool::build(&cfg);
         let mut sim = HostSim::new(&cfg, &spec);
-        sim.run(dev.as_mut(), &mut oracle).mem_by_kind[2] // demotion kind
+        sim.run(&mut dev, &mut oracle).mem_by_kind[2] // demotion kind
     };
     let with_shadow = run(true);
     let without = run(false);
@@ -102,9 +102,9 @@ fn unlimited_internal_bw_is_never_slower() {
         let mut cfg = quick_cfg();
         cfg.unlimited_internal_bw = unlimited;
         let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
-        let mut dev = build_scheme(&cfg);
+        let mut dev = DevicePool::build(&cfg);
         let mut sim = HostSim::new(&cfg, &spec);
-        let m = sim.run(dev.as_mut(), &mut oracle);
+        let m = sim.run(&mut dev, &mut oracle);
         m.perf()
     };
     let ideal = run(true);
@@ -122,9 +122,9 @@ fn higher_cxl_latency_hurts_absolute_perf() {
         let mut cfg = quick_cfg();
         cfg.cxl.round_trip_ns = rt;
         let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
-        let mut dev = build_scheme(&cfg);
+        let mut dev = DevicePool::build(&cfg);
         let mut sim = HostSim::new(&cfg, &spec);
-        sim.run(dev.as_mut(), &mut oracle).perf()
+        sim.run(&mut dev, &mut oracle).perf()
     };
     let fast = run(70);
     let slow = run(400);
@@ -138,9 +138,9 @@ fn bigger_promoted_region_helps_thrashers() {
         let mut cfg = quick_cfg();
         cfg.promoted_bytes = kb << 10;
         let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
-        let mut dev = build_scheme(&cfg);
+        let mut dev = DevicePool::build(&cfg);
         let mut sim = HostSim::new(&cfg, &spec);
-        sim.run(dev.as_mut(), &mut oracle).perf()
+        sim.run(&mut dev, &mut oracle).perf()
     };
     let small = run(128);
     let large = run(2048);
@@ -157,9 +157,9 @@ fn dylect_pays_more_control_traffic_than_tmcc() {
         let mut cfg = quick_cfg();
         cfg.set("scheme", scheme).unwrap();
         let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
-        let mut dev = build_scheme(&cfg);
+        let mut dev = DevicePool::build(&cfg);
         let mut sim = HostSim::new(&cfg, &spec);
-        sim.run(dev.as_mut(), &mut oracle).mem_by_kind[0]
+        sim.run(&mut dev, &mut oracle).mem_by_kind[0]
     };
     let tmcc = run("tmcc");
     let dylect = run("dylect");

@@ -1,0 +1,391 @@
+//! Multi-device topology: the contracts the `topology` refactor must
+//! keep.
+//!
+//! * `devices = 1` is **bit-identical** to the pre-refactor
+//!   single-device host. The pre-refactor request loop (one `CxlLink`,
+//!   one scheme, no routing) is re-implemented here from the public
+//!   API, so the old semantics stay pinned in code rather than in
+//!   golden numbers.
+//! * The interleave is a bijection: every pooled page routes to exactly
+//!   one `(device, local)` home and back.
+//! * Multi-device record→replay is bit-deterministic, and replaying a
+//!   trace under a different topology fails cleanly.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use ibex::compress::AnalyticSizeModel;
+use ibex::config::SimConfig;
+use ibex::coordinator::{run_one, Job};
+use ibex::cxl::CxlLink;
+use ibex::expander::{build_scheme, ContentOracle, Scheme};
+use ibex::host::HostSim;
+use ibex::rng::Pcg64;
+use ibex::sim::CORE_CLK_PS;
+use ibex::topology::{DevicePool, Interleave, InterleaveKind, ALL_INTERLEAVES};
+use ibex::workload::mix::{Mix, RunPlan};
+use ibex::workload::{by_name, trace, RequestSource, WorkloadOracle, WorkloadSpec};
+
+fn quick_cfg() -> SimConfig {
+    let mut c = SimConfig::test_small();
+    c.cores = 2;
+    c.instructions = 60_000;
+    c.warmup_instructions = 6_000;
+    // Bench-scale working-set : promoted ratios at test size so the
+    // thrashing regime (promotions/demotions) is exercised too.
+    c.footprint_scale = 1.0 / 256.0;
+    c.promoted_bytes = 256 << 10;
+    c.meta_cache_bytes = 4 * 1024;
+    c
+}
+
+/// Everything the regression compares, all integer/bit exact.
+#[derive(Debug, PartialEq, Eq)]
+struct Fingerprint {
+    elapsed_ps: u64,
+    instructions: u64,
+    requests: u64,
+    mem_by_kind: [u64; 4],
+    mem_total: u64,
+    promotions: u64,
+    demotions: u64,
+    ratio_bits: u64,
+}
+
+struct LegacyCore {
+    t: u64,
+    outstanding: BinaryHeap<Reverse<u64>>,
+    src: Box<dyn RequestSource>,
+    dep_rng: Pcg64,
+    insts: u64,
+    reqs: u64,
+}
+
+/// The pre-refactor `HostSim::phase` loop, verbatim: single link,
+/// single device, OSPNs passed through unrouted.
+#[allow(clippy::too_many_arguments)]
+fn legacy_phase(
+    cores: &mut [LegacyCore],
+    device: &mut dyn Scheme,
+    oracle: &mut dyn ContentOracle,
+    link: &mut CxlLink,
+    insts_target: u64,
+    ipc: u64,
+    mshrs: usize,
+    dep_fraction: f64,
+) {
+    loop {
+        let Some(ci) = cores
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.insts < insts_target)
+            .min_by_key(|(_, c)| c.t)
+            .map(|(i, _)| i)
+        else {
+            break;
+        };
+        let core = &mut cores[ci];
+        let tr = core.src.next();
+        core.insts = core.insts.saturating_add(tr.inst_gap);
+        core.t += tr.inst_gap.saturating_mul(CORE_CLK_PS) / ipc;
+        while let Some(&Reverse(done)) = core.outstanding.peek() {
+            if done <= core.t {
+                core.outstanding.pop();
+            } else {
+                break;
+            }
+        }
+        if core.outstanding.len() >= mshrs {
+            if let Some(Reverse(done)) = core.outstanding.pop() {
+                core.t = core.t.max(done);
+            }
+        }
+        core.reqs += 1;
+        let t_issue = core.t;
+        let at_device = link.ingress(t_issue, 1);
+        let ready = device.access(at_device, tr.ospn, tr.line, tr.write, oracle);
+        let done = link.egress(ready, 1);
+        if !tr.write && core.dep_rng.chance(dep_fraction) {
+            core.t = core.t.max(done);
+        } else {
+            core.outstanding.push(Reverse(done));
+        }
+    }
+    for core in cores.iter_mut() {
+        if let Some(last) = core.outstanding.iter().map(|r| r.0).max() {
+            core.t = core.t.max(last);
+        }
+        core.outstanding.clear();
+    }
+}
+
+/// The pre-refactor `HostSim::run`: populate, warmup, snapshot,
+/// measured phase, snapshot subtraction.
+fn legacy_run(cfg: &SimConfig, spec: &WorkloadSpec) -> Fingerprint {
+    let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
+    let mut device = build_scheme(cfg);
+    let mix = Mix::homogeneous(spec.clone(), cfg.cores);
+    let plan = RunPlan::new(&mix, cfg.footprint_scale);
+    let mut link = CxlLink::new(cfg.cxl);
+    let mut cores: Vec<LegacyCore> = plan
+        .synthetic_sources(cfg.seed, cfg.read_fraction_override)
+        .into_iter()
+        .enumerate()
+        .map(|(ci, src)| LegacyCore {
+            t: 0,
+            outstanding: BinaryHeap::new(),
+            src,
+            dep_rng: Pcg64::from_label(cfg.seed, &["dep", &ci.to_string()]),
+            insts: 0,
+            reqs: 0,
+        })
+        .collect();
+
+    for &(base, pages, _copies) in &plan.regions {
+        for p in 0..pages {
+            device.populate(base + p, oracle.sizes(base + p));
+        }
+    }
+
+    let ipc = cfg.ipc.max(1);
+    legacy_phase(
+        &mut cores,
+        device.as_mut(),
+        &mut oracle,
+        &mut link,
+        cfg.warmup_instructions,
+        ipc,
+        cfg.mshrs_per_core,
+        cfg.dep_fraction,
+    );
+    let warm_kind = device.mem().breakdown.counts;
+    let warm_total = device.mem().total_accesses();
+    let warm: Vec<(u64, u64, u64)> = cores.iter().map(|c| (c.insts, c.reqs, c.t)).collect();
+    legacy_phase(
+        &mut cores,
+        device.as_mut(),
+        &mut oracle,
+        &mut link,
+        cfg.warmup_instructions + cfg.instructions,
+        ipc,
+        cfg.mshrs_per_core,
+        cfg.dep_fraction,
+    );
+
+    let kinds = device.mem().breakdown.counts;
+    let warm_elapsed = warm.iter().map(|&(_, _, t)| t).max().unwrap_or(0);
+    Fingerprint {
+        elapsed_ps: cores.iter().map(|c| c.t).max().unwrap_or(0) - warm_elapsed,
+        instructions: cores
+            .iter()
+            .zip(&warm)
+            .map(|(c, &(wi, _, _))| c.insts - wi)
+            .sum(),
+        requests: cores
+            .iter()
+            .zip(&warm)
+            .map(|(c, &(_, wr, _))| c.reqs - wr)
+            .sum(),
+        mem_by_kind: [
+            kinds[0] - warm_kind[0],
+            kinds[1] - warm_kind[1],
+            kinds[2] - warm_kind[2],
+            kinds[3] - warm_kind[3],
+        ],
+        mem_total: device.mem().total_accesses() - warm_total,
+        promotions: device.stats().promotions,
+        demotions: device.stats().demotions,
+        ratio_bits: device.compression_ratio().to_bits(),
+    }
+}
+
+/// The refactored path at `devices = 1`.
+fn topology_run(cfg: &SimConfig, spec: &WorkloadSpec) -> Fingerprint {
+    let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
+    let mut pool = DevicePool::build(cfg);
+    let mut sim = HostSim::new(cfg, spec);
+    let m = sim.run(&mut pool, &mut oracle);
+    let s = pool.merged_stats();
+    Fingerprint {
+        elapsed_ps: m.elapsed_ps,
+        instructions: m.instructions,
+        requests: m.requests,
+        mem_by_kind: m.mem_by_kind,
+        mem_total: m.mem_total,
+        promotions: s.promotions,
+        demotions: s.demotions,
+        ratio_bits: m.compression_ratio.to_bits(),
+    }
+}
+
+#[test]
+fn devices1_is_bit_identical_to_prerefactor_path() {
+    // Cover the well-behaved and the thrashing (promotion/demotion)
+    // regimes, compressed and uncompressed devices.
+    for (workload, scheme) in [("parest", "ibex"), ("pr", "ibex"), ("pr", "uncompressed")] {
+        let mut cfg = quick_cfg();
+        cfg.set("scheme", scheme).unwrap();
+        let spec = by_name(workload).unwrap();
+        let legacy = legacy_run(&cfg, &spec);
+        let new = topology_run(&cfg, &spec);
+        assert_eq!(legacy, new, "{workload}/{scheme} diverged from legacy");
+        assert!(new.requests > 0 && new.elapsed_ps > 0);
+    }
+}
+
+#[test]
+fn devices1_identity_holds_for_both_interleaves() {
+    // With one device every interleave is the identity map, so the
+    // mode must not perturb a single-device run.
+    let spec = by_name("parest").unwrap();
+    let mut page = quick_cfg();
+    page.set("interleave", "page").unwrap();
+    let mut contig = quick_cfg();
+    contig.set("interleave", "contiguous").unwrap();
+    assert_eq!(topology_run(&page, &spec), topology_run(&contig, &spec));
+}
+
+#[test]
+fn interleave_is_a_bijection() {
+    for kind in ALL_INTERLEAVES {
+        for devices in [1usize, 2, 3, 4, 7, 8] {
+            for total in [1u64, 7, 64, 1000] {
+                let il = Interleave::new(kind, devices, total);
+                let mut seen = std::collections::HashSet::new();
+                for g in 0..total {
+                    let (d, l) = il.route(g);
+                    assert!(d < devices, "{kind}/{devices}/{total}: device {d} out of range");
+                    assert!(
+                        seen.insert((d, l)),
+                        "{kind}/{devices}/{total}: {g} collides at ({d},{l})"
+                    );
+                    assert_eq!(
+                        il.global(d, l),
+                        g,
+                        "{kind}/{devices}/{total}: inverse broken at {g}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn page_interleave_spreads_a_hot_set() {
+    // Under page round-robin a Zipf-hot footprint spreads across the
+    // pool: every device serves a meaningful share and internal traffic
+    // lands on all devices.
+    let mut cfg = quick_cfg();
+    cfg.set("devices", "4").unwrap();
+    let r = run_one(&Job::new("x4", cfg, "pr"));
+    assert_eq!(r.metrics.devices.len(), 4);
+    let total: u64 = r.metrics.devices.iter().map(|d| d.requests).sum();
+    assert_eq!(total, r.metrics.requests);
+    for d in &r.metrics.devices {
+        assert!(
+            d.request_share(total) > 0.10,
+            "device {:?} starved under page interleave: {:?}",
+            d.device,
+            d.requests
+        );
+        assert!(
+            d.mem_accesses > 0,
+            "device {:?} saw no internal traffic",
+            d.device
+        );
+    }
+}
+
+#[test]
+fn contiguous_interleave_keeps_extents_disjoint() {
+    // Contiguous extents keep each page on one device; the pooled
+    // traffic still adds up and all capacity-bearing devices hold data.
+    let mut cfg = quick_cfg();
+    cfg.set("devices", "2").unwrap();
+    cfg.set("interleave", "contiguous").unwrap();
+    let r = run_one(&Job::new("x2", cfg, "omnetpp"));
+    assert_eq!(r.metrics.devices.len(), 2);
+    let total: u64 = r.metrics.devices.iter().map(|d| d.requests).sum();
+    assert_eq!(total, r.metrics.requests);
+    let resident: u64 = r.metrics.devices.iter().map(|d| d.physical_bytes).sum();
+    assert!(resident > 0);
+}
+
+#[test]
+fn multi_device_record_replay_is_bit_identical() {
+    let mut cfg = quick_cfg();
+    cfg.set("devices", "2").unwrap();
+    let synth = run_one(&Job::new("synth", cfg.clone(), "mcf"));
+
+    let mix = Mix::homogeneous(by_name("mcf").unwrap(), cfg.cores);
+    let t = trace::record(&cfg, &mix);
+    assert_eq!(t.devices, 2);
+    let path = std::env::temp_dir().join(format!(
+        "ibex_topology_replay_{}.trace",
+        std::process::id()
+    ));
+    t.save(&path).unwrap();
+
+    let mut rcfg = cfg.clone();
+    rcfg.trace = path.to_string_lossy().into_owned();
+    let replay = run_one(&Job::new("replay", rcfg, "trace"));
+    let _ = std::fs::remove_file(&path);
+
+    assert_eq!(synth.metrics.elapsed_ps, replay.metrics.elapsed_ps);
+    assert_eq!(synth.metrics.mem_by_kind, replay.metrics.mem_by_kind);
+    assert_eq!(synth.metrics.requests, replay.metrics.requests);
+    // Per-device routing replays identically too.
+    assert_eq!(synth.metrics.devices.len(), replay.metrics.devices.len());
+    for (a, b) in synth.metrics.devices.iter().zip(&replay.metrics.devices) {
+        assert_eq!(a.requests, b.requests, "device {:?} diverged", a.device);
+        assert_eq!(a.mem_accesses, b.mem_accesses, "device {:?} diverged", a.device);
+    }
+}
+
+#[test]
+fn replay_under_a_different_topology_fails_cleanly() {
+    let mut cfg = quick_cfg();
+    cfg.set("devices", "2").unwrap();
+    let mix = Mix::homogeneous(by_name("parest").unwrap(), cfg.cores);
+    let t = trace::record(&cfg, &mix);
+
+    // Fewer devices than recorded.
+    let mut one = cfg.clone();
+    one.set("devices", "1").unwrap();
+    let e = HostSim::from_trace(&one, &t).err().expect("must refuse");
+    assert!(e.contains("topology"), "{e}");
+    assert!(e.contains("devices=2"), "{e}");
+
+    // Same width, different interleave.
+    let mut contig = cfg.clone();
+    contig.set("interleave", "contiguous").unwrap();
+    let e = HostSim::from_trace(&contig, &t).err().expect("must refuse");
+    assert!(e.contains("interleave"), "{e}");
+
+    // Matching topology is accepted.
+    assert!(HostSim::from_trace(&cfg, &t).is_ok());
+    assert_eq!(t.interleave, InterleaveKind::PageRoundRobin);
+}
+
+#[test]
+fn pooled_capacity_scales_with_devices() {
+    // N devices back N × device_bytes: the same footprint occupies the
+    // same pooled physical bytes, spread over more devices, and the
+    // pool-wide compression ratio stays in a sane band.
+    let spec = "omnetpp";
+    let mut base = quick_cfg();
+    base.set("devices", "1").unwrap();
+    let one = run_one(&Job::new("d1", base.clone(), spec));
+    let mut four = base.clone();
+    four.set("devices", "4").unwrap();
+    let quad = run_one(&Job::new("d4", four, spec));
+    let phys1: u64 = one.metrics.devices.iter().map(|d| d.physical_bytes).sum();
+    let phys4: u64 = quad.metrics.devices.iter().map(|d| d.physical_bytes).sum();
+    assert!(phys1 > 0 && phys4 > 0);
+    // Same logical data, so pooled residency should be comparable
+    // (loose band — per-device promoted regions and shadows differ).
+    let lo = phys1.min(phys4) as f64;
+    let hi = phys1.max(phys4) as f64;
+    assert!(hi / lo < 3.0, "pooled residency diverged: {phys1} vs {phys4}");
+    assert!(quad.metrics.compression_ratio > 0.5);
+}
