@@ -12,6 +12,7 @@ use ibex::compress::AnalyticSizeModel;
 use ibex::expander::ibex::{DemotionPolicy, Ibex};
 use ibex::host::HostSim;
 use ibex::stats::Table;
+use ibex::telemetry::report::BenchReport;
 use ibex::topology::DevicePool;
 use ibex::workload::{by_name, WorkloadOracle};
 
@@ -75,8 +76,20 @@ fn main() {
         .zip(&lru_ctl)
         .map(|(c, l)| 1.0 - c / l.max(1.0))
         .collect();
-    println!(
-        "\nsecond-chance control-traffic savings vs linked-list LRU: {:.1}% avg (paper: 61%)",
-        ibex::stats::mean(&saved) * 100.0
-    );
+    let mut report = BenchReport::new("abl_demotion_policy");
+    report.table(&t);
+    // Guarded aggregation: a filtered-out workload list must report
+    // "no results", not panic inside `mean`.
+    match ibex::stats::try_mean(&saved) {
+        Some(avg) => {
+            report.metric("second_chance_ctl_savings_vs_lru", avg);
+            println!(
+                "\nsecond-chance control-traffic savings vs linked-list LRU: \
+                 {:.1}% avg (paper: 61%)",
+                avg * 100.0
+            );
+        }
+        None => println!("\nno results: second-chance/LRU comparison had no runs"),
+    }
+    report.write();
 }

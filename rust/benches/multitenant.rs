@@ -10,6 +10,7 @@ mod common;
 
 use ibex::coordinator::{run_many, Job};
 use ibex::stats::Table;
+use ibex::telemetry::report::BenchReport;
 
 const MIXES: [&str; 4] = [
     "omnetpp:4",
@@ -73,6 +74,24 @@ fn main() {
         }
     }
     tt.emit();
+
+    // BENCH-style JSON next to the CSVs: the headline metric per mix is
+    // ibex's aggregate perf relative to the uncompressed baseline.
+    let mut report = BenchReport::new("multitenant");
+    for (mi, mix) in MIXES.iter().enumerate() {
+        let per_scheme = &results[mi * SCHEMES.len()..(mi + 1) * SCHEMES.len()];
+        let perf_of = |scheme: &str| {
+            per_scheme
+                .iter()
+                .find(|r| r.scheme == scheme)
+                .map(|r| r.metrics.perf())
+        };
+        if let (Some(ibex), Some(raw)) = (perf_of("ibex"), perf_of("uncompressed")) {
+            report.metric(&format!("{mix}_ibex_vs_uncompressed"), ibex / raw);
+        }
+    }
+    report.table(&t).table(&tt).write();
+
     println!("\nanchor: tenant rows expose who pays for promoted-region churn —");
     println!("a thrashing co-tenant inflates its neighbours' p99, not just its own");
 }

@@ -18,6 +18,7 @@ mod common;
 use ibex::coordinator::{run_many, Job};
 use ibex::host::DeviceLaneMetrics;
 use ibex::stats::Table;
+use ibex::telemetry::report::BenchReport;
 
 const DEVICES: [usize; 4] = [1, 2, 4, 8];
 const WORKLOADS: [&str; 3] = ["parest", "omnetpp", "pr"];
@@ -38,6 +39,7 @@ fn main() {
     }
     let results = run_many(jobs);
 
+    let mut report = BenchReport::new("scaleout");
     let mut t = Table::new(
         "Scale-out — aggregate performance",
         &[
@@ -53,12 +55,16 @@ fn main() {
                 let r = &results[i];
                 i += 1;
                 let agg = DeviceLaneMetrics::aggregate(&r.metrics.devices);
+                let speedup = r.metrics.perf() / base;
+                if n == *DEVICES.last().unwrap() {
+                    report.metric(&format!("{w}_{il}_x{n}_speedup"), speedup);
+                }
                 t.row(vec![
                     w.to_string(),
                     il.to_string(),
                     n.to_string(),
                     format!("{:.4}", r.metrics.perf()),
-                    format!("{:.2}x", r.metrics.perf() / base),
+                    format!("{speedup:.2}x"),
                     agg.p99_latency_ns.to_string(),
                     format!("{:.3}", r.metrics.compression_ratio),
                     r.metrics.mem_total.to_string(),
@@ -102,6 +108,7 @@ fn main() {
         }
     }
     ut.emit();
+    report.table(&t).table(&ut).write();
 
     println!("\nanchor: page interleave evens request share across the pool while");
     println!("contiguous extents concentrate each hot set — per-device link and");

@@ -17,6 +17,7 @@ use crate::config::SimConfig;
 use crate::coordinator::{run_many, run_one, Job, JobResult};
 use crate::host::DeviceLaneMetrics;
 use crate::stats::Table;
+use crate::telemetry::report as telemetry_report;
 use crate::workload::{self, mix::Mix, trace};
 
 /// Parsed command line.
@@ -37,6 +38,11 @@ pub struct Cli {
     pub devices: Option<String>,
     /// `--interleave MODE` — pooled-address-space sharding policy.
     pub interleave: Option<String>,
+    /// `--json FILE` — write a machine-readable run report there.
+    pub json: Option<String>,
+    /// `--sample-every N[ns|insts]` — telemetry epoch length (plain N
+    /// = retired instructions; an `ns` suffix switches to sim-time).
+    pub sample_every: Option<String>,
 }
 
 impl Cli {
@@ -52,6 +58,8 @@ impl Cli {
             out: None,
             devices: None,
             interleave: None,
+            json: None,
+            sample_every: None,
         };
         let mut it = args.iter().skip(1);
         while let Some(arg) = it.next() {
@@ -81,6 +89,8 @@ impl Cli {
                 "--out" | "-o" => cli.out = Some(take(&mut it, arg)?),
                 "--devices" | "-d" => cli.devices = Some(take(&mut it, arg)?),
                 "--interleave" | "-i" => cli.interleave = Some(take(&mut it, arg)?),
+                "--json" | "-j" => cli.json = Some(take(&mut it, arg)?),
+                "--sample-every" => cli.sample_every = Some(take(&mut it, arg)?),
                 _ if arg.contains('=') => {
                     let (k, v) = arg.split_once('=').unwrap();
                     cli.overrides.push((k.to_string(), v.to_string()));
@@ -112,6 +122,20 @@ impl Cli {
         if let Some(i) = &self.interleave {
             cfg.set("interleave", i)?;
         }
+        if let Some(se) = &self.sample_every {
+            // `N` (instructions), `Nns` (sim-time), `Ninsts` (explicit).
+            let (num, unit) = if let Some(n) = se.strip_suffix("insts") {
+                (n, Some("insts"))
+            } else if let Some(n) = se.strip_suffix("ns") {
+                (n, Some("ns"))
+            } else {
+                (se.as_str(), None)
+            };
+            cfg.set("sample_every", num.trim())?;
+            if let Some(u) = unit {
+                cfg.set("sample_unit", u)?;
+            }
+        }
         Ok(cfg)
     }
 }
@@ -133,6 +157,11 @@ USAGE:
                                                recorded topology — explicit
                                                --devices/--interleave must
                                                match the trace header)
+  ibex run    --json FILE [--sample-every N]   also write a versioned machine-
+                                               readable JSON run report (config
+                                               manifest, final + steady-state
+                                               metrics, per-tenant/per-device
+                                               rows, epoch time-series)
   ibex sweep  [--workloads W1,W2,..] [--schemes S1,S2,..] [key=value ...]
   ibex record (--workload W | --mix ..) --out FILE [key=value ...]
                                                dump the synthetic request
@@ -147,12 +176,23 @@ TOPOLOGY:  --devices N (1..=64, default 1 — the paper's single expander);
            config keys too. devices=1 is bit-identical to the classic system;
            N>1 adds a per-device results table (requests, latency, peak
            outstanding misses, internal accesses, link utilization).
+TELEMETRY: --sample-every N (plain N = retired instructions summed over
+           cores; 'Nns' = simulated nanoseconds; sample_every=/sample_unit=
+           config keys) samples per-device + per-tenant counter deltas at
+           epoch boundaries. Sampling never perturbs results (final metrics
+           stay bit-identical) and costs nothing when off. --json FILE emits
+           report schema v1; its steady_state block trims warmup and any
+           initial transient: steady state starts at the first measured
+           epoch whose internal-access count is within 25% of the median
+           over the final half of the series (fallback: the final half).
+           p99 values are log2-bucket upper bounds, not exact measurements.
 SCHEMES:   uncompressed ibex tmcc dylect mxt dmc compresso
 BACKENDS:  backend=analytic (default, pure Rust) | pjrt (needs --features pjrt
            and `make artifacts`) | auto; artifact=PATH overrides the HLO path
 KEYS:      see `ibex config-dump` (e.g. promoted_mb=512, cxl.round_trip_ns=70,
            ibex.shadow=true, instructions=20000000, footprint_scale=0.0625,
-           mix=pr:2,mcf:2, trace=run.trace, devices=4, interleave=page)
+           mix=pr:2,mcf:2, trace=run.trace, devices=4, interleave=page,
+           sample_every=1000000, sample_unit=insts)
 ";
 
 /// Entry point used by `main.rs`. Returns the process exit code.
@@ -290,6 +330,12 @@ fn run_cmd(cli: &Cli) -> i32 {
             }
         }
     }
+    if jobs.is_empty() {
+        // Empty workload/scheme lists would previously fall through to
+        // empty-slice panics in the aggregation math; report cleanly.
+        eprintln!("error: no jobs to run (empty --workloads/--schemes?); no results");
+        return 2;
+    }
     // Every multi-job invocation goes through the worker pool (results
     // stay order-preserving and deterministic).
     let results = if jobs.len() > 1 {
@@ -361,6 +407,22 @@ fn run_cmd(cli: &Cli) -> i32 {
             }
         }
         dt.emit();
+    }
+
+    // Machine-readable run report (config manifest, final/steady-state
+    // metrics, per-tenant/per-device rows, epoch time-series).
+    if let Some(path) = &cli.json {
+        if base.sample_every == 0 {
+            eprintln!(
+                "note: --json without --sample-every writes final metrics only \
+                 (no epoch time-series)"
+            );
+        }
+        if let Err(e) = telemetry_report::write_report(Path::new(path), &base, &results) {
+            eprintln!("error: {e}");
+            return 2;
+        }
+        println!("\nwrote JSON run report (schema v1) to {path}");
     }
     0
 }
@@ -509,6 +571,34 @@ mod tests {
 
         let cli = Cli::parse(&s(&["run", "--trace", "x.trace"])).unwrap();
         assert_eq!(cli.config().unwrap().trace, "x.trace");
+    }
+
+    #[test]
+    fn parse_telemetry_flags() {
+        let cli = Cli::parse(&s(&["run", "--json", "out.json"])).unwrap();
+        assert_eq!(cli.json.as_deref(), Some("out.json"));
+        assert_eq!(cli.config().unwrap().sample_every, 0);
+
+        // Plain N = instruction granularity.
+        let cli = Cli::parse(&s(&["run", "--sample-every", "1000000"])).unwrap();
+        let cfg = cli.config().unwrap();
+        assert_eq!(cfg.sample_every, 1_000_000);
+        assert_eq!(cfg.sample_unit, crate::telemetry::SampleUnit::Instructions);
+
+        // ns suffix switches to sim-time epochs.
+        let cli = Cli::parse(&s(&["run", "--sample-every", "500000ns"])).unwrap();
+        let cfg = cli.config().unwrap();
+        assert_eq!(cfg.sample_every, 500_000);
+        assert_eq!(cfg.sample_unit, crate::telemetry::SampleUnit::Nanos);
+
+        // Explicit insts suffix (must not be eaten by the ns check).
+        let cli = Cli::parse(&s(&["run", "--sample-every", "2000insts"])).unwrap();
+        let cfg = cli.config().unwrap();
+        assert_eq!(cfg.sample_every, 2000);
+        assert_eq!(cfg.sample_unit, crate::telemetry::SampleUnit::Instructions);
+
+        let bad = Cli::parse(&s(&["run", "--sample-every", "soon"])).unwrap();
+        assert!(bad.config().is_err());
     }
 
     #[test]

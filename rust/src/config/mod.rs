@@ -10,6 +10,7 @@ use std::path::Path;
 
 use crate::cxl::CxlConfig;
 use crate::mem::DramTiming;
+use crate::telemetry::SampleUnit;
 use crate::topology::{InterleaveKind, MAX_DEVICES};
 
 /// Which device architecture handles requests.
@@ -236,6 +237,16 @@ pub struct SimConfig {
     /// header.
     pub trace: String,
 
+    // ---- telemetry ----
+    /// Epoch length for the telemetry sampler (`crate::telemetry`):
+    /// sample per-device/per-tenant counters every N `sample_unit`s.
+    /// 0 (the default) disables sampling entirely — the request path
+    /// then performs no snapshot reads at all.
+    pub sample_every: u64,
+    /// Granularity of `sample_every`: retired instructions (summed over
+    /// cores, the default) or simulated nanoseconds.
+    pub sample_unit: SampleUnit,
+
     pub seed: u64,
 }
 
@@ -274,6 +285,8 @@ impl Default for SimConfig {
             read_fraction_override: f64::NAN,
             mix: String::new(),
             trace: String::new(),
+            sample_every: 0,
+            sample_unit: SampleUnit::default(),
             seed: DEFAULT_SEED,
         }
     }
@@ -368,6 +381,15 @@ impl SimConfig {
                 self.mix = value.to_string();
             }
             "trace" => self.trace = value.to_string(),
+            "sample_every" => self.sample_every = p(value, key)?,
+            "sample_unit" => {
+                self.sample_unit = SampleUnit::parse(value).ok_or_else(|| {
+                    format!(
+                        "unknown sample unit {value:?} (accepted: {})",
+                        SampleUnit::accepted()
+                    )
+                })?
+            }
             "seed" => self.seed = p(value, key)?,
             _ => return Err(format!("unknown config key {key:?}")),
         }
@@ -446,6 +468,8 @@ impl SimConfig {
         put("footprint_scale", format!("{}", self.footprint_scale));
         put("mix", self.mix.clone());
         put("trace", self.trace.clone());
+        put("sample_every", self.sample_every.to_string());
+        put("sample_unit", self.sample_unit.to_string());
         put("seed", self.seed.to_string());
         m
     }
@@ -529,6 +553,25 @@ mod tests {
         let d = c.dump();
         assert_eq!(d["devices"], "4");
         assert_eq!(d["interleave"], "page");
+    }
+
+    #[test]
+    fn telemetry_keys_validate_and_dump() {
+        let mut c = SimConfig::default();
+        assert_eq!(c.sample_every, 0, "sampling is off by default");
+        assert_eq!(c.sample_unit, SampleUnit::Instructions);
+        c.set("sample_every", "1000000").unwrap();
+        c.set("sample_unit", "ns").unwrap();
+        assert_eq!(c.sample_every, 1_000_000);
+        assert_eq!(c.sample_unit, SampleUnit::Nanos);
+        c.set("sample_unit", "instructions").unwrap();
+        assert_eq!(c.sample_unit, SampleUnit::Instructions);
+        assert!(c.set("sample_every", "x").is_err());
+        let e = c.set("sample_unit", "parsecs").unwrap_err();
+        assert!(e.contains("insts") && e.contains("ns"), "{e}");
+        let d = c.dump();
+        assert_eq!(d["sample_every"], "1000000");
+        assert_eq!(d["sample_unit"], "insts");
     }
 
     #[test]

@@ -16,6 +16,7 @@ use std::thread;
 use crate::config::SimConfig;
 use crate::host::{HostSim, RunMetrics, TenantMetrics};
 use crate::runtime::SharedEngine;
+use crate::telemetry::Series;
 use crate::topology::DevicePool;
 use crate::workload::{by_name, Mix, MixOracle, RunPlan, Trace};
 
@@ -56,6 +57,9 @@ pub struct JobResult {
     pub scheme: String,
     pub metrics: RunMetrics,
     pub device: DeviceSummary,
+    /// Telemetry time-series, when the job's config enabled sampling
+    /// (`sample_every > 0`); consumed by `telemetry::report`.
+    pub series: Option<Series>,
 }
 
 /// Flattened device statistics (so results can cross threads without
@@ -109,7 +113,7 @@ impl From<&TenantMetrics> for TenantSummary {
 /// homogeneous run of `job.workload` on `cfg.cores` cores. The device
 /// pool is `cfg.devices` instances of the configured scheme (1 — the
 /// classic single expander — by default).
-fn run_sim(job: &Job, engine: SharedEngine) -> (RunMetrics, DevicePool) {
+fn run_sim(job: &Job, engine: SharedEngine) -> (RunMetrics, DevicePool, Option<Series>) {
     let mut pool = DevicePool::build(&job.cfg);
     if job.trace_data.is_some() || !job.cfg.trace.is_empty() {
         let trace: Arc<Trace> = match &job.trace_data {
@@ -124,7 +128,8 @@ fn run_sim(job: &Job, engine: SharedEngine) -> (RunMetrics, DevicePool) {
         let mut sim = HostSim::from_trace(&job.cfg, &trace)
             .unwrap_or_else(|e| panic!("job {:?}: {e}", job.label));
         let metrics = sim.run(&mut pool, &mut oracle);
-        return (metrics, pool);
+        let series = sim.take_series();
+        return (metrics, pool, series);
     }
     let mix = if !job.cfg.mix.is_empty() {
         Mix::parse(&job.cfg.mix).unwrap_or_else(|e| panic!("job {:?}: {e}", job.label))
@@ -137,7 +142,8 @@ fn run_sim(job: &Job, engine: SharedEngine) -> (RunMetrics, DevicePool) {
     let mut oracle = MixOracle::new(&plan, job.cfg.seed, engine);
     let mut sim = HostSim::from_mix(&job.cfg, &mix);
     let metrics = sim.run(&mut pool, &mut oracle);
-    (metrics, pool)
+    let series = sim.take_series();
+    (metrics, pool, series)
 }
 
 /// Run one job on the calling thread. The size backend comes from the
@@ -146,11 +152,12 @@ fn run_sim(job: &Job, engine: SharedEngine) -> (RunMetrics, DevicePool) {
 pub fn run_one(job: &Job) -> JobResult {
     let engine = SharedEngine::for_config(&job.cfg)
         .unwrap_or_else(|e| panic!("job {:?}: cannot start size backend: {e}", job.label));
-    let (metrics, pool) = run_sim(job, engine);
+    let (metrics, pool, series) = run_sim(job, engine);
     // Aggregate scheme statistics across the pool (identical to the
     // single device's stats when `devices = 1`).
     let s = pool.merged_stats();
     JobResult {
+        series,
         label: job.label.clone(),
         workload: job.workload.clone(),
         scheme: pool.scheme_name().to_string(),
@@ -283,6 +290,18 @@ mod tests {
             + r.device.promoted_hits
             + r.device.compressed_serves;
         assert!(served > 0);
+    }
+
+    #[test]
+    fn run_one_carries_series_only_when_sampling() {
+        let r = run_one(&Job::new("t", quick(), "parest"));
+        assert!(r.series.is_none(), "sampling is off by default");
+        let mut c = quick();
+        c.set("sample_every", "10000").unwrap();
+        let r = run_one(&Job::new("t", c, "parest"));
+        let series = r.series.expect("sampling enabled");
+        assert!(series.epochs.len() >= 2);
+        assert!(series.measured().count() >= 1);
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Figure/table assembly helpers shared by the bench binaries.
 
-use crate::stats::{geomean, Table};
+use crate::stats::{try_geomean, Table};
 
 use super::JobResult;
 
@@ -25,7 +25,12 @@ pub fn perf_table(
     }
     let mut gm = vec!["geomean".to_string()];
     for series in norm {
-        gm.push(format!("{:.3}", geomean(series)));
+        // An empty series (all-filtered sweep) renders "-" instead of
+        // panicking inside `geomean`.
+        gm.push(match try_geomean(series) {
+            Some(g) => format!("{g:.3}"),
+            None => "-".to_string(),
+        });
     }
     t.row(gm);
     t
@@ -72,5 +77,13 @@ mod tests {
         assert_eq!(t.rows.len(), 3); // 2 workloads + geomean
         assert_eq!(t.rows[2][1], "1.414"); // geomean(1,2)
         assert_eq!(t.rows[2][2], "0.500");
+    }
+
+    #[test]
+    fn perf_table_tolerates_empty_series() {
+        // An all-filtered sweep must render, not panic in geomean.
+        let t = perf_table("Fig Y", &[], &["s1"], &[vec![]]);
+        assert_eq!(t.rows.len(), 1, "only the geomean row");
+        assert_eq!(t.rows[0][1], "-");
     }
 }

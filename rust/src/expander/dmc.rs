@@ -314,6 +314,10 @@ impl Scheme for Dmc {
         self.cold_bytes_total + hot
     }
 
+    fn promoted_occupancy(&self) -> (u64, u64) {
+        (self.hot.used_count() as u64, self.hot.total() as u64)
+    }
+
     fn name(&self) -> &'static str {
         "dmc"
     }

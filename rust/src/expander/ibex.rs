@@ -963,6 +963,13 @@ impl Scheme for Ibex {
         self.cchunks.used_bytes() + promoted_equiv
     }
 
+    fn promoted_occupancy(&self) -> (u64, u64) {
+        (
+            self.promoted.used_count() as u64,
+            self.promoted.total() as u64,
+        )
+    }
+
     fn name(&self) -> &'static str {
         "ibex"
     }

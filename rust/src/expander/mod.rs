@@ -113,6 +113,84 @@ impl DeviceStats {
     }
 }
 
+/// Cheap point-in-time counter snapshot of one device, read by the
+/// telemetry sampler (`crate::telemetry`) at epoch boundaries.
+///
+/// Counter fields are cumulative since device construction; epoch
+/// windows come from subtracting two snapshots ([`SchemeSnapshot::delta`]).
+/// `logical_bytes`/`physical_bytes`/`promoted_*` are gauges (point-in-
+/// time values), not counters. Taking a snapshot only *reads* state —
+/// it never advances simulated time, touches a modeled resource, or
+/// mutates the scheme — so sampling cannot perturb simulation results
+/// (pinned by `tests/telemetry.rs`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SchemeSnapshot {
+    pub reads: u64,
+    pub writes: u64,
+    pub zero_serves: u64,
+    pub promoted_hits: u64,
+    pub compressed_serves: u64,
+    pub incompressible_serves: u64,
+    pub promotions: u64,
+    pub demotions: u64,
+    /// Demotions satisfied by shadow pointers (§4.5 reclaim).
+    pub clean_demotions: u64,
+    pub wrcnt_recompressions: u64,
+    /// Internal (device-side) memory accesses.
+    pub mem_accesses: u64,
+    /// Internal accesses by traffic kind (control/promotion/demotion/final).
+    pub mem_by_kind: [u64; 4],
+    /// Gauge: resident logical bytes (zero/untouched pages excluded).
+    pub logical_bytes: u64,
+    /// Gauge: physical bytes backing them.
+    pub physical_bytes: u64,
+    /// Gauge: promoted/caching-region occupancy in scheme-defined slots
+    /// (`0/0` for schemes without such a region).
+    pub promoted_used: u64,
+    pub promoted_total: u64,
+}
+
+impl SchemeSnapshot {
+    /// Windowed counters: `self - earlier` for every monotone counter;
+    /// the gauge fields keep `self`'s point-in-time values.
+    pub fn delta(&self, earlier: &SchemeSnapshot) -> SchemeSnapshot {
+        let mut out = *self;
+        out.reads -= earlier.reads;
+        out.writes -= earlier.writes;
+        out.zero_serves -= earlier.zero_serves;
+        out.promoted_hits -= earlier.promoted_hits;
+        out.compressed_serves -= earlier.compressed_serves;
+        out.incompressible_serves -= earlier.incompressible_serves;
+        out.promotions -= earlier.promotions;
+        out.demotions -= earlier.demotions;
+        out.clean_demotions -= earlier.clean_demotions;
+        out.wrcnt_recompressions -= earlier.wrcnt_recompressions;
+        out.mem_accesses -= earlier.mem_accesses;
+        for (o, e) in out.mem_by_kind.iter_mut().zip(earlier.mem_by_kind.iter()) {
+            *o -= e;
+        }
+        out
+    }
+
+    /// Effective compression ratio at snapshot time (1.0 when empty).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.physical_bytes == 0 {
+            1.0
+        } else {
+            self.logical_bytes as f64 / self.physical_bytes as f64
+        }
+    }
+
+    /// Promoted-region occupancy fraction (0.0 without a region).
+    pub fn promoted_fill(&self) -> f64 {
+        if self.promoted_total == 0 {
+            0.0
+        } else {
+            self.promoted_used as f64 / self.promoted_total as f64
+        }
+    }
+}
+
 /// Result of a metadata-cache access.
 #[derive(Clone, Copy, Debug)]
 pub struct MetaOutcome {
@@ -268,6 +346,41 @@ pub trait Scheme {
         }
     }
 
+    /// Promoted/caching-region occupancy in `(used, total)` scheme-
+    /// defined slots; `(0, 0)` for schemes without such a region.
+    /// Must be a pure read (no state change, no modeled cost).
+    fn promoted_occupancy(&self) -> (u64, u64) {
+        (0, 0)
+    }
+
+    /// Cumulative counter snapshot for telemetry sampling (see
+    /// [`SchemeSnapshot`]). The default assembles it from the trait's
+    /// read-only accessors; schemes need not override it. Called once
+    /// per telemetry epoch — never on the request path.
+    fn snapshot(&self) -> SchemeSnapshot {
+        let s = self.stats();
+        let m = self.mem();
+        let (promoted_used, promoted_total) = self.promoted_occupancy();
+        SchemeSnapshot {
+            reads: s.reads,
+            writes: s.writes,
+            zero_serves: s.zero_serves,
+            promoted_hits: s.promoted_hits,
+            compressed_serves: s.compressed_serves,
+            incompressible_serves: s.incompressible_serves,
+            promotions: s.promotions,
+            demotions: s.demotions,
+            clean_demotions: s.clean_demotions,
+            wrcnt_recompressions: s.wrcnt_recompressions,
+            mem_accesses: m.total_accesses(),
+            mem_by_kind: m.breakdown.counts,
+            logical_bytes: self.logical_bytes(),
+            physical_bytes: self.physical_bytes(),
+            promoted_used,
+            promoted_total,
+        }
+    }
+
     /// Scheme label for reports.
     fn name(&self) -> &'static str;
 }
@@ -324,6 +437,61 @@ mod tests {
     fn incompressibility_threshold() {
         assert!(!incompressible_4k(3584));
         assert!(incompressible_4k(3585));
+    }
+
+    #[test]
+    fn snapshot_delta_subtracts_counters_keeps_gauges() {
+        let a = SchemeSnapshot {
+            reads: 10,
+            writes: 4,
+            promotions: 2,
+            mem_accesses: 100,
+            mem_by_kind: [10, 20, 30, 40],
+            logical_bytes: 4096,
+            physical_bytes: 2048,
+            promoted_used: 3,
+            promoted_total: 8,
+            ..Default::default()
+        };
+        let b = SchemeSnapshot {
+            reads: 25,
+            writes: 9,
+            promotions: 7,
+            mem_accesses: 260,
+            mem_by_kind: [15, 45, 80, 120],
+            logical_bytes: 8192,
+            physical_bytes: 4096,
+            promoted_used: 5,
+            promoted_total: 8,
+            ..Default::default()
+        };
+        let d = b.delta(&a);
+        assert_eq!(d.reads, 15);
+        assert_eq!(d.writes, 5);
+        assert_eq!(d.promotions, 5);
+        assert_eq!(d.mem_accesses, 160);
+        assert_eq!(d.mem_by_kind, [5, 25, 50, 80]);
+        // Gauges keep the *later* point-in-time values.
+        assert_eq!(d.logical_bytes, 8192);
+        assert_eq!(d.promoted_used, 5);
+        assert!((b.compression_ratio() - 2.0).abs() < 1e-12);
+        assert!((b.promoted_fill() - 0.625).abs() < 1e-12);
+        assert_eq!(SchemeSnapshot::default().compression_ratio(), 1.0);
+        assert_eq!(SchemeSnapshot::default().promoted_fill(), 0.0);
+    }
+
+    #[test]
+    fn default_snapshot_reads_scheme_accessors() {
+        let cfg = crate::config::SimConfig::test_small();
+        let dev = build_scheme(&cfg);
+        let snap = dev.snapshot();
+        assert_eq!(snap.reads, 0);
+        assert_eq!(snap.mem_accesses, 0);
+        // IBEX has a promoted region, so occupancy totals are nonzero.
+        let (used, total) = dev.promoted_occupancy();
+        assert_eq!(used, 0);
+        assert!(total > 0, "ibex must report promoted-region capacity");
+        assert_eq!(snap.promoted_total, total);
     }
 
     #[test]

@@ -235,6 +235,13 @@ impl Scheme for Mxt {
         self.sectors_used
     }
 
+    fn promoted_occupancy(&self) -> (u64, u64) {
+        (
+            self.region.len() as u64,
+            (self.region.sets() * self.region.ways()) as u64,
+        )
+    }
+
     fn name(&self) -> &'static str {
         "mxt"
     }

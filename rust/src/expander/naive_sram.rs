@@ -178,6 +178,13 @@ impl Scheme for NaiveSram {
         self.chunk_bytes_used
     }
 
+    fn promoted_occupancy(&self) -> (u64, u64) {
+        (
+            self.sram.len() as u64,
+            (self.sram.sets() * self.sram.ways()) as u64,
+        )
+    }
+
     fn name(&self) -> &'static str {
         "naive-sram"
     }

@@ -370,6 +370,13 @@ impl Scheme for Tmcc {
         self.zs_used + promoted_equiv
     }
 
+    fn promoted_occupancy(&self) -> (u64, u64) {
+        (
+            self.promoted.used_count() as u64,
+            self.promoted.total() as u64,
+        )
+    }
+
     fn name(&self) -> &'static str {
         if self.dual_table {
             "dylect"

@@ -33,6 +33,7 @@ use crate::expander::ContentOracle;
 use crate::rng::Pcg64;
 use crate::sim::{Ps, CORE_CLK_PS, PS_PER_NS};
 use crate::stats::LatencyHist;
+use crate::telemetry::{DeviceCum, Sampler, Series, TenantCum};
 use crate::topology::{DevicePool, Interleave};
 use crate::workload::{Mix, RequestSource, RunPlan, Trace, WorkloadSpec};
 
@@ -77,6 +78,11 @@ struct Lane {
     outstanding: usize,
     /// Peak of `outstanding` over the measured phase.
     peak_outstanding: usize,
+    /// Peak of `outstanding` within the current telemetry epoch
+    /// (restarted by the sampler at each boundary; maintained
+    /// unconditionally — one integer compare — so the sampled and
+    /// unsampled request paths stay byte-for-byte identical).
+    win_peak: usize,
 }
 
 /// One tenant's share of a run (measured phase only).
@@ -276,6 +282,10 @@ pub struct HostSim<'a> {
     interleave: Interleave,
     cores: Vec<Core>,
     lanes: Vec<Lane>,
+    /// Telemetry collector (`cfg.sample_every > 0`). When `None`, the
+    /// request loop's only extra work is one `is_some` branch — no
+    /// snapshot calls (pinned by `tests/telemetry.rs`).
+    sampler: Option<Sampler>,
 }
 
 impl<'a> HostSim<'a> {
@@ -340,12 +350,15 @@ impl<'a> HostSim<'a> {
             })
             .collect();
         let interleave = Interleave::new(cfg.interleave, cfg.devices, plan.total_pages);
+        let sampler =
+            (cfg.sample_every > 0).then(|| Sampler::new(cfg.sample_unit, cfg.sample_every));
         Self {
             cfg,
             plan,
             interleave,
             cores,
             lanes: vec![Lane::default(); cfg.devices],
+            sampler,
         }
     }
 
@@ -384,6 +397,11 @@ impl<'a> HostSim<'a> {
         }
 
         self.phase(pool, oracle, self.cfg.warmup_instructions, false);
+        // Close the warmup telemetry window at the phase boundary, so
+        // no epoch straddles warmup and measured traffic.
+        if self.sampler.is_some() {
+            self.take_sample(pool, true, true);
+        }
         // Snapshot after warmup.
         let warm_kind = pool.mem_breakdown();
         let warm_total = pool.mem_total();
@@ -420,6 +438,11 @@ impl<'a> HostSim<'a> {
             self.cfg.warmup_instructions + self.cfg.instructions,
             true,
         );
+        // Final partial epoch (post-drain, so its clock includes the
+        // trailing reply latencies that count toward elapsed time).
+        if self.sampler.is_some() {
+            self.take_sample(pool, false, true);
+        }
 
         let kinds = pool.mem_breakdown();
         let mem_by_kind = [
@@ -510,6 +533,81 @@ impl<'a> HostSim<'a> {
 
     fn elapsed(&self) -> Ps {
         self.cores.iter().map(|c| c.t).max().unwrap_or(0)
+    }
+
+    /// The telemetry series collected by this run, if sampling was
+    /// enabled (consumes the sampler; call after [`HostSim::run`]).
+    pub fn take_series(&mut self) -> Option<Series> {
+        self.sampler.take().map(Sampler::into_series)
+    }
+
+    /// Total retired instructions across cores (the sampler's
+    /// instruction-granularity epoch clock).
+    fn retired(&self) -> u64 {
+        self.cores.iter().map(|c| c.insts).sum()
+    }
+
+    /// Epoch-boundary check from the request loop. Only called when a
+    /// sampler exists; the boundary test is one O(cores) scan (the
+    /// clock the configured unit needs) — snapshots are taken only
+    /// when a boundary is actually crossed.
+    fn sampler_tick(&mut self, pool: &DevicePool, measure: bool) {
+        let due = match &self.sampler {
+            Some(s) => s.due_lazy(|| self.retired(), || self.elapsed()),
+            None => return,
+        };
+        if due {
+            self.take_sample(pool, !measure, false);
+        }
+    }
+
+    /// Collect cumulative per-device/per-tenant state and hand it to
+    /// the sampler as an epoch (or a phase-end `flush`). Pure reads
+    /// everywhere except the per-lane window-peak restart, which only
+    /// telemetry consumes.
+    fn take_sample(&mut self, pool: &DevicePool, warmup: bool, flush: bool) {
+        let insts = self.retired();
+        let t = self.elapsed();
+        let devices: Vec<DeviceCum> = pool
+            .devices
+            .iter()
+            .zip(self.lanes.iter_mut())
+            .map(|(d, lane)| {
+                let cum = DeviceCum {
+                    snapshot: d.scheme.snapshot(),
+                    requests: lane.reqs,
+                    reads: lane.reads,
+                    writes: lane.writes,
+                    link_busy_ps: d.link.down.busy,
+                    window_peak_outstanding: lane.win_peak,
+                    lat: lane.lat.clone(),
+                };
+                // Restart the window peak at the current occupancy (the
+                // next window's peak is at least what is in flight now).
+                lane.win_peak = lane.outstanding;
+                cum
+            })
+            .collect();
+        let mut tenants: Vec<TenantCum> = self
+            .plan
+            .mix
+            .tenants
+            .iter()
+            .map(|_| TenantCum::default())
+            .collect();
+        for (ci, slot) in self.plan.slots.iter().enumerate() {
+            let c = &self.cores[ci];
+            let row = &mut tenants[slot.tenant];
+            row.requests += c.reqs;
+            row.instructions += c.insts;
+            row.lat.merge(&c.lat);
+        }
+        let sampler = self.sampler.as_mut().expect("sampler checked by caller");
+        if flush {
+            sampler.flush(insts, t, warmup, devices, tenants);
+        } else {
+            sampler.sample(insts, t, warmup, devices, tenants);
+        }
     }
 
     /// Advance every core to `insts_target` retired instructions.
@@ -613,6 +711,14 @@ impl<'a> HostSim<'a> {
                 if lane.outstanding > lane.peak_outstanding {
                     lane.peak_outstanding = lane.outstanding;
                 }
+                if lane.outstanding > lane.win_peak {
+                    lane.win_peak = lane.outstanding;
+                }
+            }
+            // Telemetry epoch boundary? One branch when sampling is
+            // off; counter snapshots only at actual boundaries.
+            if self.sampler.is_some() {
+                self.sampler_tick(pool, measure);
             }
         }
         // Let every core drain (reply latency counts toward elapsed).
@@ -747,6 +853,56 @@ mod tests {
         assert_eq!(agg.requests, m.requests);
         assert_eq!(agg.mem_accesses, m.mem_total);
         assert!((agg.compression_ratio() - m.compression_ratio).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sampled_run_yields_consistent_epochs() {
+        let mut cfg = quick_cfg();
+        cfg.sample_every = 20_000;
+        let spec = by_name("omnetpp").unwrap();
+        let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
+        let mut pool = DevicePool::build(&cfg);
+        let mut sim = HostSim::new(&cfg, &spec);
+        let m = sim.run(&mut pool, &mut oracle);
+        let series = sim.take_series().expect("sampling was enabled");
+        assert!(sim.take_series().is_none(), "series is taken once");
+        assert!(series.epochs.len() >= 2, "{} epochs", series.epochs.len());
+        // Cumulative clocks are monotone (a phase-end flush can add a
+        // zero-instruction epoch covering the drain tail, so insts is
+        // non-decreasing, not strictly increasing); windows reconcile.
+        for w in series.epochs.windows(2) {
+            assert!(w[1].insts >= w[0].insts);
+            assert!(w[1].t_ps >= w[0].t_ps);
+            assert_eq!(w[1].d_insts, w[1].insts - w[0].insts);
+        }
+        // Warmup epochs strictly precede measured ones.
+        let first_measured = series
+            .epochs
+            .iter()
+            .position(|e| !e.warmup)
+            .expect("measured epochs exist");
+        assert!(series.epochs[..first_measured].iter().all(|e| e.warmup));
+        assert!(series.epochs[first_measured..].iter().all(|e| !e.warmup));
+        // Host-routed requests across all epochs cover the whole run
+        // (warmup included), and per-epoch device rows carry traffic.
+        let total_reqs: u64 = series
+            .epochs
+            .iter()
+            .flat_map(|e| e.devices.iter())
+            .map(|d| d.requests)
+            .sum();
+        assert!(total_reqs >= m.requests, "{total_reqs} vs {}", m.requests);
+        // Windowed device counters reconcile with the pool's devices.
+        let mem_total: u64 = series.epochs.iter().map(|e| e.mem_accesses()).sum();
+        assert_eq!(mem_total, pool.mem_total());
+        // Tenant rows: one tenant, instructions add up to the run's.
+        let tenant_insts: u64 = series
+            .epochs
+            .iter()
+            .flat_map(|e| e.tenants.iter())
+            .map(|t| t.instructions)
+            .sum();
+        assert!(tenant_insts >= m.instructions);
     }
 
     #[test]

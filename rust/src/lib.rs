@@ -32,6 +32,11 @@
 //! * [`workload`] generates the ten Table-2 workloads (access pattern +
 //!   page-content classes) and [`coordinator`] runs experiments/sweeps
 //!   and emits the paper's tables and figures.
+//! * [`telemetry`] is the observability plane: an epoch-driven sampler
+//!   (`sample_every=`/`--sample-every`) that collects per-device and
+//!   per-tenant counter deltas at epoch boundaries without perturbing
+//!   results, plus the versioned machine-readable JSON run report
+//!   behind `ibex run --json` (std-only writer/parser — no serde).
 //!
 //! The analytic backend is cross-validated against the Python reference
 //! on a golden corpus checked into `rust/tests/fixtures/` (see
@@ -59,5 +64,6 @@ pub mod rng;
 pub mod runtime;
 pub mod sim;
 pub mod stats;
+pub mod telemetry;
 pub mod topology;
 pub mod workload;

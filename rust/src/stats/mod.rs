@@ -4,11 +4,15 @@
 //! via [`Table`] (markdown to stdout + optional CSV next to it), so
 //! EXPERIMENTS.md can quote results verbatim.
 
+use std::collections::HashMap;
 use std::fmt::Write as _;
 use std::fs;
 use std::path::Path;
+use std::sync::{Mutex, OnceLock};
 
 /// Geometric mean of positive values (the paper's aggregate of choice).
+/// Panics on an empty slice — aggregation call sites that can legally
+/// see an empty result set (filtered sweeps) should use [`try_geomean`].
 pub fn geomean(values: &[f64]) -> f64 {
     assert!(!values.is_empty());
     let log_sum: f64 = values
@@ -21,13 +25,37 @@ pub fn geomean(values: &[f64]) -> f64 {
     (log_sum / values.len() as f64).exp()
 }
 
+/// Like [`geomean`], but `None` on an empty slice instead of panicking
+/// (so an empty sweep reports "no results" rather than crashing).
+pub fn try_geomean(values: &[f64]) -> Option<f64> {
+    if values.is_empty() {
+        None
+    } else {
+        Some(geomean(values))
+    }
+}
+
+/// Arithmetic mean. Panics on an empty slice; see [`try_mean`].
 pub fn mean(values: &[f64]) -> f64 {
     assert!(!values.is_empty());
     values.iter().sum::<f64>() / values.len() as f64
 }
 
+/// Like [`mean`], but `None` on an empty slice instead of panicking.
+pub fn try_mean(values: &[f64]) -> Option<f64> {
+    if values.is_empty() {
+        None
+    } else {
+        Some(mean(values))
+    }
+}
+
 /// A simple streaming histogram for latency distributions (fixed
 /// log2 buckets over nanoseconds).
+///
+/// Bucket `b` (1..=31) holds samples whose bit length is `b`, i.e. the
+/// half-open range `[2^(b-1), 2^b)`; `record_ns` clamps 0 to 1 ns, and
+/// everything at or above `2^31` ns collapses into bucket 31.
 #[derive(Clone, Debug, Default)]
 pub struct LatencyHist {
     buckets: [u64; 32],
@@ -55,6 +83,38 @@ impl LatencyHist {
         self.max_ns = self.max_ns.max(other.max_ns);
     }
 
+    /// The samples recorded in `self` but not yet in `earlier`, where
+    /// `earlier` is a previous snapshot of the *same* cumulative stream
+    /// (telemetry epoch windows). `max_ns` cannot be recovered per
+    /// window from bucket data, so the later cumulative max is kept —
+    /// an upper bound for the window.
+    pub fn delta(&self, earlier: &LatencyHist) -> LatencyHist {
+        let mut out = LatencyHist::default();
+        for (o, (a, b)) in out
+            .buckets
+            .iter_mut()
+            .zip(self.buckets.iter().zip(earlier.buckets.iter()))
+        {
+            *o = a.saturating_sub(*b);
+        }
+        out.count = self.count.saturating_sub(earlier.count);
+        out.sum_ns = self.sum_ns.saturating_sub(earlier.sum_ns);
+        out.max_ns = self.max_ns;
+        out
+    }
+
+    /// Non-empty buckets as `(upper_bound_ns, count)` pairs. The upper
+    /// bounds are the same power-of-two values [`Self::percentile_ns`]
+    /// reports (exclusive: a bucket reported as 1024 holds 512..=1023).
+    pub fn nonzero_buckets(&self) -> Vec<(u64, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (1u64 << i, c))
+            .collect()
+    }
+
     pub fn mean_ns(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -63,7 +123,22 @@ impl LatencyHist {
         }
     }
 
-    /// Approximate percentile from bucket boundaries (upper bound).
+    /// Approximate percentile from log2 bucket boundaries.
+    ///
+    /// Returns the *exclusive power-of-two upper bound* of the bucket
+    /// containing the `ceil(p * count)`-th smallest sample — an upper
+    /// bound on the true percentile, up to 2x above it, never exact
+    /// (1000 recorded once reports `percentile_ns(1.0) == 1024`; a
+    /// sample exactly at a power of two reports the *next* power:
+    /// 1024 → 2048). JSON consumers must treat p99 values as bucket
+    /// bounds, not measurements. Edge cases:
+    ///
+    /// * `p <= 0` degenerates to 1 (the empty bucket-0 bound);
+    /// * an empty histogram returns 0 for any `p`;
+    /// * `p > 1` falls through every bucket and returns `max_ns`
+    ///   (the only exact value this function can return);
+    /// * samples `>= 2^31` ns sit in the last bucket, so results cap
+    ///   at `2^31` and may understate such outliers.
     pub fn percentile_ns(&self, p: f64) -> u64 {
         if self.count == 0 {
             return 0;
@@ -149,21 +224,69 @@ impl Table {
     }
 
     /// Print markdown to stdout and, if `IBEX_RESULTS_DIR` is set, also
-    /// write `<dir>/<slug>.csv`.
+    /// write `<dir>/<slug>.csv`. Re-emitting the *same* title rewrites
+    /// its file (idempotent), but two different titles normalizing to
+    /// one slug get distinct files — see [`reserve_slug`].
     pub fn emit(&self) {
         print!("{}", self.markdown());
         if let Ok(dir) = std::env::var("IBEX_RESULTS_DIR") {
-            let slug: String = self
-                .title
-                .to_lowercase()
-                .chars()
-                .map(|c| if c.is_alphanumeric() { c } else { '_' })
-                .collect();
+            let slug = reserve_slug(&self.title);
             let path = Path::new(&dir).join(format!("{slug}.csv"));
             let _ = fs::create_dir_all(&dir);
             if let Err(e) = fs::write(&path, self.csv()) {
                 eprintln!("warn: could not write {}: {e}", path.display());
             }
+        }
+    }
+}
+
+/// Normalize a table title to a CSV-filename slug (lowercase, non-
+/// alphanumerics mapped to `_`). Lossy: distinct titles can collide.
+pub fn slug_of(title: &str) -> String {
+    title
+        .to_lowercase()
+        .chars()
+        .map(|c| if c.is_alphanumeric() { c } else { '_' })
+        .collect()
+}
+
+/// Process-wide slug registry: which title owns each emitted CSV slug.
+fn slug_registry() -> &'static Mutex<HashMap<String, String>> {
+    static REG: OnceLock<Mutex<HashMap<String, String>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Reserve the CSV slug for `title`. The same title always maps to the
+/// same slug (re-emits overwrite, by design), but when a *different*
+/// title normalizes to an already-owned slug — which previously made
+/// the two tables silently overwrite each other's CSV — the collider
+/// is disambiguated with a `_2`, `_3`, … suffix and a warning.
+fn reserve_slug(title: &str) -> String {
+    let base = slug_of(title);
+    let mut reg = slug_registry().lock().unwrap();
+    match reg.get(&base) {
+        None => {
+            reg.insert(base.clone(), title.to_string());
+            return base;
+        }
+        Some(owner) if owner == title => return base,
+        Some(_) => {}
+    }
+    let mut i = 2;
+    loop {
+        let cand = format!("{base}_{i}");
+        match reg.get(&cand) {
+            None => {
+                eprintln!(
+                    "warn: table {title:?} collides with {:?} on CSV slug \
+                     {base:?}; writing {cand}.csv instead",
+                    reg[&base]
+                );
+                reg.insert(cand.clone(), title.to_string());
+                return cand;
+            }
+            Some(owner) if owner == title => return cand,
+            Some(_) => i += 1,
         }
     }
 }
@@ -248,6 +371,81 @@ mod tests {
         assert_eq!(lines.next().unwrap(), "\"pr:2,mcf:2\",plain");
         // Embedded quotes doubled, embedded newline kept inside quotes.
         assert!(csv.contains("\"say \"\"hi\"\"\",\"multi\nline\""));
+    }
+
+    #[test]
+    fn try_variants_guard_empty_slices() {
+        assert_eq!(try_geomean(&[]), None);
+        assert_eq!(try_mean(&[]), None);
+        assert!((try_geomean(&[2.0, 8.0]).unwrap() - 4.0).abs() < 1e-12);
+        assert!((try_mean(&[1.0, 3.0]).unwrap() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_is_pow2_bucket_upper_bound() {
+        // Semantics pinned for JSON consumers: the value returned is
+        // the exclusive pow2 upper bound of the target's bucket.
+        let mut h = LatencyHist::default();
+        h.record_ns(1000); // bucket [512, 1024)
+        assert_eq!(h.percentile_ns(1.0), 1024);
+        assert_eq!(h.percentile_ns(0.5), 1024);
+        // A sample exactly at a power of two lands in the next bucket.
+        let mut h = LatencyHist::default();
+        h.record_ns(1024); // bucket [1024, 2048)
+        assert_eq!(h.percentile_ns(1.0), 2048);
+        // Boundary pair: 1023 and 1024 straddle adjacent buckets.
+        let mut h = LatencyHist::default();
+        h.record_ns(1023);
+        h.record_ns(1024);
+        assert_eq!(h.percentile_ns(0.5), 1024);
+        assert_eq!(h.percentile_ns(1.0), 2048);
+        assert_eq!(h.nonzero_buckets(), vec![(1024, 1), (2048, 1)]);
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        let empty = LatencyHist::default();
+        assert_eq!(empty.percentile_ns(0.99), 0, "empty hist reports 0");
+        let mut h = LatencyHist::default();
+        h.record_ns(0); // clamped to 1 ns
+        h.record_ns(700);
+        // p -> 0 degenerates to the bucket-0 bound (1 ns), not a panic.
+        assert_eq!(h.percentile_ns(0.0), 1);
+        assert_eq!(h.percentile_ns(-1.0), 1);
+        // p > 1 overshoots every bucket and falls back to the exact max.
+        assert_eq!(h.percentile_ns(1.5), 700);
+        // Outliers >= 2^31 ns cap at the last bucket's bound.
+        let mut big = LatencyHist::default();
+        big.record_ns(u64::MAX);
+        assert_eq!(big.percentile_ns(1.0), 1 << 31);
+    }
+
+    #[test]
+    fn hist_delta_recovers_window() {
+        let mut cum = LatencyHist::default();
+        cum.record_ns(100);
+        let snap = cum.clone();
+        cum.record_ns(3000);
+        cum.record_ns(3100);
+        let win = cum.delta(&snap);
+        assert_eq!(win.count, 2);
+        assert_eq!(win.sum_ns, 6100);
+        assert_eq!(win.percentile_ns(1.0), 4096);
+        assert_eq!(win.nonzero_buckets(), vec![(4096, 2)]);
+        // Identical snapshots yield an empty window.
+        assert_eq!(cum.delta(&cum).count, 0);
+    }
+
+    #[test]
+    fn slug_collisions_disambiguate() {
+        // Unique titles (vs other tests: the registry is process-wide).
+        assert_eq!(reserve_slug("Slugtest: alpha"), "slugtest__alpha");
+        // Same title again: same slug (idempotent re-emit).
+        assert_eq!(reserve_slug("Slugtest: alpha"), "slugtest__alpha");
+        // Different title, same normalization: suffixed, not clobbered.
+        assert_eq!(reserve_slug("Slugtest, alpha"), "slugtest__alpha_2");
+        assert_eq!(reserve_slug("Slugtest, alpha"), "slugtest__alpha_2");
+        assert_eq!(reserve_slug("Slugtest. alpha"), "slugtest__alpha_3");
     }
 
     #[test]

@@ -1,0 +1,443 @@
+//! Telemetry plane: epoch time-series sampling + machine-readable run
+//! reports.
+//!
+//! The simulator historically emitted only end-of-run tables, so the
+//! paper's *dynamic* claims — demotion trickles, shadowed-promotion
+//! reclaim, the §6.1 promoted-region overflow→recovery transient —
+//! were invisible. This module adds the observability layer a
+//! fleet-scale CXL deployment treats as first-class:
+//!
+//! * [`Sampler`] — an epoch-driven collector `HostSim::run` ticks at
+//!   epoch boundaries (`sample_every=` instructions or nanoseconds of
+//!   simulated time, `sample_unit=`). Each epoch captures *windowed
+//!   deltas* of every device's counters (promotions, demotions, shadow
+//!   reclaims, internal accesses by kind — via the cheap
+//!   [`Scheme::snapshot`](crate::expander::Scheme::snapshot)), host-side
+//!   lane state (link utilization, window-peak MSHR occupancy) and
+//!   per-tenant windowed latency histograms. Sampling only *reads*
+//!   state: a sampled run's final metrics are bit-identical to an
+//!   unsampled one (pinned by `tests/telemetry.rs`), and with
+//!   `sample_every = 0` the request path performs no snapshot calls
+//!   at all.
+//! * [`json`] — a std-only JSON document model (writer + parser; the
+//!   crate has a no-external-deps policy, so no serde).
+//! * [`report`] — the versioned run-report assembly behind
+//!   `ibex run --json FILE` (config manifest, seed, topology, final +
+//!   steady-state metrics, per-tenant/per-device rows, the full epoch
+//!   series) and the BENCH-style JSON the bench binaries drop next to
+//!   their CSVs.
+
+pub mod json;
+pub mod report;
+
+use std::fmt;
+
+use crate::expander::SchemeSnapshot;
+use crate::sim::{Ps, PS_PER_NS};
+use crate::stats::LatencyHist;
+
+/// Epoch granularity for [`Sampler`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum SampleUnit {
+    /// Boundaries every `sample_every` retired instructions, summed
+    /// over all cores (the default: robust across latency configs).
+    #[default]
+    Instructions,
+    /// Boundaries every `sample_every` nanoseconds of simulated time
+    /// (slowest-core clock) — fixed wall-clock epochs.
+    Nanos,
+}
+
+impl SampleUnit {
+    pub fn name(self) -> &'static str {
+        match self {
+            SampleUnit::Instructions => "insts",
+            SampleUnit::Nanos => "ns",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "insts" | "inst" | "instructions" => SampleUnit::Instructions,
+            "ns" | "nanos" | "time" => SampleUnit::Nanos,
+            _ => return None,
+        })
+    }
+
+    /// Accepted spellings, for error messages.
+    pub fn accepted() -> &'static str {
+        "insts|inst|instructions, ns|nanos|time"
+    }
+}
+
+impl fmt::Display for SampleUnit {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Cumulative per-device state the host hands the sampler at an epoch
+/// boundary. Counters are since-run-start; the sampler windows them.
+#[derive(Clone, Debug, Default)]
+pub struct DeviceCum {
+    /// Device-side counters + gauges ([`crate::expander::Scheme::snapshot`]).
+    pub snapshot: SchemeSnapshot,
+    /// Host-side routing counters for this device's lane.
+    pub requests: u64,
+    pub reads: u64,
+    pub writes: u64,
+    /// Cumulative downstream link-busy time, ps.
+    pub link_busy_ps: Ps,
+    /// Peak outstanding misses *within the window just ended* (the
+    /// host restarts this peak after every sample).
+    pub window_peak_outstanding: usize,
+    /// Cumulative host-observed round-trip histogram (measured phase).
+    pub lat: LatencyHist,
+}
+
+/// Cumulative per-tenant state at an epoch boundary.
+#[derive(Clone, Debug, Default)]
+pub struct TenantCum {
+    pub requests: u64,
+    pub instructions: u64,
+    pub lat: LatencyHist,
+}
+
+/// One device's share of one epoch (windowed deltas + end-of-epoch
+/// gauges).
+#[derive(Clone, Debug)]
+pub struct DeviceEpoch {
+    pub device: usize,
+    /// Host-routed requests in this window.
+    pub requests: u64,
+    pub reads: u64,
+    pub writes: u64,
+    /// Device counter deltas over the window (gauge fields of the
+    /// embedded snapshot hold end-of-epoch values).
+    pub counters: SchemeSnapshot,
+    /// Downstream link busy fraction over the window.
+    pub link_utilization: f64,
+    /// Peak outstanding misses on this device within the window.
+    pub peak_outstanding: usize,
+    /// Host-observed round trips completed in this window.
+    pub lat: LatencyHist,
+}
+
+/// One tenant's share of one epoch.
+#[derive(Clone, Debug)]
+pub struct TenantEpoch {
+    /// Index into the run plan's tenant list.
+    pub tenant: usize,
+    pub requests: u64,
+    pub instructions: u64,
+    /// Windowed host-observed latency histogram.
+    pub lat: LatencyHist,
+}
+
+/// One sampled epoch.
+#[derive(Clone, Debug)]
+pub struct Epoch {
+    pub index: usize,
+    /// True when this window ran (even partially) inside warmup. The
+    /// host flushes a boundary at the warmup→measured transition, so
+    /// in practice every epoch is entirely one or the other.
+    pub warmup: bool,
+    /// Cumulative totals at the epoch's end.
+    pub insts: u64,
+    pub t_ps: Ps,
+    /// Window widths (this epoch minus the previous boundary).
+    pub d_insts: u64,
+    pub d_ps: Ps,
+    pub devices: Vec<DeviceEpoch>,
+    pub tenants: Vec<TenantEpoch>,
+}
+
+impl Epoch {
+    /// Internal memory accesses across all devices in this window.
+    pub fn mem_accesses(&self) -> u64 {
+        self.devices.iter().map(|d| d.counters.mem_accesses).sum()
+    }
+
+    /// Demotions across all devices in this window.
+    pub fn demotions(&self) -> u64 {
+        self.devices.iter().map(|d| d.counters.demotions).sum()
+    }
+
+    /// Window performance in instructions per nanosecond.
+    pub fn perf(&self) -> f64 {
+        self.d_insts as f64 * 1000.0 / self.d_ps.max(1) as f64
+    }
+}
+
+/// A sampled run's full time-series.
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub unit: SampleUnit,
+    pub every: u64,
+    pub epochs: Vec<Epoch>,
+}
+
+impl Series {
+    /// Epochs outside warmup (the measured phase).
+    pub fn measured(&self) -> impl Iterator<Item = &Epoch> {
+        self.epochs.iter().filter(|e| !e.warmup)
+    }
+}
+
+/// Epoch-driven telemetry collector. The host owns one when
+/// `cfg.sample_every > 0` and ticks it from the request loop; all the
+/// sampler ever does is subtract cumulative counter snapshots, so it
+/// cannot perturb the simulation.
+#[derive(Clone, Debug)]
+pub struct Sampler {
+    unit: SampleUnit,
+    every: u64,
+    next_at: u64,
+    prev_insts: u64,
+    prev_t_ps: Ps,
+    prev_devices: Vec<DeviceCum>,
+    prev_tenants: Vec<TenantCum>,
+    series: Series,
+}
+
+impl Sampler {
+    pub fn new(unit: SampleUnit, every: u64) -> Self {
+        assert!(every > 0, "sample_every must be positive");
+        Self {
+            unit,
+            every,
+            next_at: every,
+            prev_insts: 0,
+            prev_t_ps: 0,
+            prev_devices: Vec::new(),
+            prev_tenants: Vec::new(),
+            series: Series {
+                unit,
+                every,
+                epochs: Vec::new(),
+            },
+        }
+    }
+
+    /// The epoch clock for this sampler's unit.
+    #[inline]
+    fn clock(&self, insts: u64, t_ps: Ps) -> u64 {
+        match self.unit {
+            SampleUnit::Instructions => insts,
+            SampleUnit::Nanos => t_ps / PS_PER_NS,
+        }
+    }
+
+    /// Has the next epoch boundary been reached?
+    #[inline]
+    pub fn due(&self, insts: u64, t_ps: Ps) -> bool {
+        self.clock(insts, t_ps) >= self.next_at
+    }
+
+    /// Like [`Sampler::due`], but evaluates only the clock this
+    /// sampler's unit actually needs — the host's request loop calls
+    /// this per request, and both clocks are O(cores) scans.
+    #[inline]
+    pub fn due_lazy(
+        &self,
+        insts: impl FnOnce() -> u64,
+        t_ps: impl FnOnce() -> Ps,
+    ) -> bool {
+        match self.unit {
+            SampleUnit::Instructions => insts() >= self.next_at,
+            SampleUnit::Nanos => t_ps() / PS_PER_NS >= self.next_at,
+        }
+    }
+
+    /// Record an epoch ending at the given cumulative state.
+    pub fn sample(
+        &mut self,
+        insts: u64,
+        t_ps: Ps,
+        warmup: bool,
+        devices: Vec<DeviceCum>,
+        tenants: Vec<TenantCum>,
+    ) {
+        let dev_rows = devices
+            .iter()
+            .enumerate()
+            .map(|(di, cum)| {
+                let prev = self.prev_devices.get(di);
+                let zero_dev = DeviceCum::default();
+                let prev = prev.unwrap_or(&zero_dev);
+                let d_ps = t_ps.saturating_sub(self.prev_t_ps);
+                DeviceEpoch {
+                    device: di,
+                    requests: cum.requests - prev.requests,
+                    reads: cum.reads - prev.reads,
+                    writes: cum.writes - prev.writes,
+                    counters: cum.snapshot.delta(&prev.snapshot),
+                    link_utilization: if d_ps == 0 {
+                        0.0
+                    } else {
+                        ((cum.link_busy_ps - prev.link_busy_ps) as f64 / d_ps as f64)
+                            .min(1.0)
+                    },
+                    peak_outstanding: cum.window_peak_outstanding,
+                    lat: cum.lat.delta(&prev.lat),
+                }
+            })
+            .collect();
+        let tenant_rows = tenants
+            .iter()
+            .enumerate()
+            .map(|(ti, cum)| {
+                let zero_tenant = TenantCum::default();
+                let prev = self.prev_tenants.get(ti).unwrap_or(&zero_tenant);
+                TenantEpoch {
+                    tenant: ti,
+                    requests: cum.requests - prev.requests,
+                    instructions: cum.instructions - prev.instructions,
+                    lat: cum.lat.delta(&prev.lat),
+                }
+            })
+            .collect();
+        self.series.epochs.push(Epoch {
+            index: self.series.epochs.len(),
+            warmup,
+            insts,
+            t_ps,
+            d_insts: insts - self.prev_insts,
+            d_ps: t_ps.saturating_sub(self.prev_t_ps),
+            devices: dev_rows,
+            tenants: tenant_rows,
+        });
+        self.prev_insts = insts;
+        self.prev_t_ps = t_ps;
+        self.prev_devices = devices;
+        self.prev_tenants = tenants;
+        // Skip past every boundary the window already crossed (one
+        // epoch per sampling opportunity, not per multiple of `every` —
+        // a long stall yields one wide epoch, not a run of empty ones).
+        let clock = self.clock(insts, t_ps);
+        self.next_at = (clock / self.every + 1) * self.every;
+    }
+
+    /// Flush a final partial epoch for a phase if anything happened
+    /// since the last boundary (the host calls this at the end of
+    /// warmup and at the end of the measured phase).
+    pub fn flush(
+        &mut self,
+        insts: u64,
+        t_ps: Ps,
+        warmup: bool,
+        devices: Vec<DeviceCum>,
+        tenants: Vec<TenantCum>,
+    ) {
+        if insts > self.prev_insts || t_ps > self.prev_t_ps {
+            self.sample(insts, t_ps, warmup, devices, tenants);
+        }
+    }
+
+    /// Consume the sampler, yielding the collected series.
+    pub fn into_series(self) -> Series {
+        self.series
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev_cum(reqs: u64, mem: u64, busy: Ps) -> DeviceCum {
+        let mut c = DeviceCum {
+            requests: reqs,
+            reads: reqs,
+            link_busy_ps: busy,
+            window_peak_outstanding: 3,
+            ..Default::default()
+        };
+        c.snapshot.mem_accesses = mem;
+        c.snapshot.demotions = mem / 10;
+        c.snapshot.promoted_used = 7;
+        c.snapshot.promoted_total = 16;
+        c
+    }
+
+    #[test]
+    fn unit_names_roundtrip() {
+        for u in [SampleUnit::Instructions, SampleUnit::Nanos] {
+            assert_eq!(SampleUnit::parse(u.name()), Some(u));
+        }
+        assert_eq!(SampleUnit::parse("time"), Some(SampleUnit::Nanos));
+        assert_eq!(SampleUnit::parse("nope"), None);
+    }
+
+    #[test]
+    fn sampler_windows_counters_and_keeps_gauges() {
+        let mut s = Sampler::new(SampleUnit::Instructions, 1000);
+        assert!(!s.due(999, 0));
+        assert!(s.due(1000, 0));
+        s.sample(1000, 50_000, true, vec![dev_cum(10, 100, 5_000)], vec![]);
+        assert!(!s.due(1500, 0));
+        s.sample(2500, 150_000, false, vec![dev_cum(25, 160, 45_000)], vec![]);
+        let series = s.into_series();
+        assert_eq!(series.epochs.len(), 2);
+        let e0 = &series.epochs[0];
+        assert!(e0.warmup);
+        assert_eq!(e0.d_insts, 1000);
+        assert_eq!(e0.devices[0].requests, 10);
+        assert_eq!(e0.mem_accesses(), 100);
+        let e1 = &series.epochs[1];
+        assert!(!e1.warmup);
+        assert_eq!(e1.index, 1);
+        assert_eq!(e1.d_insts, 1500);
+        assert_eq!(e1.d_ps, 100_000);
+        assert_eq!(e1.devices[0].requests, 15);
+        assert_eq!(e1.mem_accesses(), 60);
+        // Gauges are point-in-time, not subtracted.
+        assert_eq!(e1.devices[0].counters.promoted_used, 7);
+        // Link busy delta 40_000 ps over a 100_000 ps window.
+        assert!((e1.devices[0].link_utilization - 0.4).abs() < 1e-12);
+        assert_eq!(series.measured().count(), 1);
+    }
+
+    #[test]
+    fn sampler_skips_crossed_boundaries() {
+        let mut s = Sampler::new(SampleUnit::Instructions, 100);
+        // One giant step over many boundaries yields ONE wide epoch.
+        s.sample(1050, 10, false, vec![], vec![]);
+        assert!(!s.due(1099, 0));
+        assert!(s.due(1100, 0));
+        assert_eq!(s.series.epochs.len(), 1);
+        assert_eq!(s.series.epochs[0].d_insts, 1050);
+    }
+
+    #[test]
+    fn flush_skips_empty_windows() {
+        let mut s = Sampler::new(SampleUnit::Nanos, 1000);
+        s.sample(500, 1_000_000, false, vec![dev_cum(5, 10, 0)], vec![]);
+        // Nothing since the boundary: flush is a no-op.
+        s.flush(500, 1_000_000, false, vec![dev_cum(5, 10, 0)], vec![]);
+        assert_eq!(s.series.epochs.len(), 1);
+        // Progress since: flush records a partial epoch.
+        s.flush(600, 1_200_000, false, vec![dev_cum(9, 14, 0)], vec![]);
+        assert_eq!(s.series.epochs.len(), 2);
+        assert_eq!(s.series.epochs[1].d_insts, 100);
+        assert_eq!(s.series.epochs[1].devices[0].requests, 4);
+    }
+
+    #[test]
+    fn nanos_unit_uses_sim_time() {
+        let s = Sampler::new(SampleUnit::Nanos, 500);
+        assert!(!s.due(u64::MAX, 499 * PS_PER_NS));
+        assert!(s.due(0, 500 * PS_PER_NS));
+    }
+
+    #[test]
+    fn due_lazy_evaluates_only_the_needed_clock() {
+        let s = Sampler::new(SampleUnit::Instructions, 100);
+        assert!(s.due_lazy(|| 100, || panic!("time clock must stay unevaluated")));
+        assert!(!s.due_lazy(|| 99, || panic!("time clock must stay unevaluated")));
+        let s = Sampler::new(SampleUnit::Nanos, 100);
+        assert!(s.due_lazy(
+            || panic!("instruction clock must stay unevaluated"),
+            || 100 * PS_PER_NS,
+        ));
+    }
+}

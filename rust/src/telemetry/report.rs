@@ -1,0 +1,521 @@
+//! Machine-readable run reports (versioned JSON) + BENCH-style bench
+//! result files.
+//!
+//! `ibex run --json FILE` emits one [`run_report`] per invocation:
+//! schema version, config manifest, seed, topology, then one entry per
+//! job with final metrics, per-tenant and per-device rows, a
+//! steady-state summary (warmup-trimmed — see [`steady_epochs`]) and
+//! the full epoch time-series. The bench binaries use [`BenchReport`]
+//! to drop `BENCH_<name>.json` files next to their CSVs when
+//! `IBEX_RESULTS_DIR` is set, so perf trajectories are machine-
+//! readable run over run.
+
+use std::fs;
+use std::path::Path;
+
+use crate::config::SimConfig;
+use crate::coordinator::JobResult;
+use crate::host::{DeviceLaneMetrics, TenantMetrics};
+use crate::mem::MEM_KINDS;
+use crate::stats::{LatencyHist, Table};
+
+use super::json::Json;
+use super::{Epoch, Series};
+
+/// Report layout version. Bump on any breaking change to the shape or
+/// meaning of emitted fields; consumers must check it before reading.
+pub const REPORT_SCHEMA_VERSION: u64 = 1;
+
+/// Relative tolerance for steady-state detection: an epoch is "at
+/// steady state" when its windowed internal-access count is within
+/// this fraction of the reference median.
+const STEADY_TOLERANCE: f64 = 0.25;
+
+/// The steady-state epoch window of a series, as `[start, end)`
+/// indices into `series.epochs`, or `None` without measured epochs.
+///
+/// Definition (documented in README/HELP; keep in sync): take the
+/// measured (non-warmup) epochs; the reference rate is the median
+/// windowed internal-access count over their final half (the run has
+/// settled by then if it ever does). Steady state starts at the
+/// *first* measured epoch within 25% of that median — so a §6.1-style
+/// promoted-region overflow burst at the start of the measured phase
+/// is trimmed, but the recovered tail is kept. If no epoch qualifies
+/// (the run never settles), it falls back to the final half.
+pub fn steady_epochs(series: &Series) -> Option<(usize, usize)> {
+    let measured: Vec<usize> = series
+        .epochs
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| !e.warmup)
+        .map(|(i, _)| i)
+        .collect();
+    let n = measured.len();
+    if n == 0 {
+        return None;
+    }
+    let end = measured[n - 1] + 1;
+    if n == 1 {
+        return Some((measured[0], end));
+    }
+    let rates: Vec<f64> = measured
+        .iter()
+        .map(|&i| series.epochs[i].mem_accesses() as f64)
+        .collect();
+    let mut tail: Vec<f64> = rates[n / 2..].to_vec();
+    tail.sort_by(|a, b| a.total_cmp(b));
+    let median = tail[tail.len() / 2];
+    let start = measured
+        .iter()
+        .zip(rates.iter())
+        .find(|(_, &r)| (r - median).abs() <= STEADY_TOLERANCE * median)
+        .map(|(&i, _)| i)
+        .unwrap_or(measured[n / 2]);
+    Some((start, end))
+}
+
+// Windowed histogram fields only: `max_ns` is deliberately omitted —
+// `LatencyHist::delta` cannot recover a per-window max from bucket
+// data (it carries the cumulative max as an upper bound), and emitting
+// a cumulative value among windowed siblings would mislead consumers.
+fn hist_json(h: &LatencyHist) -> Json {
+    let mut j = Json::object();
+    j.set("count", h.count)
+        .set("mean_ns", h.mean_ns())
+        .set("p99_ns", h.percentile_ns(0.99))
+        .set(
+            "buckets",
+            h.nonzero_buckets()
+                .into_iter()
+                .map(|(ub, c)| Json::Arr(vec![Json::from(ub), Json::from(c)]))
+                .collect::<Vec<_>>(),
+        );
+    j
+}
+
+fn mem_by_kind_json(counts: &[u64; 4]) -> Json {
+    let mut j = Json::object();
+    for (kind, &c) in MEM_KINDS.iter().zip(counts.iter()) {
+        j.set(kind.name(), c);
+    }
+    j
+}
+
+fn tenant_json(t: &TenantMetrics) -> Json {
+    let mut j = Json::object();
+    j.set("name", t.name.as_str())
+        .set("cores", t.cores)
+        .set("instructions", t.instructions)
+        .set("requests", t.requests)
+        .set("reads", t.reads)
+        .set("writes", t.writes)
+        .set("requests_per_kinst", t.requests_per_kilo_inst())
+        .set("perf_inst_per_ns", t.perf())
+        .set("elapsed_ps", t.elapsed_ps)
+        .set("mean_latency_ns", t.mean_latency_ns)
+        .set("p99_latency_ns", t.p99_latency_ns);
+    j
+}
+
+fn device_json(d: &DeviceLaneMetrics) -> Json {
+    let mut j = Json::object();
+    match d.device {
+        Some(i) => j.set("device", i),
+        None => j.set("device", Json::Null),
+    };
+    j.set("requests", d.requests)
+        .set("reads", d.reads)
+        .set("writes", d.writes)
+        .set("mean_latency_ns", d.mean_latency_ns)
+        .set("p99_latency_ns", d.p99_latency_ns)
+        .set("peak_outstanding", d.peak_outstanding)
+        .set("mem_accesses", d.mem_accesses)
+        .set("logical_bytes", d.logical_bytes)
+        .set("physical_bytes", d.physical_bytes)
+        .set("compression_ratio", d.compression_ratio())
+        .set("link_utilization", d.link_utilization)
+        .set("promotions", d.promotions)
+        .set("demotions", d.demotions);
+    j
+}
+
+fn epoch_json(e: &Epoch, tenant_names: &[String]) -> Json {
+    let mut j = Json::object();
+    j.set("index", e.index)
+        .set("warmup", e.warmup)
+        .set("insts", e.insts)
+        .set("t_ps", e.t_ps)
+        .set("d_insts", e.d_insts)
+        .set("d_ps", e.d_ps)
+        .set("perf_inst_per_ns", e.perf());
+    let devices: Vec<Json> = e
+        .devices
+        .iter()
+        .map(|d| {
+            let c = &d.counters;
+            let mut dj = Json::object();
+            dj.set("device", d.device)
+                .set("requests", d.requests)
+                .set("reads", d.reads)
+                .set("writes", d.writes)
+                .set("promotions", c.promotions)
+                .set("demotions", c.demotions)
+                .set("clean_demotions", c.clean_demotions)
+                .set("promoted_hits", c.promoted_hits)
+                .set("zero_serves", c.zero_serves)
+                .set("compressed_serves", c.compressed_serves)
+                .set("incompressible_serves", c.incompressible_serves)
+                .set("wrcnt_recompressions", c.wrcnt_recompressions)
+                .set("mem_accesses", c.mem_accesses)
+                .set("mem_by_kind", mem_by_kind_json(&c.mem_by_kind))
+                .set("promoted_used", c.promoted_used)
+                .set("promoted_total", c.promoted_total)
+                .set("promoted_fill", c.promoted_fill())
+                .set("compression_ratio", c.compression_ratio())
+                .set("link_utilization", d.link_utilization)
+                .set("peak_outstanding", d.peak_outstanding)
+                .set("latency", hist_json(&d.lat));
+            dj
+        })
+        .collect();
+    j.set("devices", devices);
+    let tenants: Vec<Json> = e
+        .tenants
+        .iter()
+        .map(|t| {
+            let mut tj = Json::object();
+            tj.set("tenant", t.tenant)
+                .set(
+                    "name",
+                    tenant_names
+                        .get(t.tenant)
+                        .map(|s| Json::from(s.as_str()))
+                        .unwrap_or(Json::Null),
+                )
+                .set("requests", t.requests)
+                .set("instructions", t.instructions)
+                .set("latency", hist_json(&t.lat));
+            tj
+        })
+        .collect();
+    j.set("tenants", tenants);
+    j
+}
+
+fn series_json(series: &Series, tenant_names: &[String]) -> Json {
+    let mut j = Json::object();
+    j.set("unit", series.unit.name())
+        .set("every", series.every)
+        .set(
+            "epochs",
+            series
+                .epochs
+                .iter()
+                .map(|e| epoch_json(e, tenant_names))
+                .collect::<Vec<_>>(),
+        );
+    j
+}
+
+fn steady_json(series: &Series) -> Json {
+    let mut j = Json::object();
+    let Some((start, end)) = steady_epochs(series) else {
+        j.set("detected", false);
+        return j;
+    };
+    let window = &series.epochs[start..end];
+    let insts: u64 = window.iter().map(|e| e.d_insts).sum();
+    let ps: u64 = window.iter().map(|e| e.d_ps).sum();
+    let mem: u64 = window.iter().map(|e| e.mem_accesses()).sum();
+    let demos: u64 = window.iter().map(|e| e.demotions()).sum();
+    j.set("detected", true)
+        .set("start_epoch", start)
+        .set("epochs", end - start)
+        .set("instructions", insts)
+        .set("elapsed_ps", ps)
+        .set("perf_inst_per_ns", insts as f64 * 1000.0 / ps.max(1) as f64)
+        .set("mem_accesses", mem)
+        .set(
+            "mem_accesses_per_kinst",
+            if insts == 0 {
+                0.0
+            } else {
+                mem as f64 / (insts as f64 / 1000.0)
+            },
+        )
+        .set("demotions", demos);
+    j
+}
+
+fn job_json(r: &JobResult) -> Json {
+    let m = &r.metrics;
+    let d = &r.device;
+    let mut fin = Json::object();
+    fin.set("perf_inst_per_ns", m.perf())
+        .set("instructions", m.instructions)
+        .set("elapsed_ps", m.elapsed_ps)
+        .set("requests", m.requests)
+        .set("mem_accesses", m.mem_total)
+        .set("mem_by_kind", mem_by_kind_json(&m.mem_by_kind))
+        .set("compression_ratio", m.compression_ratio)
+        .set("mean_latency_ns", d.mean_latency_ns)
+        .set("p99_latency_ns", d.p99_latency_ns)
+        .set("promotions", d.promotions)
+        .set("demotions", d.demotions)
+        .set("clean_demotions", d.clean_demotions)
+        .set("zero_serves", d.zero_serves)
+        .set("promoted_hits", d.promoted_hits)
+        .set("compressed_serves", d.compressed_serves)
+        .set("wrcnt_recompressions", d.wrcnt_recompressions);
+    let mut j = Json::object();
+    j.set("label", r.label.as_str())
+        .set("workload", r.workload.as_str())
+        .set("scheme", r.scheme.as_str())
+        .set("final", fin)
+        .set(
+            "tenants",
+            m.tenants.iter().map(tenant_json).collect::<Vec<_>>(),
+        )
+        .set(
+            "devices",
+            m.devices.iter().map(device_json).collect::<Vec<_>>(),
+        );
+    match &r.series {
+        Some(series) => {
+            let names: Vec<String> = m.tenants.iter().map(|t| t.name.clone()).collect();
+            j.set("steady_state", steady_json(series));
+            j.set("series", series_json(series, &names));
+        }
+        None => {
+            let mut off = Json::object();
+            off.set("detected", false);
+            j.set("steady_state", off);
+            j.set("series", Json::Null);
+        }
+    }
+    j
+}
+
+/// Assemble the full run report for one CLI invocation: `cfg` is the
+/// *base* configuration (per-job rows carry their own scheme labels).
+pub fn run_report(cfg: &SimConfig, results: &[JobResult]) -> Json {
+    let mut config = Json::object();
+    for (k, v) in cfg.dump() {
+        config.set(&k, v);
+    }
+    let mut topology = Json::object();
+    topology
+        .set("devices", cfg.devices)
+        .set("interleave", cfg.interleave.name());
+    let mut j = Json::object();
+    j.set("schema_version", REPORT_SCHEMA_VERSION)
+        .set("tool", "ibex")
+        .set("kind", "run_report")
+        .set("seed", cfg.seed)
+        .set("topology", topology)
+        .set("config", config)
+        .set(
+            "jobs",
+            results.iter().map(job_json).collect::<Vec<_>>(),
+        );
+    j
+}
+
+/// Write [`run_report`] to `path` (pretty-printed, trailing newline).
+pub fn write_report(
+    path: &Path,
+    cfg: &SimConfig,
+    results: &[JobResult],
+) -> Result<(), String> {
+    let mut text = run_report(cfg, results).to_string_pretty();
+    text.push('\n');
+    fs::write(path, text).map_err(|e| format!("cannot write {}: {e}", path.display()))
+}
+
+/// BENCH-style machine-readable bench results. Mirrors `Table::emit`'s
+/// CSV side channel: when `IBEX_RESULTS_DIR` is set, [`BenchReport::write`]
+/// drops `<dir>/BENCH_<name>.json` next to the CSVs; otherwise it is a
+/// no-op, so benches stay usable without any env setup.
+pub struct BenchReport {
+    name: String,
+    tables: Vec<Json>,
+    metrics: Json,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            tables: Vec::new(),
+            metrics: Json::object(),
+        }
+    }
+
+    /// Attach a results table (headers + rows, exactly as printed).
+    pub fn table(&mut self, t: &Table) -> &mut Self {
+        let mut j = Json::object();
+        j.set("title", t.title.as_str())
+            .set(
+                "headers",
+                t.headers.iter().map(|h| Json::from(h.as_str())).collect::<Vec<_>>(),
+            )
+            .set(
+                "rows",
+                t.rows
+                    .iter()
+                    .map(|r| {
+                        Json::Arr(r.iter().map(|c| Json::from(c.as_str())).collect())
+                    })
+                    .collect::<Vec<_>>(),
+            );
+        self.tables.push(j);
+        self
+    }
+
+    /// Attach a headline scalar (the numbers trend dashboards track).
+    pub fn metric(&mut self, key: &str, value: f64) -> &mut Self {
+        self.metrics.set(key, value);
+        self
+    }
+
+    /// The assembled document (also what [`BenchReport::write`] emits).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::object();
+        j.set("schema_version", REPORT_SCHEMA_VERSION)
+            .set("tool", "ibex")
+            .set("kind", "bench_report")
+            .set("bench", self.name.as_str())
+            .set("metrics", self.metrics.clone())
+            .set("tables", Json::Arr(self.tables.clone()));
+        j
+    }
+
+    /// Write `BENCH_<name>.json` into `IBEX_RESULTS_DIR`, if set.
+    pub fn write(&self) {
+        let Ok(dir) = std::env::var("IBEX_RESULTS_DIR") else {
+            return;
+        };
+        let path = Path::new(&dir).join(format!("BENCH_{}.json", self.name));
+        let _ = fs::create_dir_all(&dir);
+        let mut text = self.to_json().to_string_pretty();
+        text.push('\n');
+        match fs::write(&path, text) {
+            Ok(()) => println!("wrote {}", path.display()),
+            Err(e) => eprintln!("warn: could not write {}: {e}", path.display()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{DeviceCum, SampleUnit, Sampler, TenantCum};
+
+    /// A synthetic series: warmup epoch, an overflow burst (§6.1-style
+    /// demotion/traffic spike), then a settled tail.
+    fn burst_series() -> Series {
+        let mut s = Sampler::new(SampleUnit::Instructions, 1000);
+        let mut mem = 0u64;
+        let mut reqs = 0u64;
+        let mut push = |s: &mut Sampler, i: u64, warmup: bool, window_mem: u64| {
+            mem += window_mem;
+            reqs += 100;
+            let mut cum = DeviceCum {
+                requests: reqs,
+                ..Default::default()
+            };
+            cum.snapshot.mem_accesses = mem;
+            cum.snapshot.demotions = mem / 100;
+            s.sample(i * 1000, i * 500_000, warmup, vec![cum], vec![TenantCum {
+                requests: reqs,
+                instructions: i * 1000,
+                ..Default::default()
+            }]);
+        };
+        push(&mut s, 1, true, 500);
+        push(&mut s, 2, false, 3000); // overflow burst
+        push(&mut s, 3, false, 1100);
+        push(&mut s, 4, false, 1000);
+        push(&mut s, 5, false, 900);
+        push(&mut s, 6, false, 1050);
+        s.into_series()
+    }
+
+    #[test]
+    fn steady_state_trims_the_burst() {
+        let series = burst_series();
+        let (start, end) = steady_epochs(&series).unwrap();
+        // Epoch 0 is warmup, epoch 1 is the burst: steady state starts
+        // at epoch 2 (the first within 25% of the settled median).
+        assert_eq!(start, 2);
+        assert_eq!(end, series.epochs.len());
+    }
+
+    #[test]
+    fn steady_state_handles_degenerate_series() {
+        let empty = Series::default();
+        assert_eq!(steady_epochs(&empty), None);
+        // All-warmup series: no measured epochs.
+        let mut s = Sampler::new(SampleUnit::Instructions, 10);
+        s.sample(10, 10, true, vec![], vec![]);
+        assert_eq!(steady_epochs(&s.clone().into_series()), None);
+        // A single measured epoch IS the steady state.
+        s.sample(20, 20, false, vec![], vec![]);
+        assert_eq!(steady_epochs(&s.into_series()), Some((1, 2)));
+    }
+
+    #[test]
+    fn steady_json_sums_the_window() {
+        let series = burst_series();
+        let j = steady_json(&series);
+        assert_eq!(j.get("detected").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("start_epoch").unwrap().as_u64(), Some(2));
+        assert_eq!(j.get("epochs").unwrap().as_u64(), Some(4));
+        // Window mem = 1100 + 1000 + 900 + 1050.
+        assert_eq!(j.get("mem_accesses").unwrap().as_u64(), Some(4050));
+        assert_eq!(j.get("instructions").unwrap().as_u64(), Some(4000));
+    }
+
+    #[test]
+    fn series_json_carries_epoch_fields() {
+        let series = burst_series();
+        let j = series_json(&series, &["parest".to_string()]);
+        assert_eq!(j.get("unit").unwrap().as_str(), Some("insts"));
+        let epochs = j.get("epochs").unwrap().as_arr().unwrap();
+        assert_eq!(epochs.len(), 6);
+        let e1 = &epochs[1];
+        assert_eq!(e1.get("warmup").unwrap().as_bool(), Some(false));
+        assert_eq!(e1.get("d_insts").unwrap().as_u64(), Some(1000));
+        let d0 = e1.get("devices").unwrap().idx(0).unwrap();
+        assert_eq!(d0.get("mem_accesses").unwrap().as_u64(), Some(3000));
+        let t0 = e1.get("tenants").unwrap().idx(0).unwrap();
+        assert_eq!(t0.get("name").unwrap().as_str(), Some("parest"));
+        // Round-trips through the writer+parser.
+        let back = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(back, j);
+    }
+
+    #[test]
+    fn bench_report_document_shape() {
+        let mut t = Table::new("Demo table", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let mut b = BenchReport::new("demo");
+        b.table(&t).metric("speedup_x8", 3.5);
+        let j = b.to_json();
+        assert_eq!(
+            j.get("schema_version").unwrap().as_u64(),
+            Some(REPORT_SCHEMA_VERSION)
+        );
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("bench_report"));
+        assert_eq!(
+            j.get("metrics").unwrap().get("speedup_x8").unwrap().as_f64(),
+            Some(3.5)
+        );
+        let tables = j.get("tables").unwrap().as_arr().unwrap();
+        assert_eq!(tables[0].get("title").unwrap().as_str(), Some("Demo table"));
+        assert_eq!(
+            tables[0].get("rows").unwrap().idx(0).unwrap().idx(1).unwrap().as_str(),
+            Some("2")
+        );
+    }
+}

@@ -1,0 +1,338 @@
+//! Telemetry subsystem integration tests.
+//!
+//! Pins the contract of `ibex::telemetry`:
+//! * enabling sampling leaves a run's final metrics **bit-identical**
+//!   (the sampler only reads counters, never advances time);
+//! * with sampling off, the request path performs **zero snapshot
+//!   calls** (counted through a wrapper scheme);
+//! * the sampled series is deterministic and independent of the
+//!   `IBEX_THREADS` worker-pool width;
+//! * the JSON run report round-trips through the std-only writer +
+//!   parser with a pinned top-level shape, and the CLI `--json` flag
+//!   produces it end to end.
+
+use std::cell::Cell;
+use std::rc::Rc;
+
+use ibex::cli;
+use ibex::compress::{AnalyticSizeModel, PageSizes};
+use ibex::config::SimConfig;
+use ibex::coordinator::{run_many, run_one, Job};
+use ibex::expander::{build_scheme, ContentOracle, DeviceStats, Scheme, SchemeSnapshot};
+use ibex::host::HostSim;
+use ibex::mem::MemorySystem;
+use ibex::sim::Ps;
+use ibex::telemetry::json::Json;
+use ibex::telemetry::report;
+use ibex::topology::DevicePool;
+use ibex::workload::{by_name, WorkloadOracle};
+
+fn quick_cfg() -> SimConfig {
+    let mut c = SimConfig::test_small();
+    c.cores = 2;
+    c.instructions = 100_000;
+    c.warmup_instructions = 10_000;
+    c
+}
+
+/// Everything that must not move when sampling is toggled.
+#[derive(Debug, PartialEq)]
+struct Fingerprint {
+    elapsed_ps: u64,
+    requests: u64,
+    mem_by_kind: [u64; 4],
+    mem_total: u64,
+    ratio_bits: u64,
+    dev_requests: Vec<u64>,
+}
+
+fn run_fingerprint(cfg: &SimConfig, workload: &str) -> (Fingerprint, Option<usize>) {
+    let spec = by_name(workload).unwrap();
+    let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
+    let mut pool = DevicePool::build(cfg);
+    let mut sim = HostSim::new(cfg, &spec);
+    let m = sim.run(&mut pool, &mut oracle);
+    let epochs = sim.take_series().map(|s| s.epochs.len());
+    (
+        Fingerprint {
+            elapsed_ps: m.elapsed_ps,
+            requests: m.requests,
+            mem_by_kind: m.mem_by_kind,
+            mem_total: m.mem_total,
+            ratio_bits: m.compression_ratio.to_bits(),
+            dev_requests: m.devices.iter().map(|d| d.requests).collect(),
+        },
+        epochs,
+    )
+}
+
+#[test]
+fn sampling_leaves_final_metrics_bit_identical() {
+    let base = quick_cfg();
+    let (unsampled, no_series) = run_fingerprint(&base, "omnetpp");
+    assert_eq!(no_series, None, "sampling is off by default");
+
+    let mut sampled_cfg = base.clone();
+    sampled_cfg.set("sample_every", "20000").unwrap();
+    let (sampled, epochs) = run_fingerprint(&sampled_cfg, "omnetpp");
+    assert!(epochs.unwrap() >= 2, "expected >=2 epochs");
+    assert_eq!(sampled, unsampled, "instruction-epoch sampling perturbed the run");
+
+    // Sim-time granularity takes a different set of boundaries but
+    // must be equally invisible.
+    let mut ns_cfg = base.clone();
+    ns_cfg.set("sample_every", "5000").unwrap();
+    ns_cfg.set("sample_unit", "ns").unwrap();
+    let (ns_sampled, ns_epochs) = run_fingerprint(&ns_cfg, "omnetpp");
+    assert!(ns_epochs.unwrap() >= 2);
+    assert_eq!(ns_sampled, unsampled, "sim-time sampling perturbed the run");
+
+    // Multi-device runs: per-device routing must be untouched too.
+    let mut multi = base.clone();
+    multi.set("devices", "2").unwrap();
+    let (multi_plain, _) = run_fingerprint(&multi, "pr");
+    let mut multi_sampled = multi.clone();
+    multi_sampled.set("sample_every", "20000").unwrap();
+    let (multi_on, _) = run_fingerprint(&multi_sampled, "pr");
+    assert_eq!(multi_on, multi_plain, "sampling perturbed a sharded run");
+}
+
+/// A pass-through scheme that counts `snapshot`/`promoted_occupancy`
+/// reads, pinning "zero hot-path cost when off" as *zero calls*.
+struct CountingScheme {
+    inner: Box<dyn Scheme>,
+    snapshots: Rc<Cell<u64>>,
+}
+
+impl Scheme for CountingScheme {
+    fn access(
+        &mut self,
+        now: Ps,
+        ospn: u64,
+        line: u32,
+        write: bool,
+        oracle: &mut dyn ContentOracle,
+    ) -> Ps {
+        self.inner.access(now, ospn, line, write, oracle)
+    }
+
+    fn populate(&mut self, ospn: u64, sizes: PageSizes) {
+        self.inner.populate(ospn, sizes)
+    }
+
+    fn stats(&self) -> &DeviceStats {
+        self.inner.stats()
+    }
+
+    fn mem(&self) -> &MemorySystem {
+        self.inner.mem()
+    }
+
+    fn logical_bytes(&self) -> u64 {
+        self.inner.logical_bytes()
+    }
+
+    fn physical_bytes(&self) -> u64 {
+        self.inner.physical_bytes()
+    }
+
+    fn promoted_occupancy(&self) -> (u64, u64) {
+        self.snapshots.set(self.snapshots.get() + 1);
+        self.inner.promoted_occupancy()
+    }
+
+    fn snapshot(&self) -> SchemeSnapshot {
+        self.snapshots.set(self.snapshots.get() + 1);
+        self.inner.snapshot()
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+}
+
+fn counted_run(cfg: &SimConfig) -> u64 {
+    let counter = Rc::new(Cell::new(0u64));
+    let spec = by_name("parest").unwrap();
+    let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
+    let mut pool = DevicePool::single(
+        cfg,
+        Box::new(CountingScheme {
+            inner: build_scheme(cfg),
+            snapshots: counter.clone(),
+        }),
+    );
+    let mut sim = HostSim::new(cfg, &spec);
+    let _ = sim.run(&mut pool, &mut oracle);
+    counter.get()
+}
+
+#[test]
+fn sampling_off_means_zero_snapshot_calls() {
+    let cfg = quick_cfg();
+    assert_eq!(
+        counted_run(&cfg),
+        0,
+        "with sample_every=0 the host must never call Scheme::snapshot"
+    );
+    let mut on = cfg.clone();
+    on.set("sample_every", "20000").unwrap();
+    assert!(
+        counted_run(&on) > 0,
+        "with sampling on, epoch boundaries must take snapshots"
+    );
+}
+
+#[test]
+fn series_deterministic_across_thread_pool_widths() {
+    let mut cfg = quick_cfg();
+    cfg.set("sample_every", "15000").unwrap();
+    let jobs: Vec<Job> = ["parest", "omnetpp", "mcf"]
+        .iter()
+        .map(|w| Job::new(*w, cfg.clone(), w))
+        .collect();
+    let series_fp = |results: &[ibex::coordinator::JobResult]| -> Vec<Vec<(u64, u64, u64)>> {
+        results
+            .iter()
+            .map(|r| {
+                r.series
+                    .as_ref()
+                    .expect("sampling enabled")
+                    .epochs
+                    .iter()
+                    .map(|e| (e.insts, e.t_ps, e.mem_accesses()))
+                    .collect()
+            })
+            .collect()
+    };
+    // The sampler runs inside each single-threaded job; the worker-pool
+    // width must not change a single epoch.
+    std::env::set_var("IBEX_THREADS", "1");
+    let serial = series_fp(&run_many(jobs.clone()));
+    std::env::set_var("IBEX_THREADS", "4");
+    let parallel = series_fp(&run_many(jobs));
+    std::env::remove_var("IBEX_THREADS");
+    assert_eq!(serial, parallel, "series must not depend on IBEX_THREADS");
+    assert!(serial.iter().all(|s| s.len() >= 2));
+}
+
+#[test]
+fn json_report_roundtrips_with_pinned_shape() {
+    let mut cfg = quick_cfg();
+    cfg.set("sample_every", "20000").unwrap();
+    let r = run_one(&Job::new("parest/ibex", cfg.clone(), "parest"));
+    let doc = report::run_report(&cfg, &[r.clone()]);
+    let text = doc.to_string_pretty();
+    let back = Json::parse(&text).expect("report must parse");
+    assert_eq!(back, doc, "writer/parser round trip");
+
+    // Pinned top-level shape (schema v1).
+    let Json::Obj(entries) = &back else {
+        panic!("report must be an object")
+    };
+    let keys: Vec<&str> = entries.iter().map(|(k, _)| k.as_str()).collect();
+    assert_eq!(
+        keys,
+        ["schema_version", "tool", "kind", "seed", "topology", "config", "jobs"],
+        "schema v1 top-level keys"
+    );
+    assert_eq!(
+        back.get("schema_version").unwrap().as_u64(),
+        Some(report::REPORT_SCHEMA_VERSION)
+    );
+    assert_eq!(back.get("kind").unwrap().as_str(), Some("run_report"));
+    assert_eq!(back.get("seed").unwrap().as_u64(), Some(cfg.seed));
+    // Config manifest carries the resolved keys.
+    let config = back.get("config").unwrap();
+    assert_eq!(config.get("scheme").unwrap().as_str(), Some("ibex"));
+    assert_eq!(config.get("sample_every").unwrap().as_str(), Some("20000"));
+
+    let job = back.get("jobs").unwrap().idx(0).unwrap();
+    let Json::Obj(job_entries) = job else {
+        panic!("job must be an object")
+    };
+    let job_keys: Vec<&str> = job_entries.iter().map(|(k, _)| k.as_str()).collect();
+    assert_eq!(
+        job_keys,
+        ["label", "workload", "scheme", "final", "tenants", "devices", "steady_state", "series"]
+    );
+    // Final metrics mirror the in-memory result exactly.
+    let fin = job.get("final").unwrap();
+    assert_eq!(
+        fin.get("instructions").unwrap().as_u64(),
+        Some(r.metrics.instructions)
+    );
+    assert_eq!(
+        fin.get("elapsed_ps").unwrap().as_u64(),
+        Some(r.metrics.elapsed_ps)
+    );
+    assert_eq!(fin.get("requests").unwrap().as_u64(), Some(r.metrics.requests));
+    // Per-tenant and per-device rows exist.
+    assert_eq!(job.get("tenants").unwrap().as_arr().unwrap().len(), 1);
+    assert_eq!(job.get("devices").unwrap().as_arr().unwrap().len(), 1);
+    // The series has >=2 epochs with monotone cumulative clocks.
+    let epochs = job.get("series").unwrap().get("epochs").unwrap();
+    let epochs = epochs.as_arr().unwrap();
+    assert!(epochs.len() >= 2, "{} epochs", epochs.len());
+    let mut last = 0;
+    for e in epochs {
+        // Non-decreasing: a phase-end flush may be a zero-instruction
+        // window covering only the drain tail.
+        let insts = e.get("insts").unwrap().as_u64().unwrap();
+        assert!(insts >= last);
+        last = insts;
+    }
+    // Steady state detected and inside the measured epochs.
+    let steady = job.get("steady_state").unwrap();
+    assert_eq!(steady.get("detected").unwrap().as_bool(), Some(true));
+    assert!(steady.get("perf_inst_per_ns").unwrap().as_f64().unwrap() > 0.0);
+    let start = steady.get("start_epoch").unwrap().as_u64().unwrap() as usize;
+    assert!(!epochs[start].get("warmup").unwrap().as_bool().unwrap());
+}
+
+#[test]
+fn unsampled_report_has_null_series() {
+    let cfg = quick_cfg();
+    let r = run_one(&Job::new("parest/ibex", cfg.clone(), "parest"));
+    let doc = report::run_report(&cfg, &[r]);
+    let job = doc.get("jobs").unwrap().idx(0).unwrap();
+    assert_eq!(job.get("series"), Some(&Json::Null));
+    assert_eq!(
+        job.get("steady_state").unwrap().get("detected").unwrap().as_bool(),
+        Some(false)
+    );
+}
+
+#[test]
+fn cli_json_flag_writes_parseable_report() {
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("ibex_telemetry_{}.json", std::process::id()));
+    let path_s = path.to_string_lossy().into_owned();
+    let s = |v: &[&str]| -> Vec<String> { v.iter().map(|x| x.to_string()).collect() };
+    let code = cli::dispatch(&s(&[
+        "run",
+        "--workload",
+        "parest",
+        "--scheme",
+        "ibex",
+        "--json",
+        &path_s,
+        "--sample-every",
+        "20000",
+        "instructions=60000",
+        "warmup_instructions=6000",
+        "cores=2",
+        "footprint_scale=0.0001",
+    ]));
+    assert_eq!(code, 0, "ibex run --json must succeed");
+    let text = std::fs::read_to_string(&path).expect("report file written");
+    let doc = Json::parse(&text).expect("report parses");
+    assert_eq!(doc.get("schema_version").unwrap().as_u64(), Some(1));
+    let job = doc.get("jobs").unwrap().idx(0).unwrap();
+    let epochs = job.get("series").unwrap().get("epochs").unwrap();
+    assert!(
+        epochs.as_arr().unwrap().len() >= 2,
+        "CLI smoke must produce >=2 epochs"
+    );
+    let _ = std::fs::remove_file(&path);
+}
