@@ -2,7 +2,7 @@
 # test (the default analytic backend is pure Rust) — `artifacts` is only
 # for the PJRT path (`cargo build --features pjrt`, backend=pjrt|auto).
 
-.PHONY: artifacts golden test pytest
+.PHONY: artifacts golden test pytest perf perf-baseline
 
 # AOT-compile the Layer-1 Pallas kernel to HLO text + meta sidecar
 # (requires JAX; see python/compile/aot.py).
@@ -22,3 +22,19 @@ test:
 # Python-side suite (tier 2; needs jax + pytest + hypothesis).
 pytest:
 	cd python && python3 -m pytest tests -q
+
+# Hot-path perf run: drops perf/BENCH_perf_hotpath.json (Mreq/s per
+# scheme + isolated translation/scan/size-model costs) and prints the
+# delta against the committed baseline in perf/baseline/.
+# (absolute IBEX_RESULTS_DIR: cargo bench runs the binary with
+# cwd=rust/, not the repo root)
+perf:
+	IBEX_RESULTS_DIR=$(CURDIR)/perf cargo bench --bench perf_hotpath
+	python3 scripts/perf_delta.py perf/BENCH_perf_hotpath.json
+
+# Record the current machine's perf run as the committed baseline
+# (run `make perf` first; commit the result with the change that
+# motivated it).
+perf-baseline: perf
+	mkdir -p perf/baseline
+	cp perf/BENCH_perf_hotpath.json perf/baseline/BENCH_perf_hotpath.json

@@ -45,8 +45,14 @@ pub fn scaled_promoted_mb(paper_mb: u64) -> u64 {
     ((paper_mb << 20) as f64 * BENCH_SCALE) as u64
 }
 
+/// Single owner of the `IBEX_BENCH_QUICK` contract — benches branch on
+/// this instead of re-parsing the env var.
+pub fn quick() -> bool {
+    std::env::var("IBEX_BENCH_QUICK").is_ok_and(|v| v == "1")
+}
+
 pub fn insts() -> u64 {
-    if std::env::var("IBEX_BENCH_QUICK").is_ok_and(|v| v == "1") {
+    if quick() {
         return 2_000_000;
     }
     std::env::var("IBEX_BENCH_INSTS")

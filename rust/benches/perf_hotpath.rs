@@ -3,7 +3,15 @@
 //! Measures simulated-requests-per-second of the end-to-end driver for
 //! each scheme (the simulator's own throughput — DESIGN.md §7 targets
 //! ≥1 M device requests/s/core) plus the isolated cost of the hottest
-//! operations (translation, activity scan, size-model call).
+//! operations: page-table translation, the second-chance activity
+//! scan, and the analytic size model (the oracle's miss path).
+//!
+//! Results land in `BENCH_perf_hotpath.json` (next to the CSV when
+//! `IBEX_RESULTS_DIR` is set) so the perf trajectory is recorded run
+//! over run; `scripts/perf_delta.py` compares a run against the
+//! committed baseline in `perf/baseline/` (`make perf` / `make
+//! perf-baseline`). `IBEX_BENCH_QUICK=1` shortens the end-to-end loops
+//! for the non-gating CI smoke step.
 
 mod common;
 
@@ -11,13 +19,22 @@ use std::time::Instant;
 
 use ibex::compress::size_model::analyze_page;
 use ibex::compress::AnalyticSizeModel;
-use ibex::topology::DevicePool;
+use ibex::expander::store::{ActivityEntry, ActivityTable, ChunkArena, ChunkRun, PageTable};
 use ibex::host::HostSim;
 use ibex::stats::Table;
+use ibex::telemetry::report::BenchReport;
+use ibex::topology::DevicePool;
 use ibex::workload::{by_name, WorkloadOracle};
 
 fn main() {
     common::banner("Perf L3", "simulator hot-path throughput");
+    // Shorter loops than the figure benches: the hot path saturates
+    // well before 8 M instructions. IBEX_BENCH_INSTS still lowers it
+    // further; IBEX_BENCH_QUICK (via common) shortens every loop.
+    let insts: u64 = common::insts().min(if common::quick() { 500_000 } else { 2_000_000 });
+    let mut report = BenchReport::new("perf_hotpath");
+    report.metric("instructions_per_scheme", insts as f64);
+
     let mut t = Table::new(
         "Hot path — simulated request throughput per scheme",
         &["scheme", "requests", "wall ms", "Mreq/s"],
@@ -32,7 +49,7 @@ fn main() {
         "ibex",
     ] {
         let mut cfg = common::bench_cfg();
-        cfg.instructions = 2_000_000;
+        cfg.instructions = insts;
         cfg.warmup_instructions = 0;
         cfg.set("scheme", scheme).unwrap();
         let spec = by_name("pr").unwrap();
@@ -42,28 +59,132 @@ fn main() {
         let start = Instant::now();
         let m = sim.run(&mut dev, &mut oracle);
         let wall = start.elapsed();
+        let mreq_s = m.requests as f64 / wall.as_secs_f64() / 1e6;
+        report.metric(&format!("{scheme}_mreq_per_s"), mreq_s);
         t.row(vec![
             scheme.to_string(),
             m.requests.to_string(),
             format!("{:.0}", wall.as_secs_f64() * 1000.0),
-            format!("{:.2}", m.requests as f64 / wall.as_secs_f64() / 1e6),
+            format!("{mreq_s:.2}"),
         ]);
     }
     t.emit();
 
-    // Isolated: analytic size model (the oracle's miss path).
+    // ---- isolated hot operations -----------------------------------
+
+    let mut iso = Table::new(
+        "Hot path — isolated operation costs",
+        &["operation", "iterations", "ns/op"],
+    );
+
+    // Translation: dense page-table lookup over a paper-scale footprint
+    // (the per-request OSPN→entry resolution every scheme performs).
+    let pages: u64 = 1 << 20;
+    let mut table: PageTable<[u64; 4]> = PageTable::with_expected(pages, pages);
+    for p in 0..pages {
+        table.insert(p, [p; 4]);
+    }
+    let iters: u64 = if common::quick() { 2_000_000 } else { 10_000_000 };
+    let mut acc = 0u64;
+    let start = Instant::now();
+    let mut p = 0u64;
+    for _ in 0..iters {
+        // LCG stride keeps the access pattern cache-hostile like a
+        // Zipf-routed request stream, not a linear sweep.
+        p = (p.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407)) % pages;
+        acc += table.get(p).map(|e| e[0]).unwrap_or(0);
+    }
+    let translation_ns = start.elapsed().as_secs_f64() * 1e9 / iters as f64;
+    report.metric("translation_lookup_ns", translation_ns);
+    iso.row(vec![
+        "page-table lookup".into(),
+        iters.to_string(),
+        format!("{translation_ns:.1}"),
+    ]);
+
+    // Activity scan: one second-chance window (16 packed entries) over
+    // a 512 MB-region-sized table, the demotion path's inner loop.
+    let slots = 512 << 10;
+    let mut act = ActivityTable::new(slots);
+    for s in 0..slots {
+        act.set(
+            s,
+            ActivityEntry {
+                allocated: s % 4 != 0,
+                referenced: s % 2 == 0,
+                ospn: s as u64,
+                block: (s % 4) as u8,
+            },
+        );
+    }
+    let scans: u64 = if common::quick() { 200_000 } else { 1_000_000 };
+    let mut cold = 0u64;
+    let start = Instant::now();
+    let mut cursor = 0usize;
+    for _ in 0..scans {
+        for k in 0..16 {
+            let i = (cursor + k) % slots;
+            if !act.is_allocated(i) {
+                continue;
+            }
+            if act.is_referenced(i) {
+                act.clear_referenced(i);
+            } else {
+                cold += 1;
+            }
+        }
+        cursor = (cursor + 16) % slots;
+    }
+    let scan_ns = start.elapsed().as_secs_f64() * 1e9 / scans as f64;
+    report.metric("activity_scan_window_ns", scan_ns);
+    iso.row(vec![
+        "activity scan (16-entry window)".into(),
+        scans.to_string(),
+        format!("{scan_ns:.1}"),
+    ]);
+
+    // Chunk churn: the repack path's extend/truncate cycle on an
+    // arena-backed run (replaces per-page Vec alloc/free).
+    let mut arena = ChunkArena::new(0, 512, 1 << 20);
+    let mut run = ChunkRun::EMPTY;
+    let cycles: u64 = if common::quick() { 1_000_000 } else { 5_000_000 };
+    let start = Instant::now();
+    for i in 0..cycles {
+        let want = (i % 8) as u32 + 1;
+        if run.len() < want {
+            arena.run_extend(&mut run, (want - run.len()) as usize);
+        } else {
+            arena.run_truncate(&mut run, want);
+        }
+    }
+    let chunk_ns = start.elapsed().as_secs_f64() * 1e9 / cycles as f64;
+    report.metric("chunk_run_cycle_ns", chunk_ns);
+    iso.row(vec![
+        "chunk-run extend/truncate".into(),
+        cycles.to_string(),
+        format!("{chunk_ns:.1}"),
+    ]);
+    std::hint::black_box((acc, cold, run));
+
+    // Size model: the oracle's miss path.
     let page: Vec<u8> = (0..4096u32)
         .map(|i| ((i as u64).wrapping_mul(0x9E3779B97F4A7C15) >> 17) as u8)
         .collect();
     let n = 2000;
     let start = Instant::now();
-    let mut acc = 0u64;
+    let mut checksum = 0u64;
     for _ in 0..n {
-        acc += analyze_page(&page).page as u64;
+        checksum += analyze_page(&page).page as u64;
     }
-    let per = start.elapsed().as_secs_f64() / n as f64;
-    println!(
-        "\nanalytic size model: {:.1} µs/page ({acc} checksum)",
-        per * 1e6
-    );
+    let size_model_ns = start.elapsed().as_secs_f64() * 1e9 / n as f64;
+    report.metric("size_model_page_ns", size_model_ns);
+    iso.row(vec![
+        "analytic size model (4 KB page)".into(),
+        n.to_string(),
+        format!("{size_model_ns:.0}"),
+    ]);
+    iso.emit();
+    println!("\nanalytic size model checksum: {checksum}");
+
+    report.table(&t).table(&iso).write();
 }

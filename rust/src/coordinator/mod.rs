@@ -114,7 +114,6 @@ impl From<&TenantMetrics> for TenantSummary {
 /// pool is `cfg.devices` instances of the configured scheme (1 — the
 /// classic single expander — by default).
 fn run_sim(job: &Job, engine: SharedEngine) -> (RunMetrics, DevicePool, Option<Series>) {
-    let mut pool = DevicePool::build(&job.cfg);
     if job.trace_data.is_some() || !job.cfg.trace.is_empty() {
         let trace: Arc<Trace> = match &job.trace_data {
             Some(t) => Arc::clone(t),
@@ -124,6 +123,9 @@ fn run_sim(job: &Job, engine: SharedEngine) -> (RunMetrics, DevicePool, Option<S
             ),
         };
         let plan = RunPlan::new(&trace.mix, trace.scale);
+        // Size each device's page table from its interleave share of
+        // the planned footprint (see `DevicePool::build_for`).
+        let mut pool = DevicePool::build_for(&job.cfg, plan.total_pages);
         let mut oracle = MixOracle::new(&plan, trace.seed, engine);
         let mut sim = HostSim::from_trace(&job.cfg, &trace)
             .unwrap_or_else(|e| panic!("job {:?}: {e}", job.label));
@@ -139,6 +141,7 @@ fn run_sim(job: &Job, engine: SharedEngine) -> (RunMetrics, DevicePool, Option<S
         Mix::homogeneous(spec, job.cfg.cores)
     };
     let plan = RunPlan::new(&mix, job.cfg.footprint_scale);
+    let mut pool = DevicePool::build_for(&job.cfg, plan.total_pages);
     let mut oracle = MixOracle::new(&plan, job.cfg.seed, engine);
     let mut sim = HostSim::from_mix(&job.cfg, &mix);
     let metrics = sim.run(&mut pool, &mut oracle);

@@ -11,10 +11,9 @@
 //! schemes (Fig 9); line granularity → worst compression ratio (~1.24,
 //! Fig 10).
 
-use crate::sim::FxHashMap;
-
 use crate::compress::PageSizes;
 use crate::config::SimConfig;
+use crate::expander::store::PageTable;
 use crate::expander::{ContentOracle, DeviceStats, Scheme, Substrate, LINE_BYTES, PAGE_BYTES};
 use crate::mem::{MemKind, MemorySystem};
 use crate::rng::Pcg64;
@@ -37,7 +36,7 @@ struct PageState {
 
 pub struct Compresso {
     sub: Substrate,
-    pages: FxHashMap<u64, PageState>,
+    pages: PageTable<PageState>,
     rng: Pcg64,
     logical: u64,
     physical: u64,
@@ -62,9 +61,15 @@ pub fn line_compressed_bytes(sizes: &PageSizes) -> u32 {
 
 impl Compresso {
     pub fn new(cfg: &SimConfig) -> Self {
+        Self::sized(cfg, 0)
+    }
+
+    /// Construct with the page table pre-sized for `pages_hint` local
+    /// pages (see `topology::DevicePool::build_for`; 0 = lazy).
+    pub fn sized(cfg: &SimConfig, pages_hint: u64) -> Self {
         Self {
             sub: Substrate::new(cfg, 64),
-            pages: FxHashMap::default(),
+            pages: PageTable::with_expected(cfg.device_bytes / PAGE_BYTES, pages_hint),
             rng: Pcg64::from_label(cfg.seed, &["compresso"]),
             logical: 0,
             physical: 0,
@@ -73,7 +78,7 @@ impl Compresso {
     }
 
     fn ensure(&mut self, ospn: u64, sizes: PageSizes) {
-        if self.pages.contains_key(&ospn) {
+        if self.pages.contains(ospn) {
             return;
         }
         let phys = line_compressed_bytes(&sizes);
@@ -113,7 +118,7 @@ impl Scheme for Compresso {
         let outcome = self.sub.meta_access(now, ospn, meta_addr, 1, false);
         let t = outcome.ready;
 
-        let zero = self.pages[&ospn].zero;
+        let zero = self.pages.get(ospn).unwrap().zero;
         let done = if zero && !write {
             self.sub.stats.zero_serves += 1;
             t
@@ -125,7 +130,7 @@ impl Scheme for Compresso {
             if write {
                 let new_sizes = oracle.on_write(ospn);
                 let new_phys = line_compressed_bytes(&new_sizes);
-                let st = self.pages.get_mut(&ospn).unwrap();
+                let st = self.pages.get_mut(ospn).unwrap();
                 if st.zero {
                     st.zero = false;
                     self.logical += PAGE_BYTES;
@@ -138,7 +143,7 @@ impl Scheme for Compresso {
                 // Class-overflow repack: rewrite the page's packed data.
                 if self.rng.chance(OVERFLOW_PROB) {
                     self.repacks += 1;
-                    let lines = (self.pages[&ospn].phys_bytes as u64).div_ceil(LINE_BYTES);
+                    let lines = (self.pages.get(ospn).unwrap().phys_bytes as u64).div_ceil(LINE_BYTES);
                     self.sub
                         .mem
                         .access_burst(d, addr & !0xFFF, lines, false, MemKind::Control);

@@ -11,11 +11,9 @@
 //! device the 32 KB migrations dominate, which is why it lands last in
 //! Fig 9 (IBEX 4.64× faster on average).
 
-use crate::sim::FxHashMap;
-
 use crate::compress::PageSizes;
 use crate::config::SimConfig;
-use crate::expander::chunk::ChunkAllocator;
+use crate::expander::store::{ChunkArena, PageTable};
 use crate::expander::{ContentOracle, DeviceStats, Scheme, Substrate, LINE_BYTES, PAGE_BYTES};
 use crate::mem::{MemKind, MemorySystem};
 use crate::sim::{device_cycles, ns, Ps};
@@ -48,8 +46,8 @@ struct SuperBlock {
 
 pub struct Dmc {
     sub: Substrate,
-    supers: FxHashMap<u64, SuperBlock>,
-    hot: ChunkAllocator,
+    supers: PageTable<SuperBlock>,
+    hot: ChunkArena,
     /// Hot super-blocks (avoids O(#supers) scans on eviction — §Perf L3).
     hot_set: Vec<u64>,
     last_sweep: Ps,
@@ -61,11 +59,20 @@ pub struct Dmc {
 
 impl Dmc {
     pub fn new(cfg: &SimConfig) -> Self {
+        Self::sized(cfg, 0)
+    }
+
+    /// Construct with the super-block table pre-sized for `pages_hint`
+    /// local pages (see `topology::DevicePool::build_for`; 0 = lazy).
+    pub fn sized(cfg: &SimConfig, pages_hint: u64) -> Self {
         let slots = (cfg.promoted_bytes / SUPER_BYTES).max(32) as u32;
         Self {
             sub: Substrate::new(cfg, 64),
-            supers: FxHashMap::default(),
-            hot: ChunkAllocator::new(3 << 30, SUPER_BYTES, slots),
+            supers: PageTable::with_expected(
+                (cfg.device_bytes / PAGE_BYTES).div_ceil(SUPER_PAGES),
+                pages_hint.div_ceil(SUPER_PAGES),
+            ),
+            hot: ChunkArena::new(3 << 30, SUPER_BYTES, slots),
             hot_set: Vec::new(),
             last_sweep: 0,
             logical: 0,
@@ -76,7 +83,7 @@ impl Dmc {
     }
 
     fn ensure(&mut self, spn: u64, oracle: &mut dyn ContentOracle) {
-        if self.supers.contains_key(&spn) {
+        if self.supers.contains(spn) {
             return;
         }
         let mut cold = 0u64;
@@ -114,7 +121,7 @@ impl Dmc {
             .hot_set
             .iter()
             .copied()
-            .filter(|spn| match self.supers.get(spn).map(|sb| sb.state) {
+            .filter(|spn| match self.supers.get(*spn).map(|sb| sb.state) {
                 Some(SState::Hot { last_touch, .. }) => last_touch < cutoff,
                 _ => false,
             })
@@ -125,7 +132,7 @@ impl Dmc {
     }
 
     fn demote(&mut self, t: Ps, spn: u64) {
-        let sb = self.supers.get_mut(&spn);
+        let sb = self.supers.get_mut(spn);
         let Some(sb) = sb else { return };
         let SState::Hot { slot, .. } = sb.state else {
             return;
@@ -166,7 +173,7 @@ impl Dmc {
             let victim = self
                 .hot_set
                 .iter()
-                .filter_map(|&s| match self.supers.get(&s).map(|sb| sb.state) {
+                .filter_map(|&s| match self.supers.get(s).map(|sb| sb.state) {
                     Some(SState::Hot { last_touch, .. }) => Some((s, last_touch)),
                     _ => None,
                 })
@@ -177,7 +184,7 @@ impl Dmc {
             }
         }
         let slot = self.hot.alloc()?;
-        let sb = self.supers.get_mut(&spn).unwrap();
+        let sb = self.supers.get_mut(spn).unwrap();
         let cold_bytes = sb.cold_bytes;
         let hot_bytes = sb.hot_bytes;
         self.migrations += 1;
@@ -202,7 +209,7 @@ impl Dmc {
             true,
             MemKind::Promotion,
         );
-        let sb = self.supers.get_mut(&spn).unwrap();
+        let sb = self.supers.get_mut(spn).unwrap();
         sb.state = SState::Hot {
             slot,
             last_touch: done,
@@ -237,7 +244,7 @@ impl Scheme for Dmc {
             .meta_access(now, spn, (spn % (1 << 20)) * 64, 1, false);
         let t = outcome.ready;
 
-        let state = self.supers[&spn].state;
+        let state = self.supers.get(spn).unwrap().state;
         let reply = match state {
             SState::Hot { slot, .. } => {
                 self.sub.stats.promoted_hits += 1;
@@ -245,7 +252,7 @@ impl Scheme for Dmc {
                     + line as u64 * LINE_BYTES / 2;
                 let done = self.sub.mem.access(t, addr, write, MemKind::Final)
                     + device_cycles(LINE_DECOMP_CYCLES);
-                let sb = self.supers.get_mut(&spn).unwrap();
+                let sb = self.supers.get_mut(spn).unwrap();
                 sb.state = SState::Hot {
                     slot,
                     last_touch: done,
@@ -256,7 +263,7 @@ impl Scheme for Dmc {
                 done
             }
             SState::Cold => {
-                let zero = self.supers[&spn].nonzero_pages == 0;
+                let zero = self.supers.get(spn).unwrap().nonzero_pages == 0;
                 if zero && !write {
                     self.sub.stats.zero_serves += 1;
                     t

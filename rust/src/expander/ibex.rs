@@ -23,16 +23,20 @@
 //!   32 B entries — one 64 B fetch always suffices (vs ~1.5 fetches for
 //!   the packed 283-bit co-located format).
 //!
+//! Functional state lives in the flat storage engine
+//! (`expander::store`): a dense [`PageTable`] keyed by local OSPN, a
+//! [`ChunkArena`] whose inline [`ChunkRun`]s replace per-page chunk
+//! vectors, and the packed [`ActivityTable`] — no hashing and no
+//! per-page heap blocks on the request path.
+//!
 //! For the §4.4 comparison claim ("61% less traffic than linked-list
 //! LRU") the scheme also implements alternative demotion policies
 //! (`DemotionPolicy`), exercised by `benches/abl_demotion_policy.rs`.
 
-use crate::sim::FxHashMap;
-
 use crate::compress::PageSizes;
 use crate::config::{IbexOptions, SimConfig};
-use crate::expander::chunk::ChunkAllocator;
 use crate::expander::meta::{MetaFormat, ACTIVITY_ENTRIES_PER_FETCH};
+use crate::expander::store::{ActivityEntry, ActivityTable, ChunkArena, ChunkRun, PageTable};
 use crate::expander::{
     chunks_for, ContentOracle, DeviceStats, Scheme, Substrate, CCHUNK_BYTES, LINE_BYTES,
     PAGE_BYTES,
@@ -84,6 +88,8 @@ enum BState {
 
 /// Functional page state (the *contents* of the metadata entry; the
 /// metadata-access *cost* is charged via the substrate + `MetaFormat`).
+/// Flat and `Vec`-free: the chunk list is an inline [`ChunkRun`] into
+/// the scheme's C-chunk arena.
 #[derive(Clone, Debug)]
 struct PageEntry {
     blocks: [BState; 4],
@@ -91,19 +97,9 @@ struct PageEntry {
     /// 4 KB-block mode, `sizes[0]` = page size. 0 = all-zero.
     sizes: [u32; 4],
     /// C-chunks backing the page's Comp/Raw/shadow blocks.
-    chunks: Vec<u32>,
+    run: ChunkRun,
     /// Write counter for incompressible pages (§4.1.2).
     wr_cntr: u8,
-}
-
-/// Activity-region entry (§4.4): one per promoted slot.
-#[derive(Clone, Copy, Debug, Default)]
-struct ActivityEntry {
-    allocated: bool,
-    referenced: bool,
-    /// Which (ospn, block) owns the slot.
-    ospn: u64,
-    block: u8,
 }
 
 /// Intrusive doubly-linked list over promoted slots (LruList policy).
@@ -166,10 +162,10 @@ impl LruChain {
 
 pub struct Ibex {
     sub: Substrate,
-    pages: FxHashMap<u64, PageEntry>,
-    cchunks: ChunkAllocator,
-    promoted: ChunkAllocator,
-    activity: Vec<ActivityEntry>,
+    pages: PageTable<PageEntry>,
+    cchunks: ChunkArena,
+    promoted: ChunkArena,
+    activity: ActivityTable,
     cursor: usize,
     lru: LruChain,
     fifo_head: usize,
@@ -191,14 +187,24 @@ impl Ibex {
     }
 
     pub fn with_policy(cfg: &SimConfig, policy: DemotionPolicy) -> Self {
+        Self::sized(cfg, policy, 0)
+    }
+
+    /// Construct with the page table pre-sized for `pages_hint` local
+    /// pages (0 = size lazily from touched pages). The hint comes from
+    /// the topology layer (`DevicePool::build_for`) and only avoids
+    /// slab re-growth; results are identical either way.
+    pub fn sized(cfg: &SimConfig, policy: DemotionPolicy, pages_hint: u64) -> Self {
         let opts = cfg.ibex;
         let format = MetaFormat::for_options(opts.colocate, opts.compact);
         let block_bytes = if opts.colocate { 1024 } else { PAGE_BYTES };
         let slots = (cfg.promoted_bytes / block_bytes).max(16) as u32;
-        // The compressed region backs the (scaled) footprint; cap the
-        // allocator so free-list memory stays reasonable (see DESIGN.md).
-        let comp_bytes = (cfg.device_bytes - cfg.promoted_bytes).min(4 << 30);
-        let cchunk_total = (comp_bytes / CCHUNK_BYTES) as u32;
+        // The compressed region backs the whole non-promoted capacity:
+        // the arena's freelist memory tracks chunks actually used, so no
+        // cap is needed any more (chunk ids stay u32 up to a 2 TiB
+        // region; see store::ChunkArena).
+        let comp_bytes = cfg.device_bytes - cfg.promoted_bytes;
+        let cchunk_total = (comp_bytes / CCHUNK_BYTES).min(u32::MAX as u64 - 1) as u32;
         // Device-physical layout: metadata | activity | promoted | chunks.
         let meta_base = 0u64;
         let act_base = 1 << 30;
@@ -206,10 +212,10 @@ impl Ibex {
         let chunk_base = prom_base + cfg.promoted_bytes;
         Self {
             sub: Substrate::new(cfg, format.entry_bytes()),
-            pages: FxHashMap::default(),
-            cchunks: ChunkAllocator::new(chunk_base, CCHUNK_BYTES, cchunk_total),
-            promoted: ChunkAllocator::new(prom_base, block_bytes, slots),
-            activity: vec![ActivityEntry::default(); slots as usize],
+            pages: PageTable::with_expected(cfg.device_bytes / PAGE_BYTES, pages_hint),
+            cchunks: ChunkArena::new(chunk_base, CCHUNK_BYTES, cchunk_total),
+            promoted: ChunkArena::new(prom_base, block_bytes, slots),
+            activity: ActivityTable::new(slots as usize),
             cursor: 0,
             lru: LruChain::new(slots as usize),
             fifo_head: 0,
@@ -281,38 +287,37 @@ impl Ibex {
     /// Returns (allocated, freed) chunk counts; the caller charges the
     /// free-list traffic.
     fn repack(&mut self, ospn: u64) -> (usize, usize) {
-        let entry = self.pages.get_mut(&ospn).expect("repack of absent page");
+        let colocate = self.opts.colocate;
+        let entry = self.pages.get_mut(ospn).expect("repack of absent page");
         let mut bytes = 0u64;
         for (i, b) in entry.blocks.iter().enumerate() {
             bytes += match *b {
                 BState::Zero => 0,
-                BState::Comp => self_packed(self.opts.colocate, entry.sizes[i]),
-                BState::Raw => block_raw(self.opts.colocate),
+                BState::Comp => self_packed(colocate, entry.sizes[i]),
+                BState::Raw => block_raw(colocate),
                 BState::Prom { shadow, .. } => {
                     if shadow {
-                        self_packed(self.opts.colocate, entry.sizes[i])
+                        self_packed(colocate, entry.sizes[i])
                     } else {
                         0
                     }
                 }
             };
-            if !self.opts.colocate {
+            if !colocate {
                 break; // single 4 KB block
             }
         }
-        let need = bytes.div_ceil(CCHUNK_BYTES) as usize;
-        let have = entry.chunks.len();
+        let need = bytes.div_ceil(CCHUNK_BYTES) as u32;
+        let have = entry.run.len();
         if need > have {
-            let extra = self
+            let grew = self
                 .cchunks
-                .alloc_n(need - have)
-                .expect("compressed region exhausted");
-            entry.chunks.extend(extra);
-            (need - have, 0)
+                .run_extend(&mut entry.run, (need - have) as usize);
+            assert!(grew, "compressed region exhausted");
+            ((need - have) as usize, 0)
         } else if need < have {
-            let surplus: Vec<u32> = entry.chunks.drain(need..).collect();
-            self.cchunks.free_many(&surplus);
-            (0, have - need)
+            self.cchunks.run_truncate(&mut entry.run, need);
+            (0, (have - need) as usize)
         } else {
             (0, 0)
         }
@@ -346,13 +351,14 @@ impl Ibex {
         if self.policy != DemotionPolicy::SecondChance {
             return;
         }
-        let Some(entry) = self.pages.get(&evicted_ospn) else {
+        let Some(entry) = self.pages.get(evicted_ospn) else {
             return;
         };
+        let blocks = entry.blocks;
         let mut wrote = false;
-        for b in &entry.blocks[..self.nblocks()] {
+        for b in &blocks[..self.nblocks()] {
             if let BState::Prom { slot, .. } = *b {
-                self.activity[slot as usize].referenced = true;
+                self.activity.set_referenced(slot as usize);
                 if !wrote {
                     // One consolidated control write per page (§4.4).
                     let addr = self.activity_addr(slot);
@@ -403,12 +409,15 @@ impl Ibex {
             );
         }
         // Activity-region install: allocated=1, referenced=1.
-        self.activity[slot as usize] = ActivityEntry {
-            allocated: true,
-            referenced: true,
-            ospn,
-            block: block as u8,
-        };
+        self.activity.set(
+            slot as usize,
+            ActivityEntry {
+                allocated: true,
+                referenced: true,
+                ospn,
+                block: block as u8,
+            },
+        );
         self.sub
             .mem
             .access(t, self.activity_addr(slot), true, MemKind::Control);
@@ -445,46 +454,48 @@ impl Ibex {
             return false;
         };
         self.sub.stats.victim_selections += 1;
-        let ae = self.activity[slot as usize];
+        let ae = self.activity.get(slot as usize);
         self.demote_slot(t, slot, ae.ospn, ae.block as usize, oracle);
         true
     }
 
     /// §4.4 second-chance scan: one 64 B activity fetch (16 entries),
     /// clear referenced bits, pick the first cold non-cached entry;
-    /// random fallback within the window.
+    /// random fallback within the window. The window is a fixed-size
+    /// stack array — the scan allocates nothing.
     fn select_second_chance(&mut self, t: Ps) -> Option<u32> {
+        const W: usize = ACTIVITY_ENTRIES_PER_FETCH as usize;
         let n = self.activity.len();
         let mut windows_scanned = 0;
         // Bound total scan work per selection; the random fallback fires
         // at the first window, so >1 window only happens when the window
         // holds no *allocated* entries at all.
         while windows_scanned < 64 {
-            let base = self.cursor - (self.cursor % ACTIVITY_ENTRIES_PER_FETCH as usize);
-            let window: Vec<usize> = (0..ACTIVITY_ENTRIES_PER_FETCH as usize)
-                .map(|i| (base + i) % n)
-                .collect();
+            let base = self.cursor - (self.cursor % W);
             // One control read fetches the 16 entries.
             if !self.sub.background_free {
-                let addr = self.activity_addr(window[0] as u32);
+                let addr = self.activity_addr((base % n) as u32);
                 self.sub.mem.access(t, addr, false, MemKind::Control);
             }
             let mut candidate = None;
-            let mut allocated_in_window: Vec<usize> = Vec::new();
+            let mut allocated_in_window = [0usize; W];
+            let mut allocated_count = 0usize;
             let mut any_cleared = false;
-            for &i in &window {
-                let e = &mut self.activity[i];
-                if !e.allocated {
+            for k in 0..W {
+                let i = (base + k) % n;
+                if !self.activity.is_allocated(i) {
                     continue;
                 }
-                allocated_in_window.push(i);
-                if e.referenced {
-                    e.referenced = false; // second chance
+                allocated_in_window[allocated_count] = i;
+                allocated_count += 1;
+                if self.activity.is_referenced(i) {
+                    self.activity.clear_referenced(i); // second chance
                     any_cleared = true;
                 } else if candidate.is_none() {
                     // Cold candidate — but a metadata-cache resident page
                     // is effectively hot (lazy updates haven't landed).
-                    if self.sub.meta_cache.probe(e.ospn) {
+                    let ospn = self.activity.get(i).ospn;
+                    if self.sub.meta_cache.probe(ospn) {
                         self.sub.stats.probe_skips += 1;
                     } else {
                         candidate = Some(i);
@@ -493,17 +504,16 @@ impl Ibex {
             }
             // Write back cleared referenced bits (one control write).
             if any_cleared && !self.sub.background_free {
-                let addr = self.activity_addr(window[0] as u32);
+                let addr = self.activity_addr((base % n) as u32);
                 self.sub.mem.access(t, addr, true, MemKind::Control);
             }
-            self.cursor = (base + ACTIVITY_ENTRIES_PER_FETCH as usize) % n;
+            self.cursor = (base + W) % n;
             if let Some(i) = candidate {
                 return Some(i as u32);
             }
-            if !allocated_in_window.is_empty() {
+            if allocated_count > 0 {
                 // Random fallback bounds worst-case scan traffic (§4.4).
-                let pick =
-                    allocated_in_window[self.rng.below(allocated_in_window.len() as u64) as usize];
+                let pick = allocated_in_window[self.rng.below(allocated_count as u64) as usize];
                 self.sub.stats.random_victims += 1;
                 return Some(pick as u32);
             }
@@ -526,7 +536,7 @@ impl Ibex {
         for _ in 0..n {
             let i = self.fifo_head % n;
             self.fifo_head = (self.fifo_head + 1) % n;
-            if self.activity[i].allocated {
+            if self.activity.is_allocated(i) {
                 return Some(i as u32);
             }
         }
@@ -537,12 +547,14 @@ impl Ibex {
         let n = self.activity.len();
         for _ in 0..64 {
             let i = self.rng.below(n as u64) as usize;
-            if self.activity[i].allocated {
+            if self.activity.is_allocated(i) {
                 return Some(i as u32);
             }
         }
         // Fall back to a scan if occupancy is very low.
-        (0..n).find(|&i| self.activity[i].allocated).map(|i| i as u32)
+        (0..n)
+            .find(|&i| self.activity.is_allocated(i))
+            .map(|i| i as u32)
     }
 
     /// Demote the block occupying `slot` back to compressed form.
@@ -554,7 +566,10 @@ impl Ibex {
         block: usize,
         oracle: &mut dyn ContentOracle,
     ) {
-        let entry = self.pages.get_mut(&ospn).expect("activity points at absent page");
+        let entry = self
+            .pages
+            .get_mut(ospn)
+            .expect("activity points at absent page");
         let BState::Prom { dirty, shadow, .. } = entry.blocks[block] else {
             panic!("activity slot {slot} does not reference a promoted block");
         };
@@ -565,6 +580,7 @@ impl Ibex {
             // §4.5 clean demotion: re-validate the shadow pointers —
             // a pure metadata update.
             self.sub.stats.clean_demotions += 1;
+            let entry = self.pages.get_mut(ospn).unwrap();
             entry.blocks[block] = BState::Comp;
             self.sub.meta_cache.set_dirty(ospn);
         } else {
@@ -593,11 +609,11 @@ impl Ibex {
             } else {
                 BState::Comp
             };
-            let entry = self.pages.get_mut(&ospn).unwrap();
+            let entry = self.pages.get_mut(ospn).unwrap();
             entry.sizes[block] = size;
             entry.blocks[block] = new_state;
             let (allocs, frees) = self.repack(ospn);
-            let first_chunk = self.pages[&ospn].chunks.first().copied();
+            let first_chunk = self.pages.get(ospn).unwrap().run.first();
             if !background_free {
                 self.charge_list_ops(t, allocs, frees);
                 // Write the recompressed image.
@@ -608,13 +624,7 @@ impl Ibex {
                     self_packed(self.opts.colocate, size)
                 };
                 if bytes > 0 {
-                    self.sub.mem.access_burst(
-                        t,
-                        dst,
-                        bytes.div_ceil(LINE_BYTES),
-                        true,
-                        MemKind::Demotion,
-                    );
+                    self.sub.mem.access_bytes(t, dst, bytes, true, MemKind::Demotion);
                 }
             }
             self.sub.meta_cache.set_dirty(ospn);
@@ -628,7 +638,7 @@ impl Ibex {
                 .mem
                 .access(t, self.activity_addr(slot), true, MemKind::Control);
         }
-        self.activity[slot as usize] = ActivityEntry::default();
+        self.activity.clear(slot as usize);
         if self.policy == DemotionPolicy::LruList {
             self.lru.unlink(slot);
         }
@@ -657,7 +667,7 @@ impl Ibex {
         let mut entry = PageEntry {
             blocks: [BState::Zero; 4],
             sizes: [0; 4],
-            chunks: Vec::new(),
+            run: ChunkRun::EMPTY,
             wr_cntr: 0,
         };
         for b in 0..nb {
@@ -714,7 +724,7 @@ impl Scheme for Ibex {
         } else {
             self.sub.stats.reads += 1;
         }
-        if !self.pages.contains_key(&ospn) {
+        if !self.pages.contains(ospn) {
             let sizes = oracle.sizes(ospn);
             self.materialize(ospn, sizes);
         }
@@ -729,7 +739,7 @@ impl Scheme for Ibex {
         let t = outcome.ready;
 
         let block = self.block_of_line(line);
-        let state = self.pages[&ospn].blocks[block];
+        let state = self.pages.get(ospn).unwrap().blocks[block];
         let reply = match (state, write) {
             (BState::Zero, false) => {
                 // ④ zero pages served from metadata type bits alone.
@@ -739,23 +749,24 @@ impl Scheme for Ibex {
             (BState::Zero, true) => {
                 // First write to a zero block: promote-with-content.
                 let sizes = oracle.on_write(ospn);
-                let entry = self.pages.get_mut(&ospn).unwrap();
                 let new_size = if self.opts.colocate {
                     sizes.blocks[block]
                 } else {
                     sizes.page
                 };
+                let entry = self.pages.get_mut(ospn).unwrap();
                 entry.sizes[block] = new_size;
                 match self.promote_block(t, ospn, block, false, oracle) {
                     Some(slot) => {
-                        let entry = self.pages.get_mut(&ospn).unwrap();
+                        let entry = self.pages.get_mut(ospn).unwrap();
                         entry.blocks[block] = BState::Prom {
                             slot,
                             dirty: true,
                             shadow: false,
                         };
                         self.sub.meta_cache.set_dirty(ospn);
-                        let addr = self.promoted.addr(slot) + (line as u64 % self.lines_per_block()) * LINE_BYTES;
+                        let addr = self.promoted.addr(slot)
+                            + (line as u64 % self.lines_per_block()) * LINE_BYTES;
                         self.sub.mem.access(t, addr, true, MemKind::Final)
                     }
                     None => t,
@@ -772,7 +783,7 @@ impl Scheme for Ibex {
                     let _ = oracle.on_write(ospn);
                     if shadow {
                         // §4.5: first update releases the shadow copy.
-                        let entry = self.pages.get_mut(&ospn).unwrap();
+                        let entry = self.pages.get_mut(ospn).unwrap();
                         entry.blocks[block] = BState::Prom {
                             slot,
                             dirty: true,
@@ -782,7 +793,7 @@ impl Scheme for Ibex {
                         self.charge_list_ops(done, a, f);
                         self.sub.meta_cache.set_dirty(ospn);
                     } else if !dirty {
-                        let entry = self.pages.get_mut(&ospn).unwrap();
+                        let entry = self.pages.get_mut(ospn).unwrap();
                         entry.blocks[block] = BState::Prom {
                             slot,
                             dirty: true,
@@ -796,13 +807,13 @@ impl Scheme for Ibex {
             (BState::Raw, _) => {
                 // Incompressible: direct raw access in C-chunks.
                 self.sub.stats.incompressible_serves += 1;
-                let entry = self.pages.get(&ospn).unwrap();
-                let c = entry.chunks.first().copied().unwrap_or(0);
+                let entry = self.pages.get(ospn).unwrap();
+                let c = entry.run.first().unwrap_or(0);
                 let addr = self.cchunks.addr(c) + (line as u64 * LINE_BYTES) % CCHUNK_BYTES;
                 let done = self.sub.mem.access(t, addr, write, MemKind::Final);
                 if write {
                     let sizes = oracle.on_write(ospn);
-                    let entry = self.pages.get_mut(&ospn).unwrap();
+                    let entry = self.pages.get_mut(ospn).unwrap();
                     entry.wr_cntr += 1;
                     if entry.wr_cntr >= self.wr_threshold {
                         // §4.1.2: retry compression after enough updates.
@@ -816,7 +827,7 @@ impl Scheme for Ibex {
                         self.sub.compress_busy(done, occ);
                         self.sub.stats.wrcnt_recompressions += 1;
                         if !self.block_incompressible(new_size) {
-                            let entry = self.pages.get_mut(&ospn).unwrap();
+                            let entry = self.pages.get_mut(ospn).unwrap();
                             entry.sizes[block] = new_size;
                             entry.blocks[block] = if new_size == 0 {
                                 BState::Zero
@@ -827,10 +838,10 @@ impl Scheme for Ibex {
                             self.charge_list_ops(done, a, f);
                             let bytes = self_packed(self.opts.colocate, new_size);
                             if bytes > 0 {
-                                self.sub.mem.access_burst(
+                                self.sub.mem.access_bytes(
                                     done,
                                     self.cchunks.addr(0),
-                                    bytes.div_ceil(LINE_BYTES),
+                                    bytes,
                                     true,
                                     MemKind::Demotion,
                                 );
@@ -845,10 +856,10 @@ impl Scheme for Ibex {
                 // ② fetch + ③ decompress + ④ reply, promotion in the
                 // background (Fig 3).
                 self.sub.stats.compressed_serves += 1;
-                let entry = self.pages.get(&ospn).unwrap();
+                let entry = self.pages.get(ospn).unwrap();
                 let size = entry.sizes[block];
                 let packed = self_packed(self.opts.colocate, size);
-                let c = entry.chunks.first().copied().unwrap_or(0);
+                let c = entry.run.first().unwrap_or(0);
                 let src = self.cchunks.addr(c);
                 let fetched = self.sub.mem.access_burst(
                     t,
@@ -863,7 +874,7 @@ impl Scheme for Ibex {
                 match self.promote_block(decompressed, ospn, block, true, oracle) {
                     Some(slot) => {
                         let shadow = self.opts.shadow;
-                        let entry = self.pages.get_mut(&ospn).unwrap();
+                        let entry = self.pages.get_mut(ospn).unwrap();
                         entry.blocks[block] = BState::Prom {
                             slot,
                             dirty: false,
@@ -876,7 +887,7 @@ impl Scheme for Ibex {
                         }
                         if write {
                             let _ = oracle.on_write(ospn);
-                            let entry = self.pages.get_mut(&ospn).unwrap();
+                            let entry = self.pages.get_mut(ospn).unwrap();
                             entry.blocks[block] = BState::Prom {
                                 slot,
                                 dirty: true,
@@ -1179,5 +1190,26 @@ mod tests {
             s.random_victims,
             s.victim_selections
         );
+    }
+
+    #[test]
+    fn sized_construction_is_equivalent() {
+        // The pages_hint only pre-sizes the slab; a hinted device must
+        // behave identically to an unhinted one.
+        let c = cfg();
+        let mut a = Ibex::new(&c);
+        let mut b = Ibex::sized(&c, DemotionPolicy::SecondChance, 4096);
+        let mut oracle = FixedOracle::new(sizes_comp());
+        for p in 0..32u64 {
+            a.populate(p, sizes_comp());
+            b.populate(p, sizes_comp());
+        }
+        for p in 0..32u64 {
+            let ta = a.access(p * 500_000, p, 0, p % 3 == 0, &mut oracle);
+            let tb = b.access(p * 500_000, p, 0, p % 3 == 0, &mut oracle);
+            assert_eq!(ta, tb);
+        }
+        assert_eq!(a.mem().total_accesses(), b.mem().total_accesses());
+        assert_eq!(a.physical_bytes(), b.physical_bytes());
     }
 }

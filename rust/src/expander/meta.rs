@@ -1,9 +1,10 @@
 //! Translation-metadata formats and their access-cost model.
 //!
-//! The *functional* page state lives in the schemes' page tables; this
-//! module models the formats' **cost**: entry size, how many 64 B
-//! fetches a miss needs, and the metadata-region footprint — the knobs
-//! §4.6/§4.7 turn:
+//! The *functional* page state lives in the schemes' flat page tables
+//! (`expander::store::PageTable`; the §4.4 activity region's functional
+//! bits in `expander::store::ActivityTable`); this module models the
+//! formats' **cost**: entry size, how many 64 B fetches a miss needs,
+//! and the metadata-region footprint — the knobs §4.6/§4.7 turn:
 //!
 //! | format      | entry      | fetches/miss | covers |
 //! |-------------|------------|--------------|--------|

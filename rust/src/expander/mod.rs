@@ -18,7 +18,6 @@
 //! through [`Scheme::access`] and reads [`DeviceStats`] + the memory
 //! system's [`crate::mem::TrafficBreakdown`] afterwards.
 
-pub mod chunk;
 pub mod compresso;
 pub mod dmc;
 pub mod dylect;
@@ -26,6 +25,7 @@ pub mod ibex;
 pub mod meta;
 pub mod mxt;
 pub mod naive_sram;
+pub mod store;
 pub mod tmcc;
 pub mod uncompressed;
 
@@ -385,19 +385,34 @@ pub trait Scheme {
     fn name(&self) -> &'static str;
 }
 
-/// Instantiate the configured scheme.
+/// Instantiate the configured scheme (page tables sized lazily from
+/// touched pages).
 pub fn build_scheme(cfg: &SimConfig) -> Box<dyn Scheme> {
+    build_scheme_sized(cfg, 0)
+}
+
+/// Instantiate the configured scheme with its page table pre-sized for
+/// `pages_hint` device-local pages — the per-device footprint the
+/// topology layer derives from the run plan and interleave
+/// (`topology::DevicePool::build_for`). The hint only avoids slab
+/// re-growth on the request path; 0 falls back to lazy sizing and
+/// produces identical results (pinned by `tests/store.rs`).
+pub fn build_scheme_sized(cfg: &SimConfig, pages_hint: u64) -> Box<dyn Scheme> {
     if cfg.data_sram_bytes > 0 {
-        return Box::new(naive_sram::NaiveSram::new(cfg));
+        return Box::new(naive_sram::NaiveSram::sized(cfg, pages_hint));
     }
     match cfg.scheme {
         SchemeKind::Uncompressed => Box::new(uncompressed::Uncompressed::new(cfg)),
-        SchemeKind::Ibex => Box::new(ibex::Ibex::new(cfg)),
-        SchemeKind::Tmcc => Box::new(tmcc::Tmcc::new(cfg, false)),
-        SchemeKind::Dylect => Box::new(tmcc::Tmcc::new(cfg, true)),
-        SchemeKind::Mxt => Box::new(mxt::Mxt::new(cfg)),
-        SchemeKind::Dmc => Box::new(dmc::Dmc::new(cfg)),
-        SchemeKind::Compresso => Box::new(compresso::Compresso::new(cfg)),
+        SchemeKind::Ibex => Box::new(ibex::Ibex::sized(
+            cfg,
+            ibex::DemotionPolicy::SecondChance,
+            pages_hint,
+        )),
+        SchemeKind::Tmcc => Box::new(tmcc::Tmcc::sized(cfg, false, pages_hint)),
+        SchemeKind::Dylect => Box::new(tmcc::Tmcc::sized(cfg, true, pages_hint)),
+        SchemeKind::Mxt => Box::new(mxt::Mxt::sized(cfg, pages_hint)),
+        SchemeKind::Dmc => Box::new(dmc::Dmc::sized(cfg, pages_hint)),
+        SchemeKind::Compresso => Box::new(compresso::Compresso::sized(cfg, pages_hint)),
     }
 }
 

@@ -8,12 +8,11 @@
 //! Compressed data lives in 256 B sectors located through a sector
 //! table in device memory (one control read on region misses).
 
-use crate::sim::FxHashMap;
-
 use crate::cache::SetAssocCache;
 use crate::compress::PageSizes;
 use crate::config::SimConfig;
-use crate::expander::{ContentOracle, DeviceStats, Scheme, Substrate, LINE_BYTES};
+use crate::expander::store::PageTable;
+use crate::expander::{ContentOracle, DeviceStats, Scheme, Substrate, LINE_BYTES, PAGE_BYTES};
 use crate::mem::{MemKind, MemorySystem};
 use crate::sim::{device_cycles, Ps};
 
@@ -31,8 +30,8 @@ pub struct Mxt {
     sub: Substrate,
     /// Caching region: key = (ospn<<2)|block, value = dirty flag proxy.
     region: SetAssocCache<bool>,
-    /// Sizes of resident blocks (1 KB granularity).
-    sizes: FxHashMap<u64, u32>,
+    /// Sizes of resident blocks (1 KB granularity), four per page.
+    sizes: PageTable<[u32; 4]>,
     logical: u64,
     /// Sector bytes in use.
     sectors_used: u64,
@@ -42,11 +41,17 @@ pub struct Mxt {
 
 impl Mxt {
     pub fn new(cfg: &SimConfig) -> Self {
+        Self::sized(cfg, 0)
+    }
+
+    /// Construct with the block-size table pre-sized for `pages_hint`
+    /// local pages (see `topology::DevicePool::build_for`; 0 = lazy).
+    pub fn sized(cfg: &SimConfig, pages_hint: u64) -> Self {
         let blocks = (cfg.promoted_bytes / BLOCK_BYTES).max(16) as usize;
         Self {
             sub: Substrate::new(cfg, 64),
             region: SetAssocCache::new(blocks / 16, 16),
-            sizes: FxHashMap::default(),
+            sizes: PageTable::with_expected(cfg.device_bytes / PAGE_BYTES, pages_hint),
             logical: 0,
             sectors_used: 0,
             region_bytes: cfg.promoted_bytes,
@@ -62,18 +67,21 @@ impl Mxt {
     }
 
     fn ensure(&mut self, ospn: u64, sizes: PageSizes) {
-        for b in 0..4u64 {
-            let key = Self::key(ospn, b);
-            if self.sizes.contains_key(&key) {
-                continue;
-            }
-            let s = sizes.blocks[b as usize].min(1024);
-            self.sizes.insert(key, s);
+        // One flat entry carries all four block sizes (blocks are only
+        // ever materialized together).
+        if self.sizes.contains(ospn) {
+            return;
+        }
+        let mut entry = [0u32; 4];
+        for b in 0..4usize {
+            let s = sizes.blocks[b].min(1024);
+            entry[b] = s;
             if s != 0 {
                 self.logical += BLOCK_BYTES;
                 self.sectors_used += Self::sectors(s).min(BLOCK_BYTES);
             }
         }
+        self.sizes.insert(ospn, entry);
     }
 
     /// Evict + recompress one caching-region victim. Returns when the
@@ -88,7 +96,7 @@ impl Mxt {
             let s = oracle.on_write(ospn);
             s.blocks[block].min(1024)
         } else {
-            *self.sizes.get(&victim_key).unwrap_or(&0)
+            self.sizes.get(ospn).map(|e| e[block]).unwrap_or(0)
         };
         // MXT always recompresses on eviction (no shadow copies).
         let mut done = t;
@@ -103,10 +111,10 @@ impl Mxt {
             let occ = self.sub.timing.compress_ps(BLOCK_BYTES);
             done = self.sub.compress_busy(read_done, occ);
             if size > 0 {
-                done = done.max(self.sub.mem.access_burst(
+                done = done.max(self.sub.mem.access_bytes(
                     done,
                     0x5800_0000,
-                    Self::sectors(size).div_ceil(LINE_BYTES),
+                    Self::sectors(size),
                     true,
                     MemKind::Demotion,
                 ));
@@ -114,7 +122,15 @@ impl Mxt {
             // Sector-table update.
             self.sub.mem.access(done, 0x5C00_0000, true, MemKind::Control);
         }
-        let old = self.sizes.insert(victim_key, size).unwrap_or(0);
+        let old = match self.sizes.get_mut(ospn) {
+            Some(e) => std::mem::replace(&mut e[block], size),
+            None => {
+                let mut e = [0u32; 4];
+                e[block] = size;
+                self.sizes.insert(ospn, e);
+                0
+            }
+        };
         if old == 0 && size != 0 {
             self.logical += BLOCK_BYTES;
         }
@@ -138,7 +154,7 @@ impl Scheme for Mxt {
         } else {
             self.sub.stats.reads += 1;
         }
-        if !self.sizes.contains_key(&Self::key(ospn, 0)) {
+        if !self.sizes.contains(ospn) {
             let s = oracle.sizes(ospn);
             self.ensure(ospn, s);
         }
@@ -157,7 +173,7 @@ impl Scheme for Mxt {
             let addr = 0x4000_0000 + (key % (1 << 19)) * BLOCK_BYTES + (line as u64 % LINES_PER_BLOCK) * LINE_BYTES;
             self.sub.mem.access(t, addr, write, MemKind::Final)
         } else {
-            let size = *self.sizes.get(&key).unwrap_or(&0);
+            let size = self.sizes.get(ospn).map(|e| e[block as usize]).unwrap_or(0);
             if size == 0 && !write {
                 // Zero block: sector table knows, but MXT still walks the
                 // sector table in memory (1 control read).

@@ -8,11 +8,10 @@
 //! collapses for memory-intensive ones (omnetpp, pr, cc, XSBench) —
 //! reproducing the figure's 76% degradation cases.
 
-use std::collections::HashMap;
-
 use crate::cache::SetAssocCache;
 use crate::compress::PageSizes;
 use crate::config::SimConfig;
+use crate::expander::store::PageTable;
 use crate::expander::{
     chunks_for, incompressible_4k, ContentOracle, DeviceStats, Scheme, Substrate, CCHUNK_BYTES,
     LINE_BYTES, LINES_PER_PAGE, PAGE_BYTES,
@@ -27,26 +26,32 @@ pub struct NaiveSram {
     sub: Substrate,
     /// SRAM block cache: key = ospn, value unused (dirty tracked by line).
     sram: SetAssocCache<()>,
-    sizes: HashMap<u64, u32>,
+    sizes: PageTable<u32>,
     logical: u64,
     chunk_bytes_used: u64,
 }
 
 impl NaiveSram {
     pub fn new(cfg: &SimConfig) -> Self {
+        Self::sized(cfg, 0)
+    }
+
+    /// Construct with the size table pre-sized for `pages_hint` local
+    /// pages (see `topology::DevicePool::build_for`; 0 = lazy).
+    pub fn sized(cfg: &SimConfig, pages_hint: u64) -> Self {
         let blocks = (cfg.data_sram_bytes as u64 / PAGE_BYTES).max(16) as usize;
         let ways = 16.min(blocks);
         Self {
             sub: Substrate::new(cfg, 64),
             sram: SetAssocCache::new((blocks / ways).max(1), ways),
-            sizes: HashMap::new(),
+            sizes: PageTable::with_expected(cfg.device_bytes / PAGE_BYTES, pages_hint),
             logical: 0,
             chunk_bytes_used: 0,
         }
     }
 
     fn ensure(&mut self, ospn: u64, sizes: PageSizes) {
-        if self.sizes.contains_key(&ospn) {
+        if self.sizes.contains(ospn) {
             return;
         }
         let s = sizes.page;
@@ -76,7 +81,7 @@ impl Scheme for NaiveSram {
         } else {
             self.sub.stats.reads += 1;
         }
-        if !self.sizes.contains_key(&ospn) {
+        if !self.sizes.contains(ospn) {
             let s = oracle.sizes(ospn);
             self.ensure(ospn, s);
         }
@@ -93,7 +98,7 @@ impl Scheme for NaiveSram {
             }
             t
         } else {
-            let size = self.sizes[&ospn];
+            let size = *self.sizes.get(ospn).unwrap();
             if size == 0 && !write {
                 // Zero page: metadata read to discover it.
                 self.sub.stats.zero_serves += 1;
@@ -127,7 +132,7 @@ impl Scheme for NaiveSram {
                     if victim.dirty {
                         // Recompress + write back the dirty block.
                         self.sub.stats.demotions += 1;
-                        let vsize = *self.sizes.get(&victim.key).unwrap_or(&0);
+                        let vsize = self.sizes.get(victim.key).copied().unwrap_or(0);
                         let lines = if vsize == 0 {
                             0
                         } else if incompressible_4k(vsize) {

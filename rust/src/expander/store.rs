@@ -1,0 +1,882 @@
+//! Flat-storage engine shared by every expander scheme.
+//!
+//! The device hot path used to resolve each request through an
+//! `FxHashMap<u64, PageEntry>` and keep a heap-allocated `Vec<u32>`
+//! chunk list per page. Both sat on every request's critical path and
+//! put a hash + pointer chase (and an allocator round trip per
+//! residency change) between the simulator and the ≥1 M device
+//! requests/s/core target (§Perf L3). The paper's own §4.6/§4.7 point —
+//! compact, co-located metadata wins back internal bandwidth — applies
+//! to the simulator too, so this module provides the flat equivalents:
+//!
+//! * [`PageTable`] — a dense slab directly indexed by (device-local)
+//!   OSPN. No hashing on the request path: a lookup is one bounds check
+//!   plus one indexed load. The slab grows geometrically with the
+//!   *touched* footprint (never with raw device capacity) up to a hard
+//!   cap derived from the device size; the rare out-of-capacity OSPN a
+//!   hand-written trace might carry falls back to a small overflow map,
+//!   so behaviour stays total. Iteration for snapshots/ratio queries is
+//!   O(pages) in OSPN order.
+//! * [`ChunkArena`] / [`ChunkRun`] — one intrusive freelist over the
+//!   chunk id space replaces both the reversed free-`Vec` of the old
+//!   `ChunkAllocator` and every per-page `Vec<u32>`: a page's chunks
+//!   are an inline run (u32 head/tail + length) linked through the
+//!   arena's `next` array, and free chunks are linked through the same
+//!   array. Allocation order is bit-identical to the old allocator
+//!   (bump-pointer address order first, then LIFO reuse — pinned by
+//!   `tests/store.rs` against a verbatim copy of the legacy code), so
+//!   the refactor cannot perturb simulated timing. Memory is O(high
+//!   water mark), not O(region capacity), which is what lets a device
+//!   advertise ≥16 GiB of compressed capacity without pre-allocating a
+//!   32 MB free vector.
+//! * [`ActivityTable`] — the §4.4 page-activity region packed to 8 B
+//!   per slot (allocated | referenced | block | OSPN), mirroring the
+//!   hardware's 4 B entries instead of a 24 B struct-of-everything.
+//! * [`PageBitmap`] — a lazily-grown residency bitset for schemes that
+//!   only need touched/untouched (the uncompressed baseline).
+
+use crate::sim::FxHashMap;
+
+/// Shared null sentinel for u32 chunk/slot links.
+pub const NIL: u32 = u32::MAX;
+
+// ---------------------------------------------------------------------
+// PageTable
+// ---------------------------------------------------------------------
+
+/// Dense per-page metadata table, directly indexed by device-local OSPN.
+///
+/// `dense_cap` bounds the slab (pages the device can physically
+/// address). Two classes of OSPN stay out of the slab so that no
+/// single request can allocate capacity-proportional memory: pages
+/// past `dense_cap` (possible only via hand-written traces), and
+/// in-capacity pages whose index would grow the slab past a fixed
+/// multiple of the *touched* page count (sparse outliers — one stray
+/// trace address below a 16 GiB device's 4 Mi-page cap must not
+/// materialize a multi-hundred-MB slab). Both live in an overflow hash
+/// map; lookups probe the slab first, so the planned-footprint hot
+/// path never hashes. If the slab later grows over an overflowed
+/// index, [`PageTable::insert`] migrates the entry.
+#[derive(Clone, Debug)]
+pub struct PageTable<E> {
+    slab: Vec<Option<E>>,
+    dense_cap: u64,
+    overflow: FxHashMap<u64, E>,
+    resident: usize,
+}
+
+/// Slab growth budget: the slab may span at most this many slots per
+/// resident page (plus the base floor of 64), keeping slab memory
+/// O(touched pages) even under adversarial sparse address patterns.
+const DENSE_SLOTS_PER_PAGE: u64 = 8;
+
+impl<E> PageTable<E> {
+    /// An empty table covering `dense_cap` dense pages. Nothing is
+    /// allocated until pages are inserted.
+    pub fn new(dense_cap: u64) -> Self {
+        Self::with_expected(dense_cap, 0)
+    }
+
+    /// An empty table with the slab pre-sized for `expected` pages
+    /// (the run's planned per-device footprint — see
+    /// `topology::DevicePool::build_for`), so in-plan inserts never
+    /// re-grow it.
+    pub fn with_expected(dense_cap: u64, expected: u64) -> Self {
+        let dense_cap = dense_cap.max(1);
+        let mut slab = Vec::new();
+        let reserve = expected.min(dense_cap);
+        if reserve > 0 {
+            slab.resize_with(reserve as usize, || None);
+        }
+        Self {
+            slab,
+            dense_cap,
+            overflow: FxHashMap::default(),
+            resident: 0,
+        }
+    }
+
+    /// Resident page count.
+    pub fn len(&self) -> usize {
+        self.resident
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.resident == 0
+    }
+
+    /// Pages the dense slab currently spans (capacity telemetry).
+    pub fn dense_pages(&self) -> u64 {
+        self.slab.len() as u64
+    }
+
+    #[inline]
+    pub fn contains(&self, ospn: u64) -> bool {
+        // Slab first: the planned-footprint hot path resolves here
+        // without hashing. The overflow probe only runs for pages the
+        // slab does not hold (absent pages and sparse outliers).
+        if let Some(slot) = self.slab.get(ospn as usize) {
+            if slot.is_some() {
+                return true;
+            }
+        }
+        !self.overflow.is_empty() && self.overflow.contains_key(&ospn)
+    }
+
+    #[inline]
+    pub fn get(&self, ospn: u64) -> Option<&E> {
+        if let Some(slot) = self.slab.get(ospn as usize) {
+            if let Some(e) = slot.as_ref() {
+                return Some(e);
+            }
+        }
+        if self.overflow.is_empty() {
+            None
+        } else {
+            self.overflow.get(&ospn)
+        }
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, ospn: u64) -> Option<&mut E> {
+        // Split into a contains-style probe + re-index to keep the
+        // borrow checker happy across the slab/overflow fallthrough.
+        if self
+            .slab
+            .get(ospn as usize)
+            .is_some_and(|slot| slot.is_some())
+        {
+            return self.slab[ospn as usize].as_mut();
+        }
+        if self.overflow.is_empty() {
+            None
+        } else {
+            self.overflow.get_mut(&ospn)
+        }
+    }
+
+    /// Largest slab span the growth budget currently allows.
+    #[inline]
+    fn dense_budget(&self) -> u64 {
+        (self.resident as u64 + 1)
+            .saturating_mul(DENSE_SLOTS_PER_PAGE)
+            .max(64)
+            .min(self.dense_cap)
+    }
+
+    /// Insert (or replace) a page's entry; returns the previous entry.
+    pub fn insert(&mut self, ospn: u64, entry: E) -> Option<E> {
+        let spanned = (ospn as usize) < self.slab.len();
+        if !spanned && (ospn >= self.dense_cap || ospn >= self.dense_budget()) {
+            // Sparse outlier (or past device capacity): park it.
+            let old = self.overflow.insert(ospn, entry);
+            if old.is_none() {
+                self.resident += 1;
+            }
+            return old;
+        }
+        if !spanned {
+            // Geometric growth bounded by the cap and the touched-page
+            // budget: amortized O(1) per touched page, never
+            // capacity-proportional.
+            let want = (ospn + 1)
+                .max(self.slab.len() as u64 * 2)
+                .max(64)
+                .min(self.dense_cap);
+            self.slab.resize_with(want as usize, || None);
+        }
+        // Dense insert; the entry may have been parked in the overflow
+        // before the slab grew over its index — migrate it out.
+        let migrated = if self.overflow.is_empty() {
+            None
+        } else {
+            self.overflow.remove(&ospn)
+        };
+        let old = self.slab[ospn as usize].replace(entry).or(migrated);
+        if old.is_none() {
+            self.resident += 1;
+        }
+        old
+    }
+
+    /// O(pages) iteration: the dense slab in OSPN order, then the
+    /// overflow entries (order unspecified — callers only fold sums).
+    pub fn iter(&self) -> impl Iterator<Item = (u64, &E)> {
+        self.slab
+            .iter()
+            .enumerate()
+            .filter_map(|(i, e)| e.as_ref().map(|e| (i as u64, e)))
+            .chain(self.overflow.iter().map(|(&k, v)| (k, v)))
+    }
+
+    /// Resident entries (same order as [`PageTable::iter`]).
+    pub fn values(&self) -> impl Iterator<Item = &E> {
+        self.iter().map(|(_, e)| e)
+    }
+}
+
+// ---------------------------------------------------------------------
+// ChunkArena
+// ---------------------------------------------------------------------
+
+/// A page's chunk allocation: an inline run (head/tail/length) linked
+/// through its [`ChunkArena`]'s `next` array. 12 bytes and `Copy`,
+/// replacing the 24-byte `Vec<u32>` header plus its heap block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkRun {
+    head: u32,
+    tail: u32,
+    len: u32,
+}
+
+impl Default for ChunkRun {
+    fn default() -> Self {
+        Self::EMPTY
+    }
+}
+
+impl ChunkRun {
+    pub const EMPTY: ChunkRun = ChunkRun {
+        head: NIL,
+        tail: NIL,
+        len: 0,
+    };
+
+    /// First chunk of the run (the page's base image address).
+    #[inline]
+    pub fn first(&self) -> Option<u32> {
+        if self.head == NIL {
+            None
+        } else {
+            Some(self.head)
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> u32 {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// Fixed-size chunk allocator over `total` chunks: an intrusive
+/// freelist (head register + per-chunk link, §4.1.1's hardware free
+/// list) plus a bump frontier for never-yet-used chunks.
+///
+/// Equivalence with the legacy `Vec`-based allocator (pinned by
+/// `tests/store.rs`): the legacy free vector was initialized in
+/// descending address order, so pops produced `0, 1, 2, …` until the
+/// first free, and freed chunks were reused LIFO. Here the bump
+/// frontier produces the same address-ordered virgin allocations and
+/// the freelist the same LIFO reuse, so the chunk-id sequence — and
+/// with it every derived DRAM address and timing — is identical, while
+/// allocation failure costs nothing and no per-call `Vec` exists.
+#[derive(Clone, Debug)]
+pub struct ChunkArena {
+    /// Chunk links, valid for ids below `high_water`: freelist chaining
+    /// for free chunks, run chaining for allocated ones.
+    next: Vec<u32>,
+    free_head: u32,
+    /// Recycled chunks on the freelist (excludes the virgin frontier).
+    free_len: u32,
+    /// Bump frontier: ids `>= high_water` have never been allocated.
+    high_water: u32,
+    total: u32,
+    chunk_bytes: u64,
+    base_addr: u64,
+    pub allocs: u64,
+    pub frees: u64,
+}
+
+impl ChunkArena {
+    pub fn new(base_addr: u64, chunk_bytes: u64, total: u32) -> Self {
+        assert!(total > 0, "empty region");
+        Self {
+            next: Vec::new(),
+            free_head: NIL,
+            free_len: 0,
+            high_water: 0,
+            total,
+            chunk_bytes,
+            base_addr,
+            allocs: 0,
+            frees: 0,
+        }
+    }
+
+    /// Allocate one chunk (freelist LIFO, then address-ordered bump).
+    pub fn alloc(&mut self) -> Option<u32> {
+        let c = self.pop()?;
+        self.allocs += 1;
+        Some(c)
+    }
+
+    #[inline]
+    fn pop(&mut self) -> Option<u32> {
+        if self.free_head != NIL {
+            let c = self.free_head;
+            self.free_head = self.next[c as usize];
+            self.free_len -= 1;
+            return Some(c);
+        }
+        if self.high_water < self.total {
+            let c = self.high_water;
+            self.high_water += 1;
+            if self.next.len() <= c as usize {
+                // Geometric growth with the frontier: memory tracks the
+                // high-water mark, never the region capacity.
+                let want = (c as u64 + 1)
+                    .max(self.next.len() as u64 * 2)
+                    .max(64)
+                    .min(self.total as u64);
+                self.next.resize(want as usize, NIL);
+            }
+            return Some(c);
+        }
+        None
+    }
+
+    #[inline]
+    fn push_free(&mut self, c: u32) {
+        debug_assert!(c < self.high_water, "chunk {c} out of range");
+        #[cfg(debug_assertions)]
+        {
+            // Double-free walk: debug builds only (O(free list)).
+            let mut n = self.free_head;
+            while n != NIL {
+                assert!(n != c, "double free of chunk {c}");
+                n = self.next[n as usize];
+            }
+        }
+        self.next[c as usize] = self.free_head;
+        self.free_head = c;
+        self.free_len += 1;
+    }
+
+    pub fn free_chunk(&mut self, c: u32) {
+        debug_assert!(c < self.total, "chunk {c} out of range");
+        self.frees += 1;
+        self.push_free(c);
+    }
+
+    pub fn free_count(&self) -> u32 {
+        self.free_len + (self.total - self.high_water)
+    }
+
+    pub fn used_count(&self) -> u32 {
+        self.total - self.free_count()
+    }
+
+    pub fn total(&self) -> u32 {
+        self.total
+    }
+
+    pub fn chunk_bytes(&self) -> u64 {
+        self.chunk_bytes
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used_count() as u64 * self.chunk_bytes
+    }
+
+    /// Device-physical address of a chunk (for DRAM bank routing).
+    #[inline]
+    pub fn addr(&self, chunk: u32) -> u64 {
+        self.base_addr + chunk as u64 * self.chunk_bytes
+    }
+
+    // ---- runs -------------------------------------------------------
+
+    /// Append `n` freshly allocated chunks to `run`, or none
+    /// (all-or-nothing). Failure is cost-free: no allocation, no
+    /// counter movement, no heap traffic.
+    pub fn run_extend(&mut self, run: &mut ChunkRun, n: usize) -> bool {
+        if (self.free_count() as usize) < n {
+            return false;
+        }
+        for _ in 0..n {
+            let c = self.pop().expect("free_count covers n");
+            self.next[c as usize] = NIL;
+            if run.head == NIL {
+                run.head = c;
+            } else {
+                self.next[run.tail as usize] = c;
+            }
+            run.tail = c;
+            run.len += 1;
+        }
+        self.allocs += n as u64;
+        true
+    }
+
+    /// Truncate `run` to its first `keep` chunks, freeing the tail in
+    /// run order (matching the legacy `drain(keep..)` + `free_many`
+    /// sequence, so the freelist ends up in the identical state).
+    pub fn run_truncate(&mut self, run: &mut ChunkRun, keep: u32) {
+        if keep >= run.len {
+            return;
+        }
+        let mut doomed = if keep == 0 {
+            let h = run.head;
+            run.head = NIL;
+            run.tail = NIL;
+            h
+        } else {
+            let mut last = run.head;
+            for _ in 1..keep {
+                last = self.next[last as usize];
+            }
+            let first_doomed = self.next[last as usize];
+            self.next[last as usize] = NIL;
+            run.tail = last;
+            first_doomed
+        };
+        self.frees += (run.len - keep) as u64;
+        run.len = keep;
+        while doomed != NIL {
+            let nx = self.next[doomed as usize];
+            self.push_free(doomed);
+            doomed = nx;
+        }
+    }
+
+    /// Release the whole run.
+    pub fn run_clear(&mut self, run: &mut ChunkRun) {
+        self.run_truncate(run, 0);
+    }
+
+    /// The run's chunk ids, head to tail.
+    pub fn run_iter(&self, run: ChunkRun) -> RunIter<'_> {
+        RunIter {
+            arena: self,
+            node: run.head,
+            left: run.len,
+        }
+    }
+}
+
+/// Iterator over a [`ChunkRun`]'s chunk ids.
+pub struct RunIter<'a> {
+    arena: &'a ChunkArena,
+    node: u32,
+    left: u32,
+}
+
+impl Iterator for RunIter<'_> {
+    type Item = u32;
+
+    fn next(&mut self) -> Option<u32> {
+        if self.left == 0 || self.node == NIL {
+            return None;
+        }
+        let c = self.node;
+        self.node = self.arena.next[c as usize];
+        self.left -= 1;
+        Some(c)
+    }
+}
+
+// ---------------------------------------------------------------------
+// ActivityTable
+// ---------------------------------------------------------------------
+
+/// One §4.4 page-activity entry: `allocated | OSPN | referenced` plus
+/// the block index for 1 KB co-location.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ActivityEntry {
+    pub allocated: bool,
+    pub referenced: bool,
+    /// Which (ospn, block) owns the slot.
+    pub ospn: u64,
+    pub block: u8,
+}
+
+const ACT_ALLOCATED: u64 = 1 << 63;
+const ACT_REFERENCED: u64 = 1 << 62;
+const ACT_BLOCK_SHIFT: u32 = 60;
+const ACT_OSPN_MASK: u64 = (1 << 60) - 1;
+
+/// The page-activity region as a flat array of packed 8 B slots
+/// (the modeled hardware packs 4 B entries, 16 per 64 B fetch — the
+/// cost side lives in `meta::ACTIVITY_ENTRIES_PER_FETCH`).
+#[derive(Clone, Debug)]
+pub struct ActivityTable {
+    slots: Vec<u64>,
+}
+
+impl ActivityTable {
+    pub fn new(slots: usize) -> Self {
+        Self {
+            slots: vec![0; slots],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    #[inline]
+    pub fn get(&self, slot: usize) -> ActivityEntry {
+        let w = self.slots[slot];
+        ActivityEntry {
+            allocated: w & ACT_ALLOCATED != 0,
+            referenced: w & ACT_REFERENCED != 0,
+            ospn: w & ACT_OSPN_MASK,
+            block: ((w >> ACT_BLOCK_SHIFT) & 0b11) as u8,
+        }
+    }
+
+    #[inline]
+    pub fn set(&mut self, slot: usize, e: ActivityEntry) {
+        debug_assert!(e.ospn <= ACT_OSPN_MASK, "ospn overflows activity entry");
+        debug_assert!(e.block < 4, "block index overflows activity entry");
+        let mut w = (e.ospn & ACT_OSPN_MASK) | ((e.block as u64) << ACT_BLOCK_SHIFT);
+        if e.allocated {
+            w |= ACT_ALLOCATED;
+        }
+        if e.referenced {
+            w |= ACT_REFERENCED;
+        }
+        self.slots[slot] = w;
+    }
+
+    /// Reset a slot to the unallocated state.
+    #[inline]
+    pub fn clear(&mut self, slot: usize) {
+        self.slots[slot] = 0;
+    }
+
+    #[inline]
+    pub fn is_allocated(&self, slot: usize) -> bool {
+        self.slots[slot] & ACT_ALLOCATED != 0
+    }
+
+    #[inline]
+    pub fn is_referenced(&self, slot: usize) -> bool {
+        self.slots[slot] & ACT_REFERENCED != 0
+    }
+
+    #[inline]
+    pub fn set_referenced(&mut self, slot: usize) {
+        self.slots[slot] |= ACT_REFERENCED;
+    }
+
+    #[inline]
+    pub fn clear_referenced(&mut self, slot: usize) {
+        self.slots[slot] &= !ACT_REFERENCED;
+    }
+}
+
+// ---------------------------------------------------------------------
+// PageBitmap
+// ---------------------------------------------------------------------
+
+/// Lazily-grown residency bitset over device-local OSPNs.
+#[derive(Clone, Debug, Default)]
+pub struct PageBitmap {
+    words: Vec<u64>,
+    ones: u64,
+}
+
+impl PageBitmap {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mark `ospn` touched; returns true if it was newly set.
+    pub fn set(&mut self, ospn: u64) -> bool {
+        let (w, b) = ((ospn / 64) as usize, ospn % 64);
+        if w >= self.words.len() {
+            let want = (w + 1).max(self.words.len() * 2).max(8);
+            self.words.resize(want, 0);
+        }
+        let newly = self.words[w] & (1 << b) == 0;
+        if newly {
+            self.words[w] |= 1 << b;
+            self.ones += 1;
+        }
+        newly
+    }
+
+    pub fn contains(&self, ospn: u64) -> bool {
+        let (w, b) = ((ospn / 64) as usize, ospn % 64);
+        self.words.get(w).is_some_and(|word| word & (1 << b) != 0)
+    }
+
+    /// Touched page count.
+    pub fn count(&self) -> u64 {
+        self.ones
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ---- PageTable --------------------------------------------------
+
+    #[test]
+    fn page_table_dense_roundtrip() {
+        let mut t: PageTable<u32> = PageTable::new(1 << 20);
+        assert!(t.is_empty());
+        assert_eq!(t.insert(5, 50), None);
+        assert_eq!(t.insert(0, 10), None);
+        assert_eq!(t.insert(5, 55), Some(50));
+        assert_eq!(t.len(), 2);
+        assert!(t.contains(0) && t.contains(5) && !t.contains(4));
+        assert_eq!(t.get(5), Some(&55));
+        *t.get_mut(0).unwrap() += 1;
+        assert_eq!(t.get(0), Some(&11));
+        let pairs: Vec<(u64, u32)> = t.iter().map(|(k, &v)| (k, v)).collect();
+        assert_eq!(pairs, vec![(0, 11), (5, 55)]);
+    }
+
+    #[test]
+    fn page_table_grows_with_touch_not_capacity() {
+        // In-order population (the host's populate loop) stays dense.
+        let mut t: PageTable<u8> = PageTable::new(1 << 30);
+        assert_eq!(t.dense_pages(), 0, "no upfront allocation");
+        for p in 0..1000 {
+            t.insert(p, 1);
+        }
+        assert!(t.dense_pages() >= 1000);
+        assert!(
+            t.dense_pages() < 1 << 20,
+            "slab must track touched pages, got {}",
+            t.dense_pages()
+        );
+        assert_eq!(t.values().map(|&v| v as u64).sum::<u64>(), 1000);
+    }
+
+    #[test]
+    fn page_table_expected_pages_presize() {
+        let t: PageTable<u8> = PageTable::with_expected(1 << 30, 4096);
+        assert_eq!(t.dense_pages(), 4096);
+        assert!(t.is_empty(), "pre-sizing allocates slots, not pages");
+    }
+
+    #[test]
+    fn page_table_sparse_outlier_stays_out_of_slab() {
+        // One stray in-capacity page (a hand-written trace address)
+        // must not materialize a capacity-proportional slab.
+        let mut t: PageTable<u8> = PageTable::new(1 << 22); // "16 GiB device"
+        t.insert((1 << 22) - 1, 7);
+        assert_eq!(t.dense_pages(), 0, "outlier must be parked in overflow");
+        assert_eq!(t.get((1 << 22) - 1), Some(&7));
+        assert!(t.contains((1 << 22) - 1));
+        // Dense population afterwards is unaffected.
+        for p in 0..100 {
+            t.insert(p, 1);
+        }
+        assert!(t.dense_pages() >= 100 && t.dense_pages() < 4096);
+        assert_eq!(t.len(), 101);
+    }
+
+    #[test]
+    fn page_table_migrates_overflow_entry_on_reinsert() {
+        let mut t: PageTable<u32> = PageTable::new(1 << 20);
+        t.insert(500, 5); // budget is 64 → parked in overflow
+        assert_eq!(t.dense_pages(), 0);
+        for p in 0..200 {
+            t.insert(p, p as u32);
+        }
+        // The parked entry stays visible through the fallthrough while
+        // the slab has not yet grown over its index...
+        assert_eq!(t.get(500), Some(&5));
+        assert!(t.dense_pages() >= 200 && t.dense_pages() <= 500);
+        // ...and a re-insert (now inside the touched-page budget) grows
+        // the slab and migrates it out of the overflow.
+        assert_eq!(t.insert(500, 6), Some(5), "migration returns the old value");
+        assert!(t.dense_pages() > 500);
+        assert_eq!(t.get(500), Some(&6));
+        assert_eq!(t.len(), 201);
+        let sum: u64 = t.values().map(|&v| v as u64).sum();
+        assert_eq!(sum, (0..200u64).sum::<u64>() + 6);
+    }
+
+    #[test]
+    fn page_table_overflow_beyond_cap() {
+        let mut t: PageTable<u32> = PageTable::new(64);
+        for p in 0..64 {
+            t.insert(p, 0);
+        }
+        t.insert(63, 1);
+        t.insert(64, 2); // first out-of-capacity page
+        t.insert(u64::MAX - 1, 3);
+        assert_eq!(t.len(), 66);
+        assert_eq!(t.get(63), Some(&1));
+        assert_eq!(t.get(64), Some(&2));
+        assert_eq!(t.get(u64::MAX - 1), Some(&3));
+        assert!(t.contains(u64::MAX - 1));
+        assert!(!t.contains(u64::MAX));
+        assert_eq!(
+            t.dense_pages(),
+            64,
+            "overflow pages must not grow the slab"
+        );
+        let sum: u32 = t.values().sum();
+        assert_eq!(sum, 6);
+    }
+
+    // ---- ChunkArena -------------------------------------------------
+
+    #[test]
+    fn arena_allocates_in_address_order() {
+        let mut a = ChunkArena::new(0, 512, 16);
+        assert_eq!(a.alloc(), Some(0));
+        assert_eq!(a.alloc(), Some(1));
+        assert_eq!(a.alloc(), Some(2));
+        assert_eq!(a.free_count(), 13);
+        assert_eq!(a.used_bytes(), 1536);
+    }
+
+    #[test]
+    fn arena_reuses_lifo() {
+        let mut a = ChunkArena::new(0, 512, 16);
+        for _ in 0..4 {
+            a.alloc();
+        }
+        a.free_chunk(1);
+        a.free_chunk(3);
+        // LIFO: most recently freed first, then the bump frontier.
+        assert_eq!(a.alloc(), Some(3));
+        assert_eq!(a.alloc(), Some(1));
+        assert_eq!(a.alloc(), Some(4));
+    }
+
+    #[test]
+    fn arena_exhaustion_is_cost_free() {
+        let mut a = ChunkArena::new(0, 4096, 2);
+        assert!(a.alloc().is_some());
+        assert!(a.alloc().is_some());
+        let (allocs, frees) = (a.allocs, a.frees);
+        assert!(a.alloc().is_none());
+        let mut run = ChunkRun::EMPTY;
+        assert!(!a.run_extend(&mut run, 1));
+        assert_eq!(run, ChunkRun::EMPTY, "failed extend must not touch the run");
+        assert_eq!((a.allocs, a.frees), (allocs, frees), "failure moves no counters");
+        assert_eq!(a.free_count(), 0);
+    }
+
+    #[test]
+    fn run_extend_is_all_or_nothing() {
+        let mut a = ChunkArena::new(0, 512, 4);
+        let mut run = ChunkRun::EMPTY;
+        assert!(!a.run_extend(&mut run, 5), "over-ask must fail whole");
+        assert_eq!(a.free_count(), 4, "failed extend must not leak");
+        assert!(a.run_extend(&mut run, 4));
+        assert_eq!(run.len(), 4);
+        assert_eq!(a.free_count(), 0);
+        assert_eq!(a.run_iter(run).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        a.run_clear(&mut run);
+        assert_eq!(a.free_count(), 4);
+        assert_eq!(run.first(), None);
+    }
+
+    #[test]
+    fn run_truncate_frees_tail_in_run_order() {
+        let mut a = ChunkArena::new(0, 512, 8);
+        let mut run = ChunkRun::EMPTY;
+        assert!(a.run_extend(&mut run, 5)); // run = 0..=4
+        a.run_truncate(&mut run, 2);
+        assert_eq!(run.len(), 2);
+        assert_eq!(a.run_iter(run).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(a.free_count(), 6);
+        // Legacy order: suffix pushed front-to-back, so reuse pops the
+        // last-freed chunk first.
+        assert_eq!(a.alloc(), Some(4));
+        assert_eq!(a.alloc(), Some(3));
+        assert_eq!(a.alloc(), Some(2));
+        assert_eq!(a.alloc(), Some(5));
+        // Extending after truncation appends at the tail.
+        assert!(a.run_extend(&mut run, 1));
+        assert_eq!(a.run_iter(run).collect::<Vec<_>>(), vec![0, 1, 6]);
+    }
+
+    #[test]
+    fn run_truncate_noop_when_keeping_everything() {
+        let mut a = ChunkArena::new(0, 512, 8);
+        let mut run = ChunkRun::EMPTY;
+        assert!(a.run_extend(&mut run, 3));
+        let before = run;
+        a.run_truncate(&mut run, 3);
+        a.run_truncate(&mut run, 7);
+        assert_eq!(run, before);
+        assert_eq!(a.frees, 0);
+    }
+
+    #[test]
+    fn arena_addresses_are_disjoint() {
+        let a = ChunkArena::new(0x10_0000, 512, 100);
+        assert_eq!(a.addr(0), 0x10_0000);
+        assert_eq!(a.addr(1), 0x10_0200);
+        assert_eq!(a.chunk_bytes(), 512);
+        assert_eq!(a.total(), 100);
+    }
+
+    #[test]
+    fn arena_memory_tracks_high_water() {
+        // A "16 GiB" region must not allocate link storage upfront.
+        let total = (16u64 << 30) / 512;
+        let mut a = ChunkArena::new(0, 512, total.min(u32::MAX as u64) as u32);
+        assert_eq!(a.next.len(), 0);
+        for _ in 0..100 {
+            a.alloc();
+        }
+        assert!(a.next.len() >= 100 && a.next.len() < 100_000);
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)] // debug-only freelist walk
+    fn arena_double_free_is_caught() {
+        let mut a = ChunkArena::new(0, 512, 4);
+        let c = a.alloc().unwrap();
+        a.free_chunk(c);
+        a.free_chunk(c);
+    }
+
+    // ---- ActivityTable ----------------------------------------------
+
+    #[test]
+    fn activity_entries_pack_roundtrip() {
+        let mut t = ActivityTable::new(8);
+        assert_eq!(t.len(), 8);
+        let e = ActivityEntry {
+            allocated: true,
+            referenced: false,
+            ospn: 0x0FFF_FFFF_FFFF_FFFF,
+            block: 3,
+        };
+        t.set(5, e);
+        assert_eq!(t.get(5), e);
+        assert!(t.is_allocated(5) && !t.is_referenced(5));
+        t.set_referenced(5);
+        assert!(t.is_referenced(5));
+        t.clear_referenced(5);
+        assert_eq!(t.get(5), e);
+        t.clear(5);
+        assert_eq!(t.get(5), ActivityEntry::default());
+        assert_eq!(t.get(0), ActivityEntry::default());
+    }
+
+    // ---- PageBitmap -------------------------------------------------
+
+    #[test]
+    fn bitmap_sets_and_counts() {
+        let mut b = PageBitmap::new();
+        assert!(b.set(0));
+        assert!(b.set(1000));
+        assert!(!b.set(1000), "second touch is not new");
+        assert!(b.contains(0) && b.contains(1000) && !b.contains(1));
+        assert_eq!(b.count(), 2);
+    }
+}

@@ -21,11 +21,9 @@
 
 use std::collections::VecDeque;
 
-use crate::sim::FxHashMap;
-
 use crate::compress::PageSizes;
 use crate::config::SimConfig;
-use crate::expander::chunk::ChunkAllocator;
+use crate::expander::store::{ChunkArena, PageTable};
 use crate::expander::{
     incompressible_4k, ContentOracle, DeviceStats, Scheme, Substrate, LINE_BYTES,
     LINES_PER_PAGE, PAGE_BYTES,
@@ -57,8 +55,8 @@ const COMPACTION_MIGRATE_BYTES: u64 = 8192;
 
 pub struct Tmcc {
     sub: Substrate,
-    pages: FxHashMap<u64, PageEntry>,
-    promoted: ChunkAllocator,
+    pages: PageTable<PageEntry>,
+    promoted: ChunkArena,
     /// FIFO of (slot, ospn) promotion order — TMCC's recency proxy.
     fifo: VecDeque<(u32, u64)>,
     /// DyLeCT: dual metadata tables.
@@ -73,11 +71,17 @@ pub struct Tmcc {
 
 impl Tmcc {
     pub fn new(cfg: &SimConfig, dual_table: bool) -> Self {
+        Self::sized(cfg, dual_table, 0)
+    }
+
+    /// Construct with the page table pre-sized for `pages_hint` local
+    /// pages (see `topology::DevicePool::build_for`; 0 = lazy).
+    pub fn sized(cfg: &SimConfig, dual_table: bool, pages_hint: u64) -> Self {
         let slots = (cfg.promoted_bytes / PAGE_BYTES).max(16) as u32;
         Self {
             sub: Substrate::new(cfg, 64),
-            pages: FxHashMap::default(),
-            promoted: ChunkAllocator::new(2 << 30, PAGE_BYTES, slots),
+            pages: PageTable::with_expected(cfg.device_bytes / PAGE_BYTES, pages_hint),
+            promoted: ChunkArena::new(2 << 30, PAGE_BYTES, slots),
             fifo: VecDeque::new(),
             dual_table,
             low_water: cfg.demotion_low_water as u32,
@@ -131,7 +135,7 @@ impl Tmcc {
             // FIFO entries can be stale (page already demoted+repromoted);
             // skip entries whose slot no longer matches.
             let matches = matches!(
-                self.pages.get(&ospn).map(|e| e.state),
+                self.pages.get(ospn).map(|e| e.state),
                 Some(PState::Prom { slot: s, .. }) if s == slot
             );
             if !matches {
@@ -153,7 +157,7 @@ impl Tmcc {
                 let occ = self.sub.timing.compress_ps(PAGE_BYTES);
                 self.sub.compress_busy(t, occ);
             }
-            let entry = self.pages.get_mut(&ospn).unwrap();
+            let entry = self.pages.get_mut(ospn).unwrap();
             let (new_state, stored) = if size == 0 {
                 (PState::Zero, 0)
             } else if incompressible_4k(size) {
@@ -169,13 +173,9 @@ impl Tmcc {
             if stored > 0 {
                 self.zs_alloc(t, stored, true);
                 if !bg {
-                    self.sub.mem.access_burst(
-                        t,
-                        0x6000_0000,
-                        (stored as u64).div_ceil(LINE_BYTES),
-                        true,
-                        MemKind::Demotion,
-                    );
+                    self.sub
+                        .mem
+                        .access_bytes(t, 0x6000_0000, stored as u64, true, MemKind::Demotion);
                 }
             }
             self.promoted.free_chunk(slot);
@@ -205,7 +205,7 @@ impl Tmcc {
     }
 
     fn ensure(&mut self, ospn: u64, sizes: PageSizes) {
-        if self.pages.contains_key(&ospn) {
+        if self.pages.contains(ospn) {
             return;
         }
         let size = sizes.page;
@@ -239,7 +239,7 @@ impl Scheme for Tmcc {
         } else {
             self.sub.stats.reads += 1;
         }
-        if !self.pages.contains_key(&ospn) {
+        if !self.pages.contains(ospn) {
             let s = oracle.sizes(ospn);
             self.ensure(ospn, s);
         }
@@ -251,7 +251,7 @@ impl Scheme for Tmcc {
         let outcome = self.sub.meta_access(now, ospn, meta_addr, fetches, false);
         let t = outcome.ready;
 
-        let state = self.pages[&ospn].state;
+        let state = self.pages.get(ospn).unwrap().state;
         let reply = match (state, write) {
             (PState::Zero, false) => {
                 self.sub.stats.zero_serves += 1;
@@ -260,11 +260,11 @@ impl Scheme for Tmcc {
             (PState::Zero, true) => {
                 let sizes = oracle.on_write(ospn);
                 self.logical += PAGE_BYTES;
-                let entry = self.pages.get_mut(&ospn).unwrap();
+                let entry = self.pages.get_mut(ospn).unwrap();
                 entry.size = sizes.page;
                 match self.promote(t, ospn, oracle) {
                     Some(slot) => {
-                        let entry = self.pages.get_mut(&ospn).unwrap();
+                        let entry = self.pages.get_mut(ospn).unwrap();
                         entry.state = PState::Prom { slot, dirty: true };
                         self.sub.meta_cache.set_dirty(ospn);
                         let addr = self.promoted.addr(slot) + line as u64 * LINE_BYTES;
@@ -280,7 +280,7 @@ impl Scheme for Tmcc {
                 if write {
                     let _ = oracle.on_write(ospn);
                     if !dirty {
-                        let entry = self.pages.get_mut(&ospn).unwrap();
+                        let entry = self.pages.get_mut(ospn).unwrap();
                         entry.state = PState::Prom { slot, dirty: true };
                         self.sub.meta_cache.set_dirty(ospn);
                     }
@@ -310,7 +310,7 @@ impl Scheme for Tmcc {
                     Some(slot) => {
                         // zsmalloc chunk freed immediately (no shadow).
                         self.zs_free(decompressed, bytes, false);
-                        let entry = self.pages.get_mut(&ospn).unwrap();
+                        let entry = self.pages.get_mut(ospn).unwrap();
                         entry.state = PState::Prom { slot, dirty: write };
                         self.sub.meta_cache.set_dirty(ospn);
                         if write {

@@ -6,18 +6,17 @@
 //! zero-heavy workloads (lbm, bfs, tc) can *beat* this baseline under
 //! IBEX (§6.1).
 
-use std::collections::HashSet;
-
-
 use crate::compress::PageSizes;
 use crate::config::SimConfig;
+use crate::expander::store::PageBitmap;
 use crate::expander::{ContentOracle, DeviceStats, Scheme, Substrate, LINE_BYTES, PAGE_BYTES};
 use crate::mem::{MemKind, MemorySystem};
 use crate::sim::Ps;
 
 pub struct Uncompressed {
     sub: Substrate,
-    resident: HashSet<u64>,
+    /// Touched-page residency (flat bitset; no hashing on the hot path).
+    resident: PageBitmap,
     logical: u64,
 }
 
@@ -25,7 +24,7 @@ impl Uncompressed {
     pub fn new(cfg: &SimConfig) -> Self {
         Self {
             sub: Substrate::new(cfg, 64),
-            resident: HashSet::new(),
+            resident: PageBitmap::new(),
             logical: 0,
         }
     }
@@ -45,7 +44,7 @@ impl Scheme for Uncompressed {
         } else {
             self.sub.stats.reads += 1;
         }
-        self.resident.insert(ospn);
+        self.resident.set(ospn);
         let addr = ospn * PAGE_BYTES + line as u64 * LINE_BYTES;
         let done = self.sub.mem.access(now, addr, write, MemKind::Final);
         self.sub
@@ -56,7 +55,7 @@ impl Scheme for Uncompressed {
     }
 
     fn populate(&mut self, ospn: u64, sizes: PageSizes) {
-        self.resident.insert(ospn);
+        self.resident.set(ospn);
         if sizes.page != 0 {
             self.logical += PAGE_BYTES;
         }

@@ -254,6 +254,14 @@ impl MemorySystem {
         done
     }
 
+    /// A burst sized in bytes: `bytes.div_ceil(64)` consecutive line
+    /// accesses starting at `addr` (a no-op for `bytes == 0`). Chunk
+    /// runs and variable-size images batch through this directly
+    /// instead of every call site repeating the line-count conversion.
+    pub fn access_bytes(&mut self, now: Ps, addr: u64, bytes: u64, write: bool, kind: MemKind) -> Ps {
+        self.access_burst(now, addr, bytes.div_ceil(64), write, kind)
+    }
+
     #[inline]
     fn route(&self, addr: u64) -> usize {
         ((addr / INTERLEAVE_BYTES) % self.channels.len() as u64) as usize
@@ -350,6 +358,17 @@ mod tests {
         let burst = m.access_burst(0, 0, 8, false, MemKind::Promotion);
         assert!(burst > one);
         assert_eq!(m.total_accesses(), 8);
+    }
+
+    #[test]
+    fn access_bytes_rounds_to_lines() {
+        let mut m = mem();
+        assert_eq!(m.access_bytes(0, 0, 0, false, MemKind::Final), 0);
+        assert_eq!(m.total_accesses(), 0, "zero bytes charges nothing");
+        m.access_bytes(0, 0, 1, false, MemKind::Promotion);
+        assert_eq!(m.total_accesses(), 1);
+        m.access_bytes(0, 0, 65, false, MemKind::Promotion);
+        assert_eq!(m.total_accesses(), 3, "65 B = two 64 B lines");
     }
 
     #[test]

@@ -27,7 +27,7 @@ use std::fmt;
 
 use crate::config::SimConfig;
 use crate::cxl::CxlLink;
-use crate::expander::{build_scheme, DeviceStats, Scheme};
+use crate::expander::{build_scheme_sized, DeviceStats, Scheme};
 
 /// Hard cap on pool width — far above the paper-scale sweeps (1→8) but
 /// low enough that a typo'd `devices=` fails loudly instead of
@@ -147,6 +147,15 @@ impl Interleave {
             InterleaveKind::Contiguous => device as u64 * self.pages_per_device + local,
         }
     }
+
+    /// Upper bound on device-local pages any single device owns under
+    /// this interleave — what each device's dense page table should be
+    /// sized for. Round-robin gives device `d` `ceil((P - d) / N) ≤
+    /// ceil(P / N)` pages; contiguous extents are exactly `ceil(P / N)`
+    /// long.
+    pub fn local_pages(&self) -> u64 {
+        self.pages_per_device
+    }
 }
 
 /// One expander instance: a private CXL link plus the device model
@@ -165,18 +174,35 @@ pub struct DevicePool {
 
 impl DevicePool {
     /// `cfg.devices` instances of the configured scheme, each behind
-    /// its own link.
+    /// its own link. Page tables size themselves lazily from touched
+    /// pages; use [`DevicePool::build_for`] when the run's footprint is
+    /// known.
     pub fn build(cfg: &SimConfig) -> DevicePool {
+        Self::build_for(cfg, 0)
+    }
+
+    /// Like [`DevicePool::build`], but with each device's page table
+    /// pre-sized for its share of a run spanning `total_pages` pooled
+    /// pages — the interleave's local page count, so in-plan requests
+    /// never re-grow the dense slab. `total_pages = 0` means unknown
+    /// (lazy sizing); results are identical either way (pinned by
+    /// `tests/store.rs`).
+    pub fn build_for(cfg: &SimConfig, total_pages: u64) -> DevicePool {
         assert!(
             (1..=MAX_DEVICES).contains(&cfg.devices),
             "devices must be in 1..={MAX_DEVICES}, got {}",
             cfg.devices
         );
+        let pages_hint = if total_pages == 0 {
+            0
+        } else {
+            Interleave::new(cfg.interleave, cfg.devices, total_pages).local_pages()
+        };
         DevicePool {
             devices: (0..cfg.devices)
                 .map(|_| Device {
                     link: CxlLink::new(cfg.cxl),
-                    scheme: build_scheme(cfg),
+                    scheme: build_scheme_sized(cfg, pages_hint),
                 })
                 .collect(),
         }
@@ -313,6 +339,31 @@ mod tests {
         assert_eq!(pool.scheme_name(), "ibex");
         assert_eq!(pool.mem_total(), 0);
         assert_eq!(pool.compression_ratio(), 1.0);
+    }
+
+    #[test]
+    fn local_pages_bounds_device_share() {
+        let il = Interleave::new(InterleaveKind::PageRoundRobin, 4, 1001);
+        assert_eq!(il.local_pages(), 251); // ceil(1001/4)
+        let il = Interleave::new(InterleaveKind::Contiguous, 4, 1001);
+        assert_eq!(il.local_pages(), 251);
+        // Every routed local page stays below the bound.
+        for g in 0..1001u64 {
+            let (_, local) = il.route(g);
+            assert!(local < il.local_pages());
+        }
+    }
+
+    #[test]
+    fn sized_pool_matches_lazy_pool() {
+        let mut cfg = SimConfig::test_small();
+        cfg.devices = 2;
+        let lazy = DevicePool::build(&cfg);
+        let sized = DevicePool::build_for(&cfg, 10_000);
+        assert_eq!(lazy.len(), sized.len());
+        assert_eq!(lazy.scheme_name(), sized.scheme_name());
+        assert_eq!(lazy.mem_total(), sized.mem_total());
+        assert_eq!(lazy.physical_bytes(), sized.physical_bytes());
     }
 
     #[test]

@@ -9,8 +9,8 @@
 use ibex::compress::size_model::analyze_page;
 use ibex::compress::{lz, PageSizes};
 use ibex::config::SimConfig;
-use ibex::expander::chunk::ChunkAllocator;
 use ibex::expander::ibex::Ibex;
+use ibex::expander::store::ChunkArena;
 use ibex::expander::{build_scheme, Scheme};
 use ibex::prop::{forall, gen};
 use ibex::workload::content::FixedOracle;
@@ -61,10 +61,10 @@ fn prop_size_model_bounds_and_zero_consistency() {
 }
 
 #[test]
-fn prop_chunk_allocator_conservation() {
+fn prop_chunk_arena_conservation() {
     forall("chunk conservation", |rng, _| {
         let total = 16 + rng.below(256) as u32;
-        let mut a = ChunkAllocator::new(0, 512, total);
+        let mut a = ChunkArena::new(0, 512, total);
         let mut held: Vec<u32> = Vec::new();
         for _ in 0..400 {
             if rng.chance(0.55) {

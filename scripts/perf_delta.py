@@ -1,0 +1,86 @@
+#!/usr/bin/env python3
+"""Compare a perf_hotpath bench report against the committed baseline.
+
+Usage:
+    python3 scripts/perf_delta.py CURRENT.json [BASELINE.json]
+
+CURRENT.json is a `BENCH_perf_hotpath.json` produced by running the
+bench with IBEX_RESULTS_DIR set (`make perf`). BASELINE.json defaults
+to `perf/baseline/BENCH_perf_hotpath.json` — the recorded trajectory
+point the repo gates against (refresh it with `make perf-baseline`
+after an intentional perf change).
+
+Prints a per-metric delta table. Throughput metrics (`*_mreq_per_s`)
+are better-higher; isolated costs (`*_ns`) are better-lower. Exit code
+is 0 unless `--gate PCT` is given, in which case any throughput metric
+regressing by more than PCT percent fails the run (the CI step runs
+without --gate: non-gating, informational only).
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+DEFAULT_BASELINE = Path(__file__).resolve().parent.parent / "perf" / "baseline" / (
+    "BENCH_perf_hotpath.json"
+)
+
+
+def load_metrics(path: Path) -> dict:
+    if not path.exists():
+        sys.exit(
+            f"{path}: no bench report found — run the bench with "
+            "IBEX_RESULTS_DIR set (e.g. `make perf`) first"
+        )
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("kind") != "bench_report" or doc.get("bench") != "perf_hotpath":
+        sys.exit(f"{path}: not a perf_hotpath bench report")
+    return doc.get("metrics", {})
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", type=Path)
+    ap.add_argument("baseline", type=Path, nargs="?", default=DEFAULT_BASELINE)
+    ap.add_argument(
+        "--gate",
+        type=float,
+        metavar="PCT",
+        help="fail if any *_mreq_per_s metric regresses by more than PCT%%",
+    )
+    args = ap.parse_args()
+
+    current = load_metrics(args.current)
+    if not args.baseline.exists():
+        print(f"no committed baseline at {args.baseline}")
+        print("current metrics (record one with `make perf-baseline`):")
+        for key in sorted(current):
+            print(f"  {key:36s} {current[key]:12.3f}")
+        return 0
+    baseline = load_metrics(args.baseline)
+
+    print(f"{'metric':36s} {'baseline':>12s} {'current':>12s} {'delta':>9s}")
+    worst_regression = 0.0
+    for key in sorted(set(current) | set(baseline)):
+        cur, base = current.get(key), baseline.get(key)
+        if cur is None or base is None:
+            side = "baseline" if cur is None else "current"
+            print(f"{key:36s} {'(only in ' + side + ')':>35s}")
+            continue
+        delta = (cur - base) / base * 100.0 if base else float("inf")
+        # Higher is better for throughput; lower is better for ns costs.
+        better_higher = key.endswith("_mreq_per_s")
+        arrow = "+" if delta >= 0 else ""
+        print(f"{key:36s} {base:12.3f} {cur:12.3f} {arrow}{delta:7.1f}%")
+        if better_higher and -delta > worst_regression:
+            worst_regression = -delta
+    if args.gate is not None and worst_regression > args.gate:
+        print(f"FAIL: throughput regressed {worst_regression:.1f}% (> {args.gate}%)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
