@@ -70,6 +70,49 @@ fn main() {
     }
     t.emit();
 
+    // ---- sharded scale-out throughput ------------------------------
+
+    // Aggregate driver throughput over an 8-device pool, sequential vs
+    // the intra-run parallel engine (4 workers over 8 device shards).
+    // The parallel engine is bit-identical by contract, so the only
+    // thing this lane measures is wall-clock; the ≥10 Mreq/s aggregate
+    // target from the scale-out roadmap gates on the intra4 row.
+    let mut st = Table::new(
+        "Hot path — 8-device scale-out throughput (ibex/pr)",
+        &["engine", "requests", "wall ms", "Mreq/s"],
+    );
+    let mut scale_reqs = [0u64; 2];
+    for (slot, (name, threads)) in [("sequential", 1usize), ("intra4", 4)].iter().enumerate() {
+        let mut cfg = common::bench_cfg();
+        cfg.instructions = insts;
+        cfg.warmup_instructions = 0;
+        cfg.set("scheme", "ibex").unwrap();
+        cfg.set("devices", "8").unwrap();
+        let spec = by_name("pr").unwrap();
+        let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
+        let mut pool = DevicePool::build(&cfg);
+        let mut sim = HostSim::new(&cfg, &spec);
+        sim.set_intra_threads(*threads);
+        let start = Instant::now();
+        let m = sim.run(&mut pool, &mut oracle);
+        let wall = start.elapsed();
+        scale_reqs[slot] = m.requests;
+        let mreq_s = m.requests as f64 / wall.as_secs_f64() / 1e6;
+        let key = if *threads > 1 { "scaleout_x8_intra4_mreq_per_s" } else { "scaleout_x8_seq_mreq_per_s" };
+        report.metric(key, mreq_s);
+        st.row(vec![
+            name.to_string(),
+            m.requests.to_string(),
+            format!("{:.0}", wall.as_secs_f64() * 1000.0),
+            format!("{mreq_s:.2}"),
+        ]);
+    }
+    assert_eq!(
+        scale_reqs[0], scale_reqs[1],
+        "parallel engine changed the request count — determinism broken"
+    );
+    st.emit();
+
     // ---- isolated hot operations -----------------------------------
 
     let mut iso = Table::new(
@@ -186,5 +229,5 @@ fn main() {
     iso.emit();
     println!("\nanalytic size model checksum: {checksum}");
 
-    report.table(&t).table(&iso).write();
+    report.table(&t).table(&st).table(&iso).write();
 }

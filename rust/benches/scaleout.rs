@@ -15,10 +15,15 @@
 
 mod common;
 
+use std::time::Instant;
+
+use ibex::compress::AnalyticSizeModel;
 use ibex::coordinator::{run_many, Job};
-use ibex::host::DeviceLaneMetrics;
+use ibex::host::{DeviceLaneMetrics, HostSim};
 use ibex::stats::Table;
 use ibex::telemetry::report::BenchReport;
+use ibex::topology::DevicePool;
+use ibex::workload::{by_name, WorkloadOracle};
 
 const DEVICES: [usize; 4] = [1, 2, 4, 8];
 const WORKLOADS: [&str; 3] = ["parest", "omnetpp", "pr"];
@@ -108,7 +113,56 @@ fn main() {
         }
     }
     ut.emit();
-    report.table(&t).table(&ut).write();
+
+    // ---- intra-run parallel engine: simulator wall-clock -----------
+
+    // The sharded host loop trades merge bookkeeping for concurrent
+    // device models. Time the same 8-device run sequentially and with
+    // 4 workers; results are bit-identical by contract (asserted), so
+    // the delta is pure simulator throughput.
+    let mut pt = Table::new(
+        "Scale-out — intra-run engine wall-clock (x8 devices)",
+        &["workload", "engine", "wall ms", "Mreq/s", "speedup"],
+    );
+    for w in ["pr", "omnetpp"] {
+        let mut walls = [0.0f64; 2];
+        let mut fingerprints = [0u64; 2];
+        for (slot, threads) in [1usize, 4].iter().enumerate() {
+            let mut cfg = common::bench_cfg();
+            cfg.set("devices", "8").unwrap();
+            let spec = by_name(w).unwrap();
+            let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
+            let mut pool = DevicePool::build(&cfg);
+            let mut sim = HostSim::new(&cfg, &spec);
+            sim.set_intra_threads(*threads);
+            let start = Instant::now();
+            let m = sim.run(&mut pool, &mut oracle);
+            let wall = start.elapsed().as_secs_f64();
+            walls[slot] = wall;
+            fingerprints[slot] = m.elapsed_ps ^ m.mem_total ^ m.requests;
+            let engine = if *threads > 1 { "intra4" } else { "sequential" };
+            let mreq_s = m.requests as f64 / wall / 1e6;
+            report.metric(&format!("{w}_x8_{engine}_mreq_per_s"), mreq_s);
+            pt.row(vec![
+                w.to_string(),
+                engine.to_string(),
+                format!("{:.0}", wall * 1000.0),
+                format!("{mreq_s:.2}"),
+                if slot == 0 {
+                    "1.00x".to_string()
+                } else {
+                    format!("{:.2}x", walls[0] / wall)
+                },
+            ]);
+        }
+        assert_eq!(
+            fingerprints[0], fingerprints[1],
+            "{w}: intra-run engine diverged from sequential"
+        );
+    }
+    pt.emit();
+
+    report.table(&t).table(&ut).table(&pt).write();
 
     println!("\nanchor: page interleave evens request share across the pool while");
     println!("contiguous extents concentrate each hot set — per-device link and");

@@ -38,6 +38,9 @@ pub struct Cli {
     pub devices: Option<String>,
     /// `--interleave MODE` — pooled-address-space sharding policy.
     pub interleave: Option<String>,
+    /// `--intra-threads N` — intra-run worker threads sharding the
+    /// device models (bit-identical at any value).
+    pub intra_threads: Option<String>,
     /// `--json FILE` — write a machine-readable run report there.
     pub json: Option<String>,
     /// `--sample-every N[ns|insts]` — telemetry epoch length (plain N
@@ -58,6 +61,7 @@ impl Cli {
             out: None,
             devices: None,
             interleave: None,
+            intra_threads: None,
             json: None,
             sample_every: None,
         };
@@ -89,6 +93,7 @@ impl Cli {
                 "--out" | "-o" => cli.out = Some(take(&mut it, arg)?),
                 "--devices" | "-d" => cli.devices = Some(take(&mut it, arg)?),
                 "--interleave" | "-i" => cli.interleave = Some(take(&mut it, arg)?),
+                "--intra-threads" => cli.intra_threads = Some(take(&mut it, arg)?),
                 "--json" | "-j" => cli.json = Some(take(&mut it, arg)?),
                 "--sample-every" => cli.sample_every = Some(take(&mut it, arg)?),
                 _ if arg.contains('=') => {
@@ -121,6 +126,9 @@ impl Cli {
         }
         if let Some(i) = &self.interleave {
             cfg.set("interleave", i)?;
+        }
+        if let Some(n) = &self.intra_threads {
+            cfg.set("intra_threads", n)?;
         }
         if let Some(se) = &self.sample_every {
             // `N` (instructions), `Nns` (sim-time), `Ninsts` (explicit).
@@ -176,6 +184,12 @@ TOPOLOGY:  --devices N (1..=64, default 1 — the paper's single expander);
            config keys too. devices=1 is bit-identical to the classic system;
            N>1 adds a per-device results table (requests, latency, peak
            outstanding misses, internal accesses, link utilization).
+THREADS:   --intra-threads N (intra_threads= config key, IBEX_INTRA_THREADS
+           env default) shards the device models of one run across N worker
+           threads with a deterministic time-ordered merge — results are
+           bit-identical at any value; the knob only trades wall-clock for
+           threads. Capped at the pool width (sequential when devices=1).
+           Independent of IBEX_THREADS, which parallelizes across jobs.
 TELEMETRY: --sample-every N (plain N = retired instructions summed over
            cores; 'Nns' = simulated nanoseconds; sample_every=/sample_unit=
            config keys) samples per-device + per-tenant counter deltas at
@@ -625,6 +639,19 @@ mod tests {
         let bad = Cli::parse(&s(&["run", "--interleave", "diagonal"])).unwrap();
         let e = bad.config().unwrap_err();
         assert!(e.contains("page"), "{e}");
+    }
+
+    #[test]
+    fn parse_intra_threads_flag() {
+        let cli = Cli::parse(&s(&["run", "--intra-threads", "4"])).unwrap();
+        assert_eq!(cli.intra_threads.as_deref(), Some("4"));
+        let cfg = cli.config().unwrap();
+        assert_eq!(cfg.intra_threads, 4);
+        // The config key works standalone too.
+        let cli = Cli::parse(&s(&["run", "intra_threads=2"])).unwrap();
+        assert_eq!(cli.config().unwrap().intra_threads, 2);
+        let bad = Cli::parse(&s(&["run", "--intra-threads", "many"])).unwrap();
+        assert!(bad.config().is_err());
     }
 
     #[test]

@@ -181,6 +181,12 @@ pub struct SimConfig {
     pub devices: usize,
     /// Host-side policy sharding the pooled page space across devices.
     pub interleave: InterleaveKind,
+    /// Intra-run worker threads sharding the device models across the
+    /// pool (`host::parallel`). 0/1 = the classic sequential engine;
+    /// any value is bit-identical — the knob only trades wall-clock for
+    /// threads, and is capped at the pool width. The coordinator layers
+    /// the `IBEX_INTRA_THREADS` environment default on top of 0.
+    pub intra_threads: usize,
 
     // ---- device memory (Table 1: dual channel DDR5-5600) ----
     pub channels: usize,
@@ -262,6 +268,7 @@ impl Default for SimConfig {
             cxl: CxlConfig::default(),
             devices: 1,
             interleave: InterleaveKind::default(),
+            intra_threads: 0,
             channels: 2,
             banks_per_channel: 16,
             timing: DramTiming::default(),
@@ -346,6 +353,7 @@ impl SimConfig {
                     )
                 })?
             }
+            "intra_threads" => self.intra_threads = p(value, key)?,
             "channels" => self.channels = p(value, key)?,
             "banks_per_channel" => self.banks_per_channel = p(value, key)?,
             "device_mb" => self.device_bytes = p::<u64>(value, key)? << 20,
@@ -443,6 +451,7 @@ impl SimConfig {
         put("cxl.gbps", format!("{}", self.cxl.gbps_per_dir));
         put("devices", self.devices.to_string());
         put("interleave", self.interleave.to_string());
+        put("intra_threads", self.intra_threads.to_string());
         put("channels", self.channels.to_string());
         put("banks_per_channel", self.banks_per_channel.to_string());
         put("device_bytes", self.device_bytes.to_string());
@@ -553,6 +562,16 @@ mod tests {
         let d = c.dump();
         assert_eq!(d["devices"], "4");
         assert_eq!(d["interleave"], "page");
+    }
+
+    #[test]
+    fn intra_threads_key_sets_and_dumps() {
+        let mut c = SimConfig::default();
+        assert_eq!(c.intra_threads, 0, "sequential engine is the default");
+        c.set("intra_threads", "4").unwrap();
+        assert_eq!(c.intra_threads, 4);
+        assert!(c.set("intra_threads", "x").is_err());
+        assert_eq!(c.dump()["intra_threads"], "4");
     }
 
     #[test]

@@ -129,6 +129,7 @@ fn run_sim(job: &Job, engine: SharedEngine) -> (RunMetrics, DevicePool, Option<S
         let mut oracle = MixOracle::new(&plan, trace.seed, engine);
         let mut sim = HostSim::from_trace(&job.cfg, &trace)
             .unwrap_or_else(|e| panic!("job {:?}: {e}", job.label));
+        sim.set_intra_threads(intra_parallelism(&job.cfg));
         let metrics = sim.run(&mut pool, &mut oracle);
         let series = sim.take_series();
         return (metrics, pool, series);
@@ -144,6 +145,7 @@ fn run_sim(job: &Job, engine: SharedEngine) -> (RunMetrics, DevicePool, Option<S
     let mut pool = DevicePool::build_for(&job.cfg, plan.total_pages);
     let mut oracle = MixOracle::new(&plan, job.cfg.seed, engine);
     let mut sim = HostSim::from_mix(&job.cfg, &mix);
+    sim.set_intra_threads(intra_parallelism(&job.cfg));
     let metrics = sim.run(&mut pool, &mut oracle);
     let series = sim.take_series();
     (metrics, pool, series)
@@ -197,6 +199,22 @@ pub fn parallelism() -> usize {
                 .map(|n| n.get())
                 .unwrap_or(4)
         })
+        .max(1)
+}
+
+/// Intra-run worker-thread count for one job (`host::parallel`): the
+/// config key when set, else the `IBEX_INTRA_THREADS` environment
+/// default, else 1 (sequential). Results are bit-identical at any value
+/// — unlike [`parallelism`], which spreads *jobs* across threads, this
+/// shards the device models *inside* one run.
+pub fn intra_parallelism(cfg: &SimConfig) -> usize {
+    if cfg.intra_threads > 0 {
+        return cfg.intra_threads;
+    }
+    std::env::var("IBEX_INTRA_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
         .max(1)
 }
 
@@ -305,6 +323,33 @@ mod tests {
         let series = r.series.expect("sampling enabled");
         assert!(series.epochs.len() >= 2);
         assert!(series.measured().count() >= 1);
+    }
+
+    #[test]
+    fn intra_parallelism_prefers_config_key() {
+        let mut c = quick();
+        c.set("intra_threads", "3").unwrap();
+        assert_eq!(intra_parallelism(&c), 3);
+        c.intra_threads = 0;
+        // Env default or sequential fallback — never zero.
+        assert!(intra_parallelism(&c) >= 1);
+    }
+
+    #[test]
+    fn intra_threads_do_not_change_results() {
+        let mut c = quick();
+        c.set("devices", "4").unwrap();
+        let seq = run_one(&Job::new("seq", c.clone(), "pr"));
+        c.set("intra_threads", "4").unwrap();
+        let par = run_one(&Job::new("par", c, "pr"));
+        assert_eq!(seq.metrics.elapsed_ps, par.metrics.elapsed_ps);
+        assert_eq!(seq.metrics.mem_by_kind, par.metrics.mem_by_kind);
+        assert_eq!(seq.metrics.requests, par.metrics.requests);
+        assert_eq!(seq.device.promotions, par.device.promotions);
+        assert_eq!(
+            seq.metrics.compression_ratio.to_bits(),
+            par.metrics.compression_ratio.to_bits()
+        );
     }
 
     #[test]

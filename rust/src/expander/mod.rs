@@ -46,7 +46,12 @@ pub const CCHUNKS_PER_PAGE: u64 = PAGE_BYTES / CCHUNK_BYTES;
 /// Supplies page contents' compressed sizes (and their evolution under
 /// writes) to the device. Implemented by the workload layer on top of
 /// the PJRT/analytic engine model.
-pub trait ContentOracle {
+///
+/// `Send` because the parallel intra-run engine (`host::parallel`)
+/// shares one oracle across per-device worker threads behind a mutex;
+/// every production model (analytic, `SharedEngine`) is plain data or
+/// a channel handle, so the bound costs nothing.
+pub trait ContentOracle: Send {
     /// Sizes of the page's current contents.
     fn sizes(&mut self, ospn: u64) -> PageSizes;
 
@@ -308,8 +313,23 @@ impl Substrate {
     }
 }
 
+/// One request of a batched device access (see [`Scheme::access_batch`]).
+/// `ready` is an out-parameter: the time the reply is ready at the
+/// device's egress port.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchAccess {
+    pub now: Ps,
+    pub ospn: u64,
+    pub line: u32,
+    pub write: bool,
+    pub ready: Ps,
+}
+
 /// A device scheme: handles 64 B host requests.
-pub trait Scheme {
+///
+/// `Send` so worker threads of the parallel intra-run engine can each
+/// own a disjoint subset of devices; schemes are plain data.
+pub trait Scheme: Send {
     /// Handle a request to byte offset `line_addr` (64 B-aligned) of OS
     /// page `ospn`, arriving at device time `now`. Returns the time the
     /// reply is ready at the device's egress port.
@@ -321,6 +341,18 @@ pub trait Scheme {
         write: bool,
         oracle: &mut dyn ContentOracle,
     ) -> Ps;
+
+    /// Handle a slice of requests destined for this device, in order.
+    /// Semantically identical to calling [`Scheme::access`] per entry —
+    /// the device serializes internally either way — but lets the
+    /// parallel engine amortize per-request dispatch (one oracle lock,
+    /// one virtual call) over a whole merge quantum, and gives schemes
+    /// a hook to batch translation/size-model lookups over the slice.
+    fn access_batch(&mut self, reqs: &mut [BatchAccess], oracle: &mut dyn ContentOracle) {
+        for r in reqs {
+            r.ready = self.access(r.now, r.ospn, r.line, r.write, oracle);
+        }
+    }
 
     /// Pre-populate a page as resident cold data (simulation setup —
     /// charged no traffic, mirroring the paper's post-fast-forward

@@ -23,13 +23,22 @@
 //! rows in [`RunMetrics::devices`]. With `devices = 1` (the default)
 //! the routing is the identity map and the run is bit-identical to the
 //! historical single-device host.
+//!
+//! With `intra_threads > 1` and a multi-device pool, the intra-run
+//! engine in [`parallel`] shards the device models across worker
+//! threads while this module's scheduler keeps making every
+//! timing-relevant decision in the exact sequential order — results
+//! stay bit-identical at any thread count (pinned by
+//! `tests/parallel_determinism.rs`).
+
+pub mod parallel;
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use crate::compress::PageSizes;
 use crate::config::SimConfig;
-use crate::expander::ContentOracle;
+use crate::expander::{ContentOracle, SchemeSnapshot};
 use crate::rng::Pcg64;
 use crate::sim::{Ps, CORE_CLK_PS, PS_PER_NS};
 use crate::stats::LatencyHist;
@@ -53,6 +62,65 @@ struct Core {
     writes: u64,
     /// Host-observed round-trip latency (issue → reply), measured phase.
     lat: LatencyHist,
+}
+
+impl Core {
+    /// Retire the instruction gap preceding a request at `ipc`.
+    fn retire_gap(&mut self, gap: u64, ipc: u64) {
+        self.insts = self.insts.saturating_add(gap);
+        self.t += gap.saturating_mul(CORE_CLK_PS) / ipc;
+    }
+
+    /// Count one issued request on the core.
+    fn count_issue(&mut self, write: bool) {
+        self.reqs += 1;
+        if write {
+            self.writes += 1;
+        } else {
+            self.reads += 1;
+        }
+    }
+}
+
+/// Pop every completed miss (`done <= t`) off a core's outstanding
+/// heap, releasing each one's device-lane occupancy slot.
+fn drain_completed(
+    outstanding: &mut BinaryHeap<Reverse<(Ps, u32)>>,
+    t: Ps,
+    lanes: &mut [Lane],
+) {
+    while let Some(&Reverse((done, pdev))) = outstanding.peek() {
+        if done <= t {
+            outstanding.pop();
+            lanes[pdev as usize].release();
+        } else {
+            break;
+        }
+    }
+}
+
+/// MSHR-full stall: retire the oldest outstanding miss (heap minimum by
+/// `(done, device)`), releasing its lane slot and returning the
+/// completion time the core must wait for. The caller advances the
+/// core's clock and then re-drains: other misses may have completed
+/// during the stall, and leaving them in the heap would inflate the
+/// per-device occupancy (`peak_outstanding`/`win_peak`) observed by
+/// every core until this core's next turn.
+fn mshr_stall(
+    outstanding: &mut BinaryHeap<Reverse<(Ps, u32)>>,
+    lanes: &mut [Lane],
+) -> Option<Ps> {
+    let Reverse((done, pdev)) = outstanding.pop()?;
+    lanes[pdev as usize].release();
+    Some(done)
+}
+
+/// Measured-phase wall clock over a set of cores: the widest per-core
+/// `(final, warmup)` window. Maxing the two endpoints independently
+/// understates the window whenever the slowest warmup core differs
+/// from the slowest final core.
+fn measured_window(windows: impl Iterator<Item = (Ps, Ps)>) -> Ps {
+    windows.map(|(now, warm)| now - warm).max().unwrap_or(0)
 }
 
 /// Per-core bookkeeping snapshot (taken after warmup so the measured
@@ -83,6 +151,34 @@ struct Lane {
     /// unconditionally — one integer compare — so the sampled and
     /// unsampled request paths stay byte-for-byte identical).
     win_peak: usize,
+}
+
+impl Lane {
+    /// Count one request routed to this device.
+    fn count_issue(&mut self, write: bool) {
+        self.reqs += 1;
+        if write {
+            self.writes += 1;
+        } else {
+            self.reads += 1;
+        }
+    }
+
+    /// A miss entered this device's outstanding set.
+    fn push_outstanding(&mut self) {
+        self.outstanding += 1;
+        if self.outstanding > self.peak_outstanding {
+            self.peak_outstanding = self.outstanding;
+        }
+        if self.outstanding > self.win_peak {
+            self.win_peak = self.outstanding;
+        }
+    }
+
+    /// A miss left this device's outstanding set.
+    fn release(&mut self) {
+        self.outstanding -= 1;
+    }
 }
 
 /// One tenant's share of a run (measured phase only).
@@ -138,7 +234,9 @@ pub struct DeviceLaneMetrics {
     /// Resident logical/physical bytes at run end (ratio inputs).
     pub logical_bytes: u64,
     pub physical_bytes: u64,
-    /// Whole-run totals (warmup included), like `DeviceSummary`'s.
+    /// Measured-phase promotions/demotions (warmup snapshot-subtracted,
+    /// consistent with every sibling field in the row). Whole-run
+    /// totals live in `DeviceSummary` / `DevicePool::merged_stats`.
     pub promotions: u64,
     pub demotions: u64,
     /// Link busy fraction over the measured window. Every request
@@ -286,6 +384,10 @@ pub struct HostSim<'a> {
     /// request loop's only extra work is one `is_some` branch — no
     /// snapshot calls (pinned by `tests/telemetry.rs`).
     sampler: Option<Sampler>,
+    /// Intra-run worker threads (device-model shards). `<= 1` — or a
+    /// single-device pool — runs the classic sequential loop; results
+    /// are bit-identical either way.
+    intra_threads: usize,
 }
 
 impl<'a> HostSim<'a> {
@@ -359,7 +461,16 @@ impl<'a> HostSim<'a> {
             cores,
             lanes: vec![Lane::default(); cfg.devices],
             sampler,
+            intra_threads: cfg.intra_threads,
         }
+    }
+
+    /// Override the intra-run worker-thread count (`cfg.intra_threads`
+    /// seeds it; the coordinator layers the `IBEX_INTRA_THREADS`
+    /// environment default on top). Any value yields bit-identical
+    /// results — this knob only trades wall-clock for threads.
+    pub fn set_intra_threads(&mut self, threads: usize) {
+        self.intra_threads = threads;
     }
 
     /// The resolved placement of this run's tenants.
@@ -396,19 +507,30 @@ impl<'a> HostSim<'a> {
             }
         }
 
-        self.phase(pool, oracle, self.cfg.warmup_instructions, false);
+        self.run_phase(pool, oracle, self.cfg.warmup_instructions, false);
         // Close the warmup telemetry window at the phase boundary, so
         // no epoch straddles warmup and measured traffic.
         if self.sampler.is_some() {
             self.take_sample(pool, true, true);
         }
-        // Snapshot after warmup.
+        // Snapshot after warmup: internal traffic, link busy time and
+        // scheme activity counters, so every per-device row reports the
+        // measured phase only (promotions/demotions included — they
+        // used to leak warmup traffic into otherwise-windowed rows).
         let warm_kind = pool.mem_breakdown();
         let warm_total = pool.mem_total();
-        let warm_dev: Vec<(u64, Ps)> = pool
+        let warm_dev: Vec<(u64, Ps, u64, u64)> = pool
             .devices
             .iter()
-            .map(|d| (d.scheme.mem().total_accesses(), d.link.down.busy))
+            .map(|d| {
+                let s = d.scheme.stats();
+                (
+                    d.scheme.mem().total_accesses(),
+                    d.link.down.busy,
+                    s.promotions,
+                    s.demotions,
+                )
+            })
             .collect();
         let warm_lane: Vec<(u64, u64, u64)> = self
             .lanes
@@ -432,7 +554,7 @@ impl<'a> HostSim<'a> {
             })
             .collect();
 
-        self.phase(
+        self.run_phase(
             pool,
             oracle,
             self.cfg.warmup_instructions + self.cfg.instructions,
@@ -458,8 +580,12 @@ impl<'a> HostSim<'a> {
             let mut requests = 0u64;
             let mut reads = 0u64;
             let mut writes = 0u64;
-            let mut warm_t = 0;
-            let mut now_t = 0;
+            // Per-core measured windows: each core's own (final − warmup)
+            // span. Maxing the endpoints independently mixed different
+            // cores' clocks and understated the tenant window (and so
+            // overstated `TenantMetrics::perf`) whenever the slowest
+            // warmup core was not the slowest final core.
+            let mut windows: Vec<(Ps, Ps)> = Vec::with_capacity(tenant.cores);
             let mut lat = LatencyHist::default();
             for (ci, slot) in self.plan.slots.iter().enumerate() {
                 if slot.tenant != ti {
@@ -470,8 +596,7 @@ impl<'a> HostSim<'a> {
                 requests += c.reqs - warm[ci].reqs;
                 reads += c.reads - warm[ci].reads;
                 writes += c.writes - warm[ci].writes;
-                warm_t = warm_t.max(warm[ci].t);
-                now_t = now_t.max(c.t);
+                windows.push((c.t, warm[ci].t));
                 lat.merge(&c.lat);
             }
             tenants.push(TenantMetrics {
@@ -481,14 +606,15 @@ impl<'a> HostSim<'a> {
                 requests,
                 reads,
                 writes,
-                elapsed_ps: now_t - warm_t,
+                elapsed_ps: measured_window(windows.into_iter()),
                 mean_latency_ns: lat.mean_ns(),
                 p99_latency_ns: lat.percentile_ns(0.99),
             });
         }
 
-        let warm_elapsed = warm.iter().map(|s| s.t).max().unwrap_or(0);
-        let elapsed_ps = self.elapsed() - warm_elapsed;
+        // Run-level wall clock takes the same per-core window fix.
+        let elapsed_ps =
+            measured_window(self.cores.iter().zip(&warm).map(|(c, s)| (c.t, s.t)));
         let horizon = elapsed_ps.max(1);
         let devices: Vec<DeviceLaneMetrics> = pool
             .devices
@@ -496,7 +622,7 @@ impl<'a> HostSim<'a> {
             .enumerate()
             .map(|(di, d)| {
                 let lane = &self.lanes[di];
-                let (wmem, wdown) = warm_dev[di];
+                let (wmem, wdown, wpromos, wdemos) = warm_dev[di];
                 let (wreqs, wreads, wwrites) = warm_lane[di];
                 let s = d.scheme.stats();
                 DeviceLaneMetrics {
@@ -510,8 +636,8 @@ impl<'a> HostSim<'a> {
                     mem_accesses: d.scheme.mem().total_accesses() - wmem,
                     logical_bytes: d.scheme.logical_bytes(),
                     physical_bytes: d.scheme.physical_bytes(),
-                    promotions: s.promotions,
-                    demotions: s.demotions,
+                    promotions: s.promotions - wpromos,
+                    demotions: s.demotions - wdemos,
                     link_utilization: ((d.link.down.busy - wdown) as f64
                         / horizon as f64)
                         .min(1.0),
@@ -566,19 +692,32 @@ impl<'a> HostSim<'a> {
     /// everywhere except the per-lane window-peak restart, which only
     /// telemetry consumes.
     fn take_sample(&mut self, pool: &DevicePool, warmup: bool, flush: bool) {
-        let insts = self.retired();
-        let t = self.elapsed();
-        let devices: Vec<DeviceCum> = pool
+        let dev_data: Vec<(SchemeSnapshot, Ps)> = pool
             .devices
             .iter()
+            .map(|d| (d.scheme.snapshot(), d.link.down.busy))
+            .collect();
+        self.sample_with(&dev_data, warmup, flush);
+    }
+
+    /// Epoch-assembly core shared by both engines: combine externally
+    /// collected device state (scheme snapshot + downlink busy time —
+    /// read straight off the pool on the sequential path, gathered via
+    /// the worker snapshot barrier on the parallel path) with the
+    /// scheduler-side lane/core bookkeeping.
+    fn sample_with(&mut self, dev_data: &[(SchemeSnapshot, Ps)], warmup: bool, flush: bool) {
+        let insts = self.retired();
+        let t = self.elapsed();
+        let devices: Vec<DeviceCum> = dev_data
+            .iter()
             .zip(self.lanes.iter_mut())
-            .map(|(d, lane)| {
+            .map(|(&(snapshot, link_busy), lane)| {
                 let cum = DeviceCum {
-                    snapshot: d.scheme.snapshot(),
+                    snapshot,
                     requests: lane.reqs,
                     reads: lane.reads,
                     writes: lane.writes,
-                    link_busy_ps: d.link.down.busy,
+                    link_busy_ps: link_busy,
                     window_peak_outstanding: lane.win_peak,
                     lat: lane.lat.clone(),
                 };
@@ -610,7 +749,38 @@ impl<'a> HostSim<'a> {
         }
     }
 
-    /// Advance every core to `insts_target` retired instructions.
+    /// Pick the core that is furthest behind (smallest local time among
+    /// cores still short of `insts_target`) — the scheduling decision
+    /// both engines share, so their interleavings are identical.
+    fn pick_core(&self, insts_target: u64) -> Option<usize> {
+        self.cores
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.insts < insts_target)
+            .min_by_key(|(_, c)| c.t)
+            .map(|(i, _)| i)
+    }
+
+    /// Advance every core to `insts_target` retired instructions,
+    /// dispatching to the parallel intra-run engine when it is enabled
+    /// and the pool is wide enough to shard.
+    fn run_phase(
+        &mut self,
+        pool: &mut DevicePool,
+        oracle: &mut dyn ContentOracle,
+        insts_target: u64,
+        measure: bool,
+    ) {
+        let workers = self.intra_threads.min(pool.len());
+        if workers > 1 {
+            parallel::phase(self, pool, oracle, insts_target, measure, workers);
+        } else {
+            self.phase(pool, oracle, insts_target, measure);
+        }
+    }
+
+    /// The sequential engine: advance every core to `insts_target`
+    /// retired instructions, resolving each request synchronously.
     /// `measure` enables per-request latency recording (off in warmup).
     fn phase(
         &mut self,
@@ -622,16 +792,7 @@ impl<'a> HostSim<'a> {
         let ipc = self.cfg.ipc.max(1);
         let mshrs = self.cfg.mshrs_per_core;
         loop {
-            // Pick the core that is furthest behind (smallest local time
-            // among unfinished cores) to keep the interleaving causal.
-            let Some(ci) = self
-                .cores
-                .iter()
-                .enumerate()
-                .filter(|(_, c)| c.insts < insts_target)
-                .min_by_key(|(_, c)| c.t)
-                .map(|(i, _)| i)
-            else {
+            let Some(ci) = self.pick_core(insts_target) else {
                 break;
             };
             let core = &mut self.cores[ci];
@@ -640,32 +801,22 @@ impl<'a> HostSim<'a> {
             // Retire the instruction gap at `ipc`. Gaps carry the
             // fractional remainder of the Table-2 rate (see
             // `workload::mix::SyntheticSource`), so no truncation bias.
-            core.insts = core.insts.saturating_add(tr.inst_gap);
-            core.t += tr.inst_gap.saturating_mul(CORE_CLK_PS) / ipc;
+            core.retire_gap(tr.inst_gap, ipc);
 
             // Drain completed misses.
-            while let Some(&Reverse((done, pdev))) = core.outstanding.peek() {
-                if done <= core.t {
-                    core.outstanding.pop();
-                    self.lanes[pdev as usize].outstanding -= 1;
-                } else {
-                    break;
-                }
-            }
-            // MSHR full: stall until the oldest miss returns.
+            drain_completed(&mut core.outstanding, core.t, &mut self.lanes);
+            // MSHR full: stall until the oldest miss returns, then
+            // re-drain — misses that completed during the stall must
+            // release their lane slots now, not at this core's next
+            // turn.
             if core.outstanding.len() >= mshrs {
-                if let Some(Reverse((done, pdev))) = core.outstanding.pop() {
+                if let Some(done) = mshr_stall(&mut core.outstanding, &mut self.lanes) {
                     core.t = core.t.max(done);
-                    self.lanes[pdev as usize].outstanding -= 1;
+                    drain_completed(&mut core.outstanding, core.t, &mut self.lanes);
                 }
             }
 
-            core.reqs += 1;
-            if tr.write {
-                core.writes += 1;
-            } else {
-                core.reads += 1;
-            }
+            core.count_issue(tr.write);
             let t_issue = core.t;
             let (dev, local) = self.interleave.route(tr.ospn);
             let device = &mut pool.devices[dev];
@@ -689,12 +840,7 @@ impl<'a> HostSim<'a> {
             };
             let done = device.link.egress(ready, 1);
             let lane = &mut self.lanes[dev];
-            lane.reqs += 1;
-            if tr.write {
-                lane.writes += 1;
-            } else {
-                lane.reads += 1;
-            }
+            lane.count_issue(tr.write);
             let core = &mut self.cores[ci];
             if measure {
                 let ns = done.saturating_sub(t_issue) / PS_PER_NS;
@@ -707,13 +853,7 @@ impl<'a> HostSim<'a> {
                 core.t = core.t.max(done);
             } else {
                 core.outstanding.push(Reverse((done, dev as u32)));
-                lane.outstanding += 1;
-                if lane.outstanding > lane.peak_outstanding {
-                    lane.peak_outstanding = lane.outstanding;
-                }
-                if lane.outstanding > lane.win_peak {
-                    lane.win_peak = lane.outstanding;
-                }
+                lane.push_outstanding();
             }
             // Telemetry epoch boundary? One branch when sampling is
             // off; counter snapshots only at actual boundaries.
@@ -951,6 +1091,96 @@ mod tests {
         let raw = perf_of("uncompressed");
         let ibex = perf_of("ibex");
         assert!(raw > ibex, "raw {raw} must beat thrashing ibex {ibex}");
+    }
+
+    #[test]
+    fn measured_window_uses_per_core_spans() {
+        // Core A: warm 10 → now 20 (span 10). Core B: warm 5 → now 19
+        // (span 14). The old endpoint-maxing computed
+        // max(20, 19) − max(10, 5) = 10, understating the window; the
+        // per-core form reports the true widest span.
+        assert_eq!(measured_window([(20, 10), (19, 5)].into_iter()), 14);
+        assert_eq!(measured_window([(20, 10)].into_iter()), 10);
+        assert_eq!(measured_window(std::iter::empty()), 0);
+    }
+
+    #[test]
+    fn stall_re_drain_releases_completed_misses() {
+        let mut lanes = vec![Lane::default(), Lane::default()];
+        let mut heap: BinaryHeap<Reverse<(Ps, u32)>> = BinaryHeap::new();
+        for (done, dev) in [(60u64, 0u32), (60, 1), (90, 0)] {
+            heap.push(Reverse((done, dev)));
+            lanes[dev as usize].push_outstanding();
+        }
+        assert_eq!(lanes[0].outstanding, 2);
+        assert_eq!(lanes[1].outstanding, 1);
+        // t = 50: nothing has completed yet.
+        drain_completed(&mut heap, 50, &mut lanes);
+        assert_eq!(heap.len(), 3);
+        // MSHR stall retires the (done, device) minimum: (60, #0).
+        let done = mshr_stall(&mut heap, &mut lanes).unwrap();
+        assert_eq!(done, 60);
+        assert_eq!(lanes[0].outstanding, 1);
+        // Re-drain at the stall's completion time releases (60, #1)
+        // too; without it the lane-1 slot stayed counted (inflating
+        // peak_outstanding seen by other cores) until this core's next
+        // turn.
+        drain_completed(&mut heap, done, &mut lanes);
+        assert_eq!(heap.len(), 1);
+        assert_eq!(lanes[1].outstanding, 0);
+        assert_eq!(lanes[0].outstanding, 1);
+    }
+
+    #[test]
+    fn device_rows_exclude_warmup_promotions() {
+        // Thrashing pr with a heavy warmup: the promoted region starts
+        // filling (and churning) during warmup, so whole-run promotion
+        // totals must strictly exceed the measured-phase device rows.
+        let mut cfg = quick_cfg();
+        cfg.promoted_bytes = 256 << 10;
+        cfg.footprint_scale = 1.0 / 256.0;
+        cfg.meta_cache_bytes = 4 * 1024;
+        cfg.warmup_instructions = 30_000;
+        cfg.instructions = 60_000;
+        let spec = by_name("pr").unwrap();
+        let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
+        let mut pool = DevicePool::build(&cfg);
+        let mut sim = HostSim::new(&cfg, &spec);
+        let m = sim.run(&mut pool, &mut oracle);
+        let measured: u64 = m.devices.iter().map(|d| d.promotions).sum();
+        let whole = pool.merged_stats().promotions;
+        assert!(whole > 0, "expected promoted-region traffic");
+        assert!(
+            measured < whole,
+            "device rows must exclude warmup promotions: {measured} vs {whole}"
+        );
+        let agg = DeviceLaneMetrics::aggregate(&m.devices);
+        assert_eq!(agg.promotions, measured);
+    }
+
+    #[test]
+    fn tenant_windows_bounded_by_run_window() {
+        // With per-core windows everywhere, a tenant (max over a core
+        // subset) can never report a wider window than the run (max
+        // over all cores).
+        let mut cfg = quick_cfg();
+        cfg.instructions = 120_000;
+        let mix = Mix::parse("pr:1,mcf:1").unwrap();
+        let plan = RunPlan::new(&mix, cfg.footprint_scale);
+        let mut oracle = crate::workload::MixOracle::new(&plan, cfg.seed, AnalyticSizeModel);
+        let mut pool = DevicePool::build(&cfg);
+        let mut sim = HostSim::from_mix(&cfg, &mix);
+        let m = sim.run(&mut pool, &mut oracle);
+        for t in &m.tenants {
+            assert!(t.elapsed_ps > 0);
+            assert!(
+                t.elapsed_ps <= m.elapsed_ps,
+                "tenant {} window {} exceeds run window {}",
+                t.name,
+                t.elapsed_ps,
+                m.elapsed_ps
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,495 @@
+//! Deterministic parallel intra-run engine: device models sharded
+//! across worker threads, every timing decision still made by one
+//! scheduler in the exact sequential order.
+//!
+//! ## Why this is bit-identical to [`HostSim::phase`]
+//!
+//! The sequential engine resolves each request synchronously, so the
+//! scheduler always knows every core's clock exactly. This engine keeps
+//! that property by construction instead of by synchrony:
+//!
+//! * **The scheduler owns time.** Core selection (`pick_core`), gap
+//!   retirement, MSHR stalls, blocking-load coin flips, telemetry
+//!   boundaries and all host-side counters run on the calling thread in
+//!   the same order as the sequential loop. Workers only evaluate the
+//!   device models (link serialization + scheme access), which are pure
+//!   functions of their own per-device request order.
+//! * **Per-device request order is preserved.** Each device lives on
+//!   exactly one worker (`dev % workers`, see
+//!   [`DevicePool::split_mut`]); jobs travel over a per-worker FIFO
+//!   channel, so each device sees its requests in global issue order —
+//!   the sequential order restricted to that device — and its link and
+//!   scheme state evolve identically.
+//! * **Completion times are merged by `(timestamp, device)` with a
+//!   causal lookahead.** A reply can only matter to a core decision at
+//!   time `t` if its completion is `<= t`, and every completion is at
+//!   least `t_issue + 2·one_way` (each link direction adds a full
+//!   propagation delay on top of serialization). The scheduler keeps
+//!   that lower bound per outstanding miss and only waits for a reply
+//!   when the bound says it could be relevant — ordering by
+//!   `(done, device)`, exactly the sequential `BinaryHeap` key.
+//! * **Epoch boundaries are barriers.** Before a telemetry sample, a
+//!   `Snapshot` job is sent down every worker FIFO; per-sender channel
+//!   ordering guarantees each worker's snapshot reply follows all its
+//!   prior completions, so the sampled scheme/link state — and the
+//!   latency histograms, whose bucket sums are order-independent — match
+//!   the sequential engine's at the same request count.
+//!
+//! Cross-device *oracle* calls do interleave differently than the
+//! sequential engine (workers race for the shared content-oracle lock),
+//! which is why [`crate::workload::WorkloadOracle`] keys its
+//! write-mutation RNG per page: any execution preserving per-page write
+//! order sees identical content evolution.
+//!
+//! The batching lever: a worker drains its whole job queue and hands
+//! maximal same-device runs to [`Scheme::access_batch`] as one slice,
+//! locking the oracle once and touching the scheme once per run instead
+//! of once per request — the per-request overhead the isolated-cost
+//! lanes in `BENCH_perf_hotpath.json` price out.
+//!
+//! [`Scheme::access_batch`]: crate::expander::Scheme::access_batch
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Mutex;
+
+use crate::expander::{BatchAccess, ContentOracle, SchemeSnapshot};
+use crate::sim::{FxHashMap, Ps};
+use crate::topology::{Device, DevicePool, Interleave};
+
+use super::{Core, HostSim, Lane, RoutedOracle};
+
+/// Work sent to a device-shard worker over its FIFO channel.
+#[derive(Clone, Copy)]
+enum Job {
+    /// One host request, pre-routed: evaluate ingress → scheme → egress
+    /// on device `dev` and reply with the completion time.
+    Req {
+        req_id: u64,
+        dev: usize,
+        t_issue: Ps,
+        local: u64,
+        line: u32,
+        write: bool,
+    },
+    /// Telemetry barrier: report every owned device's scheme snapshot
+    /// and downlink busy time, after all previously queued requests.
+    Snapshot,
+}
+
+/// Worker → scheduler replies (one shared channel).
+enum Reply {
+    Done { req_id: u64, done: Ps },
+    Snap(Vec<(usize, SchemeSnapshot, Ps)>),
+}
+
+/// One outstanding miss on the scheduler side. `lb` is the causal lower
+/// bound on `done` known at issue time; `done` is filled in when the
+/// worker's reply is consumed.
+struct OutEntry {
+    req_id: u64,
+    dev: u32,
+    lb: Ps,
+    done: Option<Ps>,
+}
+
+/// Issue-time facts needed when a reply arrives.
+struct Issued {
+    core: u32,
+    dev: u32,
+    t_issue: Ps,
+}
+
+/// Reply-side state of the deterministic merge.
+struct Merge {
+    rx: Receiver<Reply>,
+    /// Requests sent to workers whose replies have not been consumed.
+    inflight: FxHashMap<u64, Issued>,
+    /// Completion times received but not yet claimed by the scheduler.
+    resolved: FxHashMap<u64, Ps>,
+    /// Snapshot replies collected during the current barrier.
+    snaps: Vec<Vec<(usize, SchemeSnapshot, Ps)>>,
+    measure: bool,
+    /// `2 · one_way`: every completion satisfies
+    /// `done >= t_issue + lookahead` (asserted on receive) — the bound
+    /// that lets the drain skip replies that cannot matter yet.
+    lookahead: Ps,
+}
+
+impl Merge {
+    /// Ingest one worker reply. Latency is recorded here rather than at
+    /// issue; histogram increments commute, and the snapshot barrier
+    /// consumes every pre-boundary reply before an epoch is cut, so
+    /// per-epoch histograms still match the sequential engine bit for
+    /// bit.
+    fn handle(&mut self, reply: Reply, cores: &mut [Core], lanes: &mut [Lane]) {
+        match reply {
+            Reply::Done { req_id, done } => {
+                let f = self
+                    .inflight
+                    .remove(&req_id)
+                    .expect("reply for unknown request");
+                debug_assert!(
+                    done >= f.t_issue + self.lookahead,
+                    "completion violates the link-latency lower bound"
+                );
+                if self.measure {
+                    let ns = done.saturating_sub(f.t_issue) / crate::sim::PS_PER_NS;
+                    cores[f.core as usize].lat.record_ns(ns);
+                    lanes[f.dev as usize].lat.record_ns(ns);
+                }
+                self.resolved.insert(req_id, done);
+            }
+            Reply::Snap(data) => self.snaps.push(data),
+        }
+    }
+
+    /// Block until `req_id`'s completion time is known and claim it.
+    fn resolve(&mut self, req_id: u64, cores: &mut [Core], lanes: &mut [Lane]) -> Ps {
+        loop {
+            if let Some(done) = self.resolved.remove(&req_id) {
+                return done;
+            }
+            let reply = self.rx.recv().expect("worker thread terminated early");
+            self.handle(reply, cores, lanes);
+        }
+    }
+}
+
+/// Remove every outstanding miss with `done <= t`, releasing its lane
+/// slot — the parallel analogue of [`super::drain_completed`]. Entries
+/// whose lower bound exceeds `t` cannot have completed, so their
+/// replies are left unconsumed (no wait); the rest are resolved first.
+/// Set-removal and heap-popping retire the same `(done, device)`
+/// multiset, so lane occupancy evolves identically.
+fn drain(
+    out: &mut Vec<OutEntry>,
+    t: Ps,
+    merge: &mut Merge,
+    cores: &mut [Core],
+    lanes: &mut [Lane],
+) {
+    for k in 0..out.len() {
+        if out[k].done.is_none() && out[k].lb <= t {
+            let done = merge.resolve(out[k].req_id, cores, lanes);
+            out[k].done = Some(done);
+        }
+    }
+    out.retain(|e| match e.done {
+        Some(done) if done <= t => {
+            lanes[e.dev as usize].release();
+            false
+        }
+        _ => true,
+    });
+}
+
+/// Parallel counterpart of [`HostSim::phase`]: advance every core to
+/// `insts_target` retired instructions with the device models sharded
+/// over `workers` threads (spawned for this phase, joined before
+/// returning). `workers` is already clamped to the pool width and
+/// `> 1` by the dispatcher.
+pub(super) fn phase(
+    sim: &mut HostSim<'_>,
+    pool: &mut DevicePool,
+    oracle: &mut dyn ContentOracle,
+    insts_target: u64,
+    measure: bool,
+    workers: usize,
+) {
+    let ipc = sim.cfg.ipc.max(1);
+    let mshrs = sim.cfg.mshrs_per_core;
+    let dep_fraction = sim.cfg.dep_fraction;
+    let map = sim.interleave;
+    let ndev = pool.len();
+    // Identical link config on every device; each direction adds a full
+    // one-way propagation on top of serialization, so no completion can
+    // precede `t_issue + 2·one_way`.
+    let lookahead = 2 * pool.devices[0].link.one_way_ps();
+
+    let oracle = Mutex::new(oracle);
+    let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+    let mut merge = Merge {
+        rx: reply_rx,
+        inflight: FxHashMap::default(),
+        resolved: FxHashMap::default(),
+        snaps: Vec::new(),
+        measure,
+        lookahead,
+    };
+    // Scheduler-side outstanding misses, one list per core (stands in
+    // for `Core::outstanding`, which stays empty under this engine).
+    let mut out: Vec<Vec<OutEntry>> = (0..sim.cores.len()).map(|_| Vec::new()).collect();
+
+    std::thread::scope(|scope| {
+        let mut job_txs: Vec<Sender<Job>> = Vec::with_capacity(workers);
+        for shard in pool.split_mut(workers) {
+            let (tx, rx) = mpsc::channel::<Job>();
+            job_txs.push(tx);
+            let reply_tx = reply_tx.clone();
+            let oracle = &oracle;
+            scope.spawn(move || worker(shard, rx, reply_tx, oracle, map));
+        }
+        drop(reply_tx);
+
+        let mut next_req_id = 0u64;
+        loop {
+            let Some(ci) = sim.pick_core(insts_target) else {
+                break;
+            };
+            let tr = sim.cores[ci].src.next();
+            sim.cores[ci].retire_gap(tr.inst_gap, ipc);
+
+            let t = sim.cores[ci].t;
+            drain(&mut out[ci], t, &mut merge, &mut sim.cores, &mut sim.lanes);
+            if out[ci].len() >= mshrs {
+                // MSHR full: the stall needs the true oldest miss, so
+                // every unresolved completion must be known before the
+                // `(done, device)` minimum — the sequential heap key —
+                // is retired.
+                for k in 0..out[ci].len() {
+                    if out[ci][k].done.is_none() {
+                        let done =
+                            merge.resolve(out[ci][k].req_id, &mut sim.cores, &mut sim.lanes);
+                        out[ci][k].done = Some(done);
+                    }
+                }
+                let k = out[ci]
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, e)| (e.done.expect("resolved above"), e.dev))
+                    .map(|(k, _)| k)
+                    .expect("MSHR-full with empty outstanding set");
+                let e = out[ci].remove(k);
+                sim.lanes[e.dev as usize].release();
+                let done = e.done.expect("resolved above");
+                sim.cores[ci].t = sim.cores[ci].t.max(done);
+                let t = sim.cores[ci].t;
+                drain(&mut out[ci], t, &mut merge, &mut sim.cores, &mut sim.lanes);
+            }
+
+            sim.cores[ci].count_issue(tr.write);
+            let t_issue = sim.cores[ci].t;
+            let (dev, local) = map.route(tr.ospn);
+            let req_id = next_req_id;
+            next_req_id += 1;
+            merge.inflight.insert(
+                req_id,
+                Issued {
+                    core: ci as u32,
+                    dev: dev as u32,
+                    t_issue,
+                },
+            );
+            job_txs[dev % workers]
+                .send(Job::Req {
+                    req_id,
+                    dev,
+                    t_issue,
+                    local,
+                    line: tr.line,
+                    write: tr.write,
+                })
+                .expect("worker thread terminated early");
+            sim.lanes[dev].count_issue(tr.write);
+            if !tr.write && sim.cores[ci].dep_rng.chance(dep_fraction) {
+                // Blocking load: the core cannot proceed without the
+                // value, so this is the one place the scheduler waits
+                // unconditionally.
+                let done = merge.resolve(req_id, &mut sim.cores, &mut sim.lanes);
+                sim.cores[ci].t = sim.cores[ci].t.max(done);
+            } else {
+                out[ci].push(OutEntry {
+                    req_id,
+                    dev: dev as u32,
+                    lb: t_issue + lookahead,
+                    done: None,
+                });
+                sim.lanes[dev].push_outstanding();
+            }
+
+            if sim.sampler.is_some() {
+                let due = match &sim.sampler {
+                    Some(s) => s.due_lazy(|| sim.retired(), || sim.elapsed()),
+                    None => false,
+                };
+                if due {
+                    let dev_data = snapshot_barrier(
+                        &job_txs,
+                        &mut merge,
+                        &mut sim.cores,
+                        &mut sim.lanes,
+                        ndev,
+                    );
+                    sim.sample_with(&dev_data, !measure, false);
+                }
+            }
+        }
+
+        // Phase-end drain: every core absorbs its slowest outstanding
+        // reply (latency counts toward elapsed time), mirroring the
+        // sequential engine's tail.
+        for ci in 0..sim.cores.len() {
+            for k in 0..out[ci].len() {
+                if out[ci][k].done.is_none() {
+                    let done = merge.resolve(out[ci][k].req_id, &mut sim.cores, &mut sim.lanes);
+                    out[ci][k].done = Some(done);
+                }
+            }
+            if let Some(last) = out[ci].iter().map(|e| e.done.expect("resolved above")).max() {
+                sim.cores[ci].t = sim.cores[ci].t.max(last);
+            }
+            out[ci].clear();
+        }
+        for lane in &mut sim.lanes {
+            lane.outstanding = 0;
+        }
+        // Dropping the job senders ends every worker's recv loop; the
+        // scope joins them before the pool borrow is released.
+        drop(job_txs);
+    });
+
+    debug_assert!(merge.inflight.is_empty(), "unconsumed request replies");
+    debug_assert!(merge.resolved.is_empty(), "unclaimed completion times");
+}
+
+/// Telemetry barrier: ask every worker for its devices' state and pump
+/// replies until all snapshots arrive. Per-sender FIFO ordering means
+/// each worker's snapshot follows every completion it sent for
+/// previously queued jobs, so once the last snapshot is in, the
+/// scheduler has consumed (and latency-recorded) every pre-boundary
+/// reply — the device state and histograms match a sequential run at
+/// this exact request count.
+fn snapshot_barrier(
+    job_txs: &[Sender<Job>],
+    merge: &mut Merge,
+    cores: &mut [Core],
+    lanes: &mut [Lane],
+    ndev: usize,
+) -> Vec<(SchemeSnapshot, Ps)> {
+    for tx in job_txs {
+        tx.send(Job::Snapshot).expect("worker thread terminated early");
+    }
+    while merge.snaps.len() < job_txs.len() {
+        let reply = merge.rx.recv().expect("worker thread terminated early");
+        merge.handle(reply, cores, lanes);
+    }
+    let mut slots: Vec<Option<(SchemeSnapshot, Ps)>> = (0..ndev).map(|_| None).collect();
+    for shard in merge.snaps.drain(..) {
+        for (di, snap, busy) in shard {
+            slots[di] = Some((snap, busy));
+        }
+    }
+    slots
+        .into_iter()
+        .map(|s| s.expect("snapshot barrier missed a device"))
+        .collect()
+}
+
+/// Device-shard worker: drain the job FIFO, evaluate maximal
+/// same-device runs as one batch (ingress serialization in issue order,
+/// one oracle lock + one [`access_batch`] call per run, then egress),
+/// and reply with completion times in issue order.
+///
+/// Splitting a run into its three stages is exact: the downlink only
+/// evolves through `ingress` calls, the scheme only through `access`
+/// calls with the ingress results, and the uplink only through `egress`
+/// calls with the scheme results — each resource sees the same call
+/// sequence with the same arguments as the interleaved sequential loop.
+///
+/// [`access_batch`]: crate::expander::Scheme::access_batch
+fn worker(
+    mut devices: Vec<(usize, &mut Device)>,
+    rx: Receiver<Job>,
+    tx: Sender<Reply>,
+    oracle: &Mutex<&mut dyn ContentOracle>,
+    map: Interleave,
+) {
+    let mut batch: Vec<Job> = Vec::new();
+    let mut accs: Vec<BatchAccess> = Vec::new();
+    let mut ids: Vec<u64> = Vec::new();
+    loop {
+        let Ok(first) = rx.recv() else {
+            return; // scheduler hung up: phase over
+        };
+        batch.clear();
+        batch.push(first);
+        while let Ok(job) = rx.try_recv() {
+            batch.push(job);
+        }
+        let mut i = 0;
+        while i < batch.len() {
+            match batch[i] {
+                Job::Snapshot => {
+                    let data = devices
+                        .iter()
+                        .map(|(di, d)| (*di, d.scheme.snapshot(), d.link.down.busy))
+                        .collect();
+                    if tx.send(Reply::Snap(data)).is_err() {
+                        return;
+                    }
+                    i += 1;
+                }
+                Job::Req { dev, .. } => {
+                    accs.clear();
+                    ids.clear();
+                    let mut j = i;
+                    while j < batch.len() {
+                        let Job::Req {
+                            req_id,
+                            dev: d,
+                            t_issue,
+                            local,
+                            line,
+                            write,
+                        } = batch[j]
+                        else {
+                            break;
+                        };
+                        if d != dev {
+                            break;
+                        }
+                        ids.push(req_id);
+                        accs.push(BatchAccess {
+                            now: t_issue,
+                            ospn: local,
+                            line,
+                            write,
+                            ready: 0,
+                        });
+                        j += 1;
+                    }
+                    let slot = devices
+                        .iter()
+                        .position(|(di, _)| *di == dev)
+                        .expect("request routed to the wrong worker");
+                    let device = &mut *devices[slot].1;
+                    for a in accs.iter_mut() {
+                        a.now = device.link.ingress(a.now, 1);
+                    }
+                    {
+                        let mut guard = oracle.lock().expect("oracle mutex poisoned");
+                        let mut routed = RoutedOracle {
+                            inner: &mut **guard,
+                            map,
+                            dev,
+                        };
+                        device.scheme.access_batch(&mut accs, &mut routed);
+                    }
+                    for (k, a) in accs.iter().enumerate() {
+                        let done = device.link.egress(a.ready, 1);
+                        if tx
+                            .send(Reply::Done {
+                                req_id: ids[k],
+                                done,
+                            })
+                            .is_err()
+                        {
+                            return;
+                        }
+                    }
+                    i = j;
+                }
+            }
+        }
+    }
+}

@@ -223,6 +223,22 @@ impl DevicePool {
         self.devices.len()
     }
 
+    /// Partition the pool into `ways` disjoint mutable shards for the
+    /// parallel intra-run engine: device `i` lands in shard `i % ways`,
+    /// matching the scheduler's `dev % workers` routing, so consecutive
+    /// — under round-robin interleave, equally loaded — devices spread
+    /// across workers. `ways` is clamped to the pool width; every shard
+    /// returned is non-empty.
+    pub fn split_mut(&mut self, ways: usize) -> Vec<Vec<(usize, &mut Device)>> {
+        let ways = ways.clamp(1, self.devices.len().max(1));
+        let mut shards: Vec<Vec<(usize, &mut Device)>> =
+            (0..ways).map(|_| Vec::new()).collect();
+        for (i, d) in self.devices.iter_mut().enumerate() {
+            shards[i % ways].push((i, d));
+        }
+        shards
+    }
+
     pub fn is_empty(&self) -> bool {
         self.devices.is_empty()
     }
@@ -364,6 +380,25 @@ mod tests {
         assert_eq!(lazy.scheme_name(), sized.scheme_name());
         assert_eq!(lazy.mem_total(), sized.mem_total());
         assert_eq!(lazy.physical_bytes(), sized.physical_bytes());
+    }
+
+    #[test]
+    fn split_mut_shards_round_robin() {
+        let mut cfg = SimConfig::test_small();
+        cfg.devices = 5;
+        let mut pool = DevicePool::build(&cfg);
+        let shards = pool.split_mut(2);
+        assert_eq!(shards.len(), 2);
+        let idx: Vec<Vec<usize>> = shards
+            .iter()
+            .map(|s| s.iter().map(|(i, _)| *i).collect())
+            .collect();
+        assert_eq!(idx, vec![vec![0, 2, 4], vec![1, 3]]);
+        // Requesting more ways than devices clamps; every shard stays
+        // non-empty (the engine spawns one worker per shard).
+        let shards = pool.split_mut(16);
+        assert_eq!(shards.len(), 5);
+        assert!(shards.iter().all(|s| s.len() == 1));
     }
 
     #[test]

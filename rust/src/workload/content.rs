@@ -139,7 +139,13 @@ pub struct WorkloadOracle<M: SizeModel> {
     overrides: FxHashMap<u64, ContentClass>,
     /// Memoized engine results per class.
     memo: FxHashMap<ContentClass, PageSizes>,
-    rng: Pcg64,
+    /// Per-page mutation-coin streams. A page's mutation decisions
+    /// depend only on that page's own write history (not the global
+    /// cross-page write order), so any execution that preserves each
+    /// page's write sequence — in particular the parallel intra-run
+    /// engine, which keeps per-device order while interleaving devices
+    /// freely — sees identical content evolution.
+    mutate_rngs: FxHashMap<u64, Pcg64>,
     /// Engine invocations (≡ distinct classes analyzed).
     pub engine_calls: u64,
 }
@@ -152,9 +158,18 @@ impl<M: SizeModel> WorkloadOracle<M> {
             model,
             overrides: FxHashMap::default(),
             memo: FxHashMap::default(),
-            rng: Pcg64::from_label(seed, &["oracle", "mutate"]),
+            mutate_rngs: FxHashMap::default(),
             engine_calls: 0,
         }
+    }
+
+    /// The page's private mutation-coin stream (lazily seeded from the
+    /// workload seed and the OSPN).
+    fn mutate_rng(&mut self, ospn: u64) -> &mut Pcg64 {
+        let seed = self.seed;
+        self.mutate_rngs
+            .entry(ospn)
+            .or_insert_with(|| Pcg64::from_label(seed, &["oracle", "mutate", &ospn.to_string()]))
     }
 
     /// Deterministic base class for a page.
@@ -202,7 +217,7 @@ impl<M: SizeModel> WorkloadOracle<M> {
     }
 }
 
-impl<M: SizeModel> ContentOracle for WorkloadOracle<M> {
+impl<M: SizeModel + Send> ContentOracle for WorkloadOracle<M> {
     fn sizes(&mut self, ospn: u64) -> PageSizes {
         let class = self.class_of(ospn);
         self.sizes_of_class(class)
@@ -223,7 +238,8 @@ impl<M: SizeModel> ContentOracle for WorkloadOracle<M> {
                 noise_words,
                 variant,
             } => {
-                if self.rng.chance(self.profile.write_mutate_prob) {
+                let p = self.profile.write_mutate_prob;
+                if self.mutate_rng(ospn).chance(p) {
                     ContentClass::Periodic {
                         period,
                         noise_words: (noise_words + 4).min(NOISE_CAP),
@@ -331,6 +347,28 @@ mod tests {
             "noise must not shrink compressed size: {before} → {after}"
         );
         assert!(after > before, "64 writes should mutate at least once");
+    }
+
+    #[test]
+    fn write_mutations_are_cross_page_order_independent() {
+        // The mutation coin is a per-page stream: interleaving writes to
+        // different pages in any global order must leave every page in
+        // the same content state (the invariant the parallel intra-run
+        // engine relies on — devices only preserve per-page order).
+        let mut grouped = oracle(0.0, 0.0);
+        let mut interleaved = oracle(0.0, 0.0);
+        for _ in 0..32 {
+            grouped.on_write(5);
+        }
+        for _ in 0..32 {
+            grouped.on_write(9);
+        }
+        for _ in 0..32 {
+            interleaved.on_write(9);
+            interleaved.on_write(5);
+        }
+        assert_eq!(grouped.sizes(5), interleaved.sizes(5));
+        assert_eq!(grouped.sizes(9), interleaved.sizes(9));
     }
 
     #[test]

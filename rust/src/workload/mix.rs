@@ -279,7 +279,7 @@ impl<M: SizeModel> MixOracle<M> {
     }
 }
 
-impl<M: SizeModel> ContentOracle for MixOracle<M> {
+impl<M: SizeModel + Send> ContentOracle for MixOracle<M> {
     fn sizes(&mut self, ospn: u64) -> PageSizes {
         self.part_mut(ospn).sizes(ospn)
     }

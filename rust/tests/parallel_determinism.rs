@@ -1,0 +1,248 @@
+//! Thread-count determinism: the parallel intra-run engine
+//! (`--intra-threads N`) must be **bit-identical** to the sequential
+//! host loop at every thread count.
+//!
+//! The scheduler thread replicates the sequential decision order and
+//! merges device replies on `(completion, device)` with a causal
+//! lookahead bound, so nothing observable — final metrics, per-tenant
+//! and per-device rows, latency histograms, or telemetry epochs — may
+//! move when work is sharded across workers. These tests pin that
+//! contract across schemes × pool widths × interleaves, and through
+//! record→replay.
+
+use ibex::config::SimConfig;
+use ibex::coordinator::{run_one, Job};
+use ibex::stats::LatencyHist;
+use ibex::telemetry::Series;
+use ibex::workload::mix::Mix;
+use ibex::workload::{by_name, trace};
+
+fn quick_cfg() -> SimConfig {
+    let mut c = SimConfig::test_small();
+    c.cores = 2;
+    c.instructions = 40_000;
+    c.warmup_instructions = 4_000;
+    // Bench-scale working-set : promoted ratios at test size so the
+    // thrashing regime (promotions/demotions, MSHR stalls) is covered.
+    c.footprint_scale = 1.0 / 256.0;
+    c.promoted_bytes = 256 << 10;
+    c.meta_cache_bytes = 4 * 1024;
+    c
+}
+
+/// Exact histogram image: counts, sum, max, and every non-empty bucket.
+fn hist_fp(h: &LatencyHist) -> (u64, u64, u64, Vec<(u64, u64)>) {
+    (h.count, h.sum_ns, h.max_ns, h.nonzero_buckets())
+}
+
+/// Everything a run observably produces, integer/bit exact.
+#[derive(Debug, PartialEq)]
+struct Fingerprint {
+    elapsed_ps: u64,
+    instructions: u64,
+    requests: u64,
+    mem_by_kind: [u64; 4],
+    mem_total: u64,
+    ratio_bits: u64,
+    /// (name, cores, instructions, requests, elapsed_ps, mean bits, p99).
+    tenants: Vec<(String, usize, u64, u64, u64, u64, u64)>,
+    /// (requests, reads, writes, peak, mem_accesses, promotions,
+    /// demotions, mean bits, p99, link-utilization bits).
+    devices: Vec<(u64, u64, u64, usize, u64, u64, u64, u64, u64, u64)>,
+    epochs: Vec<EpochFp>,
+}
+
+/// One telemetry epoch, down to the per-device/per-tenant histograms.
+#[derive(Debug, PartialEq)]
+struct EpochFp {
+    warmup: bool,
+    insts: u64,
+    t_ps: u64,
+    d_insts: u64,
+    d_ps: u64,
+    devices: Vec<(u64, u64, u64, u64, u64, u64, usize, u64, (u64, u64, u64, Vec<(u64, u64)>))>,
+    tenants: Vec<(usize, u64, u64, (u64, u64, u64, Vec<(u64, u64)>))>,
+}
+
+fn series_fp(series: &Series) -> Vec<EpochFp> {
+    series
+        .epochs
+        .iter()
+        .map(|e| EpochFp {
+            warmup: e.warmup,
+            insts: e.insts,
+            t_ps: e.t_ps,
+            d_insts: e.d_insts,
+            d_ps: e.d_ps,
+            devices: e
+                .devices
+                .iter()
+                .map(|d| {
+                    (
+                        d.requests,
+                        d.reads,
+                        d.writes,
+                        d.counters.mem_accesses,
+                        d.counters.promotions,
+                        d.counters.demotions,
+                        d.peak_outstanding,
+                        d.link_utilization.to_bits(),
+                        hist_fp(&d.lat),
+                    )
+                })
+                .collect(),
+            tenants: e
+                .tenants
+                .iter()
+                .map(|t| (t.tenant, t.requests, t.instructions, hist_fp(&t.lat)))
+                .collect(),
+        })
+        .collect()
+}
+
+fn fingerprint(job: Job) -> Fingerprint {
+    let r = run_one(&job);
+    let m = &r.metrics;
+    Fingerprint {
+        elapsed_ps: m.elapsed_ps,
+        instructions: m.instructions,
+        requests: m.requests,
+        mem_by_kind: m.mem_by_kind,
+        mem_total: m.mem_total,
+        ratio_bits: m.compression_ratio.to_bits(),
+        tenants: m
+            .tenants
+            .iter()
+            .map(|t| {
+                (
+                    t.name.clone(),
+                    t.cores,
+                    t.instructions,
+                    t.requests,
+                    t.elapsed_ps,
+                    t.mean_latency_ns.to_bits(),
+                    t.p99_latency_ns,
+                )
+            })
+            .collect(),
+        devices: m
+            .devices
+            .iter()
+            .map(|d| {
+                (
+                    d.requests,
+                    d.reads,
+                    d.writes,
+                    d.peak_outstanding,
+                    d.mem_accesses,
+                    d.promotions,
+                    d.demotions,
+                    d.mean_latency_ns.to_bits(),
+                    d.p99_latency_ns,
+                    d.link_utilization.to_bits(),
+                )
+            })
+            .collect(),
+        epochs: r.series.as_ref().map(|s| series_fp(s)).unwrap_or_default(),
+    }
+}
+
+fn job_with_threads(cfg: &SimConfig, workload: &str, threads: usize) -> Job {
+    let mut c = cfg.clone();
+    c.set("intra_threads", &threads.to_string()).unwrap();
+    Job::new(format!("{workload}@{threads}"), c, workload)
+}
+
+#[test]
+fn parallel_engine_is_bit_identical_across_thread_counts() {
+    // Two schemes × {1, 4, 8} devices × both interleaves, telemetry on.
+    // Every observable — final metrics, tenant/device rows, epoch
+    // series down to histogram buckets — must survive sharding.
+    for scheme in ["ibex", "tmcc"] {
+        for devices in [1usize, 4, 8] {
+            for interleave in ["page", "contiguous"] {
+                let mut cfg = quick_cfg();
+                cfg.set("scheme", scheme).unwrap();
+                cfg.set("devices", &devices.to_string()).unwrap();
+                cfg.set("interleave", interleave).unwrap();
+                cfg.set("sample_every", "10000").unwrap();
+                let ctx = format!("{scheme}/x{devices}/{interleave}");
+
+                let seq = fingerprint(job_with_threads(&cfg, "pr", 1));
+                assert!(
+                    !seq.epochs.is_empty(),
+                    "{ctx}: sampling produced no epochs"
+                );
+                for threads in [2usize, 4] {
+                    let par = fingerprint(job_with_threads(&cfg, "pr", threads));
+                    assert_eq!(
+                        par, seq,
+                        "{ctx}: intra_threads={threads} diverged from sequential"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_engine_matches_under_a_mixed_tenancy() {
+    // Heterogeneous tenants stress the per-tenant elapsed windows and
+    // the oracle's per-page mutation streams under cross-device writes.
+    let mut cfg = quick_cfg();
+    cfg.set("devices", "4").unwrap();
+    cfg.set("mix", "pr:1,mcf:1").unwrap();
+    cfg.set("sample_every", "10000").unwrap();
+    let seq = fingerprint(job_with_threads(&cfg, "mix", 1));
+    assert_eq!(seq.tenants.len(), 2, "two tenant rows expected");
+    let par = fingerprint(job_with_threads(&cfg, "mix", 4));
+    assert_eq!(par, seq, "mixed tenancy diverged under intra_threads=4");
+}
+
+#[test]
+fn record_replay_is_bit_identical_under_the_parallel_engine() {
+    // A trace recorded once must replay to the same bits whether the
+    // replaying host is sequential or sharded — and the replay must
+    // match the synthetic run it was recorded from.
+    let mut cfg = quick_cfg();
+    cfg.set("devices", "4").unwrap();
+    let synth = fingerprint(job_with_threads(&cfg, "mcf", 1));
+
+    let mix = Mix::homogeneous(by_name("mcf").unwrap(), cfg.cores);
+    let t = trace::record(&cfg, &mix);
+    assert_eq!(t.devices, 4);
+    let path = std::env::temp_dir().join(format!(
+        "ibex_parallel_replay_{}.trace",
+        std::process::id()
+    ));
+    t.save(&path).unwrap();
+
+    let mut rcfg = cfg.clone();
+    rcfg.trace = path.to_string_lossy().into_owned();
+    let replay_seq = fingerprint(job_with_threads(&rcfg, "trace", 1));
+    let replay_par = fingerprint(job_with_threads(&rcfg, "trace", 4));
+    let _ = std::fs::remove_file(&path);
+
+    assert_eq!(
+        replay_par, replay_seq,
+        "parallel replay diverged from sequential replay"
+    );
+    assert_eq!(
+        replay_seq.elapsed_ps, synth.elapsed_ps,
+        "replay clock diverged from the recorded run"
+    );
+    assert_eq!(replay_seq.mem_by_kind, synth.mem_by_kind);
+    assert_eq!(replay_seq.requests, synth.requests);
+    assert_eq!(replay_seq.devices, synth.devices);
+}
+
+#[test]
+fn oversubscribed_thread_count_is_capped_and_identical() {
+    // More workers than devices: the host clamps to pool width, so
+    // wildly oversubscribed values still match (and cannot deadlock).
+    let mut cfg = quick_cfg();
+    cfg.set("devices", "2").unwrap();
+    let seq = fingerprint(job_with_threads(&cfg, "omnetpp", 1));
+    let par = fingerprint(job_with_threads(&cfg, "omnetpp", 16));
+    assert_eq!(par, seq, "intra_threads=16 over 2 devices diverged");
+}

@@ -11,8 +11,8 @@
 //!   parser with a pinned top-level shape, and the CLI `--json` flag
 //!   produces it end to end.
 
-use std::cell::Cell;
-use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use ibex::cli;
 use ibex::compress::{AnalyticSizeModel, PageSizes};
@@ -99,9 +99,11 @@ fn sampling_leaves_final_metrics_bit_identical() {
 
 /// A pass-through scheme that counts `snapshot`/`promoted_occupancy`
 /// reads, pinning "zero hot-path cost when off" as *zero calls*.
+/// (`Arc<AtomicU64>` rather than `Rc<Cell<_>>`: `Scheme` is `Send` so
+/// the parallel intra-run engine can shard device models.)
 struct CountingScheme {
     inner: Box<dyn Scheme>,
-    snapshots: Rc<Cell<u64>>,
+    snapshots: Arc<AtomicU64>,
 }
 
 impl Scheme for CountingScheme {
@@ -137,12 +139,12 @@ impl Scheme for CountingScheme {
     }
 
     fn promoted_occupancy(&self) -> (u64, u64) {
-        self.snapshots.set(self.snapshots.get() + 1);
+        self.snapshots.fetch_add(1, Ordering::Relaxed);
         self.inner.promoted_occupancy()
     }
 
     fn snapshot(&self) -> SchemeSnapshot {
-        self.snapshots.set(self.snapshots.get() + 1);
+        self.snapshots.fetch_add(1, Ordering::Relaxed);
         self.inner.snapshot()
     }
 
@@ -152,7 +154,7 @@ impl Scheme for CountingScheme {
 }
 
 fn counted_run(cfg: &SimConfig) -> u64 {
-    let counter = Rc::new(Cell::new(0u64));
+    let counter = Arc::new(AtomicU64::new(0));
     let spec = by_name("parest").unwrap();
     let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
     let mut pool = DevicePool::single(
@@ -164,7 +166,7 @@ fn counted_run(cfg: &SimConfig) -> u64 {
     );
     let mut sim = HostSim::new(cfg, &spec);
     let _ = sim.run(&mut pool, &mut oracle);
-    counter.get()
+    counter.load(Ordering::Relaxed)
 }
 
 #[test]

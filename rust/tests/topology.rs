@@ -173,9 +173,18 @@ fn legacy_run(cfg: &SimConfig, spec: &WorkloadSpec) -> Fingerprint {
     );
 
     let kinds = device.mem().breakdown.counts;
-    let warm_elapsed = warm.iter().map(|&(_, _, t)| t).max().unwrap_or(0);
     Fingerprint {
-        elapsed_ps: cores.iter().map(|c| c.t).max().unwrap_or(0) - warm_elapsed,
+        // Widest per-core (final − warmup) span, matching the host's
+        // fixed elapsed accounting: maxing the two endpoints
+        // independently mixed different cores' clocks and understated
+        // the window whenever the slowest warmup core was not the
+        // slowest final core.
+        elapsed_ps: cores
+            .iter()
+            .zip(&warm)
+            .map(|(c, &(_, _, wt))| c.t - wt)
+            .max()
+            .unwrap_or(0),
         instructions: cores
             .iter()
             .zip(&warm)
