@@ -4,6 +4,12 @@
 //! Paper shape: relative performance converges toward 1.0 at higher
 //! latency (zero-page wins shrink; MSHR occupancy throttles issue rate,
 //! relieving internal-bandwidth congestion for pr/cc).
+//!
+//! A second sweep walks the same comparison across fabric topologies
+//! (direct star / one switch level / two) at x8 devices: each hop adds
+//! its calibrated latency *and* a shared, oversubscribable uplink port,
+//! so the lanes extend the latency axis with queueing the flat
+//! `cxl.round_trip_ns` sweep cannot express.
 
 mod common;
 
@@ -54,5 +60,51 @@ fn main() {
     }
     t.row(gm);
     t.emit();
-    println!("\npaper shape: spread narrows toward 1.0 as latency grows; pr/cc vary the most");
+
+    // ---- fabric lanes: the same sweep across switched topologies ----
+    // (fabric kind, switch radix): direct star, 8 devices behind one
+    // radix-8 uplink, and a radix-2 two-level tree — nominal round
+    // trips 70/110/190 ns per the calibrated profiles.
+    const FABRICS: [(&str, &str); 3] =
+        [("direct", "4"), ("switch1", "8"), ("switch2", "2")];
+    let mut jobs = Vec::new();
+    for (fabric, radix) in FABRICS {
+        for scheme in ["uncompressed", "ibex"] {
+            for &w in &workloads {
+                let mut cfg = common::bench_cfg();
+                cfg.set("devices", "8").unwrap();
+                cfg.set("fabric", fabric).unwrap();
+                cfg.set("switch_radix", radix).unwrap();
+                jobs.push(Job::new(format!("{scheme}@{fabric}"), cfg, w));
+            }
+        }
+    }
+    let results = run_many(jobs);
+    let mut headers = vec!["workload"];
+    headers.extend(FABRICS.iter().map(|(f, _)| *f));
+    let mut ft = Table::new(
+        "Fig 14b — IBEX vs uncompressed across fabric topologies (x8)",
+        &headers,
+    );
+    let mut series: Vec<Vec<f64>> = Vec::new();
+    for chunk in results.chunks(2 * workloads.len()) {
+        let (base, ib) = chunk.split_at(workloads.len());
+        series.push(report::normalize(ib, base));
+    }
+    for (wi, w) in workloads.iter().enumerate() {
+        let mut row = vec![w.to_string()];
+        for s in &series {
+            row.push(format!("{:.3}", s[wi]));
+        }
+        ft.row(row);
+    }
+    let mut gm = vec!["geomean".to_string()];
+    for s in &series {
+        gm.push(format!("{:.3}", ibex::stats::geomean(s)));
+    }
+    ft.row(gm);
+    ft.emit();
+
+    println!("\npaper shape: spread narrows toward 1.0 as latency grows; pr/cc vary the most;");
+    println!("switched fabrics push the same direction — hop latency + shared-port queueing");
 }

@@ -162,7 +162,75 @@ fn main() {
     }
     pt.emit();
 
-    report.table(&t).table(&ut).table(&pt).write();
+    // ---- oversubscribed switched fabric ----------------------------
+
+    // The same x8 pool direct-attached vs funneled through a single
+    // radix-8 switch uplink (`fabric=switch1`): every request crosses
+    // one shared port each way, so the port's utilization lane shows
+    // the oversubscription the direct star cannot, and mean latency
+    // carries the 2×20 ns hop cost plus queueing.
+    let mut ft = Table::new(
+        "Scale-out — switched-fabric oversubscription (x8 devices)",
+        &[
+            "workload", "fabric", "perf (inst/ns)", "mean lat (ns)", "p99 (ns)",
+            "port", "down util", "up util",
+        ],
+    );
+    for w in ["pr", "omnetpp"] {
+        let mut mean_lat = [0.0f64; 2];
+        for (slot, fabric) in ["direct", "switch1"].iter().enumerate() {
+            let mut cfg = common::bench_cfg();
+            cfg.set("devices", "8").unwrap();
+            cfg.set("fabric", fabric).unwrap();
+            cfg.set("switch_radix", "8").unwrap();
+            let spec = by_name(w).unwrap();
+            let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
+            let mut pool = DevicePool::build(&cfg);
+            let mut sim = HostSim::new(&cfg, &spec);
+            let m = sim.run(&mut pool, &mut oracle);
+            let agg = DeviceLaneMetrics::aggregate(&m.devices);
+            mean_lat[slot] = agg.mean_latency_ns;
+            report.metric(&format!("{w}_x8_{fabric}_mean_lat_ns"), agg.mean_latency_ns);
+            if m.ports.is_empty() {
+                ft.row(vec![
+                    w.to_string(),
+                    (*fabric).to_string(),
+                    format!("{:.4}", m.perf()),
+                    format!("{:.0}", agg.mean_latency_ns),
+                    agg.p99_latency_ns.to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                ]);
+            }
+            for p in &m.ports {
+                report.metric(
+                    &format!("{w}_x8_{fabric}_{}_down_util", p.label),
+                    p.down_utilization,
+                );
+                ft.row(vec![
+                    w.to_string(),
+                    (*fabric).to_string(),
+                    format!("{:.4}", m.perf()),
+                    format!("{:.0}", agg.mean_latency_ns),
+                    agg.p99_latency_ns.to_string(),
+                    p.label.clone(),
+                    format!("{:.1}%", p.down_utilization * 100.0),
+                    format!("{:.1}%", p.up_utilization * 100.0),
+                ]);
+            }
+        }
+        assert!(
+            mean_lat[1] > mean_lat[0],
+            "{w}: switched fabric must show higher mean latency than direct \
+             (direct {:.0} ns vs switch1 {:.0} ns)",
+            mean_lat[0],
+            mean_lat[1]
+        );
+    }
+    ft.emit();
+
+    report.table(&t).table(&ut).table(&pt).table(&ft).write();
 
     println!("\nanchor: page interleave evens request share across the pool while");
     println!("contiguous extents concentrate each hot set — per-device link and");

@@ -15,6 +15,7 @@ use std::path::Path;
 
 use crate::config::SimConfig;
 use crate::coordinator::{run_many, run_one, Job, JobResult};
+use crate::cxl::fabric::{Fabric, FabricKind};
 use crate::host::DeviceLaneMetrics;
 use crate::stats::Table;
 use crate::telemetry::report as telemetry_report;
@@ -38,6 +39,12 @@ pub struct Cli {
     pub devices: Option<String>,
     /// `--interleave MODE` — pooled-address-space sharding policy.
     pub interleave: Option<String>,
+    /// `--fabric KIND` — host↔pool fabric shape (direct|switch1|switch2).
+    pub fabric: Option<String>,
+    /// `--switch-radix N` — devices (or switches) per switch uplink.
+    pub switch_radix: Option<String>,
+    /// `--fabric-profile NAME` — named calibrated latency profile.
+    pub fabric_profile: Option<String>,
     /// `--intra-threads N` — intra-run worker threads sharding the
     /// device models (bit-identical at any value).
     pub intra_threads: Option<String>,
@@ -61,6 +68,9 @@ impl Cli {
             out: None,
             devices: None,
             interleave: None,
+            fabric: None,
+            switch_radix: None,
+            fabric_profile: None,
             intra_threads: None,
             json: None,
             sample_every: None,
@@ -93,6 +103,9 @@ impl Cli {
                 "--out" | "-o" => cli.out = Some(take(&mut it, arg)?),
                 "--devices" | "-d" => cli.devices = Some(take(&mut it, arg)?),
                 "--interleave" | "-i" => cli.interleave = Some(take(&mut it, arg)?),
+                "--fabric" => cli.fabric = Some(take(&mut it, arg)?),
+                "--switch-radix" => cli.switch_radix = Some(take(&mut it, arg)?),
+                "--fabric-profile" => cli.fabric_profile = Some(take(&mut it, arg)?),
                 "--intra-threads" => cli.intra_threads = Some(take(&mut it, arg)?),
                 "--json" | "-j" => cli.json = Some(take(&mut it, arg)?),
                 "--sample-every" => cli.sample_every = Some(take(&mut it, arg)?),
@@ -127,6 +140,15 @@ impl Cli {
         if let Some(i) = &self.interleave {
             cfg.set("interleave", i)?;
         }
+        if let Some(f) = &self.fabric {
+            cfg.set("fabric", f)?;
+        }
+        if let Some(r) = &self.switch_radix {
+            cfg.set("switch_radix", r)?;
+        }
+        if let Some(p) = &self.fabric_profile {
+            cfg.set("fabric_profile", p)?;
+        }
         if let Some(n) = &self.intra_threads {
             cfg.set("intra_threads", n)?;
         }
@@ -160,6 +182,10 @@ USAGE:
                                                across N expander devices, each
                                                behind its own CXL link;
                                                per-device result rows
+  ibex run    --fabric K [--switch-radix N]    put the device pool behind a
+              [--fabric-profile P]             switched CXL fabric (shared
+                                               uplink ports, per-hop latency);
+                                               per-port utilization rows
   ibex run    --trace FILE [--scheme S]        replay a recorded trace
                                                (bit-deterministic; adopts the
                                                recorded topology — explicit
@@ -184,6 +210,18 @@ TOPOLOGY:  --devices N (1..=64, default 1 — the paper's single expander);
            config keys too. devices=1 is bit-identical to the classic system;
            N>1 adds a per-device results table (requests, latency, peak
            outstanding misses, internal accesses, link utilization).
+FABRIC:    --fabric direct (default: the classic star, bit-identical to the
+           pre-fabric model) | switch1 (host -> switch -> device) | switch2
+           (host -> L1 -> L2 -> device). --switch-radix N (2..=64, default 4)
+           sets the fan-out per switch port; every uplink port is a shared
+           bandwidth resource contended by the devices beneath it.
+           --fabric-profile names a calibrated per-hop latency set (default
+           follows the kind): direct-70 | switched-1hop-110 |
+           cross-switch-190 — end-to-end round trips per published CXL
+           measurements (arXiv:2303.15375, arXiv:2306.11227). fabric=/
+           switch_radix=/fabric_profile= work as config keys too. Switched
+           runs add a per-port utilization table and per-port telemetry
+           lanes in --json reports.
 THREADS:   --intra-threads N (intra_threads= config key, IBEX_INTRA_THREADS
            env default) shards the device models of one run across N worker
            threads with a deterministic time-ordered merge — results are
@@ -307,6 +345,49 @@ fn run_cmd(cli: &Cli) -> i32 {
                 );
                 return 2;
             }
+            // Same adopt/refuse dance for the fabric headers: the hop
+            // timing and shared-port contention are part of what the
+            // trace pins.
+            let explicit_fabric = cli.fabric.is_some()
+                || cli.overrides.iter().any(|(k, _)| k == "fabric")
+                || base.fabric != dflt.fabric;
+            let explicit_radix = cli.switch_radix.is_some()
+                || cli.overrides.iter().any(|(k, _)| k == "switch_radix")
+                || base.switch_radix != dflt.switch_radix;
+            let explicit_profile = cli.fabric_profile.is_some()
+                || cli.overrides.iter().any(|(k, _)| k == "fabric_profile")
+                || base.fabric_profile != dflt.fabric_profile;
+            if !explicit_fabric {
+                base.fabric = t.fabric;
+            }
+            if !explicit_radix {
+                base.switch_radix = t.switch_radix;
+            }
+            if !explicit_profile {
+                base.fabric_profile = t.fabric_profile.clone();
+            }
+            // Profiles compare *resolved* (an empty name is the kind's
+            // default); radix only matters once there are switches.
+            let mismatch = t.fabric != base.fabric
+                || (base.fabric != FabricKind::Direct
+                    && (t.switch_radix != base.switch_radix
+                        || Fabric::resolve_profile(t.fabric, &t.fabric_profile).name
+                            != Fabric::resolve_profile(base.fabric, &base.fabric_profile)
+                                .name));
+            if mismatch {
+                eprintln!(
+                    "error: trace was recorded with fabric={} switch_radix={} \
+                     profile={} but the run requests fabric={} switch_radix={} \
+                     profile={}; replay must use the recorded fabric",
+                    t.fabric,
+                    t.switch_radix,
+                    Fabric::resolve_profile(t.fabric, &t.fabric_profile).name,
+                    base.fabric,
+                    base.switch_radix,
+                    Fabric::resolve_profile(base.fabric, &base.fabric_profile).name,
+                );
+                return 2;
+            }
         }
         // One composition (trace or mix), swept over schemes only.
         let w = if !base.trace.is_empty() {
@@ -421,6 +502,27 @@ fn run_cmd(cli: &Cli) -> i32 {
             }
         }
         dt.emit();
+    }
+
+    // Per-port fabric rows for switched runs (empty for direct: the
+    // star has no shared hops to report).
+    if results.iter().any(|r| !r.metrics.ports.is_empty()) {
+        let mut pt = Table::new(
+            "Per-port fabric utilization",
+            &["workload", "scheme", "port", "down util", "up util"],
+        );
+        for r in &results {
+            for p in &r.metrics.ports {
+                pt.row(vec![
+                    r.workload.clone(),
+                    r.scheme.clone(),
+                    p.label.clone(),
+                    format!("{:.1}%", p.down_utilization * 100.0),
+                    format!("{:.1}%", p.up_utilization * 100.0),
+                ]);
+            }
+        }
+        pt.emit();
     }
 
     // Machine-readable run report (config manifest, final/steady-state
@@ -639,6 +741,88 @@ mod tests {
         let bad = Cli::parse(&s(&["run", "--interleave", "diagonal"])).unwrap();
         let e = bad.config().unwrap_err();
         assert!(e.contains("page"), "{e}");
+    }
+
+    #[test]
+    fn parse_fabric_flags() {
+        let cli = Cli::parse(&s(&[
+            "run",
+            "--fabric",
+            "switch1",
+            "--switch-radix",
+            "8",
+            "--fabric-profile",
+            "cross-switch-190",
+        ]))
+        .unwrap();
+        assert_eq!(cli.fabric.as_deref(), Some("switch1"));
+        let cfg = cli.config().unwrap();
+        assert_eq!(cfg.fabric, FabricKind::Switch1);
+        assert_eq!(cfg.switch_radix, 8);
+        assert_eq!(cfg.fabric_profile, "cross-switch-190");
+        // Config keys work standalone too.
+        let cli = Cli::parse(&s(&["run", "fabric=switch2", "switch_radix=2"])).unwrap();
+        let cfg = cli.config().unwrap();
+        assert_eq!(cfg.fabric, FabricKind::Switch2);
+        assert_eq!(cfg.switch_radix, 2);
+        // Bad values carry the accepted spellings.
+        let bad = Cli::parse(&s(&["run", "--fabric", "mesh"])).unwrap();
+        assert!(bad.config().unwrap_err().contains("switch1"));
+        let bad = Cli::parse(&s(&["run", "--switch-radix", "1"])).unwrap();
+        assert!(bad.config().is_err());
+        let bad = Cli::parse(&s(&["run", "--fabric-profile", "nope"])).unwrap();
+        assert!(bad.config().unwrap_err().contains("direct-70"));
+    }
+
+    #[test]
+    fn replay_adopts_recorded_fabric_and_refuses_mismatch() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("ibex_cli_fabric_{}.trace", std::process::id()));
+        let path_s = path.to_string_lossy().into_owned();
+        let code = dispatch(&s(&[
+            "record",
+            "--workload",
+            "parest",
+            "--devices",
+            "4",
+            "--fabric",
+            "switch1",
+            "--switch-radix",
+            "2",
+            "--out",
+            &path_s,
+            "instructions=5000",
+            "warmup_instructions=500",
+            "cores=2",
+            "footprint_scale=0.0001",
+        ]));
+        assert_eq!(code, 0);
+        // No fabric flags: the replay adopts switch1/2 from the header.
+        let code = dispatch(&s(&[
+            "run",
+            "--trace",
+            &path_s,
+            "instructions=5000",
+            "warmup_instructions=500",
+        ]));
+        assert_eq!(code, 0, "replay must adopt the recorded fabric");
+        // An explicit conflicting fabric is refused cleanly.
+        let code = dispatch(&s(&["run", "--trace", &path_s, "--fabric", "direct"]));
+        assert_eq!(code, 2, "explicit fabric mismatch must be refused");
+        let code = dispatch(&s(&["run", "--trace", &path_s, "--switch-radix", "4"]));
+        assert_eq!(code, 2, "explicit radix mismatch must be refused");
+        // An explicit profile that resolves to the recorded one is fine.
+        let code = dispatch(&s(&[
+            "run",
+            "--trace",
+            &path_s,
+            "--fabric-profile",
+            "switched-1hop-110",
+            "instructions=5000",
+            "warmup_instructions=500",
+        ]));
+        assert_eq!(code, 0, "explicitly naming the default profile must match");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -8,6 +8,7 @@ use std::fmt;
 use std::fs;
 use std::path::Path;
 
+use crate::cxl::fabric::{FabricKind, FabricProfile, DEFAULT_SWITCH_RADIX};
 use crate::cxl::CxlConfig;
 use crate::mem::DramTiming;
 use crate::telemetry::SampleUnit;
@@ -181,6 +182,15 @@ pub struct SimConfig {
     pub devices: usize,
     /// Host-side policy sharding the pooled page space across devices.
     pub interleave: InterleaveKind,
+    /// Fabric topology between host and device links: `direct` (the
+    /// classic star, default), `switch1`, or `switch2` (one/two CXL
+    /// switch levels with shared, contended uplink ports).
+    pub fabric: FabricKind,
+    /// Devices (or lower-level switches) per switch uplink port.
+    pub switch_radix: usize,
+    /// Named calibrated latency profile (`cxl::fabric::PROFILES`);
+    /// empty = inferred from `fabric`.
+    pub fabric_profile: String,
     /// Intra-run worker threads sharding the device models across the
     /// pool (`host::parallel`). 0/1 = the classic sequential engine;
     /// any value is bit-identical — the knob only trades wall-clock for
@@ -268,6 +278,9 @@ impl Default for SimConfig {
             cxl: CxlConfig::default(),
             devices: 1,
             interleave: InterleaveKind::default(),
+            fabric: FabricKind::Direct,
+            switch_radix: DEFAULT_SWITCH_RADIX,
+            fabric_profile: String::new(),
             intra_threads: 0,
             channels: 2,
             banks_per_channel: 16,
@@ -352,6 +365,32 @@ impl SimConfig {
                         InterleaveKind::accepted()
                     )
                 })?
+            }
+            "fabric" => {
+                self.fabric = FabricKind::parse(value).ok_or_else(|| {
+                    format!(
+                        "unknown fabric {value:?} (accepted: {})",
+                        FabricKind::accepted()
+                    )
+                })?
+            }
+            "switch_radix" => {
+                let n: usize = p(value, key)?;
+                if !(2..=MAX_DEVICES).contains(&n) {
+                    return Err(format!(
+                        "switch_radix must be in 2..={MAX_DEVICES}, got {n}"
+                    ));
+                }
+                self.switch_radix = n;
+            }
+            "fabric_profile" => {
+                if !value.is_empty() && FabricProfile::by_name(value).is_none() {
+                    return Err(format!(
+                        "unknown fabric profile {value:?} (accepted: {})",
+                        FabricProfile::accepted()
+                    ));
+                }
+                self.fabric_profile = value.to_string();
             }
             "intra_threads" => self.intra_threads = p(value, key)?,
             "channels" => self.channels = p(value, key)?,
@@ -451,6 +490,9 @@ impl SimConfig {
         put("cxl.gbps", format!("{}", self.cxl.gbps_per_dir));
         put("devices", self.devices.to_string());
         put("interleave", self.interleave.to_string());
+        put("fabric", self.fabric.to_string());
+        put("switch_radix", self.switch_radix.to_string());
+        put("fabric_profile", self.fabric_profile.clone());
         put("intra_threads", self.intra_threads.to_string());
         put("channels", self.channels.to_string());
         put("banks_per_channel", self.banks_per_channel.to_string());
@@ -562,6 +604,33 @@ mod tests {
         let d = c.dump();
         assert_eq!(d["devices"], "4");
         assert_eq!(d["interleave"], "page");
+    }
+
+    #[test]
+    fn fabric_keys_validate_and_dump() {
+        let mut c = SimConfig::default();
+        assert_eq!(c.fabric, FabricKind::Direct, "direct star is the default");
+        assert_eq!(c.switch_radix, DEFAULT_SWITCH_RADIX);
+        assert!(c.fabric_profile.is_empty(), "profile inferred from kind");
+        c.set("fabric", "switch1").unwrap();
+        c.set("switch_radix", "8").unwrap();
+        c.set("fabric_profile", "cross-switch-190").unwrap();
+        assert_eq!(c.fabric, FabricKind::Switch1);
+        assert_eq!(c.switch_radix, 8);
+        assert_eq!(c.fabric_profile, "cross-switch-190");
+        c.set("fabric_profile", "").unwrap(); // clearing is allowed
+        // Clear errors naming the accepted values / range.
+        let e = c.set("fabric", "mesh").unwrap_err();
+        assert!(e.contains("direct") && e.contains("switch2"), "{e}");
+        let e = c.set("switch_radix", "1").unwrap_err();
+        assert!(e.contains("2..="), "{e}");
+        let e = c.set("fabric_profile", "warp-10").unwrap_err();
+        assert!(e.contains("direct-70"), "{e}");
+        assert_eq!(c.fabric, FabricKind::Switch1, "failed sets must not clobber");
+        let d = c.dump();
+        assert_eq!(d["fabric"], "switch1");
+        assert_eq!(d["switch_radix"], "8");
+        assert_eq!(d["fabric_profile"], "");
     }
 
     #[test]

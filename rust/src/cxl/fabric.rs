@@ -1,0 +1,539 @@
+//! Switched CXL fabric: a tree of hops between the host and each
+//! device's own [`CxlLink`](crate::cxl::CxlLink).
+//!
+//! `fabric=direct` is the classic star — zero fabric hops, every device
+//! hangs straight off its host port, and the model is bit-identical to
+//! the pre-fabric topology. `switch1`/`switch2` insert one/two levels
+//! of CXL switches: each switch uplink port is a shared [`Bandwidth`]
+//! resource contended by every device beneath it (the oversubscription
+//! axis), and each hop adds a fixed one-way ser/des + packing latency
+//! taken from a named, measurement-calibrated [`FabricProfile`].
+//!
+//! Structure: devices are partitioned into [`FabricGroup`]s, one per
+//! host root port. A group owns all the hops (switch uplinks) under
+//! that root port plus a per-device root→leaf `path` of hop indices.
+//! Groups share no state with each other, which is what lets the
+//! parallel engine shard whole groups across worker threads while
+//! keeping every shared port's acquire order identical to the
+//! sequential loop (see `host::parallel`).
+//!
+//! Latency profiles follow published loaded-latency measurements
+//! (*Demystifying CXL Memory with Genuine CXL-Ready Systems and
+//! Devices*, arXiv:2303.15375; *An Introduction to the Compute Express
+//! Link (CXL) Interconnect*, arXiv:2306.11227): ~70 ns round trip for a
+//! direct-attached expander, ~110 ns through one switch, ~190 ns
+//! host-to-device across two switch levels.
+
+use crate::config::SimConfig;
+use crate::sim::{Bandwidth, Ps, Resource, PS_PER_NS};
+
+use super::{flit_ps, LINK_EFFICIENCY, PCIE5_X8_RAW_GBPS};
+
+/// Default `switch_radix` (devices or switches per uplink port).
+pub const DEFAULT_SWITCH_RADIX: usize = 4;
+
+/// Fabric topology shape between the host and the device links.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FabricKind {
+    /// Host → device: the classic star, no shared hops.
+    Direct,
+    /// Host → switch → device: one shared uplink per `switch_radix`
+    /// devices.
+    Switch1,
+    /// Host → L1 switch → L2 switch → device: two shared hop levels,
+    /// `switch_radix` fan-out at each.
+    Switch2,
+}
+
+pub const ALL_FABRICS: [FabricKind; 3] =
+    [FabricKind::Direct, FabricKind::Switch1, FabricKind::Switch2];
+
+impl FabricKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FabricKind::Direct => "direct",
+            FabricKind::Switch1 => "switch1",
+            FabricKind::Switch2 => "switch2",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FabricKind> {
+        ALL_FABRICS.iter().copied().find(|k| k.name() == s)
+    }
+
+    pub fn accepted() -> String {
+        let names: Vec<&str> = ALL_FABRICS.iter().map(|k| k.name()).collect();
+        names.join(", ")
+    }
+
+    /// Switch levels between host port and device link.
+    pub fn levels(&self) -> usize {
+        match self {
+            FabricKind::Direct => 0,
+            FabricKind::Switch1 => 1,
+            FabricKind::Switch2 => 2,
+        }
+    }
+}
+
+impl std::fmt::Display for FabricKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A named, calibrated set of per-hop fabric parameters. The leaf
+/// link's own round trip (`CxlConfig::round_trip_ns`, 70 ns by default)
+/// is charged by [`CxlLink`](crate::cxl::CxlLink); the profile adds
+/// `hop_ns` one-way per switch level, landing on the published
+/// end-to-end round trips (see module docs for citations).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FabricProfile {
+    pub name: &'static str,
+    /// One-way ser/des + packing latency per switch hop, ns.
+    pub hop_ns: u64,
+    /// Usable bandwidth of each switch uplink port, GB/s per direction
+    /// (PCIe 5.0 ×8 raw × [`LINK_EFFICIENCY`]).
+    pub port_gbps: f64,
+}
+
+/// Usable per-direction GB/s of a ×8 port after flit/protocol overhead.
+const PORT_GBPS: f64 = PCIE5_X8_RAW_GBPS * LINK_EFFICIENCY;
+
+/// Calibrated profiles (round trips assume the default 70 ns leaf):
+/// `direct-70` → 70 ns, `switched-1hop-110` → 70 + 2·20 = 110 ns,
+/// `cross-switch-190` → 70 + 4·30 = 190 ns.
+pub const PROFILES: [FabricProfile; 3] = [
+    FabricProfile { name: "direct-70", hop_ns: 0, port_gbps: PORT_GBPS },
+    FabricProfile { name: "switched-1hop-110", hop_ns: 20, port_gbps: PORT_GBPS },
+    FabricProfile { name: "cross-switch-190", hop_ns: 30, port_gbps: PORT_GBPS },
+];
+
+impl FabricProfile {
+    pub fn by_name(name: &str) -> Option<&'static FabricProfile> {
+        PROFILES.iter().find(|p| p.name == name)
+    }
+
+    /// The natural profile for a topology shape.
+    pub fn default_for(kind: FabricKind) -> &'static FabricProfile {
+        match kind {
+            FabricKind::Direct => &PROFILES[0],
+            FabricKind::Switch1 => &PROFILES[1],
+            FabricKind::Switch2 => &PROFILES[2],
+        }
+    }
+
+    pub fn accepted() -> String {
+        let names: Vec<&str> = PROFILES.iter().map(|p| p.name).collect();
+        names.join(", ")
+    }
+}
+
+/// One shared fabric hop: a switch uplink port with independent
+/// per-direction serialization plus a fixed one-way latency.
+#[derive(Clone, Debug)]
+pub struct FabricHop {
+    /// Stable display label (`sw0`, `l1s0`, `l2s3`, ...).
+    pub label: String,
+    /// host-side → device-side direction.
+    pub down: Bandwidth,
+    /// device-side → host-side direction.
+    pub up: Bandwidth,
+    latency_ps: Ps,
+    flit_ps: Ps,
+}
+
+impl FabricHop {
+    fn new(label: String, profile: &FabricProfile) -> Self {
+        FabricHop {
+            label,
+            down: Bandwidth::new(),
+            up: Bandwidth::new(),
+            latency_ps: profile.hop_ns * PS_PER_NS,
+            flit_ps: flit_ps(profile.port_gbps),
+        }
+    }
+
+    /// One-way latency this hop adds, ps.
+    pub fn latency_ps(&self) -> Ps {
+        self.latency_ps
+    }
+
+    #[inline]
+    fn ingress(&mut self, now: Ps, flits: u64) -> Ps {
+        self.down.acquire(now, flits * self.flit_ps) + self.latency_ps
+    }
+
+    #[inline]
+    fn egress(&mut self, now: Ps, flits: u64) -> Ps {
+        self.up.acquire(now, flits * self.flit_ps) + self.latency_ps
+    }
+}
+
+/// All fabric state under one host root port: the shared hops plus a
+/// root→leaf hop path per owned device. Groups are the unit the
+/// parallel engine shards by — no two groups share a `Bandwidth`.
+#[derive(Clone, Debug)]
+pub struct FabricGroup {
+    /// First pooled device index this group owns.
+    pub first_dev: usize,
+    /// Number of consecutive devices owned.
+    pub n_devs: usize,
+    /// Global port index of `hops[0]` (ports number groups in order,
+    /// hops within a group in order), for assembling pool-wide lanes.
+    pub port_base: usize,
+    pub hops: Vec<FabricHop>,
+    /// Hop indices from the root port down to each owned device
+    /// (indexed by `dev - first_dev`). Empty path = direct attach.
+    paths: Vec<Vec<usize>>,
+}
+
+impl FabricGroup {
+    pub fn owns(&self, dev: usize) -> bool {
+        dev >= self.first_dev && dev < self.first_dev + self.n_devs
+    }
+
+    /// Charge a host→device crossing through every hop on `dev`'s path.
+    pub fn ingress(&mut self, dev: usize, now: Ps, flits: u64) -> Ps {
+        let mut t = now;
+        for i in 0..self.paths[dev - self.first_dev].len() {
+            let h = self.paths[dev - self.first_dev][i];
+            t = self.hops[h].ingress(t, flits);
+        }
+        t
+    }
+
+    /// Charge a device→host crossing (leaf→root hop order).
+    pub fn egress(&mut self, dev: usize, now: Ps, flits: u64) -> Ps {
+        let mut t = now;
+        for i in (0..self.paths[dev - self.first_dev].len()).rev() {
+            let h = self.paths[dev - self.first_dev][i];
+            t = self.hops[h].egress(t, flits);
+        }
+        t
+    }
+
+    /// Sum of one-way hop latencies on `dev`'s path, ps.
+    pub fn path_latency_ps(&self, dev: usize) -> Ps {
+        self.paths[dev - self.first_dev]
+            .iter()
+            .map(|&h| self.hops[h].latency_ps)
+            .sum()
+    }
+
+    /// `(global port index, (down busy ps, up busy ps))` per hop.
+    pub fn port_busys(&self) -> Vec<(usize, (Ps, Ps))> {
+        self.hops
+            .iter()
+            .enumerate()
+            .map(|(i, h)| (self.port_base + i, (h.down.busy, h.up.busy)))
+            .collect()
+    }
+}
+
+/// The full host↔pool fabric: every group plus routing metadata.
+#[derive(Clone, Debug)]
+pub struct Fabric {
+    pub kind: FabricKind,
+    pub radix: usize,
+    pub profile: &'static FabricProfile,
+    pub groups: Vec<FabricGroup>,
+    group_of: Vec<usize>,
+}
+
+impl Fabric {
+    /// Resolve a profile name (empty = the kind's default).
+    pub fn resolve_profile(kind: FabricKind, name: &str) -> &'static FabricProfile {
+        if name.is_empty() {
+            FabricProfile::default_for(kind)
+        } else {
+            FabricProfile::by_name(name)
+                .unwrap_or_else(|| panic!("unknown fabric profile {name:?}"))
+        }
+    }
+
+    pub fn from_config(cfg: &SimConfig) -> Fabric {
+        let profile = Self::resolve_profile(cfg.fabric, &cfg.fabric_profile);
+        Fabric::build(cfg.fabric, cfg.switch_radix, profile, cfg.devices)
+    }
+
+    /// A zero-hop star over `devices` (what `fabric=direct` builds).
+    pub fn direct(devices: usize) -> Fabric {
+        Fabric::build(
+            FabricKind::Direct,
+            DEFAULT_SWITCH_RADIX,
+            FabricProfile::default_for(FabricKind::Direct),
+            devices,
+        )
+    }
+
+    pub fn build(
+        kind: FabricKind,
+        radix: usize,
+        profile: &'static FabricProfile,
+        devices: usize,
+    ) -> Fabric {
+        assert!(devices > 0, "fabric over an empty pool");
+        assert!(radix >= 2 || kind == FabricKind::Direct, "switch radix must be >= 2");
+        let mut groups = Vec::new();
+        let mut port_base = 0;
+        match kind {
+            FabricKind::Direct => {
+                // One group per device, no hops: identity timing.
+                for d in 0..devices {
+                    groups.push(FabricGroup {
+                        first_dev: d,
+                        n_devs: 1,
+                        port_base,
+                        hops: Vec::new(),
+                        paths: vec![Vec::new()],
+                    });
+                }
+            }
+            FabricKind::Switch1 => {
+                // ceil(N/R) switches, each a single shared uplink.
+                let mut s = 0;
+                let mut first = 0;
+                while first < devices {
+                    let n = radix.min(devices - first);
+                    groups.push(FabricGroup {
+                        first_dev: first,
+                        n_devs: n,
+                        port_base,
+                        hops: vec![FabricHop::new(format!("sw{s}"), profile)],
+                        paths: vec![vec![0]; n],
+                    });
+                    port_base += 1;
+                    first += n;
+                    s += 1;
+                }
+            }
+            FabricKind::Switch2 => {
+                // L2 switches fan out to devices (radix each); L1
+                // switches fan out to L2 switches (radix each). One
+                // group per L1 switch = up to radix² devices.
+                let per_group = radix * radix;
+                let mut g = 0;
+                let mut first = 0;
+                while first < devices {
+                    let n = per_group.min(devices - first);
+                    let l2_here = n.div_ceil(radix);
+                    let mut hops = vec![FabricHop::new(format!("l1s{g}"), profile)];
+                    for j in 0..l2_here {
+                        hops.push(FabricHop::new(format!("l2s{}", g * radix + j), profile));
+                    }
+                    let paths = (0..n).map(|k| vec![0, 1 + k / radix]).collect();
+                    let nhops = hops.len();
+                    groups.push(FabricGroup {
+                        first_dev: first,
+                        n_devs: n,
+                        port_base,
+                        hops,
+                        paths,
+                    });
+                    port_base += nhops;
+                    first += n;
+                    g += 1;
+                }
+            }
+        }
+        let mut group_of = vec![0usize; devices];
+        for (gi, g) in groups.iter().enumerate() {
+            for d in g.first_dev..g.first_dev + g.n_devs {
+                group_of[d] = gi;
+            }
+        }
+        Fabric { kind, radix, profile, groups, group_of }
+    }
+
+    pub fn is_direct(&self) -> bool {
+        self.kind == FabricKind::Direct
+    }
+
+    /// Group index owning device `dev`.
+    #[inline]
+    pub fn group_of(&self, dev: usize) -> usize {
+        self.group_of[dev]
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Total shared hop ports across all groups (0 for direct).
+    pub fn num_ports(&self) -> usize {
+        self.groups.iter().map(|g| g.hops.len()).sum()
+    }
+
+    /// Charge a host→device crossing through `dev`'s fabric path.
+    #[inline]
+    pub fn ingress(&mut self, dev: usize, now: Ps, flits: u64) -> Ps {
+        let g = self.group_of[dev];
+        self.groups[g].ingress(dev, now, flits)
+    }
+
+    /// Charge a device→host crossing back up `dev`'s fabric path.
+    #[inline]
+    pub fn egress(&mut self, dev: usize, now: Ps, flits: u64) -> Ps {
+        let g = self.group_of[dev];
+        self.groups[g].egress(dev, now, flits)
+    }
+
+    /// Minimum host↔device round trip for `dev` (uncontended): the
+    /// parallel engine's causal merge bound. `leaf_one_way` is the
+    /// device link's own propagation (`CxlLink::one_way_ps`).
+    pub fn min_round_trip_ps(&self, dev: usize, leaf_one_way: Ps) -> Ps {
+        let g = self.group_of[dev];
+        2 * (self.groups[g].path_latency_ps(dev) + leaf_one_way)
+    }
+
+    /// `(down busy ps, up busy ps)` per port, in global port order.
+    pub fn port_busys(&self) -> Vec<(Ps, Ps)> {
+        let mut out = vec![(0, 0); self.num_ports()];
+        for g in &self.groups {
+            for (pi, busy) in g.port_busys() {
+                out[pi] = busy;
+            }
+        }
+        out
+    }
+
+    /// Display labels in global port order.
+    pub fn port_labels(&self) -> Vec<String> {
+        let mut out = vec![String::new(); self.num_ports()];
+        for g in &self.groups {
+            for (i, h) in g.hops.iter().enumerate() {
+                out[g.port_base + i] = h.label.clone();
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::ns;
+
+    fn p(kind: FabricKind) -> &'static FabricProfile {
+        FabricProfile::default_for(kind)
+    }
+
+    #[test]
+    fn hop_paths_are_a_bijection_over_the_pool() {
+        // Every device belongs to exactly one group, every path indexes
+        // real hops, and group ownership tiles [0, N) without gaps.
+        for kind in ALL_FABRICS {
+            for radix in [2usize, 3, 4, 8] {
+                for devices in [1usize, 2, 5, 8, 16, 33] {
+                    let f = Fabric::build(kind, radix, p(kind), devices);
+                    let mut owners = vec![0usize; devices];
+                    for (gi, g) in f.groups.iter().enumerate() {
+                        assert!(g.n_devs > 0, "{kind}/{radix}/{devices}: empty group");
+                        for d in g.first_dev..g.first_dev + g.n_devs {
+                            owners[d] += 1;
+                            assert_eq!(f.group_of(d), gi);
+                            let path = &g.paths[d - g.first_dev];
+                            assert_eq!(path.len(), kind.levels());
+                            assert!(path.iter().all(|&h| h < g.hops.len()));
+                        }
+                    }
+                    assert!(
+                        owners.iter().all(|&n| n == 1),
+                        "{kind}/{radix}/{devices}: ownership not a partition: {owners:?}"
+                    );
+                    assert_eq!(f.num_ports(), f.port_labels().len());
+                    assert_eq!(f.num_ports(), f.port_busys().len());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn direct_fabric_is_the_identity() {
+        let mut f = Fabric::direct(4);
+        assert!(f.is_direct());
+        assert_eq!(f.num_ports(), 0);
+        for d in 0..4 {
+            assert_eq!(f.group_of(d), d);
+            assert_eq!(f.ingress(d, 1234, 1), 1234);
+            assert_eq!(f.egress(d, 99, 7), 99);
+            assert_eq!(f.min_round_trip_ps(d, ns(35)), ns(70));
+        }
+    }
+
+    #[test]
+    fn round_trip_accounting_matches_the_calibrated_profiles() {
+        // With the default 70 ns leaf (35 ns one-way), the three
+        // profiles land on the published end-to-end round trips.
+        let leaf = ns(35);
+        let d = Fabric::build(FabricKind::Direct, 4, p(FabricKind::Direct), 4);
+        assert_eq!(d.min_round_trip_ps(0, leaf), ns(70));
+        let s1 = Fabric::build(FabricKind::Switch1, 4, p(FabricKind::Switch1), 8);
+        assert_eq!(s1.min_round_trip_ps(0, leaf), ns(110));
+        let s2 = Fabric::build(FabricKind::Switch2, 2, p(FabricKind::Switch2), 8);
+        assert_eq!(s2.min_round_trip_ps(0, leaf), ns(190));
+
+        // An uncontended crossing charges serialization + hop latency
+        // each way: ingress then egress equals min RT + 2·L flits.
+        let mut s1 = s1;
+        let fl = flit_ps(p(FabricKind::Switch1).port_gbps);
+        let there = s1.ingress(0, 0, 1);
+        assert_eq!(there, fl + ns(20));
+        let back = s1.egress(0, there + leaf * 2, 1);
+        assert_eq!(back, s1.min_round_trip_ps(0, leaf) + 2 * fl);
+    }
+
+    #[test]
+    fn shared_uplink_serializes_devices_behind_it() {
+        // 8 devices behind one radix-8 uplink: simultaneous flits queue
+        // on the shared port, so the k-th crossing finishes k flit
+        // times after the first started (FIFO serialization).
+        let mut f = Fabric::build(FabricKind::Switch1, 8, p(FabricKind::Switch1), 8);
+        assert_eq!(f.num_groups(), 1);
+        let fl = flit_ps(p(FabricKind::Switch1).port_gbps);
+        for d in 0..8 {
+            let t = f.ingress(d, 0, 1);
+            assert_eq!(t, (d as Ps + 1) * fl + ns(20));
+        }
+        // Two radix-4 groups contend independently.
+        let mut f = Fabric::build(FabricKind::Switch1, 4, p(FabricKind::Switch1), 8);
+        assert_eq!(f.num_groups(), 2);
+        assert_eq!(f.ingress(0, 0, 1), f.ingress(4, 0, 1));
+    }
+
+    #[test]
+    fn switch2_geometry_and_port_order() {
+        // 8 devices, radix 2: two L1 groups of 4, each with two L2
+        // switches; 6 ports total, globally ordered group by group.
+        let f = Fabric::build(FabricKind::Switch2, 2, p(FabricKind::Switch2), 8);
+        assert_eq!(f.num_groups(), 2);
+        assert_eq!(f.num_ports(), 6);
+        assert_eq!(
+            f.port_labels(),
+            ["l1s0", "l2s0", "l2s1", "l1s1", "l2s2", "l2s3"]
+        );
+        assert_eq!(f.group_of(3), 0);
+        assert_eq!(f.group_of(4), 1);
+    }
+
+    #[test]
+    fn profiles_resolve_and_default_by_kind() {
+        assert_eq!(Fabric::resolve_profile(FabricKind::Direct, "").name, "direct-70");
+        assert_eq!(
+            Fabric::resolve_profile(FabricKind::Switch1, "").name,
+            "switched-1hop-110"
+        );
+        assert_eq!(
+            Fabric::resolve_profile(FabricKind::Switch2, "").name,
+            "cross-switch-190"
+        );
+        assert_eq!(
+            Fabric::resolve_profile(FabricKind::Switch1, "cross-switch-190").hop_ns,
+            30
+        );
+        assert!(FabricProfile::by_name("nope").is_none());
+        assert!(FabricKind::parse("switch1") == Some(FabricKind::Switch1));
+        assert!(FabricKind::parse("mesh").is_none());
+    }
+}

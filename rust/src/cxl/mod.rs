@@ -5,14 +5,25 @@
 //! Each 64 B flit occupies a direction's bandwidth for its serialization
 //! time; propagation is half the round trip each way.
 
+pub mod fabric;
+
 use crate::sim::{Bandwidth, Ps, Resource, PS_PER_NS};
+
+/// PCIe 5.0 ×8 raw per-direction bandwidth, GB/s (Table 1).
+pub const PCIE5_X8_RAW_GBPS: f64 = 32.0;
+
+/// Usable fraction of raw bandwidth after 64 B flit framing + protocol
+/// overhead: 27/32 = 84.375%, the single place the efficiency factor is
+/// applied (every link and fabric port derives its GB/s from
+/// `PCIE5_X8_RAW_GBPS * LINK_EFFICIENCY`).
+pub const LINK_EFFICIENCY: f64 = 27.0 / 32.0;
 
 #[derive(Clone, Copy, Debug)]
 pub struct CxlConfig {
     /// Round-trip link latency in nanoseconds (Table 1: 70).
     pub round_trip_ns: u64,
-    /// Per-direction link bandwidth in GB/s (PCIe 5.0 ×8 ≈ 32 GB/s raw;
-    /// we charge ~85% flit efficiency → 27 GB/s usable).
+    /// Per-direction link bandwidth in GB/s (PCIe 5.0 ×8 = 32 GB/s raw,
+    /// × [`LINK_EFFICIENCY`] → 27 GB/s usable).
     pub gbps_per_dir: f64,
 }
 
@@ -20,7 +31,7 @@ impl Default for CxlConfig {
     fn default() -> Self {
         Self {
             round_trip_ns: 70,
-            gbps_per_dir: 27.0,
+            gbps_per_dir: PCIE5_X8_RAW_GBPS * LINK_EFFICIENCY,
         }
     }
 }
@@ -39,10 +50,15 @@ pub struct CxlLink {
 /// CXL.mem transfer granule (64 B flit payload).
 pub const FLIT_BYTES: u64 = 64;
 
+/// Serialization time of one 64 B flit at `gbps` GB/s, in ps:
+/// 64 / (GB/s) ns = 64 / gbps × 1000 ps.
+pub fn flit_ps(gbps: f64) -> Ps {
+    (FLIT_BYTES as f64 / gbps * PS_PER_NS as f64) as Ps
+}
+
 impl CxlLink {
     pub fn new(cfg: CxlConfig) -> Self {
-        // ps per 64B flit = 64 / (GB/s) ns = 64 / gbps * 1000 ps.
-        let flit_ps = (FLIT_BYTES as f64 / cfg.gbps_per_dir * PS_PER_NS as f64) as Ps;
+        let flit_ps = flit_ps(cfg.gbps_per_dir);
         Self {
             cfg,
             down: Bandwidth::new(),
@@ -79,6 +95,15 @@ impl CxlLink {
 mod tests {
     use super::*;
     use crate::sim::ns;
+
+    #[test]
+    fn link_efficiency_is_applied_once_and_exactly() {
+        // 27/32 is dyadic, so the product is exactly 27 GB/s — every
+        // existing timing (flit_ps and all pins) is unchanged by naming
+        // the factor.
+        assert_eq!(PCIE5_X8_RAW_GBPS * LINK_EFFICIENCY, 27.0);
+        assert_eq!(CxlConfig::default().gbps_per_dir, 27.0);
+    }
 
     #[test]
     fn round_trip_matches_config() {

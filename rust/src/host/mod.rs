@@ -24,6 +24,14 @@
 //! the routing is the identity map and the run is bit-identical to the
 //! historical single-device host.
 //!
+//! Between the host and each device's link sits the CXL [`Fabric`]
+//! (`cxl::fabric`): every request is charged through its device's
+//! fabric path (shared switch uplink ports + per-hop latency) on the
+//! way down and back up. `fabric=direct` (the default) has zero hops
+//! and reproduces the pre-fabric star bit-identically (pinned by
+//! `tests/fabric.rs`); switched fabrics surface per-port utilization in
+//! [`RunMetrics::ports`] and the telemetry epochs.
+//!
 //! With `intra_threads > 1` and a multi-device pool, the intra-run
 //! engine in [`parallel`] shards the device models across worker
 //! threads while this module's scheduler keeps making every
@@ -38,11 +46,12 @@ use std::collections::BinaryHeap;
 
 use crate::compress::PageSizes;
 use crate::config::SimConfig;
+use crate::cxl::fabric::{Fabric, FabricKind};
 use crate::expander::{ContentOracle, SchemeSnapshot};
 use crate::rng::Pcg64;
 use crate::sim::{Ps, CORE_CLK_PS, PS_PER_NS};
 use crate::stats::LatencyHist;
-use crate::telemetry::{DeviceCum, Sampler, Series, TenantCum};
+use crate::telemetry::{DeviceCum, PortCum, Sampler, Series, TenantCum};
 use crate::topology::{DevicePool, Interleave};
 use crate::workload::{Mix, RequestSource, RunPlan, Trace, WorkloadSpec};
 
@@ -335,6 +344,20 @@ pub struct RunMetrics {
     pub tenants: Vec<TenantMetrics>,
     /// Per-device rows (one entry for a classic single-device run).
     pub devices: Vec<DeviceLaneMetrics>,
+    /// Per-fabric-port rows (shared switch uplinks, in global port
+    /// order; empty under `fabric=direct`, which has no shared hops).
+    pub ports: Vec<PortMetrics>,
+}
+
+/// One shared fabric port's measured-phase utilization.
+#[derive(Clone, Debug)]
+pub struct PortMetrics {
+    /// Display label (`sw0`, `l1s0`, `l2s3`, ...).
+    pub label: String,
+    /// Host→device direction busy fraction of the measured window.
+    pub down_utilization: f64,
+    /// Device→host direction busy fraction of the measured window.
+    pub up_utilization: f64,
 }
 
 impl RunMetrics {
@@ -416,6 +439,27 @@ impl<'a> HostSim<'a> {
                 "trace topology (devices={}, interleave={}) does not match \
                  configured topology (devices={}, interleave={})",
                 trace.devices, trace.interleave, cfg.devices, cfg.interleave
+            ));
+        }
+        // Fabric mismatch would silently re-time every shared-port
+        // queue; refuse like a topology mismatch. Radix and profile
+        // only matter once switches exist (profiles compared resolved,
+        // so empty-vs-explicit-default is a match).
+        let fabric_mismatch = trace.fabric != cfg.fabric
+            || (cfg.fabric != FabricKind::Direct
+                && (trace.switch_radix != cfg.switch_radix
+                    || Fabric::resolve_profile(trace.fabric, &trace.fabric_profile).name
+                        != Fabric::resolve_profile(cfg.fabric, &cfg.fabric_profile).name));
+        if fabric_mismatch {
+            return Err(format!(
+                "trace fabric (fabric={}, switch_radix={}, profile={}) does not \
+                 match configured fabric (fabric={}, switch_radix={}, profile={})",
+                trace.fabric,
+                trace.switch_radix,
+                Fabric::resolve_profile(trace.fabric, &trace.fabric_profile).name,
+                cfg.fabric,
+                cfg.switch_radix,
+                Fabric::resolve_profile(cfg.fabric, &cfg.fabric_profile).name,
             ));
         }
         let plan = RunPlan::new(&trace.mix, trace.scale);
@@ -532,6 +576,7 @@ impl<'a> HostSim<'a> {
                 )
             })
             .collect();
+        let warm_ports: Vec<(Ps, Ps)> = pool.fabric.port_busys();
         let warm_lane: Vec<(u64, u64, u64)> = self
             .lanes
             .iter()
@@ -645,6 +690,21 @@ impl<'a> HostSim<'a> {
             })
             .collect();
 
+        // Shared fabric ports take the same warmup-snapshot subtraction
+        // and horizon as the per-device link lanes.
+        let ports: Vec<PortMetrics> = pool
+            .fabric
+            .port_labels()
+            .into_iter()
+            .zip(pool.fabric.port_busys())
+            .zip(&warm_ports)
+            .map(|((label, (down, up)), &(wdown, wup))| PortMetrics {
+                label,
+                down_utilization: ((down - wdown) as f64 / horizon as f64).min(1.0),
+                up_utilization: ((up - wup) as f64 / horizon as f64).min(1.0),
+            })
+            .collect();
+
         RunMetrics {
             instructions: tenants.iter().map(|t| t.instructions).sum(),
             elapsed_ps,
@@ -654,6 +714,7 @@ impl<'a> HostSim<'a> {
             compression_ratio: pool.compression_ratio(),
             tenants,
             devices,
+            ports,
         }
     }
 
@@ -697,15 +758,22 @@ impl<'a> HostSim<'a> {
             .iter()
             .map(|d| (d.scheme.snapshot(), d.link.down.busy))
             .collect();
-        self.sample_with(&dev_data, warmup, flush);
+        let ports = pool.fabric.port_busys();
+        self.sample_with(&dev_data, &ports, warmup, flush);
     }
 
     /// Epoch-assembly core shared by both engines: combine externally
     /// collected device state (scheme snapshot + downlink busy time —
     /// read straight off the pool on the sequential path, gathered via
-    /// the worker snapshot barrier on the parallel path) with the
-    /// scheduler-side lane/core bookkeeping.
-    fn sample_with(&mut self, dev_data: &[(SchemeSnapshot, Ps)], warmup: bool, flush: bool) {
+    /// the worker snapshot barrier on the parallel path) and fabric
+    /// port busy times with the scheduler-side lane/core bookkeeping.
+    fn sample_with(
+        &mut self,
+        dev_data: &[(SchemeSnapshot, Ps)],
+        port_data: &[(Ps, Ps)],
+        warmup: bool,
+        flush: bool,
+    ) {
         let insts = self.retired();
         let t = self.elapsed();
         let devices: Vec<DeviceCum> = dev_data
@@ -741,11 +809,18 @@ impl<'a> HostSim<'a> {
             row.instructions += c.insts;
             row.lat.merge(&c.lat);
         }
+        let ports: Vec<PortCum> = port_data
+            .iter()
+            .map(|&(down, up)| PortCum {
+                down_busy_ps: down,
+                up_busy_ps: up,
+            })
+            .collect();
         let sampler = self.sampler.as_mut().expect("sampler checked by caller");
         if flush {
-            sampler.flush(insts, t, warmup, devices, tenants);
+            sampler.flush(insts, t, warmup, devices, tenants, ports);
         } else {
-            sampler.sample(insts, t, warmup, devices, tenants);
+            sampler.sample(insts, t, warmup, devices, tenants, ports);
         }
     }
 
@@ -771,7 +846,10 @@ impl<'a> HostSim<'a> {
         insts_target: u64,
         measure: bool,
     ) {
-        let workers = self.intra_threads.min(pool.len());
+        // Workers shard whole fabric groups (a shared switch port must
+        // stay on one thread); direct fabrics have one group per device,
+        // so this is the historical pool-width clamp there.
+        let workers = self.intra_threads.min(pool.fabric.num_groups());
         if workers > 1 {
             parallel::phase(self, pool, oracle, insts_target, measure, workers);
         } else {
@@ -819,8 +897,11 @@ impl<'a> HostSim<'a> {
             core.count_issue(tr.write);
             let t_issue = core.t;
             let (dev, local) = self.interleave.route(tr.ospn);
+            // Host→device: fabric hops (shared switch ports; identity
+            // under fabric=direct), then the device's own link.
+            let at_port = pool.fabric.ingress(dev, t_issue, 1);
             let device = &mut pool.devices[dev];
-            let at_device = device.link.ingress(t_issue, 1);
+            let at_device = device.link.ingress(at_port, 1);
             let ready = if self.interleave.devices() == 1 {
                 // Identity routing: skip the translation wrapper on the
                 // default single-device hot path.
@@ -838,7 +919,9 @@ impl<'a> HostSim<'a> {
                     .scheme
                     .access(at_device, local, tr.line, tr.write, &mut routed)
             };
-            let done = device.link.egress(ready, 1);
+            // Device→host: back over the link, then up the fabric path.
+            let at_host_port = device.link.egress(ready, 1);
+            let done = pool.fabric.egress(dev, at_host_port, 1);
             let lane = &mut self.lanes[dev];
             lane.count_issue(tr.write);
             let core = &mut self.cores[ci];

@@ -14,19 +14,22 @@
 //!   the same order as the sequential loop. Workers only evaluate the
 //!   device models (link serialization + scheme access), which are pure
 //!   functions of their own per-device request order.
-//! * **Per-device request order is preserved.** Each device lives on
-//!   exactly one worker (`dev % workers`, see
-//!   [`DevicePool::split_mut`]); jobs travel over a per-worker FIFO
-//!   channel, so each device sees its requests in global issue order —
-//!   the sequential order restricted to that device — and its link and
-//!   scheme state evolve identically.
+//! * **Per-resource request order is preserved.** Each fabric group —
+//!   a shared switch uplink subtree plus every device beneath it; one
+//!   group per device under `fabric=direct` — lives on exactly one
+//!   worker (`group % workers`, see [`DevicePool::split_mut`]); jobs
+//!   travel over a per-worker FIFO channel, so each device *and each
+//!   shared fabric port* sees its requests in global issue order — the
+//!   sequential order restricted to that resource — and its link, hop
+//!   and scheme state evolve identically.
 //! * **Completion times are merged by `(timestamp, device)` with a
 //!   causal lookahead.** A reply can only matter to a core decision at
 //!   time `t` if its completion is `<= t`, and every completion is at
-//!   least `t_issue + 2·one_way` (each link direction adds a full
-//!   propagation delay on top of serialization). The scheduler keeps
-//!   that lower bound per outstanding miss and only waits for a reply
-//!   when the bound says it could be relevant — ordering by
+//!   least `t_issue +` the device's minimum fabric round trip (each
+//!   link direction and fabric hop adds a full propagation delay on
+//!   top of serialization; `Fabric::min_round_trip_ps`). The scheduler
+//!   keeps that lower bound per outstanding miss and only waits for a
+//!   reply when the bound says it could be relevant — ordering by
 //!   `(done, device)`, exactly the sequential `BinaryHeap` key.
 //! * **Epoch boundaries are barriers.** Before a telemetry sample, a
 //!   `Snapshot` job is sent down every worker FIFO; per-sender channel
@@ -54,7 +57,7 @@ use std::sync::Mutex;
 
 use crate::expander::{BatchAccess, ContentOracle, SchemeSnapshot};
 use crate::sim::{FxHashMap, Ps};
-use crate::topology::{Device, DevicePool, Interleave};
+use crate::topology::{DevicePool, Interleave, PoolShard};
 
 use super::{Core, HostSim, Lane, RoutedOracle};
 
@@ -72,14 +75,23 @@ enum Job {
         write: bool,
     },
     /// Telemetry barrier: report every owned device's scheme snapshot
-    /// and downlink busy time, after all previously queued requests.
+    /// and downlink busy time (plus every owned fabric port's busy
+    /// times), after all previously queued requests.
     Snapshot,
 }
 
 /// Worker → scheduler replies (one shared channel).
 enum Reply {
-    Done { req_id: u64, done: Ps },
-    Snap(Vec<(usize, SchemeSnapshot, Ps)>),
+    Done {
+        req_id: u64,
+        done: Ps,
+    },
+    Snap {
+        devices: Vec<(usize, SchemeSnapshot, Ps)>,
+        /// `(global port index, (down busy, up busy))` for the shard's
+        /// fabric hops.
+        ports: Vec<(usize, (Ps, Ps))>,
+    },
 }
 
 /// One outstanding miss on the scheduler side. `lb` is the causal lower
@@ -107,12 +119,12 @@ struct Merge {
     /// Completion times received but not yet claimed by the scheduler.
     resolved: FxHashMap<u64, Ps>,
     /// Snapshot replies collected during the current barrier.
-    snaps: Vec<Vec<(usize, SchemeSnapshot, Ps)>>,
+    snaps: Vec<(Vec<(usize, SchemeSnapshot, Ps)>, Vec<(usize, (Ps, Ps))>)>,
     measure: bool,
-    /// `2 · one_way`: every completion satisfies
-    /// `done >= t_issue + lookahead` (asserted on receive) — the bound
-    /// that lets the drain skip replies that cannot matter yet.
-    lookahead: Ps,
+    /// Per-device minimum fabric round trip: every completion satisfies
+    /// `done >= t_issue + lookahead[dev]` (asserted on receive) — the
+    /// bound that lets the drain skip replies that cannot matter yet.
+    lookahead: Vec<Ps>,
 }
 
 impl Merge {
@@ -129,8 +141,8 @@ impl Merge {
                     .remove(&req_id)
                     .expect("reply for unknown request");
                 debug_assert!(
-                    done >= f.t_issue + self.lookahead,
-                    "completion violates the link-latency lower bound"
+                    done >= f.t_issue + self.lookahead[f.dev as usize],
+                    "completion violates the fabric round-trip lower bound"
                 );
                 if self.measure {
                     let ns = done.saturating_sub(f.t_issue) / crate::sim::PS_PER_NS;
@@ -139,7 +151,7 @@ impl Merge {
                 }
                 self.resolved.insert(req_id, done);
             }
-            Reply::Snap(data) => self.snaps.push(data),
+            Reply::Snap { devices, ports } => self.snaps.push((devices, ports)),
         }
     }
 
@@ -186,8 +198,8 @@ fn drain(
 /// Parallel counterpart of [`HostSim::phase`]: advance every core to
 /// `insts_target` retired instructions with the device models sharded
 /// over `workers` threads (spawned for this phase, joined before
-/// returning). `workers` is already clamped to the pool width and
-/// `> 1` by the dispatcher.
+/// returning). `workers` is already clamped to the fabric group count
+/// and `> 1` by the dispatcher.
 pub(super) fn phase(
     sim: &mut HostSim<'_>,
     pool: &mut DevicePool,
@@ -201,10 +213,19 @@ pub(super) fn phase(
     let dep_fraction = sim.cfg.dep_fraction;
     let map = sim.interleave;
     let ndev = pool.len();
-    // Identical link config on every device; each direction adds a full
-    // one-way propagation on top of serialization, so no completion can
-    // precede `t_issue + 2·one_way`.
-    let lookahead = 2 * pool.devices[0].link.one_way_ps();
+    let nports = pool.fabric.num_ports();
+    // Identical link config on every device; each link direction and
+    // fabric hop adds a full one-way propagation on top of
+    // serialization, so no completion can precede `t_issue +` the
+    // device's minimum fabric round trip (2·one_way under the direct
+    // star).
+    let leaf_one_way = pool.devices[0].link.one_way_ps();
+    let lookahead: Vec<Ps> = (0..ndev)
+        .map(|d| pool.fabric.min_round_trip_ps(d, leaf_one_way))
+        .collect();
+    // Worker routing: every device of a fabric group shares a worker,
+    // so shared switch ports see the sequential acquire order.
+    let group_of: Vec<usize> = (0..ndev).map(|d| pool.fabric.group_of(d)).collect();
 
     let oracle = Mutex::new(oracle);
     let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
@@ -280,7 +301,7 @@ pub(super) fn phase(
                     t_issue,
                 },
             );
-            job_txs[dev % workers]
+            job_txs[group_of[dev] % workers]
                 .send(Job::Req {
                     req_id,
                     dev,
@@ -301,7 +322,7 @@ pub(super) fn phase(
                 out[ci].push(OutEntry {
                     req_id,
                     dev: dev as u32,
-                    lb: t_issue + lookahead,
+                    lb: t_issue + merge.lookahead[dev],
                     done: None,
                 });
                 sim.lanes[dev].push_outstanding();
@@ -313,14 +334,15 @@ pub(super) fn phase(
                     None => false,
                 };
                 if due {
-                    let dev_data = snapshot_barrier(
+                    let (dev_data, port_data) = snapshot_barrier(
                         &job_txs,
                         &mut merge,
                         &mut sim.cores,
                         &mut sim.lanes,
                         ndev,
+                        nports,
                     );
-                    sim.sample_with(&dev_data, !measure, false);
+                    sim.sample_with(&dev_data, &port_data, !measure, false);
                 }
             }
         }
@@ -365,7 +387,8 @@ fn snapshot_barrier(
     cores: &mut [Core],
     lanes: &mut [Lane],
     ndev: usize,
-) -> Vec<(SchemeSnapshot, Ps)> {
+    nports: usize,
+) -> (Vec<(SchemeSnapshot, Ps)>, Vec<(Ps, Ps)>) {
     for tx in job_txs {
         tx.send(Job::Snapshot).expect("worker thread terminated early");
     }
@@ -374,31 +397,40 @@ fn snapshot_barrier(
         merge.handle(reply, cores, lanes);
     }
     let mut slots: Vec<Option<(SchemeSnapshot, Ps)>> = (0..ndev).map(|_| None).collect();
-    for shard in merge.snaps.drain(..) {
-        for (di, snap, busy) in shard {
+    let mut port_slots: Vec<(Ps, Ps)> = vec![(0, 0); nports];
+    for (shard_devs, shard_ports) in merge.snaps.drain(..) {
+        for (di, snap, busy) in shard_devs {
             slots[di] = Some((snap, busy));
         }
+        for (pi, busy) in shard_ports {
+            port_slots[pi] = busy;
+        }
     }
-    slots
+    let devs = slots
         .into_iter()
         .map(|s| s.expect("snapshot barrier missed a device"))
-        .collect()
+        .collect();
+    (devs, port_slots)
 }
 
-/// Device-shard worker: drain the job FIFO, evaluate maximal
-/// same-device runs as one batch (ingress serialization in issue order,
-/// one oracle lock + one [`access_batch`] call per run, then egress),
-/// and reply with completion times in issue order.
+/// Fabric-shard worker: drain the job FIFO, evaluate maximal
+/// same-device runs as one batch (fabric-hop then link ingress
+/// serialization in issue order, one oracle lock + one [`access_batch`]
+/// call per run, then link and fabric egress), and reply with
+/// completion times in issue order.
 ///
-/// Splitting a run into its three stages is exact: the downlink only
-/// evolves through `ingress` calls, the scheme only through `access`
-/// calls with the ingress results, and the uplink only through `egress`
-/// calls with the scheme results — each resource sees the same call
-/// sequence with the same arguments as the interleaved sequential loop.
+/// Splitting a run into its five stages is exact: each directional
+/// resource — every shared hop port on the device's fabric path, the
+/// downlink, the scheme, the uplink, the hop ports again — only evolves
+/// through its own stage's calls, and a run is processed in batch
+/// order, so each resource sees the same call sequence with the same
+/// arguments as the interleaved sequential loop. Shared hop ports are
+/// safe because a group's devices all live on this worker, so
+/// cross-device order on a shared port is the FIFO (= issue) order.
 ///
 /// [`access_batch`]: crate::expander::Scheme::access_batch
 fn worker(
-    mut devices: Vec<(usize, &mut Device)>,
+    mut shard: PoolShard<'_>,
     rx: Receiver<Job>,
     tx: Sender<Reply>,
     oracle: &Mutex<&mut dyn ContentOracle>,
@@ -420,11 +452,17 @@ fn worker(
         while i < batch.len() {
             match batch[i] {
                 Job::Snapshot => {
-                    let data = devices
+                    let devices = shard
+                        .devices
                         .iter()
                         .map(|(di, d)| (*di, d.scheme.snapshot(), d.link.down.busy))
                         .collect();
-                    if tx.send(Reply::Snap(data)).is_err() {
+                    let ports = shard
+                        .groups
+                        .iter()
+                        .flat_map(|(_, g)| g.port_busys())
+                        .collect();
+                    if tx.send(Reply::Snap { devices, ports }).is_err() {
                         return;
                     }
                     i += 1;
@@ -458,11 +496,21 @@ fn worker(
                         });
                         j += 1;
                     }
-                    let slot = devices
+                    let gslot = shard
+                        .groups
+                        .iter()
+                        .position(|(_, g)| g.owns(dev))
+                        .expect("request routed to a worker without its group");
+                    let slot = shard
+                        .devices
                         .iter()
                         .position(|(di, _)| *di == dev)
                         .expect("request routed to the wrong worker");
-                    let device = &mut *devices[slot].1;
+                    let group = &mut *shard.groups[gslot].1;
+                    let device = &mut *shard.devices[slot].1;
+                    for a in accs.iter_mut() {
+                        a.now = group.ingress(dev, a.now, 1);
+                    }
                     for a in accs.iter_mut() {
                         a.now = device.link.ingress(a.now, 1);
                     }
@@ -476,7 +524,8 @@ fn worker(
                         device.scheme.access_batch(&mut accs, &mut routed);
                     }
                     for (k, a) in accs.iter().enumerate() {
-                        let done = device.link.egress(a.ready, 1);
+                        let at_host_port = device.link.egress(a.ready, 1);
+                        let done = group.egress(dev, at_host_port, 1);
                         if tx
                             .send(Reply::Done {
                                 req_id: ids[k],

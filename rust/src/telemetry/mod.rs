@@ -103,6 +103,17 @@ pub struct TenantCum {
     pub lat: LatencyHist,
 }
 
+/// Cumulative busy time of one fabric switch port at an epoch boundary
+/// ([`crate::cxl::fabric::Fabric::port_busys`]). Empty for `fabric=direct`
+/// pools, which have no intermediate hops.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PortCum {
+    /// Host→device direction busy time, ps.
+    pub down_busy_ps: Ps,
+    /// Device→host direction busy time, ps.
+    pub up_busy_ps: Ps,
+}
+
 /// One device's share of one epoch (windowed deltas + end-of-epoch
 /// gauges).
 #[derive(Clone, Debug)]
@@ -121,6 +132,19 @@ pub struct DeviceEpoch {
     pub peak_outstanding: usize,
     /// Host-observed round trips completed in this window.
     pub lat: LatencyHist,
+}
+
+/// One fabric switch port's share of one epoch: windowed busy fraction
+/// per direction, the signal that exposes oversubscribed uplinks
+/// (several devices funneling through one switch port).
+#[derive(Clone, Debug)]
+pub struct PortEpoch {
+    /// Index into [`crate::cxl::fabric::Fabric::port_labels`].
+    pub port: usize,
+    /// Host→device busy fraction over the window.
+    pub down_utilization: f64,
+    /// Device→host busy fraction over the window.
+    pub up_utilization: f64,
 }
 
 /// One tenant's share of one epoch.
@@ -150,6 +174,8 @@ pub struct Epoch {
     pub d_ps: Ps,
     pub devices: Vec<DeviceEpoch>,
     pub tenants: Vec<TenantEpoch>,
+    /// Per-fabric-port lanes; empty for `fabric=direct`.
+    pub ports: Vec<PortEpoch>,
 }
 
 impl Epoch {
@@ -197,6 +223,7 @@ pub struct Sampler {
     prev_t_ps: Ps,
     prev_devices: Vec<DeviceCum>,
     prev_tenants: Vec<TenantCum>,
+    prev_ports: Vec<PortCum>,
     series: Series,
 }
 
@@ -211,6 +238,7 @@ impl Sampler {
             prev_t_ps: 0,
             prev_devices: Vec::new(),
             prev_tenants: Vec::new(),
+            prev_ports: Vec::new(),
             series: Series {
                 unit,
                 every,
@@ -257,6 +285,7 @@ impl Sampler {
         warmup: bool,
         devices: Vec<DeviceCum>,
         tenants: Vec<TenantCum>,
+        ports: Vec<PortCum>,
     ) {
         let dev_rows = devices
             .iter()
@@ -297,6 +326,26 @@ impl Sampler {
                 }
             })
             .collect();
+        let d_ps = t_ps.saturating_sub(self.prev_t_ps);
+        let port_rows = ports
+            .iter()
+            .enumerate()
+            .map(|(pi, cum)| {
+                let prev = self.prev_ports.get(pi).copied().unwrap_or_default();
+                let frac = |busy: Ps, prev_busy: Ps| {
+                    if d_ps == 0 {
+                        0.0
+                    } else {
+                        ((busy - prev_busy) as f64 / d_ps as f64).min(1.0)
+                    }
+                };
+                PortEpoch {
+                    port: pi,
+                    down_utilization: frac(cum.down_busy_ps, prev.down_busy_ps),
+                    up_utilization: frac(cum.up_busy_ps, prev.up_busy_ps),
+                }
+            })
+            .collect();
         self.series.epochs.push(Epoch {
             index: self.series.epochs.len(),
             warmup,
@@ -306,11 +355,13 @@ impl Sampler {
             d_ps: t_ps.saturating_sub(self.prev_t_ps),
             devices: dev_rows,
             tenants: tenant_rows,
+            ports: port_rows,
         });
         self.prev_insts = insts;
         self.prev_t_ps = t_ps;
         self.prev_devices = devices;
         self.prev_tenants = tenants;
+        self.prev_ports = ports;
         // Skip past every boundary the window already crossed (one
         // epoch per sampling opportunity, not per multiple of `every` —
         // a long stall yields one wide epoch, not a run of empty ones).
@@ -328,9 +379,10 @@ impl Sampler {
         warmup: bool,
         devices: Vec<DeviceCum>,
         tenants: Vec<TenantCum>,
+        ports: Vec<PortCum>,
     ) {
         if insts > self.prev_insts || t_ps > self.prev_t_ps {
-            self.sample(insts, t_ps, warmup, devices, tenants);
+            self.sample(insts, t_ps, warmup, devices, tenants, ports);
         }
     }
 
@@ -373,9 +425,9 @@ mod tests {
         let mut s = Sampler::new(SampleUnit::Instructions, 1000);
         assert!(!s.due(999, 0));
         assert!(s.due(1000, 0));
-        s.sample(1000, 50_000, true, vec![dev_cum(10, 100, 5_000)], vec![]);
+        s.sample(1000, 50_000, true, vec![dev_cum(10, 100, 5_000)], vec![], vec![]);
         assert!(!s.due(1500, 0));
-        s.sample(2500, 150_000, false, vec![dev_cum(25, 160, 45_000)], vec![]);
+        s.sample(2500, 150_000, false, vec![dev_cum(25, 160, 45_000)], vec![], vec![]);
         let series = s.into_series();
         assert_eq!(series.epochs.len(), 2);
         let e0 = &series.epochs[0];
@@ -401,7 +453,7 @@ mod tests {
     fn sampler_skips_crossed_boundaries() {
         let mut s = Sampler::new(SampleUnit::Instructions, 100);
         // One giant step over many boundaries yields ONE wide epoch.
-        s.sample(1050, 10, false, vec![], vec![]);
+        s.sample(1050, 10, false, vec![], vec![], vec![]);
         assert!(!s.due(1099, 0));
         assert!(s.due(1100, 0));
         assert_eq!(s.series.epochs.len(), 1);
@@ -411,15 +463,34 @@ mod tests {
     #[test]
     fn flush_skips_empty_windows() {
         let mut s = Sampler::new(SampleUnit::Nanos, 1000);
-        s.sample(500, 1_000_000, false, vec![dev_cum(5, 10, 0)], vec![]);
+        s.sample(500, 1_000_000, false, vec![dev_cum(5, 10, 0)], vec![], vec![]);
         // Nothing since the boundary: flush is a no-op.
-        s.flush(500, 1_000_000, false, vec![dev_cum(5, 10, 0)], vec![]);
+        s.flush(500, 1_000_000, false, vec![dev_cum(5, 10, 0)], vec![], vec![]);
         assert_eq!(s.series.epochs.len(), 1);
         // Progress since: flush records a partial epoch.
-        s.flush(600, 1_200_000, false, vec![dev_cum(9, 14, 0)], vec![]);
+        s.flush(600, 1_200_000, false, vec![dev_cum(9, 14, 0)], vec![], vec![]);
         assert_eq!(s.series.epochs.len(), 2);
         assert_eq!(s.series.epochs[1].d_insts, 100);
         assert_eq!(s.series.epochs[1].devices[0].requests, 4);
+    }
+
+    #[test]
+    fn sampler_windows_port_utilization() {
+        let mut s = Sampler::new(SampleUnit::Instructions, 1000);
+        let port = |d: Ps, u: Ps| PortCum {
+            down_busy_ps: d,
+            up_busy_ps: u,
+        };
+        s.sample(1000, 100_000, false, vec![], vec![], vec![port(10_000, 0)]);
+        s.sample(2000, 200_000, false, vec![], vec![], vec![port(35_000, 120_000)]);
+        let series = s.into_series();
+        assert!(series.epochs[0].ports[0].up_utilization == 0.0);
+        let e1 = &series.epochs[1];
+        assert_eq!(e1.ports[0].port, 0);
+        // Delta 25_000 ps busy over a 100_000 ps window.
+        assert!((e1.ports[0].down_utilization - 0.25).abs() < 1e-12);
+        // Utilization is clamped to 1.0 even if busy outruns the window.
+        assert_eq!(e1.ports[0].up_utilization, 1.0);
     }
 
     #[test]

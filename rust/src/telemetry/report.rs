@@ -15,7 +15,8 @@ use std::path::Path;
 
 use crate::config::SimConfig;
 use crate::coordinator::JobResult;
-use crate::host::{DeviceLaneMetrics, TenantMetrics};
+use crate::cxl::fabric::Fabric;
+use crate::host::{DeviceLaneMetrics, PortMetrics, TenantMetrics};
 use crate::mem::MEM_KINDS;
 use crate::stats::{LatencyHist, Table};
 
@@ -139,6 +140,14 @@ fn device_json(d: &DeviceLaneMetrics) -> Json {
     j
 }
 
+fn port_json(p: &PortMetrics) -> Json {
+    let mut j = Json::object();
+    j.set("label", p.label.as_str())
+        .set("down_utilization", p.down_utilization)
+        .set("up_utilization", p.up_utilization);
+    j
+}
+
 fn epoch_json(e: &Epoch, tenant_names: &[String]) -> Json {
     let mut j = Json::object();
     j.set("index", e.index)
@@ -199,6 +208,18 @@ fn epoch_json(e: &Epoch, tenant_names: &[String]) -> Json {
         })
         .collect();
     j.set("tenants", tenants);
+    let ports: Vec<Json> = e
+        .ports
+        .iter()
+        .map(|p| {
+            let mut pj = Json::object();
+            pj.set("port", p.port)
+                .set("down_utilization", p.down_utilization)
+                .set("up_utilization", p.up_utilization);
+            pj
+        })
+        .collect();
+    j.set("ports", ports);
     j
 }
 
@@ -279,6 +300,10 @@ fn job_json(r: &JobResult) -> Json {
         .set(
             "devices",
             m.devices.iter().map(device_json).collect::<Vec<_>>(),
+        )
+        .set(
+            "ports",
+            m.ports.iter().map(port_json).collect::<Vec<_>>(),
         );
     match &r.series {
         Some(series) => {
@@ -307,6 +332,22 @@ pub fn run_report(cfg: &SimConfig, results: &[JobResult]) -> Json {
     topology
         .set("devices", cfg.devices)
         .set("interleave", cfg.interleave.name());
+    // Fabric sub-block: kind, radix, resolved profile + global port
+    // labels, so consumers can map per-port rows back to switch ports.
+    let fabric = Fabric::from_config(cfg);
+    let mut fj = Json::object();
+    fj.set("kind", fabric.kind.name())
+        .set("switch_radix", cfg.switch_radix as u64)
+        .set("profile", fabric.profile.name)
+        .set(
+            "ports",
+            fabric
+                .port_labels()
+                .iter()
+                .map(|l| Json::from(l.as_str()))
+                .collect::<Vec<_>>(),
+        );
+    topology.set("fabric", fj);
     let mut j = Json::object();
     j.set("schema_version", REPORT_SCHEMA_VERSION)
         .set("tool", "ibex")
@@ -430,7 +471,7 @@ mod tests {
                 requests: reqs,
                 instructions: i * 1000,
                 ..Default::default()
-            }]);
+            }], vec![]);
         };
         push(&mut s, 1, true, 500);
         push(&mut s, 2, false, 3000); // overflow burst
@@ -457,10 +498,10 @@ mod tests {
         assert_eq!(steady_epochs(&empty), None);
         // All-warmup series: no measured epochs.
         let mut s = Sampler::new(SampleUnit::Instructions, 10);
-        s.sample(10, 10, true, vec![], vec![]);
+        s.sample(10, 10, true, vec![], vec![], vec![]);
         assert_eq!(steady_epochs(&s.clone().into_series()), None);
         // A single measured epoch IS the steady state.
-        s.sample(20, 20, false, vec![], vec![]);
+        s.sample(20, 20, false, vec![], vec![], vec![]);
         assert_eq!(steady_epochs(&s.into_series()), Some((1, 2)));
     }
 

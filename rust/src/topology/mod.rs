@@ -26,6 +26,7 @@
 use std::fmt;
 
 use crate::config::SimConfig;
+use crate::cxl::fabric::{Fabric, FabricGroup};
 use crate::cxl::CxlLink;
 use crate::expander::{build_scheme_sized, DeviceStats, Scheme};
 
@@ -167,9 +168,22 @@ pub struct Device {
 
 /// The pool of expander devices a run drives. Built from `cfg.devices`
 /// identical instances (each with `cfg.device_bytes` of capacity, so
-/// pooled capacity scales linearly with the pool width).
+/// pooled capacity scales linearly with the pool width), connected to
+/// the host through a [`Fabric`] (zero-hop star by default; shared
+/// switch ports under `fabric=switch1|switch2`).
 pub struct DevicePool {
     pub devices: Vec<Device>,
+    pub fabric: Fabric,
+}
+
+/// One worker's slice of the pool for the parallel intra-run engine:
+/// whole fabric groups plus every device they own, tagged with their
+/// global indices. Keeping a group's shared hops and its devices on one
+/// worker is what preserves the sequential acquire order on contended
+/// switch ports.
+pub struct PoolShard<'p> {
+    pub groups: Vec<(usize, &'p mut FabricGroup)>,
+    pub devices: Vec<(usize, &'p mut Device)>,
 }
 
 impl DevicePool {
@@ -205,6 +219,7 @@ impl DevicePool {
                     scheme: build_scheme_sized(cfg, pages_hint),
                 })
                 .collect(),
+            fabric: Fabric::from_config(cfg),
         }
     }
 
@@ -216,6 +231,12 @@ impl DevicePool {
                 link: CxlLink::new(cfg.cxl),
                 scheme,
             }],
+            fabric: Fabric::build(
+                cfg.fabric,
+                cfg.switch_radix,
+                Fabric::resolve_profile(cfg.fabric, &cfg.fabric_profile),
+                1,
+            ),
         }
     }
 
@@ -224,17 +245,27 @@ impl DevicePool {
     }
 
     /// Partition the pool into `ways` disjoint mutable shards for the
-    /// parallel intra-run engine: device `i` lands in shard `i % ways`,
-    /// matching the scheduler's `dev % workers` routing, so consecutive
-    /// — under round-robin interleave, equally loaded — devices spread
-    /// across workers. `ways` is clamped to the pool width; every shard
-    /// returned is non-empty.
-    pub fn split_mut(&mut self, ways: usize) -> Vec<Vec<(usize, &mut Device)>> {
-        let ways = ways.clamp(1, self.devices.len().max(1));
-        let mut shards: Vec<Vec<(usize, &mut Device)>> =
-            (0..ways).map(|_| Vec::new()).collect();
+    /// parallel intra-run engine: fabric group `g` (and every device it
+    /// owns) lands in shard `g % ways`, matching the scheduler's
+    /// `group % workers` routing. Under `fabric=direct` each device is
+    /// its own group, so this degenerates to the historical `dev %
+    /// ways` round-robin; switched fabrics keep a shared uplink and all
+    /// devices behind it on one worker, preserving the sequential
+    /// acquire order on contended ports. `ways` is clamped to the group
+    /// count; every shard returned is non-empty.
+    pub fn split_mut(&mut self, ways: usize) -> Vec<PoolShard<'_>> {
+        let ways = ways.clamp(1, self.fabric.num_groups().max(1));
+        let group_of: Vec<usize> = (0..self.devices.len())
+            .map(|d| self.fabric.group_of(d))
+            .collect();
+        let mut shards: Vec<PoolShard<'_>> = (0..ways)
+            .map(|_| PoolShard { groups: Vec::new(), devices: Vec::new() })
+            .collect();
+        for (g, grp) in self.fabric.groups.iter_mut().enumerate() {
+            shards[g % ways].groups.push((g, grp));
+        }
         for (i, d) in self.devices.iter_mut().enumerate() {
-            shards[i % ways].push((i, d));
+            shards[group_of[i] % ways].devices.push((i, d));
         }
         shards
     }
@@ -391,14 +422,38 @@ mod tests {
         assert_eq!(shards.len(), 2);
         let idx: Vec<Vec<usize>> = shards
             .iter()
-            .map(|s| s.iter().map(|(i, _)| *i).collect())
+            .map(|s| s.devices.iter().map(|(i, _)| *i).collect())
             .collect();
         assert_eq!(idx, vec![vec![0, 2, 4], vec![1, 3]]);
-        // Requesting more ways than devices clamps; every shard stays
+        // Requesting more ways than groups clamps; every shard stays
         // non-empty (the engine spawns one worker per shard).
         let shards = pool.split_mut(16);
         assert_eq!(shards.len(), 5);
-        assert!(shards.iter().all(|s| s.len() == 1));
+        assert!(shards.iter().all(|s| s.devices.len() == 1));
+    }
+
+    #[test]
+    fn split_mut_keeps_fabric_groups_whole() {
+        // Two radix-4 switch groups over 8 devices: a shard owns either
+        // all of a group's devices or none of them, and the group's
+        // hops travel with its devices.
+        let mut cfg = SimConfig::test_small();
+        cfg.devices = 8;
+        cfg.set("fabric", "switch1").unwrap();
+        cfg.set("switch_radix", "4").unwrap();
+        let mut pool = DevicePool::build(&cfg);
+        assert_eq!(pool.fabric.num_groups(), 2);
+        // 4 requested ways clamp to the 2 groups.
+        let shards = pool.split_mut(4);
+        assert_eq!(shards.len(), 2);
+        for (si, s) in shards.iter().enumerate() {
+            assert_eq!(s.groups.len(), 1);
+            let (gi, g) = &s.groups[0];
+            assert_eq!(*gi, si);
+            let devs: Vec<usize> = s.devices.iter().map(|(i, _)| *i).collect();
+            assert_eq!(devs.len(), g.n_devs);
+            assert!(devs.iter().all(|&d| g.owns(d)));
+        }
     }
 
     #[test]

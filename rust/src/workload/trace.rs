@@ -10,6 +10,8 @@
 //! #seed 29281773
 //! #devices 2
 //! #interleave page
+//! #fabric switch1/4
+//! #profile switched-1hop-110
 //! core 0
 //! R 1a2f40 7        <- R|W <hex byte address> <instruction gap>
 //! W 3c80 8
@@ -21,19 +23,23 @@
 //! address space; the gap is the instructions the core retires before
 //! issuing the request. The header pins everything replay needs to
 //! rebuild the run's geometry — the mix (content profiles + partition
-//! layout), the footprint scale, the content seed and the device
+//! layout), the footprint scale, the content seed, the device
 //! topology (`#devices`/`#interleave`, absent in pre-topology traces and
-//! defaulting to the classic single device) — so replaying a recorded
-//! synthetic run reproduces its metrics bit-identically under the same
-//! host/device configuration. Replay under a *different* topology is
-//! refused by `HostSim::from_trace` (the routing would silently
-//! diverge from the recorded run).
+//! defaulting to the classic single device) and the fabric topology
+//! (`#fabric direct` or `#fabric <kind>/<radix>` plus an optional
+//! `#profile` line; absent in pre-fabric traces and defaulting to the
+//! direct star) — so replaying a recorded synthetic run reproduces its
+//! metrics bit-identically under the same host/device configuration.
+//! Replay under a *different* topology or fabric is refused by
+//! `HostSim::from_trace` (the routing/timing would silently diverge
+//! from the recorded run).
 
 use std::fmt::Write as _;
 use std::path::Path;
 use std::sync::Arc;
 
 use crate::config::SimConfig;
+use crate::cxl::fabric::{FabricKind, FabricProfile, DEFAULT_SWITCH_RADIX};
 use crate::topology::{InterleaveKind, MAX_DEVICES};
 use crate::workload::mix::{Mix, RunPlan};
 use crate::workload::{RequestSource, TimedRequest};
@@ -54,6 +60,16 @@ pub struct Trace {
     pub devices: usize,
     /// Interleave policy of the recorded run.
     pub interleave: InterleaveKind,
+    /// Fabric topology of the recorded run (`#fabric direct` or
+    /// `#fabric switch1/4`; pre-fabric traces carry no line and default
+    /// to the classic direct star).
+    pub fabric: FabricKind,
+    /// Switch fan-out the fabric was built with (meaningful only for
+    /// switched kinds; serialized as the `/N` suffix of `#fabric`).
+    pub switch_radix: usize,
+    /// Fabric latency profile name (`#profile`; empty = the kind's
+    /// default, and the line is omitted).
+    pub fabric_profile: String,
     /// One stream per core, in [`RunPlan`] slot order. `Arc` so replay
     /// sources share the streams instead of cloning them per run.
     pub per_core: Vec<Arc<Vec<TimedRequest>>>,
@@ -73,6 +89,17 @@ impl Trace {
         let _ = writeln!(out, "#seed {}", self.seed);
         let _ = writeln!(out, "#devices {}", self.devices);
         let _ = writeln!(out, "#interleave {}", self.interleave);
+        match self.fabric {
+            FabricKind::Direct => {
+                let _ = writeln!(out, "#fabric direct");
+            }
+            kind => {
+                let _ = writeln!(out, "#fabric {}/{}", kind, self.switch_radix);
+            }
+        }
+        if !self.fabric_profile.is_empty() {
+            let _ = writeln!(out, "#profile {}", self.fabric_profile);
+        }
         for (ci, stream) in self.per_core.iter().enumerate() {
             let _ = writeln!(out, "core {ci}");
             for r in stream.iter() {
@@ -96,6 +123,9 @@ impl Trace {
         let mut seed: Option<u64> = None;
         let mut devices: usize = 1;
         let mut interleave = InterleaveKind::default();
+        let mut fabric = FabricKind::Direct;
+        let mut switch_radix = DEFAULT_SWITCH_RADIX;
+        let mut fabric_profile = String::new();
         let mut sections: Vec<Vec<TimedRequest>> = Vec::new();
         let mut current: Option<usize> = None;
         for (i, raw) in lines {
@@ -138,6 +168,38 @@ impl Trace {
                             InterleaveKind::accepted()
                         )
                     })?;
+                } else if let Some(v) = rest.strip_prefix("fabric ") {
+                    let v = v.trim();
+                    let (kind_s, radix_s) = match v.split_once('/') {
+                        Some((k, r)) => (k, Some(r)),
+                        None => (v, None),
+                    };
+                    fabric = FabricKind::parse(kind_s).ok_or_else(|| {
+                        format!(
+                            "line {lineno}: unknown fabric {v:?} (accepted: {})",
+                            FabricKind::accepted()
+                        )
+                    })?;
+                    if let Some(r) = radix_s {
+                        switch_radix = r
+                            .parse()
+                            .ok()
+                            .filter(|&n| (2..=MAX_DEVICES).contains(&n))
+                            .ok_or_else(|| {
+                                format!(
+                                    "line {lineno}: bad switch radix {r:?} (2..={MAX_DEVICES})"
+                                )
+                            })?;
+                    }
+                } else if let Some(v) = rest.strip_prefix("profile ") {
+                    let v = v.trim();
+                    FabricProfile::by_name(v).ok_or_else(|| {
+                        format!(
+                            "line {lineno}: unknown fabric profile {v:?} (accepted: {})",
+                            FabricProfile::accepted()
+                        )
+                    })?;
+                    fabric_profile = v.to_string();
                 }
                 // Unknown # lines are comments (forward compatibility).
                 continue;
@@ -191,6 +253,9 @@ impl Trace {
             seed: seed.ok_or("trace missing `#seed` header")?,
             devices,
             interleave,
+            fabric,
+            switch_radix,
+            fabric_profile,
             per_core: sections.into_iter().map(Arc::new).collect(),
             mix,
         };
@@ -277,6 +342,9 @@ pub fn record(cfg: &SimConfig, mix: &Mix) -> Trace {
         seed: cfg.seed,
         devices: cfg.devices,
         interleave: cfg.interleave,
+        fabric: cfg.fabric,
+        switch_radix: cfg.switch_radix,
+        fabric_profile: cfg.fabric_profile.clone(),
         per_core,
     }
 }
@@ -315,13 +383,49 @@ mod tests {
         let text = t.serialize();
         assert!(text.contains("#devices 2"));
         assert!(text.contains("#interleave contiguous"));
+        assert!(text.contains("#fabric direct"));
+        assert!(!text.contains("#profile"), "default profile line is omitted");
         let back = Trace::parse(&text).unwrap();
         assert_eq!(back.mix.canonical(), t.mix.canonical());
         assert_eq!(back.scale, t.scale);
         assert_eq!(back.seed, t.seed);
         assert_eq!(back.devices, 2);
         assert_eq!(back.interleave, InterleaveKind::Contiguous);
+        assert_eq!(back.fabric, FabricKind::Direct);
         assert_eq!(back.per_core, t.per_core);
+    }
+
+    #[test]
+    fn fabric_headers_roundtrip_and_validate() {
+        let mut cfg = tiny_cfg();
+        cfg.devices = 4;
+        cfg.fabric = FabricKind::Switch1;
+        cfg.switch_radix = 2;
+        cfg.fabric_profile = "cross-switch-190".to_string();
+        let mix = Mix::homogeneous(by_name("parest").unwrap(), 1);
+        let t = record(&cfg, &mix);
+        let text = t.serialize();
+        assert!(text.contains("#fabric switch1/2"));
+        assert!(text.contains("#profile cross-switch-190"));
+        let back = Trace::parse(&text).unwrap();
+        assert_eq!(back.fabric, FabricKind::Switch1);
+        assert_eq!(back.switch_radix, 2);
+        assert_eq!(back.fabric_profile, "cross-switch-190");
+
+        // Pre-fabric traces default to the direct star.
+        let hdr = "#ibex-trace v1\n#mix parest:1\n#scale 0.001\n#seed 1\n";
+        let old = Trace::parse(&format!("{hdr}core 0\nR 1040 7\n")).unwrap();
+        assert_eq!(old.fabric, FabricKind::Direct);
+        assert_eq!(old.switch_radix, DEFAULT_SWITCH_RADIX);
+        assert!(old.fabric_profile.is_empty());
+
+        // Malformed fabric headers are rejected with a line number.
+        let bad = format!("{hdr}#fabric mesh\ncore 0\nR 0 1\n");
+        assert!(Trace::parse(&bad).unwrap_err().contains("fabric"));
+        let bad = format!("{hdr}#fabric switch1/1\ncore 0\nR 0 1\n");
+        assert!(Trace::parse(&bad).unwrap_err().contains("radix"));
+        let bad = format!("{hdr}#profile nope\ncore 0\nR 0 1\n");
+        assert!(Trace::parse(&bad).unwrap_err().contains("profile"));
     }
 
     #[test]

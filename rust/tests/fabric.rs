@@ -1,0 +1,361 @@
+//! Fabric layer: the contracts the link→fabric refactor must keep.
+//!
+//! * `fabric=direct` is **bit-identical** to the pre-fabric star — one
+//!   private `CxlLink` per device, no hop stages, no shared ports. The
+//!   pre-fabric N-device request loop is re-implemented here from the
+//!   public API (per-device links + schemes, interleave routing, a
+//!   local→pooled oracle shim), so the old semantics stay pinned in
+//!   code rather than in golden numbers — across **every** scheme,
+//!   pool widths {1, 4}, and both the sequential and the sharded
+//!   intra-run engine.
+//! * A switched topology is strictly slower than the direct star on
+//!   the same workload (hop latency + shared-port serialization) and
+//!   surfaces per-port utilization lanes the star does not have.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use ibex::compress::{AnalyticSizeModel, PageSizes};
+use ibex::config::{SimConfig, ALL_SCHEMES};
+use ibex::cxl::CxlLink;
+use ibex::expander::{build_scheme, ContentOracle, Scheme};
+use ibex::host::HostSim;
+use ibex::rng::Pcg64;
+use ibex::sim::{Ps, CORE_CLK_PS};
+use ibex::topology::{DevicePool, Interleave};
+use ibex::workload::mix::{Mix, RunPlan};
+use ibex::workload::{by_name, RequestSource, WorkloadOracle, WorkloadSpec};
+
+fn quick_cfg() -> SimConfig {
+    let mut c = SimConfig::test_small();
+    c.cores = 2;
+    c.instructions = 40_000;
+    c.warmup_instructions = 4_000;
+    // Bench-scale working-set : promoted ratios at test size so the
+    // thrashing regime (promotions/demotions, MSHR stalls) is covered.
+    c.footprint_scale = 1.0 / 256.0;
+    c.promoted_bytes = 256 << 10;
+    c.meta_cache_bytes = 4 * 1024;
+    c
+}
+
+/// Everything the regression compares, all integer/bit exact.
+#[derive(Debug, PartialEq, Eq)]
+struct Fingerprint {
+    elapsed_ps: Ps,
+    instructions: u64,
+    requests: u64,
+    mem_by_kind: [u64; 4],
+    mem_total: u64,
+    promotions: u64,
+    demotions: u64,
+    ratio_bits: u64,
+}
+
+/// Local→pooled OSPN shim: devices store local page numbers, the run's
+/// content oracle is keyed by the pooled space (same contract as the
+/// host's internal routing wrapper).
+struct StarOracle<'a> {
+    inner: &'a mut dyn ContentOracle,
+    map: Interleave,
+    dev: usize,
+}
+
+impl ContentOracle for StarOracle<'_> {
+    fn sizes(&mut self, local: u64) -> PageSizes {
+        self.inner.sizes(self.map.global(self.dev, local))
+    }
+
+    fn on_write(&mut self, local: u64) -> PageSizes {
+        self.inner.on_write(self.map.global(self.dev, local))
+    }
+
+    fn is_zero_fill(&mut self, local: u64) -> bool {
+        self.inner.is_zero_fill(self.map.global(self.dev, local))
+    }
+}
+
+struct StarCore {
+    t: Ps,
+    outstanding: BinaryHeap<Reverse<(Ps, u32)>>,
+    src: Box<dyn RequestSource>,
+    dep_rng: Pcg64,
+    insts: u64,
+    reqs: u64,
+}
+
+/// The pre-fabric `HostSim::phase` loop, verbatim: every device behind
+/// its own private link, requests routed by the interleave, **no**
+/// fabric hops on either direction.
+fn star_phase(
+    cores: &mut [StarCore],
+    schemes: &mut [Box<dyn Scheme>],
+    links: &mut [CxlLink],
+    il: Interleave,
+    oracle: &mut dyn ContentOracle,
+    insts_target: u64,
+    cfg: &SimConfig,
+) {
+    let ipc = cfg.ipc.max(1);
+    let mshrs = cfg.mshrs_per_core;
+    loop {
+        let Some(ci) = cores
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.insts < insts_target)
+            .min_by_key(|(_, c)| c.t)
+            .map(|(i, _)| i)
+        else {
+            break;
+        };
+        let core = &mut cores[ci];
+        let tr = core.src.next();
+        core.insts = core.insts.saturating_add(tr.inst_gap);
+        core.t += tr.inst_gap.saturating_mul(CORE_CLK_PS) / ipc;
+        while let Some(&Reverse((done, _))) = core.outstanding.peek() {
+            if done <= core.t {
+                core.outstanding.pop();
+            } else {
+                break;
+            }
+        }
+        if core.outstanding.len() >= mshrs {
+            if let Some(Reverse((done, _))) = core.outstanding.pop() {
+                core.t = core.t.max(done);
+                while let Some(&Reverse((d, _))) = core.outstanding.peek() {
+                    if d <= core.t {
+                        core.outstanding.pop();
+                    } else {
+                        break;
+                    }
+                }
+            }
+        }
+        core.reqs += 1;
+        let t_issue = core.t;
+        let (dev, local) = il.route(tr.ospn);
+        let at_device = links[dev].ingress(t_issue, 1);
+        let ready = if il.devices() == 1 {
+            schemes[dev].access(at_device, local, tr.line, tr.write, oracle)
+        } else {
+            let mut shim = StarOracle {
+                inner: &mut *oracle,
+                map: il,
+                dev,
+            };
+            schemes[dev].access(at_device, local, tr.line, tr.write, &mut shim)
+        };
+        let done = links[dev].egress(ready, 1);
+        if !tr.write && core.dep_rng.chance(cfg.dep_fraction) {
+            core.t = core.t.max(done);
+        } else {
+            core.outstanding.push(Reverse((done, dev as u32)));
+        }
+    }
+    for core in cores.iter_mut() {
+        if let Some(last) = core.outstanding.iter().map(|r| r.0 .0).max() {
+            core.t = core.t.max(last);
+        }
+        core.outstanding.clear();
+    }
+}
+
+/// The pre-fabric `HostSim::run`: populate routed homes, warmup,
+/// snapshot, measured phase, snapshot subtraction.
+fn star_run(cfg: &SimConfig, spec: &WorkloadSpec) -> Fingerprint {
+    let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
+    let mix = Mix::homogeneous(spec.clone(), cfg.cores);
+    let plan = RunPlan::new(&mix, cfg.footprint_scale);
+    let mut schemes: Vec<Box<dyn Scheme>> =
+        (0..cfg.devices).map(|_| build_scheme(cfg)).collect();
+    let mut links: Vec<CxlLink> =
+        (0..cfg.devices).map(|_| CxlLink::new(cfg.cxl)).collect();
+    let il = Interleave::new(cfg.interleave, cfg.devices, plan.total_pages);
+    let mut cores: Vec<StarCore> = plan
+        .synthetic_sources(cfg.seed, cfg.read_fraction_override)
+        .into_iter()
+        .enumerate()
+        .map(|(ci, src)| StarCore {
+            t: 0,
+            outstanding: BinaryHeap::new(),
+            src,
+            dep_rng: Pcg64::from_label(cfg.seed, &["dep", &ci.to_string()]),
+            insts: 0,
+            reqs: 0,
+        })
+        .collect();
+
+    for &(base, pages, _copies) in &plan.regions {
+        for p in 0..pages {
+            let g = base + p;
+            let (dev, local) = il.route(g);
+            let sizes = oracle.sizes(g);
+            schemes[dev].populate(local, sizes);
+        }
+    }
+
+    star_phase(
+        &mut cores,
+        &mut schemes,
+        &mut links,
+        il,
+        &mut oracle,
+        cfg.warmup_instructions,
+        cfg,
+    );
+    let sum_kind = |schemes: &[Box<dyn Scheme>]| {
+        let mut sum = [0u64; 4];
+        for s in schemes {
+            for (a, c) in sum.iter_mut().zip(s.mem().breakdown.counts.iter()) {
+                *a += c;
+            }
+        }
+        sum
+    };
+    let warm_kind = sum_kind(&schemes);
+    let warm_total: u64 = schemes.iter().map(|s| s.mem().total_accesses()).sum();
+    let warm: Vec<(u64, u64, Ps)> = cores.iter().map(|c| (c.insts, c.reqs, c.t)).collect();
+    star_phase(
+        &mut cores,
+        &mut schemes,
+        &mut links,
+        il,
+        &mut oracle,
+        cfg.warmup_instructions + cfg.instructions,
+        cfg,
+    );
+
+    let kinds = sum_kind(&schemes);
+    let physical: u64 = schemes.iter().map(|s| s.physical_bytes()).sum();
+    let logical: u64 = schemes.iter().map(|s| s.logical_bytes()).sum();
+    let ratio = if physical == 0 {
+        1.0
+    } else {
+        logical as f64 / physical as f64
+    };
+    Fingerprint {
+        elapsed_ps: cores
+            .iter()
+            .zip(&warm)
+            .map(|(c, &(_, _, wt))| c.t - wt)
+            .max()
+            .unwrap_or(0),
+        instructions: cores
+            .iter()
+            .zip(&warm)
+            .map(|(c, &(wi, _, _))| c.insts - wi)
+            .sum(),
+        requests: cores
+            .iter()
+            .zip(&warm)
+            .map(|(c, &(_, wr, _))| c.reqs - wr)
+            .sum(),
+        mem_by_kind: [
+            kinds[0] - warm_kind[0],
+            kinds[1] - warm_kind[1],
+            kinds[2] - warm_kind[2],
+            kinds[3] - warm_kind[3],
+        ],
+        mem_total: schemes.iter().map(|s| s.mem().total_accesses()).sum::<u64>() - warm_total,
+        promotions: schemes.iter().map(|s| s.stats().promotions).sum(),
+        demotions: schemes.iter().map(|s| s.stats().demotions).sum(),
+        ratio_bits: ratio.to_bits(),
+    }
+}
+
+/// The refactored path: `fabric=direct` (the default) through the full
+/// `DevicePool`/`HostSim` stack, optionally on the sharded engine.
+fn fabric_run(cfg: &SimConfig, spec: &WorkloadSpec, threads: usize) -> Fingerprint {
+    let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
+    let mut pool = DevicePool::build(cfg);
+    let mut sim = HostSim::new(cfg, spec);
+    sim.set_intra_threads(threads);
+    let m = sim.run(&mut pool, &mut oracle);
+    let s = pool.merged_stats();
+    Fingerprint {
+        elapsed_ps: m.elapsed_ps,
+        instructions: m.instructions,
+        requests: m.requests,
+        mem_by_kind: m.mem_by_kind,
+        mem_total: m.mem_total,
+        promotions: s.promotions,
+        demotions: s.demotions,
+        ratio_bits: m.compression_ratio.to_bits(),
+    }
+}
+
+#[test]
+fn fabric_direct_is_bit_identical_to_the_prefabric_star() {
+    // Every scheme × {1, 4} devices × {sequential, 4-way sharded}: the
+    // fabric layer's identity path must cost nothing and change nothing.
+    for scheme in ALL_SCHEMES {
+        for devices in [1usize, 4] {
+            let mut cfg = quick_cfg();
+            cfg.set("scheme", scheme.name()).unwrap();
+            cfg.set("devices", &devices.to_string()).unwrap();
+            let spec = by_name("pr").unwrap();
+            let star = star_run(&cfg, &spec);
+            assert!(star.requests > 0 && star.elapsed_ps > 0);
+            for threads in [1usize, 4] {
+                let fab = fabric_run(&cfg, &spec, threads);
+                assert_eq!(
+                    star,
+                    fab,
+                    "{}/x{devices}/threads={threads} diverged from the \
+                     pre-fabric star",
+                    scheme.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn switched_fabric_is_slower_than_direct_and_reports_ports() {
+    // Same pool, same workload: funneling 8 devices through a radix-4
+    // switch level must raise mean latency (2×20 ns of hops plus
+    // shared-uplink queueing) and surface per-port utilization lanes
+    // with sane values. The direct star reports no ports at all.
+    let mk = |fabric: &str| {
+        let mut cfg = quick_cfg();
+        cfg.set("devices", "8").unwrap();
+        cfg.set("fabric", fabric).unwrap();
+        cfg.set("switch_radix", "4").unwrap();
+        let spec = by_name("pr").unwrap();
+        let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
+        let mut pool = DevicePool::build(&cfg);
+        let mut sim = HostSim::new(&cfg, &spec);
+        sim.run(&mut pool, &mut oracle)
+    };
+
+    let direct = mk("direct");
+    assert!(direct.ports.is_empty(), "direct star must have no ports");
+
+    let switched = mk("switch1");
+    assert_eq!(switched.ports.len(), 2, "8 devices / radix 4 = 2 uplinks");
+    for p in &switched.ports {
+        assert!(
+            p.down_utilization > 0.0 && p.down_utilization <= 1.0,
+            "port {} down utilization out of range: {}",
+            p.label,
+            p.down_utilization
+        );
+        assert!(
+            p.up_utilization > 0.0 && p.up_utilization <= 1.0,
+            "port {} up utilization out of range: {}",
+            p.label,
+            p.up_utilization
+        );
+    }
+
+    let mean = |m: &ibex::host::RunMetrics| {
+        let lat: Vec<_> = m.devices.iter().map(|d| d.mean_latency_ns).collect();
+        lat.iter().sum::<f64>() / lat.len() as f64
+    };
+    assert!(
+        mean(&switched) > mean(&direct),
+        "switched fabric must be slower: direct {:.1} ns vs switch1 {:.1} ns",
+        mean(&direct),
+        mean(&switched)
+    );
+}

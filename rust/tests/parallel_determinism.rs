@@ -49,6 +49,9 @@ struct Fingerprint {
     /// (requests, reads, writes, peak, mem_accesses, promotions,
     /// demotions, mean bits, p99, link-utilization bits).
     devices: Vec<(u64, u64, u64, usize, u64, u64, u64, u64, u64, u64)>,
+    /// (label, down-utilization bits, up-utilization bits) per shared
+    /// fabric port — empty under `fabric=direct`.
+    ports: Vec<(String, u64, u64)>,
     epochs: Vec<EpochFp>,
 }
 
@@ -62,6 +65,7 @@ struct EpochFp {
     d_ps: u64,
     devices: Vec<(u64, u64, u64, u64, u64, u64, usize, u64, (u64, u64, u64, Vec<(u64, u64)>))>,
     tenants: Vec<(usize, u64, u64, (u64, u64, u64, Vec<(u64, u64)>))>,
+    ports: Vec<(usize, u64, u64)>,
 }
 
 fn series_fp(series: &Series) -> Vec<EpochFp> {
@@ -95,6 +99,17 @@ fn series_fp(series: &Series) -> Vec<EpochFp> {
                 .tenants
                 .iter()
                 .map(|t| (t.tenant, t.requests, t.instructions, hist_fp(&t.lat)))
+                .collect(),
+            ports: e
+                .ports
+                .iter()
+                .map(|p| {
+                    (
+                        p.port,
+                        p.down_utilization.to_bits(),
+                        p.up_utilization.to_bits(),
+                    )
+                })
                 .collect(),
         })
         .collect()
@@ -140,6 +155,17 @@ fn fingerprint(job: Job) -> Fingerprint {
                     d.mean_latency_ns.to_bits(),
                     d.p99_latency_ns,
                     d.link_utilization.to_bits(),
+                )
+            })
+            .collect(),
+        ports: m
+            .ports
+            .iter()
+            .map(|p| {
+                (
+                    p.label.clone(),
+                    p.down_utilization.to_bits(),
+                    p.up_utilization.to_bits(),
                 )
             })
             .collect(),
@@ -234,6 +260,41 @@ fn record_replay_is_bit_identical_under_the_parallel_engine() {
     assert_eq!(replay_seq.mem_by_kind, synth.mem_by_kind);
     assert_eq!(replay_seq.requests, synth.requests);
     assert_eq!(replay_seq.devices, synth.devices);
+}
+
+#[test]
+fn parallel_engine_is_bit_identical_on_switched_fabrics() {
+    // Switched topologies share uplink ports between devices, so the
+    // engine shards whole switch groups (never splitting a shared port
+    // across workers) and tightens the merge lookahead to the per-device
+    // fabric round trip. Both a single switch level and a two-level
+    // radix-2 tree must stay bit-identical at every thread count —
+    // including the per-port utilization lanes in the epoch series.
+    for (fabric, radix) in [("switch1", "4"), ("switch2", "2")] {
+        let mut cfg = quick_cfg();
+        cfg.set("devices", "8").unwrap();
+        cfg.set("fabric", fabric).unwrap();
+        cfg.set("switch_radix", radix).unwrap();
+        cfg.set("sample_every", "10000").unwrap();
+        let ctx = format!("{fabric}/r{radix}/x8");
+
+        let seq = fingerprint(job_with_threads(&cfg, "pr", 1));
+        assert!(
+            !seq.ports.is_empty(),
+            "{ctx}: switched run produced no port lanes"
+        );
+        assert!(
+            seq.epochs.iter().any(|e| !e.ports.is_empty()),
+            "{ctx}: epochs carry no port utilization"
+        );
+        for threads in [2usize, 4, 16] {
+            let par = fingerprint(job_with_threads(&cfg, "pr", threads));
+            assert_eq!(
+                par, seq,
+                "{ctx}: intra_threads={threads} diverged from sequential"
+            );
+        }
+    }
 }
 
 #[test]
