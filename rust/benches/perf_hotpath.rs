@@ -20,11 +20,12 @@ use std::time::Instant;
 use ibex::compress::size_model::analyze_page;
 use ibex::compress::AnalyticSizeModel;
 use ibex::expander::store::{ActivityEntry, ActivityTable, ChunkArena, ChunkRun, PageTable};
-use ibex::host::HostSim;
+use ibex::host::{HostSim, ReqQueue};
 use ibex::stats::Table;
 use ibex::telemetry::report::BenchReport;
-use ibex::topology::DevicePool;
-use ibex::workload::{by_name, WorkloadOracle};
+use ibex::topology::{DevicePool, Interleave, InterleaveKind};
+use ibex::workload::mix::{Mix, RunPlan};
+use ibex::workload::{by_name, trace, trace_bin, Trace, WorkloadOracle};
 
 fn main() {
     common::banner("Perf L3", "simulator hot-path throughput");
@@ -226,8 +227,89 @@ fn main() {
         n.to_string(),
         format!("{size_model_ns:.0}"),
     ]);
+    // ---- quantum-batched translation/routing -----------------------
+
+    // Per-request cost of the scheduler's pre-routing path: quantum
+    // refills (synthetic generation + interleave translation + fabric
+    // group stamping) amortized over the buffered pops the engines
+    // actually consume.
+    let mix = Mix::homogeneous(by_name("pr").unwrap(), 1);
+    let plan = RunPlan::new(&mix, 0.001);
+    let mut srcs = plan.synthetic_sources(42, f64::NAN);
+    let qmap = Interleave::new(InterleaveKind::PageRoundRobin, 4, plan.total_pages);
+    let group_of: Vec<u32> = (0..4u32).collect();
+    let mut q = ReqQueue::new();
+    let qreqs: u64 = if common::quick() { 2_000_000 } else { 10_000_000 };
+    let mut sink = 0u64;
+    let src = &mut srcs[0];
+    let start = Instant::now();
+    for _ in 0..qreqs {
+        let r = match q.pop() {
+            Some(r) => r,
+            None => {
+                q.refill(src.as_mut(), &qmap, &group_of);
+                q.pop().expect("refill produced a full quantum")
+            }
+        };
+        sink ^= r.local ^ r.inst_gap ^ r.dev as u64 ^ r.group as u64;
+    }
+    let quantum_ns = start.elapsed().as_secs_f64() * 1e9 / qreqs as f64;
+    std::hint::black_box(sink);
+    report.metric("scheduler_quantum_ns", quantum_ns);
+    iso.row(vec![
+        "quantum-batched route+translate".into(),
+        qreqs.to_string(),
+        format!("{quantum_ns:.1}"),
+    ]);
     iso.emit();
     println!("\nanalytic size model checksum: {checksum}");
 
-    report.table(&t).table(&st).table(&iso).write();
+    // ---- trace replay load throughput: text vs binary --------------
+
+    // Same recorded streams, both serializations; the lane prices the
+    // loader alone (parse/decode to `Trace`), which is what gates
+    // multi-GB replay startup. Acceptance: bin >= 2x text.
+    let mut tcfg = common::bench_cfg();
+    tcfg.instructions = if common::quick() { 200_000 } else { 1_000_000 };
+    tcfg.warmup_instructions = 0;
+    let tmix = Mix::homogeneous(by_name("pr").unwrap(), 4);
+    let recorded = trace::record(&tcfg, &tmix);
+    let dir = std::env::temp_dir();
+    let txt_path = dir.join(format!("ibex_perf_trace_{}.trace", std::process::id()));
+    let bin_path = dir.join(format!("ibex_perf_trace_{}.btrace", std::process::id()));
+    recorded.save(&txt_path).expect("write text trace");
+    trace_bin::save(&recorded, &bin_path).expect("write binary trace");
+    let loaded = Trace::load(&bin_path).expect("load binary trace");
+    assert_eq!(
+        loaded.per_core, recorded.per_core,
+        "binary trace must decode to the recorded streams"
+    );
+    let iters: u64 = if common::quick() { 3 } else { 10 };
+    let mut lt = Table::new(
+        "Hot path — trace load throughput (same streams, both formats)",
+        &["format", "requests", "loads", "wall ms", "Mreq/s"],
+    );
+    for (name, path) in [("text", &txt_path), ("bin", &bin_path)] {
+        let start = Instant::now();
+        for _ in 0..iters {
+            let t = Trace::load(path).expect("trace loads");
+            std::hint::black_box(t.requests());
+        }
+        let wall = start.elapsed();
+        let mreq_s =
+            (recorded.requests() as u64 * iters) as f64 / wall.as_secs_f64() / 1e6;
+        report.metric(&format!("trace_replay_{name}_mreq_per_s"), mreq_s);
+        lt.row(vec![
+            name.to_string(),
+            recorded.requests().to_string(),
+            iters.to_string(),
+            format!("{:.0}", wall.as_secs_f64() * 1000.0),
+            format!("{mreq_s:.2}"),
+        ]);
+    }
+    lt.emit();
+    let _ = std::fs::remove_file(&txt_path);
+    let _ = std::fs::remove_file(&bin_path);
+
+    report.table(&t).table(&st).table(&iso).table(&lt).write();
 }

@@ -19,7 +19,7 @@ use crate::cxl::fabric::{Fabric, FabricKind};
 use crate::host::DeviceLaneMetrics;
 use crate::stats::Table;
 use crate::telemetry::report as telemetry_report;
-use crate::workload::{self, mix::Mix, trace};
+use crate::workload::{self, mix::Mix, trace, trace_bin};
 
 /// Parsed command line.
 #[derive(Clone, Debug)]
@@ -53,6 +53,13 @@ pub struct Cli {
     /// `--sample-every N[ns|insts]` — telemetry epoch length (plain N
     /// = retired instructions; an `ns` suffix switches to sim-time).
     pub sample_every: Option<String>,
+    /// `--format text|bin` — trace serialization format for `record`
+    /// and `trace convert` (convert defaults to the opposite of its
+    /// input).
+    pub format: Option<String>,
+    /// Bare (non-flag) arguments, e.g. `trace convert <in> <out>`.
+    /// Commands without subcommands reject these.
+    pub positional: Vec<String>,
 }
 
 impl Cli {
@@ -74,6 +81,8 @@ impl Cli {
             intra_threads: None,
             json: None,
             sample_every: None,
+            format: None,
+            positional: Vec::new(),
         };
         let mut it = args.iter().skip(1);
         while let Some(arg) = it.next() {
@@ -109,10 +118,12 @@ impl Cli {
                 "--intra-threads" => cli.intra_threads = Some(take(&mut it, arg)?),
                 "--json" | "-j" => cli.json = Some(take(&mut it, arg)?),
                 "--sample-every" => cli.sample_every = Some(take(&mut it, arg)?),
+                "--format" | "-f" => cli.format = Some(take(&mut it, arg)?),
                 _ if arg.contains('=') => {
                     let (k, v) = arg.split_once('=').unwrap();
                     cli.overrides.push((k.to_string(), v.to_string()));
                 }
+                _ if !arg.starts_with('-') => cli.positional.push(arg.clone()),
                 _ => return Err(format!("unknown argument {arg:?} (try `ibex help`)")),
             }
         }
@@ -197,9 +208,16 @@ USAGE:
                                                metrics, per-tenant/per-device
                                                rows, epoch time-series)
   ibex sweep  [--workloads W1,W2,..] [--schemes S1,S2,..] [key=value ...]
-  ibex record (--workload W | --mix ..) --out FILE [key=value ...]
-                                               dump the synthetic request
+  ibex record (--workload W | --mix ..) --out FILE [--format text|bin]
+              [key=value ...]                  dump the synthetic request
                                                streams to a replayable trace
+                                               (bin: 16-byte fixed records,
+                                               same replay bit-for-bit)
+  ibex trace convert <in> <out> [--format text|bin]
+                                               convert between the text and
+                                               binary trace formats (input
+                                               auto-detected; output defaults
+                                               to the other format)
   ibex config-dump [key=value ...]     print the resolved configuration
   ibex list                            list workloads and schemes
   ibex help
@@ -256,6 +274,14 @@ pub fn dispatch(args: &[String]) -> i32 {
             return 2;
         }
     };
+    if cli.command != "trace" {
+        // Only `trace` has subcommands; a stray bare word anywhere else
+        // is the same error it was before positionals existed.
+        if let Some(p) = cli.positional.first() {
+            eprintln!("error: unknown argument {p:?} (try `ibex help`)");
+            return 2;
+        }
+    }
     match cli.command.as_str() {
         "help" | "--help" | "-h" => {
             print!("{HELP}");
@@ -284,6 +310,7 @@ pub fn dispatch(args: &[String]) -> i32 {
         },
         "run" | "sweep" => run_cmd(&cli),
         "record" => record_cmd(&cli),
+        "trace" => trace_cmd(&cli),
         other => {
             eprintln!("error: unknown command {other:?}\n{HELP}");
             2
@@ -625,18 +652,101 @@ fn record_cmd(cli: &Cli) -> i32 {
         };
         Mix::homogeneous(spec, cfg.cores)
     };
+    let binary = match parse_format(cli.format.as_deref()) {
+        Ok(f) => f.unwrap_or(false), // default: text
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
     let t = trace::record(&cfg, &mix);
-    if let Err(e) = t.save(Path::new(out)) {
+    let saved = if binary {
+        trace_bin::save(&t, Path::new(out))
+    } else {
+        t.save(Path::new(out))
+    };
+    if let Err(e) = saved {
         eprintln!("error: {e}");
         return 2;
     }
     println!(
-        "recorded {} requests across {} cores of {} to {out}",
+        "recorded {} requests across {} cores of {} to {out} ({})",
         t.requests(),
         t.per_core.len(),
         t.mix.canonical(),
+        if binary { "binary" } else { "text" },
     );
     println!("replay with: ibex run --trace {out}");
+    0
+}
+
+/// `--format` spellings → binary? (`None` = flag absent, caller picks
+/// its default).
+fn parse_format(f: Option<&str>) -> Result<Option<bool>, String> {
+    match f {
+        None => Ok(None),
+        Some("bin" | "binary") => Ok(Some(true)),
+        Some("text" | "txt") => Ok(Some(false)),
+        Some(other) => Err(format!("unknown --format {other:?} (accepted: text, bin)")),
+    }
+}
+
+fn trace_cmd(cli: &Cli) -> i32 {
+    match cli.positional.first().map(String::as_str) {
+        Some("convert") => {}
+        Some(other) => {
+            eprintln!("error: unknown trace subcommand {other:?} (only: convert)");
+            return 2;
+        }
+        None => {
+            eprintln!("error: usage: ibex trace convert <in> <out> [--format text|bin]");
+            return 2;
+        }
+    }
+    let (inp, outp) = match &cli.positional[1..] {
+        [a, b] => (Path::new(a), Path::new(b)),
+        _ => {
+            eprintln!("error: trace convert takes exactly <in> <out>");
+            return 2;
+        }
+    };
+    let forced = match parse_format(cli.format.as_deref()) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    // `load` auto-detects the input format from its leading bytes; the
+    // output defaults to the opposite direction, so a flagless convert
+    // always changes representation.
+    let in_binary = trace_bin::is_binary(inp);
+    let out_binary = forced.unwrap_or(!in_binary);
+    let t = match trace::Trace::load(inp) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let saved = if out_binary {
+        trace_bin::save(&t, outp)
+    } else {
+        t.save(outp)
+    };
+    if let Err(e) = saved {
+        eprintln!("error: {e}");
+        return 2;
+    }
+    println!(
+        "converted {} ({}) -> {} ({}): {} requests across {} cores",
+        inp.display(),
+        if in_binary { "binary" } else { "text" },
+        outp.display(),
+        if out_binary { "binary" } else { "text" },
+        t.requests(),
+        t.per_core.len(),
+    );
     0
 }
 
@@ -722,6 +832,85 @@ mod tests {
         assert!(Cli::parse(&s(&["run", "--frobnicate"])).is_err());
         let cli = Cli::parse(&s(&["run", "bogus_key=1"])).unwrap();
         assert!(cli.config().is_err());
+        // Bare words parse as positionals, but commands without
+        // subcommands still reject them at dispatch.
+        assert_eq!(dispatch(&s(&["run", "bogus"])), 2);
+        assert_eq!(dispatch(&s(&["config-dump", "bogus"])), 2);
+    }
+
+    #[test]
+    fn parse_format_flag_and_positionals() {
+        let cli = Cli::parse(&s(&["record", "--format", "bin", "--out", "x.btrace"])).unwrap();
+        assert_eq!(cli.format.as_deref(), Some("bin"));
+        let cli = Cli::parse(&s(&["trace", "convert", "a.trace", "b.btrace"])).unwrap();
+        assert_eq!(cli.positional, vec!["convert", "a.trace", "b.btrace"]);
+        assert_eq!(parse_format(Some("binary")), Ok(Some(true)));
+        assert_eq!(parse_format(Some("txt")), Ok(Some(false)));
+        assert_eq!(parse_format(None), Ok(None));
+        assert!(parse_format(Some("yaml")).is_err());
+        // record with a bad format is a clean error.
+        assert_eq!(
+            dispatch(&s(&[
+                "record", "--workload", "parest", "--out", "/tmp/x.trace", "--format", "yaml",
+            ])),
+            2
+        );
+        // trace needs `convert` + exactly two paths.
+        assert_eq!(dispatch(&s(&["trace"])), 2);
+        assert_eq!(dispatch(&s(&["trace", "frob", "a", "b"])), 2);
+        assert_eq!(dispatch(&s(&["trace", "convert", "only-one"])), 2);
+        assert_eq!(dispatch(&s(&["trace", "convert", "/nonexistent/a", "/tmp/b"])), 2);
+    }
+
+    #[test]
+    fn trace_convert_roundtrips_via_cli() {
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+        let txt = dir.join(format!("ibex_cli_conv_{pid}.trace"));
+        let bin = dir.join(format!("ibex_cli_conv_{pid}.btrace"));
+        let back = dir.join(format!("ibex_cli_conv_back_{pid}.trace"));
+        let txt_s = txt.to_string_lossy().into_owned();
+        let bin_s = bin.to_string_lossy().into_owned();
+        let back_s = back.to_string_lossy().into_owned();
+        let code = dispatch(&s(&[
+            "record",
+            "--workload",
+            "parest",
+            "--out",
+            &txt_s,
+            "instructions=5000",
+            "warmup_instructions=500",
+            "cores=1",
+            "footprint_scale=0.0001",
+        ]));
+        assert_eq!(code, 0);
+        // text -> bin (flagless: output defaults to the other format).
+        assert_eq!(dispatch(&s(&["trace", "convert", &txt_s, &bin_s])), 0);
+        assert!(trace_bin::is_binary(&bin));
+        // bin -> text again; byte-identical to the original recording.
+        assert_eq!(dispatch(&s(&["trace", "convert", &bin_s, &back_s])), 0);
+        assert_eq!(
+            std::fs::read(&txt).unwrap(),
+            std::fs::read(&back).unwrap(),
+            "text -> bin -> text must be byte-exact"
+        );
+        // A binary trace replays directly through --trace.
+        let code = dispatch(&s(&[
+            "run",
+            "--trace",
+            &bin_s,
+            "instructions=5000",
+            "warmup_instructions=500",
+            "footprint_scale=0.0001",
+        ]));
+        assert_eq!(code, 0, "--trace must accept binary traces transparently");
+        // Truncated binary input is a clean error, not a panic.
+        let bytes = std::fs::read(&bin).unwrap();
+        std::fs::write(&bin, &bytes[..bytes.len() / 2]).unwrap();
+        assert_eq!(dispatch(&s(&["trace", "convert", &bin_s, &back_s])), 2);
+        let _ = std::fs::remove_file(&txt);
+        let _ = std::fs::remove_file(&bin);
+        let _ = std::fs::remove_file(&back);
     }
 
     #[test]

@@ -39,10 +39,12 @@
 //! stay bit-identical at any thread count (pinned by
 //! `tests/parallel_determinism.rs`).
 
+pub mod mshr;
 pub mod parallel;
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+pub use mshr::{PreRouted, ReqQueue, REQUEST_QUANTUM};
+
+use mshr::MshrHeap;
 
 use crate::compress::PageSizes;
 use crate::config::SimConfig;
@@ -55,14 +57,20 @@ use crate::telemetry::{DeviceCum, PortCum, Sampler, Series, TenantCum};
 use crate::topology::{DevicePool, Interleave};
 use crate::workload::{Mix, RequestSource, RunPlan, Trace, WorkloadSpec};
 
-/// One simulated core's issue state.
+/// One simulated core's issue state. Outstanding misses live in the
+/// run-wide [`MshrHeap`] slab (one fixed-capacity heap per core), not
+/// here — the hot path allocates nothing in steady state.
 struct Core {
     /// Local time: when the core can issue its next request.
     t: Ps,
-    /// Completion times of outstanding misses, tagged with the device
-    /// that serves them (so per-device occupancy can be tracked).
-    outstanding: BinaryHeap<Reverse<(Ps, u32)>>,
     src: Box<dyn RequestSource>,
+    /// Prefetched quantum of upcoming requests, translation/routing
+    /// pre-resolved in one batched pass per [`REQUEST_QUANTUM`].
+    queue: ReqQueue,
+    /// The core's tenant (index into the plan's mix) — resolved once so
+    /// telemetry epochs attribute per-core counters without a
+    /// plan-slot lookup per sample row.
+    tenant: u32,
     /// Blocking-load coin flips (dependency stalls).
     dep_rng: Pcg64,
     insts: u64,
@@ -89,18 +97,27 @@ impl Core {
             self.reads += 1;
         }
     }
+
+    /// The core's next pre-routed request, refilling the quantum from
+    /// the source when it runs dry. The queue persists across phases,
+    /// so the consumed stream is exactly the source's sequential output
+    /// — batching changes no scheduler decision.
+    #[inline]
+    fn next_req(&mut self, map: &Interleave, group_of: &[u32]) -> PreRouted {
+        if let Some(r) = self.queue.pop() {
+            return r;
+        }
+        self.queue.refill(self.src.as_mut(), map, group_of);
+        self.queue.pop().expect("refill produced a full quantum")
+    }
 }
 
-/// Pop every completed miss (`done <= t`) off a core's outstanding
+/// Pop every completed miss (`done <= t`) off core `ci`'s outstanding
 /// heap, releasing each one's device-lane occupancy slot.
-fn drain_completed(
-    outstanding: &mut BinaryHeap<Reverse<(Ps, u32)>>,
-    t: Ps,
-    lanes: &mut [Lane],
-) {
-    while let Some(&Reverse((done, pdev))) = outstanding.peek() {
+fn drain_completed(mshrs: &mut MshrHeap, ci: usize, t: Ps, lanes: &mut [Lane]) {
+    while let Some((done, pdev)) = mshrs.peek(ci) {
         if done <= t {
-            outstanding.pop();
+            mshrs.pop(ci);
             lanes[pdev as usize].release();
         } else {
             break;
@@ -108,18 +125,15 @@ fn drain_completed(
     }
 }
 
-/// MSHR-full stall: retire the oldest outstanding miss (heap minimum by
-/// `(done, device)`), releasing its lane slot and returning the
-/// completion time the core must wait for. The caller advances the
+/// MSHR-full stall: retire core `ci`'s oldest outstanding miss (heap
+/// minimum by `(done, device)`), releasing its lane slot and returning
+/// the completion time the core must wait for. The caller advances the
 /// core's clock and then re-drains: other misses may have completed
 /// during the stall, and leaving them in the heap would inflate the
 /// per-device occupancy (`peak_outstanding`/`win_peak`) observed by
 /// every core until this core's next turn.
-fn mshr_stall(
-    outstanding: &mut BinaryHeap<Reverse<(Ps, u32)>>,
-    lanes: &mut [Lane],
-) -> Option<Ps> {
-    let Reverse((done, pdev)) = outstanding.pop()?;
+fn mshr_stall(mshrs: &mut MshrHeap, ci: usize, lanes: &mut [Lane]) -> Option<Ps> {
+    let (done, pdev) = mshrs.pop(ci)?;
     lanes[pdev as usize].release();
     Some(done)
 }
@@ -402,6 +416,10 @@ pub struct HostSim<'a> {
     plan: RunPlan,
     interleave: Interleave,
     cores: Vec<Core>,
+    /// Every core's outstanding-miss heap, one slab for the whole run
+    /// (see [`mshr`]). Stays empty under the parallel engine, which
+    /// tracks outstanding misses scheduler-side in its own arena.
+    mshrs: MshrHeap,
     lanes: Vec<Lane>,
     /// Telemetry collector (`cfg.sample_every > 0`). When `None`, the
     /// request loop's only extra work is one `is_some` branch — no
@@ -480,13 +498,14 @@ impl<'a> HostSim<'a> {
         sources: Vec<Box<dyn RequestSource>>,
         seed: u64,
     ) -> Self {
-        let cores = sources
+        let cores: Vec<Core> = sources
             .into_iter()
             .enumerate()
             .map(|(c, src)| Core {
                 t: 0,
-                outstanding: BinaryHeap::new(),
                 src,
+                queue: ReqQueue::new(),
+                tenant: plan.slots[c].tenant as u32,
                 dep_rng: Pcg64::from_label(seed, &["dep", &c.to_string()]),
                 insts: 0,
                 reqs: 0,
@@ -495,6 +514,7 @@ impl<'a> HostSim<'a> {
                 lat: LatencyHist::default(),
             })
             .collect();
+        let mshrs = MshrHeap::new(cores.len(), cfg.mshrs_per_core);
         let interleave = Interleave::new(cfg.interleave, cfg.devices, plan.total_pages);
         let sampler =
             (cfg.sample_every > 0).then(|| Sampler::new(cfg.sample_unit, cfg.sample_every));
@@ -503,6 +523,7 @@ impl<'a> HostSim<'a> {
             plan,
             interleave,
             cores,
+            mshrs,
             lanes: vec![Lane::default(); cfg.devices],
             sampler,
             intra_threads: cfg.intra_threads,
@@ -802,9 +823,10 @@ impl<'a> HostSim<'a> {
             .iter()
             .map(|_| TenantCum::default())
             .collect();
-        for (ci, slot) in self.plan.slots.iter().enumerate() {
-            let c = &self.cores[ci];
-            let row = &mut tenants[slot.tenant];
+        for c in &self.cores {
+            // Tenant attribution was resolved once at construction
+            // (`Core::tenant`) — no plan-slot lookup per row.
+            let row = &mut tenants[c.tenant as usize];
             row.requests += c.reqs;
             row.instructions += c.insts;
             row.lat.merge(&c.lat);
@@ -868,13 +890,21 @@ impl<'a> HostSim<'a> {
         measure: bool,
     ) {
         let ipc = self.cfg.ipc.max(1);
-        let mshrs = self.cfg.mshrs_per_core;
+        let mshr_cap = self.cfg.mshrs_per_core;
+        let map = self.interleave;
+        // Fabric hop-path resolution, computed once: the quantum
+        // prefetch stamps each request with its device's group.
+        let group_of: Vec<u32> = (0..pool.len())
+            .map(|d| pool.fabric.group_of(d) as u32)
+            .collect();
         loop {
             let Some(ci) = self.pick_core(insts_target) else {
                 break;
             };
             let core = &mut self.cores[ci];
-            let tr = core.src.next();
+            // Translation + routing were batched at quantum refill; per
+            // request this is a buffer pop.
+            let tr = core.next_req(&map, &group_of);
 
             // Retire the instruction gap at `ipc`. Gaps carry the
             // fractional remainder of the Table-2 rate (see
@@ -882,42 +912,42 @@ impl<'a> HostSim<'a> {
             core.retire_gap(tr.inst_gap, ipc);
 
             // Drain completed misses.
-            drain_completed(&mut core.outstanding, core.t, &mut self.lanes);
+            drain_completed(&mut self.mshrs, ci, core.t, &mut self.lanes);
             // MSHR full: stall until the oldest miss returns, then
             // re-drain — misses that completed during the stall must
             // release their lane slots now, not at this core's next
             // turn.
-            if core.outstanding.len() >= mshrs {
-                if let Some(done) = mshr_stall(&mut core.outstanding, &mut self.lanes) {
+            if self.mshrs.len(ci) >= mshr_cap {
+                if let Some(done) = mshr_stall(&mut self.mshrs, ci, &mut self.lanes) {
                     core.t = core.t.max(done);
-                    drain_completed(&mut core.outstanding, core.t, &mut self.lanes);
+                    drain_completed(&mut self.mshrs, ci, core.t, &mut self.lanes);
                 }
             }
 
             core.count_issue(tr.write);
             let t_issue = core.t;
-            let (dev, local) = self.interleave.route(tr.ospn);
+            let dev = tr.dev as usize;
             // Host→device: fabric hops (shared switch ports; identity
             // under fabric=direct), then the device's own link.
             let at_port = pool.fabric.ingress(dev, t_issue, 1);
             let device = &mut pool.devices[dev];
             let at_device = device.link.ingress(at_port, 1);
-            let ready = if self.interleave.devices() == 1 {
+            let ready = if map.devices() == 1 {
                 // Identity routing: skip the translation wrapper on the
                 // default single-device hot path.
                 device
                     .scheme
-                    .access(at_device, local, tr.line, tr.write, oracle)
+                    .access(at_device, tr.local, tr.line, tr.write, oracle)
             } else {
                 let mut routed = RoutedOracle {
                     // Explicit reborrow: the wrapper lives one request.
                     inner: &mut *oracle,
-                    map: self.interleave,
+                    map,
                     dev,
                 };
                 device
                     .scheme
-                    .access(at_device, local, tr.line, tr.write, &mut routed)
+                    .access(at_device, tr.local, tr.line, tr.write, &mut routed)
             };
             // Device→host: back over the link, then up the fabric path.
             let at_host_port = device.link.egress(ready, 1);
@@ -935,7 +965,7 @@ impl<'a> HostSim<'a> {
             if !tr.write && core.dep_rng.chance(self.cfg.dep_fraction) {
                 core.t = core.t.max(done);
             } else {
-                core.outstanding.push(Reverse((done, dev as u32)));
+                self.mshrs.push(ci, done, tr.dev);
                 lane.push_outstanding();
             }
             // Telemetry epoch boundary? One branch when sampling is
@@ -945,11 +975,11 @@ impl<'a> HostSim<'a> {
             }
         }
         // Let every core drain (reply latency counts toward elapsed).
-        for core in &mut self.cores {
-            if let Some(last) = core.outstanding.iter().map(|r| r.0 .0).max() {
+        for (ci, core) in self.cores.iter_mut().enumerate() {
+            if let Some(last) = self.mshrs.slice(ci).iter().map(|&(done, _)| done).max() {
                 core.t = core.t.max(last);
             }
-            core.outstanding.clear();
+            self.mshrs.clear(ci);
         }
         for lane in &mut self.lanes {
             lane.outstanding = 0;
@@ -1190,26 +1220,26 @@ mod tests {
     #[test]
     fn stall_re_drain_releases_completed_misses() {
         let mut lanes = vec![Lane::default(), Lane::default()];
-        let mut heap: BinaryHeap<Reverse<(Ps, u32)>> = BinaryHeap::new();
+        let mut mshrs = MshrHeap::new(1, 4);
         for (done, dev) in [(60u64, 0u32), (60, 1), (90, 0)] {
-            heap.push(Reverse((done, dev)));
+            mshrs.push(0, done, dev);
             lanes[dev as usize].push_outstanding();
         }
         assert_eq!(lanes[0].outstanding, 2);
         assert_eq!(lanes[1].outstanding, 1);
         // t = 50: nothing has completed yet.
-        drain_completed(&mut heap, 50, &mut lanes);
-        assert_eq!(heap.len(), 3);
+        drain_completed(&mut mshrs, 0, 50, &mut lanes);
+        assert_eq!(mshrs.len(0), 3);
         // MSHR stall retires the (done, device) minimum: (60, #0).
-        let done = mshr_stall(&mut heap, &mut lanes).unwrap();
+        let done = mshr_stall(&mut mshrs, 0, &mut lanes).unwrap();
         assert_eq!(done, 60);
         assert_eq!(lanes[0].outstanding, 1);
         // Re-drain at the stall's completion time releases (60, #1)
         // too; without it the lane-1 slot stayed counted (inflating
         // peak_outstanding seen by other cores) until this core's next
         // turn.
-        drain_completed(&mut heap, done, &mut lanes);
-        assert_eq!(heap.len(), 1);
+        drain_completed(&mut mshrs, 0, done, &mut lanes);
+        assert_eq!(mshrs.len(0), 1);
         assert_eq!(lanes[1].outstanding, 0);
         assert_eq!(lanes[0].outstanding, 1);
     }

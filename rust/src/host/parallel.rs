@@ -59,6 +59,7 @@ use crate::expander::{BatchAccess, ContentOracle, SchemeSnapshot};
 use crate::sim::{FxHashMap, Ps};
 use crate::topology::{DevicePool, Interleave, PoolShard};
 
+use super::mshr::SlotArena;
 use super::{Core, HostSim, Lane, RoutedOracle};
 
 /// Work sent to a device-shard worker over its FIFO channel.
@@ -96,7 +97,10 @@ enum Reply {
 
 /// One outstanding miss on the scheduler side. `lb` is the causal lower
 /// bound on `done` known at issue time; `done` is filled in when the
-/// worker's reply is consumed.
+/// worker's reply is consumed. `Copy + Default` so the per-core
+/// fixed-capacity [`SlotArena`] (the parallel `(done, device)` merge's
+/// slab, sized at `mshrs_per_core`) can hold it.
+#[derive(Clone, Copy, Default)]
 struct OutEntry {
     req_id: u64,
     dev: u32,
@@ -167,32 +171,39 @@ impl Merge {
     }
 }
 
-/// Remove every outstanding miss with `done <= t`, releasing its lane
-/// slot — the parallel analogue of [`super::drain_completed`]. Entries
-/// whose lower bound exceeds `t` cannot have completed, so their
-/// replies are left unconsumed (no wait); the rest are resolved first.
-/// Set-removal and heap-popping retire the same `(done, device)`
-/// multiset, so lane occupancy evolves identically.
+/// Remove every outstanding miss of core `ci` with `done <= t`,
+/// releasing its lane slot — the parallel analogue of
+/// [`super::drain_completed`]. Entries whose lower bound exceeds `t`
+/// cannot have completed, so their replies are left unconsumed (no
+/// wait); the rest are resolved first. Set-removal and heap-popping
+/// retire the same `(done, device)` multiset, so lane occupancy evolves
+/// identically (swap-remove order is invisible: every scan here and in
+/// the scheduler is whole-set).
 fn drain(
-    out: &mut Vec<OutEntry>,
+    out: &mut SlotArena<OutEntry>,
+    ci: usize,
     t: Ps,
     merge: &mut Merge,
     cores: &mut [Core],
     lanes: &mut [Lane],
 ) {
-    for k in 0..out.len() {
-        if out[k].done.is_none() && out[k].lb <= t {
-            let done = merge.resolve(out[k].req_id, cores, lanes);
-            out[k].done = Some(done);
+    for k in 0..out.len(ci) {
+        let e = out.get(ci, k);
+        if e.done.is_none() && e.lb <= t {
+            let done = merge.resolve(e.req_id, cores, lanes);
+            out.get_mut(ci, k).done = Some(done);
         }
     }
-    out.retain(|e| match e.done {
-        Some(done) if done <= t => {
-            lanes[e.dev as usize].release();
-            false
+    let mut k = 0;
+    while k < out.len(ci) {
+        match out.get(ci, k).done {
+            Some(done) if done <= t => {
+                let e = out.swap_remove(ci, k);
+                lanes[e.dev as usize].release();
+            }
+            _ => k += 1,
         }
-        _ => true,
-    });
+    }
 }
 
 /// Parallel counterpart of [`HostSim::phase`]: advance every core to
@@ -224,8 +235,12 @@ pub(super) fn phase(
         .map(|d| pool.fabric.min_round_trip_ps(d, leaf_one_way))
         .collect();
     // Worker routing: every device of a fabric group shares a worker,
-    // so shared switch ports see the sequential acquire order.
-    let group_of: Vec<usize> = (0..ndev).map(|d| pool.fabric.group_of(d)).collect();
+    // so shared switch ports see the sequential acquire order. The
+    // quantum prefetch stamps each request with its group, so the
+    // per-request merge work is a modulo on a prefetched field.
+    let group_of: Vec<u32> = (0..ndev)
+        .map(|d| pool.fabric.group_of(d) as u32)
+        .collect();
 
     let oracle = Mutex::new(oracle);
     let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
@@ -237,9 +252,10 @@ pub(super) fn phase(
         measure,
         lookahead,
     };
-    // Scheduler-side outstanding misses, one list per core (stands in
-    // for `Core::outstanding`, which stays empty under this engine).
-    let mut out: Vec<Vec<OutEntry>> = (0..sim.cores.len()).map(|_| Vec::new()).collect();
+    // Scheduler-side outstanding misses: one fixed-capacity slab slot
+    // per core (stands in for the sequential engine's `MshrHeap`, which
+    // stays empty under this engine) — no steady-state allocations.
+    let mut out: SlotArena<OutEntry> = SlotArena::new(sim.cores.len(), mshrs);
 
     std::thread::scope(|scope| {
         let mut job_txs: Vec<Sender<Job>> = Vec::with_capacity(workers);
@@ -257,56 +273,59 @@ pub(super) fn phase(
             let Some(ci) = sim.pick_core(insts_target) else {
                 break;
             };
-            let tr = sim.cores[ci].src.next();
+            // Translation, hop-path and routing were batched at quantum
+            // refill (`ReqQueue::refill`); per request this is a buffer
+            // pop plus admission + completion bookkeeping.
+            let tr = sim.cores[ci].next_req(&map, &group_of);
             sim.cores[ci].retire_gap(tr.inst_gap, ipc);
 
             let t = sim.cores[ci].t;
-            drain(&mut out[ci], t, &mut merge, &mut sim.cores, &mut sim.lanes);
-            if out[ci].len() >= mshrs {
+            drain(&mut out, ci, t, &mut merge, &mut sim.cores, &mut sim.lanes);
+            if out.len(ci) >= mshrs {
                 // MSHR full: the stall needs the true oldest miss, so
                 // every unresolved completion must be known before the
                 // `(done, device)` minimum — the sequential heap key —
                 // is retired.
-                for k in 0..out[ci].len() {
-                    if out[ci][k].done.is_none() {
+                for k in 0..out.len(ci) {
+                    if out.get(ci, k).done.is_none() {
                         let done =
-                            merge.resolve(out[ci][k].req_id, &mut sim.cores, &mut sim.lanes);
-                        out[ci][k].done = Some(done);
+                            merge.resolve(out.get(ci, k).req_id, &mut sim.cores, &mut sim.lanes);
+                        out.get_mut(ci, k).done = Some(done);
                     }
                 }
-                let k = out[ci]
-                    .iter()
-                    .enumerate()
-                    .min_by_key(|(_, e)| (e.done.expect("resolved above"), e.dev))
-                    .map(|(k, _)| k)
+                let k = (0..out.len(ci))
+                    .min_by_key(|&k| {
+                        let e = out.get(ci, k);
+                        (e.done.expect("resolved above"), e.dev)
+                    })
                     .expect("MSHR-full with empty outstanding set");
-                let e = out[ci].remove(k);
+                let e = out.swap_remove(ci, k);
                 sim.lanes[e.dev as usize].release();
                 let done = e.done.expect("resolved above");
                 sim.cores[ci].t = sim.cores[ci].t.max(done);
                 let t = sim.cores[ci].t;
-                drain(&mut out[ci], t, &mut merge, &mut sim.cores, &mut sim.lanes);
+                drain(&mut out, ci, t, &mut merge, &mut sim.cores, &mut sim.lanes);
             }
 
             sim.cores[ci].count_issue(tr.write);
             let t_issue = sim.cores[ci].t;
-            let (dev, local) = map.route(tr.ospn);
+            let dev = tr.dev as usize;
             let req_id = next_req_id;
             next_req_id += 1;
             merge.inflight.insert(
                 req_id,
                 Issued {
                     core: ci as u32,
-                    dev: dev as u32,
+                    dev: tr.dev,
                     t_issue,
                 },
             );
-            job_txs[group_of[dev] % workers]
+            job_txs[tr.group as usize % workers]
                 .send(Job::Req {
                     req_id,
                     dev,
                     t_issue,
-                    local,
+                    local: tr.local,
                     line: tr.line,
                     write: tr.write,
                 })
@@ -319,12 +338,15 @@ pub(super) fn phase(
                 let done = merge.resolve(req_id, &mut sim.cores, &mut sim.lanes);
                 sim.cores[ci].t = sim.cores[ci].t.max(done);
             } else {
-                out[ci].push(OutEntry {
-                    req_id,
-                    dev: dev as u32,
-                    lb: t_issue + merge.lookahead[dev],
-                    done: None,
-                });
+                out.push(
+                    ci,
+                    OutEntry {
+                        req_id,
+                        dev: tr.dev,
+                        lb: t_issue + merge.lookahead[dev],
+                        done: None,
+                    },
+                );
                 sim.lanes[dev].push_outstanding();
             }
 
@@ -351,16 +373,21 @@ pub(super) fn phase(
         // reply (latency counts toward elapsed time), mirroring the
         // sequential engine's tail.
         for ci in 0..sim.cores.len() {
-            for k in 0..out[ci].len() {
-                if out[ci][k].done.is_none() {
-                    let done = merge.resolve(out[ci][k].req_id, &mut sim.cores, &mut sim.lanes);
-                    out[ci][k].done = Some(done);
+            for k in 0..out.len(ci) {
+                if out.get(ci, k).done.is_none() {
+                    let done = merge.resolve(out.get(ci, k).req_id, &mut sim.cores, &mut sim.lanes);
+                    out.get_mut(ci, k).done = Some(done);
                 }
             }
-            if let Some(last) = out[ci].iter().map(|e| e.done.expect("resolved above")).max() {
+            if let Some(last) = out
+                .slice(ci)
+                .iter()
+                .map(|e| e.done.expect("resolved above"))
+                .max()
+            {
                 sim.cores[ci].t = sim.cores[ci].t.max(last);
             }
-            out[ci].clear();
+            out.clear(ci);
         }
         for lane in &mut sim.lanes {
             lane.outstanding = 0;

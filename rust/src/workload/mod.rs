@@ -14,6 +14,7 @@ pub mod access;
 pub mod content;
 pub mod mix;
 pub mod trace;
+pub mod trace_bin;
 
 pub use access::{AccessPattern, RequestGen};
 pub use content::{ContentProfile, WorkloadOracle};

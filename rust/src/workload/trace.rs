@@ -80,8 +80,10 @@ impl Trace {
         self.per_core.iter().map(|c| c.len()).sum()
     }
 
-    /// Serialize to the line format above.
-    pub fn serialize(&self) -> String {
+    /// The `#`-header block shared by the text and binary formats (the
+    /// binary container embeds these exact bytes, see
+    /// [`super::trace_bin`]).
+    pub(crate) fn serialize_header(&self) -> String {
         let mut out = String::new();
         let _ = writeln!(out, "#ibex-trace v1");
         let _ = writeln!(out, "#mix {}", self.mix.canonical());
@@ -100,6 +102,12 @@ impl Trace {
         if !self.fabric_profile.is_empty() {
             let _ = writeln!(out, "#profile {}", self.fabric_profile);
         }
+        out
+    }
+
+    /// Serialize to the line format above.
+    pub fn serialize(&self) -> String {
+        let mut out = self.serialize_header();
         for (ci, stream) in self.per_core.iter().enumerate() {
             let _ = writeln!(out, "core {ci}");
             for r in stream.iter() {
@@ -113,170 +121,52 @@ impl Trace {
 
     /// Parse the line format; errors carry a line number.
     pub fn parse(text: &str) -> Result<Trace, String> {
-        let mut lines = text.lines().enumerate();
-        match lines.next() {
-            Some((_, l)) if l.trim() == "#ibex-trace v1" => {}
-            _ => return Err("not an ibex trace (missing `#ibex-trace v1` header)".to_string()),
+        let mut p = TextParser::new();
+        for (i, raw) in text.lines().enumerate() {
+            p.line(i + 1, raw)?;
         }
-        let mut mix: Option<Mix> = None;
-        let mut scale: Option<f64> = None;
-        let mut seed: Option<u64> = None;
-        let mut devices: usize = 1;
-        let mut interleave = InterleaveKind::default();
-        let mut fabric = FabricKind::Direct;
-        let mut switch_radix = DEFAULT_SWITCH_RADIX;
-        let mut fabric_profile = String::new();
-        let mut sections: Vec<Vec<TimedRequest>> = Vec::new();
-        let mut current: Option<usize> = None;
-        for (i, raw) in lines {
-            let line = raw.trim();
-            if line.is_empty() {
-                continue;
-            }
-            let lineno = i + 1;
-            if let Some(rest) = line.strip_prefix('#') {
-                let rest = rest.trim();
-                if let Some(v) = rest.strip_prefix("mix ") {
-                    mix = Some(Mix::parse(v.trim()).map_err(|e| format!("line {lineno}: {e}"))?);
-                } else if let Some(v) = rest.strip_prefix("scale ") {
-                    scale = Some(
-                        v.trim()
-                            .parse()
-                            .map_err(|_| format!("line {lineno}: bad scale {v:?}"))?,
-                    );
-                } else if let Some(v) = rest.strip_prefix("seed ") {
-                    seed = Some(
-                        v.trim()
-                            .parse()
-                            .map_err(|_| format!("line {lineno}: bad seed {v:?}"))?,
-                    );
-                } else if let Some(v) = rest.strip_prefix("devices ") {
-                    devices = v
-                        .trim()
-                        .parse()
-                        .ok()
-                        .filter(|&n| (1..=MAX_DEVICES).contains(&n))
-                        .ok_or_else(|| {
-                            format!(
-                                "line {lineno}: bad device count {v:?} (1..={MAX_DEVICES})"
-                            )
-                        })?;
-                } else if let Some(v) = rest.strip_prefix("interleave ") {
-                    interleave = InterleaveKind::parse(v.trim()).ok_or_else(|| {
-                        format!(
-                            "line {lineno}: unknown interleave {v:?} (accepted: {})",
-                            InterleaveKind::accepted()
-                        )
-                    })?;
-                } else if let Some(v) = rest.strip_prefix("fabric ") {
-                    let v = v.trim();
-                    let (kind_s, radix_s) = match v.split_once('/') {
-                        Some((k, r)) => (k, Some(r)),
-                        None => (v, None),
-                    };
-                    fabric = FabricKind::parse(kind_s).ok_or_else(|| {
-                        format!(
-                            "line {lineno}: unknown fabric {v:?} (accepted: {})",
-                            FabricKind::accepted()
-                        )
-                    })?;
-                    if let Some(r) = radix_s {
-                        switch_radix = r
-                            .parse()
-                            .ok()
-                            .filter(|&n| (2..=MAX_DEVICES).contains(&n))
-                            .ok_or_else(|| {
-                                format!(
-                                    "line {lineno}: bad switch radix {r:?} (2..={MAX_DEVICES})"
-                                )
-                            })?;
-                    }
-                } else if let Some(v) = rest.strip_prefix("profile ") {
-                    let v = v.trim();
-                    FabricProfile::by_name(v).ok_or_else(|| {
-                        format!(
-                            "line {lineno}: unknown fabric profile {v:?} (accepted: {})",
-                            FabricProfile::accepted()
-                        )
-                    })?;
-                    fabric_profile = v.to_string();
-                }
-                // Unknown # lines are comments (forward compatibility).
-                continue;
-            }
-            if let Some(v) = line.strip_prefix("core ") {
-                let ci: usize = v
-                    .trim()
-                    .parse()
-                    .map_err(|_| format!("line {lineno}: bad core index {v:?}"))?;
-                if ci != sections.len() {
-                    return Err(format!(
-                        "line {lineno}: core sections must be sequential (expected {}, got {ci})",
-                        sections.len()
-                    ));
-                }
-                sections.push(Vec::new());
-                current = Some(ci);
-                continue;
-            }
-            let mut parts = line.split_whitespace();
-            let kind = parts.next().unwrap_or("");
-            let write = match kind {
-                "R" | "r" => false,
-                "W" | "w" => true,
-                _ => return Err(format!("line {lineno}: expected `R|W <addr> <gap>`")),
-            };
-            let addr = parts
-                .next()
-                .and_then(|a| u64::from_str_radix(a, 16).ok())
-                .ok_or_else(|| format!("line {lineno}: bad hex address"))?;
-            let gap: u64 = parts
-                .next()
-                .and_then(|g| g.parse().ok())
-                .ok_or_else(|| format!("line {lineno}: bad instruction gap"))?;
-            if parts.next().is_some() {
-                return Err(format!("line {lineno}: trailing tokens"));
-            }
-            let ci = current.ok_or_else(|| {
-                format!("line {lineno}: request before any `core N` section")
-            })?;
-            sections[ci].push(TimedRequest {
-                ospn: addr / PAGE_BYTES,
-                line: ((addr % PAGE_BYTES) / LINE_BYTES) as u32,
-                write,
-                inst_gap: gap.max(1),
-            });
-        }
-        let mix = mix.ok_or("trace missing `#mix` header")?;
-        let trace = Trace {
-            scale: scale.ok_or("trace missing `#scale` header")?,
-            seed: seed.ok_or("trace missing `#seed` header")?,
-            devices,
-            interleave,
-            fabric,
-            switch_radix,
-            fabric_profile,
-            per_core: sections.into_iter().map(Arc::new).collect(),
-            mix,
-        };
-        if trace.per_core.len() != trace.mix.total_cores() {
-            return Err(format!(
-                "trace has {} core sections but mix {:?} needs {}",
-                trace.per_core.len(),
-                trace.mix.canonical(),
-                trace.mix.total_cores()
-            ));
-        }
-        if trace.per_core.iter().any(|c| c.is_empty()) {
-            return Err("trace has an empty core section".to_string());
-        }
-        Ok(trace)
+        p.finish()
     }
 
+    /// Parse the line format from a reader, one line at a time — a
+    /// multi-GB text trace streams through a single reused line buffer
+    /// instead of being materialized as one `String`. Byte-for-byte the
+    /// same grammar and error messages (line numbers included) as
+    /// [`Trace::parse`].
+    pub fn parse_reader<R: std::io::BufRead>(r: &mut R) -> Result<Trace, String> {
+        let mut p = TextParser::new();
+        let mut buf = String::new();
+        let mut lineno = 0usize;
+        loop {
+            buf.clear();
+            let n = r.read_line(&mut buf).map_err(|e| e.to_string())?;
+            if n == 0 {
+                break;
+            }
+            lineno += 1;
+            p.line(lineno, &buf)?;
+        }
+        p.finish()
+    }
+
+    /// Load a trace from disk, auto-detecting the format: files opening
+    /// with the [`super::trace_bin::BIN_MAGIC`] bytes stream through the
+    /// binary reader, everything else through the streaming text parser.
     pub fn load(path: &Path) -> Result<Trace, String> {
-        let text = std::fs::read_to_string(path)
+        use std::io::BufRead as _;
+        let file =
+            std::fs::File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        let mut r = std::io::BufReader::with_capacity(1 << 20, file);
+        let head = r
+            .fill_buf()
             .map_err(|e| format!("{}: {e}", path.display()))?;
-        Self::parse(&text)
+        if head.starts_with(&super::trace_bin::BIN_MAGIC) {
+            super::trace_bin::read_from(&mut r).map_err(|e| format!("{}: {e}", path.display()))
+        } else {
+            // Text-parse errors stay unprefixed, exactly as `parse`
+            // reports them (pinned by the line-number regression test).
+            Self::parse_reader(&mut r)
+        }
     }
 
     pub fn save(&self, path: &Path) -> Result<(), String> {
@@ -296,6 +186,215 @@ impl Trace {
                 }) as Box<dyn RequestSource>
             })
             .collect()
+    }
+}
+
+/// Incremental line-fed parser behind both [`Trace::parse`] (in-memory)
+/// and [`Trace::parse_reader`] (streaming): feed lines in order with
+/// their 1-based numbers, then `finish()`. The binary container reuses
+/// it for its embedded header block (`finish_geometry`, which skips the
+/// record-section checks).
+pub(crate) struct TextParser {
+    started: bool,
+    mix: Option<Mix>,
+    scale: Option<f64>,
+    seed: Option<u64>,
+    devices: usize,
+    interleave: InterleaveKind,
+    fabric: FabricKind,
+    switch_radix: usize,
+    fabric_profile: String,
+    /// Per-core record sections; the last one is the open section
+    /// (sections are required to be sequential, so no cursor needed).
+    sections: Vec<Vec<TimedRequest>>,
+}
+
+impl TextParser {
+    pub(crate) fn new() -> Self {
+        TextParser {
+            started: false,
+            mix: None,
+            scale: None,
+            seed: None,
+            devices: 1,
+            interleave: InterleaveKind::default(),
+            fabric: FabricKind::Direct,
+            switch_radix: DEFAULT_SWITCH_RADIX,
+            fabric_profile: String::new(),
+            sections: Vec::new(),
+        }
+    }
+
+    /// True once any `core N` line (and hence any request record) has
+    /// been fed — the binary container's embedded header must not
+    /// contain either.
+    pub(crate) fn has_sections(&self) -> bool {
+        !self.sections.is_empty()
+    }
+
+    /// Consume one line. `lineno` is 1-based; trailing newlines are
+    /// ignored (lines are trimmed), so reader-fed lines may keep them.
+    pub(crate) fn line(&mut self, lineno: usize, raw: &str) -> Result<(), String> {
+        if !self.started {
+            if raw.trim() == "#ibex-trace v1" {
+                self.started = true;
+                return Ok(());
+            }
+            return Err("not an ibex trace (missing `#ibex-trace v1` header)".to_string());
+        }
+        let line = raw.trim();
+        if line.is_empty() {
+            return Ok(());
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            let rest = rest.trim();
+            if let Some(v) = rest.strip_prefix("mix ") {
+                self.mix =
+                    Some(Mix::parse(v.trim()).map_err(|e| format!("line {lineno}: {e}"))?);
+            } else if let Some(v) = rest.strip_prefix("scale ") {
+                self.scale = Some(
+                    v.trim()
+                        .parse()
+                        .map_err(|_| format!("line {lineno}: bad scale {v:?}"))?,
+                );
+            } else if let Some(v) = rest.strip_prefix("seed ") {
+                self.seed = Some(
+                    v.trim()
+                        .parse()
+                        .map_err(|_| format!("line {lineno}: bad seed {v:?}"))?,
+                );
+            } else if let Some(v) = rest.strip_prefix("devices ") {
+                self.devices = v
+                    .trim()
+                    .parse()
+                    .ok()
+                    .filter(|&n| (1..=MAX_DEVICES).contains(&n))
+                    .ok_or_else(|| {
+                        format!("line {lineno}: bad device count {v:?} (1..={MAX_DEVICES})")
+                    })?;
+            } else if let Some(v) = rest.strip_prefix("interleave ") {
+                self.interleave = InterleaveKind::parse(v.trim()).ok_or_else(|| {
+                    format!(
+                        "line {lineno}: unknown interleave {v:?} (accepted: {})",
+                        InterleaveKind::accepted()
+                    )
+                })?;
+            } else if let Some(v) = rest.strip_prefix("fabric ") {
+                let v = v.trim();
+                let (kind_s, radix_s) = match v.split_once('/') {
+                    Some((k, r)) => (k, Some(r)),
+                    None => (v, None),
+                };
+                self.fabric = FabricKind::parse(kind_s).ok_or_else(|| {
+                    format!(
+                        "line {lineno}: unknown fabric {v:?} (accepted: {})",
+                        FabricKind::accepted()
+                    )
+                })?;
+                if let Some(r) = radix_s {
+                    self.switch_radix = r
+                        .parse()
+                        .ok()
+                        .filter(|&n| (2..=MAX_DEVICES).contains(&n))
+                        .ok_or_else(|| {
+                            format!("line {lineno}: bad switch radix {r:?} (2..={MAX_DEVICES})")
+                        })?;
+                }
+            } else if let Some(v) = rest.strip_prefix("profile ") {
+                let v = v.trim();
+                FabricProfile::by_name(v).ok_or_else(|| {
+                    format!(
+                        "line {lineno}: unknown fabric profile {v:?} (accepted: {})",
+                        FabricProfile::accepted()
+                    )
+                })?;
+                self.fabric_profile = v.to_string();
+            }
+            // Unknown # lines are comments (forward compatibility).
+            return Ok(());
+        }
+        if let Some(v) = line.strip_prefix("core ") {
+            let ci: usize = v
+                .trim()
+                .parse()
+                .map_err(|_| format!("line {lineno}: bad core index {v:?}"))?;
+            if ci != self.sections.len() {
+                return Err(format!(
+                    "line {lineno}: core sections must be sequential (expected {}, got {ci})",
+                    self.sections.len()
+                ));
+            }
+            self.sections.push(Vec::new());
+            return Ok(());
+        }
+        let mut parts = line.split_whitespace();
+        let kind = parts.next().unwrap_or("");
+        let write = match kind {
+            "R" | "r" => false,
+            "W" | "w" => true,
+            _ => return Err(format!("line {lineno}: expected `R|W <addr> <gap>`")),
+        };
+        let addr = parts
+            .next()
+            .and_then(|a| u64::from_str_radix(a, 16).ok())
+            .ok_or_else(|| format!("line {lineno}: bad hex address"))?;
+        let gap: u64 = parts
+            .next()
+            .and_then(|g| g.parse().ok())
+            .ok_or_else(|| format!("line {lineno}: bad instruction gap"))?;
+        if parts.next().is_some() {
+            return Err(format!("line {lineno}: trailing tokens"));
+        }
+        if self.sections.is_empty() {
+            return Err(format!("line {lineno}: request before any `core N` section"));
+        }
+        let ci = self.sections.len() - 1;
+        self.sections[ci].push(TimedRequest {
+            ospn: addr / PAGE_BYTES,
+            line: ((addr % PAGE_BYTES) / LINE_BYTES) as u32,
+            write,
+            inst_gap: gap.max(1),
+        });
+        Ok(())
+    }
+
+    /// Header-only close-out: validates mix/scale/seed presence but not
+    /// the record sections (the binary container supplies those
+    /// separately). `per_core` holds whatever sections were fed.
+    pub(crate) fn finish_geometry(self) -> Result<Trace, String> {
+        if !self.started {
+            return Err("not an ibex trace (missing `#ibex-trace v1` header)".to_string());
+        }
+        let mix = self.mix.ok_or("trace missing `#mix` header")?;
+        Ok(Trace {
+            scale: self.scale.ok_or("trace missing `#scale` header")?,
+            seed: self.seed.ok_or("trace missing `#seed` header")?,
+            devices: self.devices,
+            interleave: self.interleave,
+            fabric: self.fabric,
+            switch_radix: self.switch_radix,
+            fabric_profile: self.fabric_profile,
+            per_core: self.sections.into_iter().map(Arc::new).collect(),
+            mix,
+        })
+    }
+
+    /// Full close-out for the text format: geometry plus the section
+    /// shape checks.
+    pub(crate) fn finish(self) -> Result<Trace, String> {
+        let trace = self.finish_geometry()?;
+        if trace.per_core.len() != trace.mix.total_cores() {
+            return Err(format!(
+                "trace has {} core sections but mix {:?} needs {}",
+                trace.per_core.len(),
+                trace.mix.canonical(),
+                trace.mix.total_cores()
+            ));
+        }
+        if trace.per_core.iter().any(|c| c.is_empty()) {
+            return Err("trace has an empty core section".to_string());
+        }
+        Ok(trace)
     }
 }
 
@@ -463,6 +562,36 @@ mod tests {
         assert!(!ok.per_core[0][0].write);
         assert!(ok.per_core[0][1].write);
         assert_eq!(ok.per_core[0][1].line, 2);
+    }
+
+    #[test]
+    fn parse_reader_matches_parse() {
+        let cfg = tiny_cfg();
+        let mix = Mix::parse("parest:1,mcf:1").unwrap();
+        let t = record(&cfg, &mix);
+        let text = t.serialize();
+        let mut r = std::io::Cursor::new(text.as_bytes());
+        let back = Trace::parse_reader(&mut r).unwrap();
+        assert_eq!(back.serialize(), text);
+        // A missing trailing newline parses the same way.
+        let trimmed = text.trim_end();
+        let mut r = std::io::Cursor::new(trimmed.as_bytes());
+        let back = Trace::parse_reader(&mut r).unwrap();
+        assert_eq!(back.serialize(), text);
+    }
+
+    #[test]
+    fn streaming_load_preserves_parse_error_line_numbers() {
+        let hdr = "#ibex-trace v1\n#mix parest:1\n#scale 0.001\n#seed 1\n";
+        let text = format!("{hdr}core 0\nR 1040 7\nR zz 9\n");
+        let want = Trace::parse(&text).unwrap_err();
+        assert_eq!(want, "line 7: bad hex address");
+        let path =
+            std::env::temp_dir().join(format!("ibex_lineno_{}.trace", std::process::id()));
+        std::fs::write(&path, &text).unwrap();
+        let got = Trace::load(&path).unwrap_err();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(got, want, "streaming loader must report identical errors");
     }
 
     #[test]

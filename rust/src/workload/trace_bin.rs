@@ -1,0 +1,360 @@
+//! Fixed-record binary trace container: the text format's header block
+//! verbatim, then 16-byte little-endian records — multi-GB replays
+//! stream through a reused chunk buffer instead of materializing
+//! strings, and a record costs two `u64` reads instead of a
+//! `split_whitespace` + two string parses.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! [0..8)              magic "IBEXBT01"
+//! [8..12)             u32  header_len
+//! [12..12+header_len) the text format's `#`-header block, verbatim
+//!                     (starts with `#ibex-trace v1`; no core sections)
+//! u32                 n_cores
+//! n_cores × u64       per-core record counts
+//! per core, count ×   16-byte records:
+//!   word0: bit 0 = write, bits 6..12 = line, bits 12..64 = OSPN
+//!          (bits 1..6 reserved, must be zero — word0 with bit 0
+//!          cleared is exactly the text format's hex byte address)
+//!   word1: instruction gap
+//! ```
+//!
+//! Embedding the text header keeps one parser for the run geometry
+//! (`TextParser::finish_geometry`) and keeps binary traces
+//! self-describing under `head -c`. Decoding applies the same
+//! `gap.max(1)` clamp as the text parser, so text→bin→parse and
+//! text→parse agree request-for-request and replay stays bit-identical
+//! to the text path.
+
+use std::io::{BufRead, Read, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::workload::trace::{TextParser, Trace};
+use crate::workload::TimedRequest;
+
+/// First bytes of a binary trace file; [`Trace::load`] sniffs these to
+/// auto-detect the format.
+pub const BIN_MAGIC: [u8; 8] = *b"IBEXBT01";
+
+/// Bits 1..6 of record word0: reserved, must be zero.
+const RESERVED_MASK: u64 = 0x3E;
+/// OSPNs must fit the 52 bits above the in-page address (2^52 pages =
+/// 16 EiB of address space — far beyond the pool's 2 TiB/device cap).
+const MAX_OSPN: u64 = 1 << 52;
+/// Sanity bound on the embedded header block (real headers are <1 KiB).
+const MAX_HEADER_LEN: u32 = 1 << 20;
+/// Records streamed per chunk (64 KiB buffer).
+const CHUNK_RECORDS: usize = 4096;
+const RECORD_BYTES: usize = 16;
+
+fn encode_record(r: &TimedRequest) -> Result<[u8; RECORD_BYTES], String> {
+    if r.ospn >= MAX_OSPN {
+        return Err(format!("OSPN {:#x} exceeds the binary format's 52-bit field", r.ospn));
+    }
+    if r.line >= 64 {
+        return Err(format!("line index {} out of range (0..64)", r.line));
+    }
+    let word0 = (r.ospn << 12) | ((r.line as u64) << 6) | (r.write as u64);
+    let mut out = [0u8; RECORD_BYTES];
+    out[..8].copy_from_slice(&word0.to_le_bytes());
+    out[8..].copy_from_slice(&r.inst_gap.to_le_bytes());
+    Ok(out)
+}
+
+fn decode_record(bytes: &[u8]) -> Result<TimedRequest, String> {
+    let word0 = u64::from_le_bytes(bytes[..8].try_into().expect("record slice is 16 bytes"));
+    let gap = u64::from_le_bytes(bytes[8..16].try_into().expect("record slice is 16 bytes"));
+    if word0 & RESERVED_MASK != 0 {
+        return Err(format!(
+            "corrupt record (reserved bits set in word {word0:#x})"
+        ));
+    }
+    Ok(TimedRequest {
+        ospn: word0 >> 12,
+        line: ((word0 >> 6) & 0x3F) as u32,
+        write: word0 & 1 != 0,
+        inst_gap: gap.max(1),
+    })
+}
+
+fn read_exact_ctx<R: Read>(r: &mut R, buf: &mut [u8], what: &str) -> Result<(), String> {
+    r.read_exact(buf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            format!("truncated binary trace (while reading {what})")
+        } else {
+            format!("error reading {what}: {e}")
+        }
+    })
+}
+
+fn read_u32<R: Read>(r: &mut R, what: &str) -> Result<u32, String> {
+    let mut b = [0u8; 4];
+    read_exact_ctx(r, &mut b, what)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R, what: &str) -> Result<u64, String> {
+    let mut b = [0u8; 8];
+    read_exact_ctx(r, &mut b, what)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Serialize `t` into the binary container.
+pub fn write_to<W: Write>(t: &Trace, w: &mut W) -> Result<(), String> {
+    let header = t.serialize_header();
+    let io = |e: std::io::Error| format!("error writing binary trace: {e}");
+    w.write_all(&BIN_MAGIC).map_err(io)?;
+    w.write_all(&(header.len() as u32).to_le_bytes()).map_err(io)?;
+    w.write_all(header.as_bytes()).map_err(io)?;
+    w.write_all(&(t.per_core.len() as u32).to_le_bytes()).map_err(io)?;
+    for stream in &t.per_core {
+        w.write_all(&(stream.len() as u64).to_le_bytes()).map_err(io)?;
+    }
+    let mut chunk = Vec::with_capacity(CHUNK_RECORDS * RECORD_BYTES);
+    for stream in &t.per_core {
+        for r in stream.iter() {
+            chunk.extend_from_slice(&encode_record(r)?);
+            if chunk.len() == CHUNK_RECORDS * RECORD_BYTES {
+                w.write_all(&chunk).map_err(io)?;
+                chunk.clear();
+            }
+        }
+    }
+    if !chunk.is_empty() {
+        w.write_all(&chunk).map_err(io)?;
+    }
+    Ok(())
+}
+
+/// Deserialize a binary trace, streaming records through a fixed chunk
+/// buffer. The reader must be positioned at the magic bytes.
+pub fn read_from<R: BufRead>(r: &mut R) -> Result<Trace, String> {
+    let mut magic = [0u8; 8];
+    read_exact_ctx(r, &mut magic, "magic bytes")?;
+    if magic != BIN_MAGIC {
+        return Err("not a binary ibex trace (bad magic bytes)".to_string());
+    }
+    let header_len = read_u32(r, "header length")?;
+    if header_len == 0 || header_len > MAX_HEADER_LEN {
+        return Err(format!(
+            "corrupt binary trace (header length {header_len} outside 1..={MAX_HEADER_LEN})"
+        ));
+    }
+    let mut header = vec![0u8; header_len as usize];
+    read_exact_ctx(r, &mut header, "header block")?;
+    let header = String::from_utf8(header)
+        .map_err(|_| "corrupt binary trace (header block is not UTF-8)".to_string())?;
+    let mut parser = TextParser::new();
+    for (i, line) in header.lines().enumerate() {
+        parser
+            .line(i + 1, line)
+            .map_err(|e| format!("binary trace header: {e}"))?;
+    }
+    if parser.has_sections() {
+        return Err("corrupt binary trace (header block contains record sections)".to_string());
+    }
+    let geo = parser.finish_geometry()?;
+
+    let n_cores = read_u32(r, "core count")? as usize;
+    let expect = geo.mix.total_cores();
+    if n_cores != expect {
+        return Err(format!(
+            "trace has {} core sections but mix {:?} needs {}",
+            n_cores,
+            geo.mix.canonical(),
+            expect
+        ));
+    }
+    let mut counts = Vec::with_capacity(n_cores);
+    for ci in 0..n_cores {
+        counts.push(read_u64(r, &format!("record count of core {ci}"))? as usize);
+    }
+    if counts.iter().any(|&c| c == 0) {
+        return Err("trace has an empty core section".to_string());
+    }
+
+    let mut chunk = vec![0u8; CHUNK_RECORDS * RECORD_BYTES];
+    let mut per_core = Vec::with_capacity(n_cores);
+    for (ci, &count) in counts.iter().enumerate() {
+        // Cap the preallocation so a corrupt count can't balloon memory
+        // before the truncation error surfaces.
+        let mut stream = Vec::with_capacity(count.min(CHUNK_RECORDS));
+        let mut left = count;
+        while left > 0 {
+            let take = left.min(CHUNK_RECORDS);
+            let buf = &mut chunk[..take * RECORD_BYTES];
+            read_exact_ctx(r, buf, &format!("records of core {ci}"))?;
+            for k in 0..take {
+                stream.push(decode_record(&buf[k * RECORD_BYTES..(k + 1) * RECORD_BYTES])?);
+            }
+            left -= take;
+        }
+        per_core.push(Arc::new(stream));
+    }
+    let mut probe = [0u8; 1];
+    match r.read(&mut probe) {
+        Ok(0) => {}
+        Ok(_) => return Err("corrupt binary trace (trailing bytes after records)".to_string()),
+        Err(e) => return Err(format!("error reading binary trace: {e}")),
+    }
+    Ok(Trace { per_core, ..geo })
+}
+
+/// Write `t` to `path` in the binary container format.
+pub fn save(t: &Trace, path: &Path) -> Result<(), String> {
+    let file =
+        std::fs::File::create(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let mut w = std::io::BufWriter::with_capacity(1 << 20, file);
+    write_to(t, &mut w).map_err(|e| format!("{}: {e}", path.display()))?;
+    w.flush().map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Load a binary trace from `path`.
+pub fn load(path: &Path) -> Result<Trace, String> {
+    let file =
+        std::fs::File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let mut r = std::io::BufReader::with_capacity(1 << 20, file);
+    read_from(&mut r).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Whether `path` starts with the binary magic (unreadable files report
+/// `false`; the subsequent load surfaces the real error).
+pub fn is_binary(path: &Path) -> bool {
+    let Ok(mut f) = std::fs::File::open(path) else {
+        return false;
+    };
+    let mut head = [0u8; 8];
+    match f.read_exact(&mut head) {
+        Ok(()) => head == BIN_MAGIC,
+        Err(_) => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::workload::mix::Mix;
+    use crate::workload::{by_name, trace};
+
+    fn tiny_trace() -> Trace {
+        let mut cfg = SimConfig::test_small();
+        cfg.instructions = 20_000;
+        cfg.warmup_instructions = 2_000;
+        cfg.devices = 2;
+        let mix = Mix::homogeneous(by_name("mcf").unwrap(), 2);
+        trace::record(&cfg, &mix)
+    }
+
+    #[test]
+    fn roundtrip_is_exact() {
+        let t = tiny_trace();
+        let mut bytes = Vec::new();
+        write_to(&t, &mut bytes).unwrap();
+        assert!(bytes.starts_with(&BIN_MAGIC));
+        let back = read_from(&mut &bytes[..]).unwrap();
+        assert_eq!(back.serialize(), t.serialize(), "bin roundtrip must be byte-exact");
+        assert_eq!(back.per_core, t.per_core);
+        // Re-encoding is stable byte-for-byte.
+        let mut again = Vec::new();
+        write_to(&back, &mut again).unwrap();
+        assert_eq!(again, bytes);
+    }
+
+    #[test]
+    fn record_word_encoding_is_the_text_address() {
+        let r = TimedRequest {
+            ospn: 0x1234,
+            line: 17,
+            write: true,
+            inst_gap: 9,
+        };
+        let b = encode_record(&r).unwrap();
+        let word0 = u64::from_le_bytes(b[..8].try_into().unwrap());
+        // Bit 0 cleared == the text format's byte address.
+        assert_eq!(word0 & !1, 0x1234 * 4096 + 17 * 64);
+        assert_eq!(decode_record(&b).unwrap(), r);
+    }
+
+    #[test]
+    fn decode_clamps_zero_gap_like_text_parse() {
+        let r = TimedRequest {
+            ospn: 3,
+            line: 0,
+            write: false,
+            inst_gap: 1,
+        };
+        let mut b = encode_record(&r).unwrap();
+        b[8..].copy_from_slice(&0u64.to_le_bytes()); // forge gap 0
+        assert_eq!(decode_record(&b).unwrap().inst_gap, 1);
+    }
+
+    #[test]
+    fn encode_rejects_out_of_range_fields() {
+        let mut r = TimedRequest {
+            ospn: MAX_OSPN,
+            line: 0,
+            write: false,
+            inst_gap: 1,
+        };
+        assert!(encode_record(&r).is_err());
+        r.ospn = 0;
+        r.line = 64;
+        assert!(encode_record(&r).is_err());
+    }
+
+    #[test]
+    fn truncation_and_corruption_are_clean_errors() {
+        let t = tiny_trace();
+        let mut bytes = Vec::new();
+        write_to(&t, &mut bytes).unwrap();
+
+        // Truncated anywhere: a "truncated binary trace" error.
+        for cut in [4, 10, 40, bytes.len() - 7] {
+            let e = read_from(&mut &bytes[..cut]).unwrap_err();
+            assert!(e.contains("truncated"), "cut {cut}: {e}");
+        }
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert!(read_from(&mut &bad[..]).unwrap_err().contains("magic"));
+        // Reserved bits set in the first record.
+        let rec0 = 12 + {
+            let hl = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+            hl + 4 + 8 * t.per_core.len()
+        };
+        let mut bad = bytes.clone();
+        bad[rec0] |= RESERVED_MASK as u8;
+        assert!(read_from(&mut &bad[..]).unwrap_err().contains("reserved"));
+        // Trailing garbage.
+        let mut bad = bytes.clone();
+        bad.push(0);
+        assert!(read_from(&mut &bad[..]).unwrap_err().contains("trailing"));
+        // Absurd header length.
+        let mut bad = bytes.clone();
+        bad[8..12].copy_from_slice(&(MAX_HEADER_LEN + 1).to_le_bytes());
+        assert!(read_from(&mut &bad[..]).unwrap_err().contains("header length"));
+    }
+
+    #[test]
+    fn save_load_and_sniffing() {
+        let t = tiny_trace();
+        let dir = std::env::temp_dir();
+        let bin = dir.join(format!("ibex_tb_{}.btrace", std::process::id()));
+        let txt = dir.join(format!("ibex_tb_{}.trace", std::process::id()));
+        save(&t, &bin).unwrap();
+        t.save(&txt).unwrap();
+        assert!(is_binary(&bin));
+        assert!(!is_binary(&txt));
+        assert!(!is_binary(&dir.join("ibex_tb_definitely_missing")));
+        // `Trace::load` auto-detects both.
+        let from_bin = Trace::load(&bin).unwrap();
+        let from_txt = Trace::load(&txt).unwrap();
+        assert_eq!(from_bin.serialize(), from_txt.serialize());
+        assert_eq!(from_bin.per_core, t.per_core);
+        let _ = std::fs::remove_file(&bin);
+        let _ = std::fs::remove_file(&txt);
+    }
+}

@@ -1,0 +1,118 @@
+//! Binary trace container: byte-exact round-trips against the text
+//! format and bit-identical replay through both engines — the pins that
+//! let `ibex trace convert` and `--format bin` claim "same runs,
+//! smaller/faster files".
+
+use ibex::cli;
+use ibex::config::SimConfig;
+use ibex::coordinator::{run_one, Job};
+use ibex::workload::mix::Mix;
+use ibex::workload::{by_name, trace, trace_bin, Trace};
+
+fn quick_cfg() -> SimConfig {
+    let mut c = SimConfig::test_small();
+    c.cores = 2;
+    c.instructions = 60_000;
+    c.warmup_instructions = 6_000;
+    c
+}
+
+fn temp(tag: &str, ext: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("ibex_{tag}_{}.{ext}", std::process::id()))
+}
+
+#[test]
+fn text_bin_text_roundtrip_is_byte_exact() {
+    let cfg = quick_cfg();
+    let mix = Mix::parse("parest:1,mcf:1").unwrap();
+    let t = trace::record(&cfg, &mix);
+
+    let txt = temp("tb_roundtrip", "trace");
+    let bin = temp("tb_roundtrip", "btrace");
+    t.save(&txt).unwrap();
+    trace_bin::save(&t, &bin).unwrap();
+    assert!(trace_bin::is_binary(&bin));
+    assert!(!trace_bin::is_binary(&txt));
+
+    // Both loaders recover the same trace, and re-serializing each way
+    // is byte-stable.
+    let from_txt = Trace::load(&txt).unwrap();
+    let from_bin = Trace::load(&bin).unwrap();
+    assert_eq!(from_txt.per_core, t.per_core);
+    assert_eq!(from_bin.per_core, t.per_core);
+    assert_eq!(from_bin.serialize(), from_txt.serialize());
+    assert_eq!(from_bin.serialize().as_bytes(), std::fs::read(&txt).unwrap().as_slice());
+    let mut bin_again = Vec::new();
+    trace_bin::write_to(&from_txt, &mut bin_again).unwrap();
+    assert_eq!(bin_again, std::fs::read(&bin).unwrap());
+
+    let _ = std::fs::remove_file(&txt);
+    let _ = std::fs::remove_file(&bin);
+}
+
+#[test]
+fn record_convert_replay_is_bit_identical_across_engines_and_devices() {
+    for devices in [1usize, 4] {
+        let mut cfg = quick_cfg();
+        cfg.devices = devices;
+
+        // record (text) ...
+        let mix = Mix::homogeneous(by_name("mcf").unwrap(), cfg.cores);
+        let t = trace::record(&cfg, &mix);
+        let txt = temp(&format!("tb_replay_d{devices}"), "trace");
+        let bin = temp(&format!("tb_replay_d{devices}"), "btrace");
+        t.save(&txt).unwrap();
+
+        // ... -> convert (bin) through the real CLI path ...
+        let args: Vec<String> = ["trace", "convert"]
+            .iter()
+            .map(|s| s.to_string())
+            .chain([
+                txt.to_string_lossy().into_owned(),
+                bin.to_string_lossy().into_owned(),
+            ])
+            .collect();
+        assert_eq!(cli::dispatch(&args), 0, "trace convert must succeed");
+        assert!(trace_bin::is_binary(&bin));
+
+        // ... -> replay both formats through both engines.
+        for threads in [1usize, 4] {
+            let mut tcfg = cfg.clone();
+            tcfg.intra_threads = threads;
+            tcfg.trace = txt.to_string_lossy().into_owned();
+            let text_run = run_one(&Job::new("text", tcfg.clone(), "trace"));
+            let mut bcfg = tcfg.clone();
+            bcfg.trace = bin.to_string_lossy().into_owned();
+            let bin_run = run_one(&Job::new("bin", bcfg, "trace"));
+
+            let tag = format!("devices={devices} threads={threads}");
+            assert_eq!(
+                text_run.metrics.elapsed_ps, bin_run.metrics.elapsed_ps,
+                "elapsed must match ({tag})"
+            );
+            assert_eq!(
+                text_run.metrics.mem_by_kind, bin_run.metrics.mem_by_kind,
+                "device traffic must match ({tag})"
+            );
+            assert_eq!(text_run.metrics.requests, bin_run.metrics.requests, "{tag}");
+            assert_eq!(
+                text_run.metrics.instructions, bin_run.metrics.instructions,
+                "{tag}"
+            );
+            assert_eq!(text_run.metrics.mem_total, bin_run.metrics.mem_total, "{tag}");
+            assert_eq!(text_run.device.promotions, bin_run.device.promotions, "{tag}");
+            assert_eq!(text_run.device.demotions, bin_run.device.demotions, "{tag}");
+            assert_eq!(
+                text_run.metrics.devices.len(),
+                bin_run.metrics.devices.len(),
+                "{tag}"
+            );
+            for (a, b) in text_run.metrics.devices.iter().zip(&bin_run.metrics.devices) {
+                assert_eq!(a.requests, b.requests, "per-device requests ({tag})");
+                assert_eq!(a.mem_accesses, b.mem_accesses, "per-device traffic ({tag})");
+            }
+        }
+        let _ = std::fs::remove_file(&txt);
+        let _ = std::fs::remove_file(&bin);
+    }
+}
