@@ -21,6 +21,7 @@ use ibex::compress::size_model::analyze_page;
 use ibex::compress::AnalyticSizeModel;
 use ibex::expander::store::{ActivityEntry, ActivityTable, ChunkArena, ChunkRun, PageTable};
 use ibex::host::{HostSim, ReqQueue};
+use ibex::mem::{MemCause, MEM_CAUSES};
 use ibex::stats::Table;
 use ibex::telemetry::report::BenchReport;
 use ibex::topology::{DevicePool, Interleave, InterleaveKind};
@@ -39,6 +40,16 @@ fn main() {
     let mut t = Table::new(
         "Hot path — simulated request throughput per scheme",
         &["scheme", "requests", "wall ms", "Mreq/s"],
+    );
+    // Cause-tagged internal-access attribution per scheme (same runs):
+    // how much of each scheme's internal DRAM traffic is metadata
+    // machinery vs the host-serving line moves the paper prices.
+    let mut cause_headers: Vec<&str> = vec!["scheme"];
+    cause_headers.extend(MEM_CAUSES.iter().map(|c| c.name()));
+    cause_headers.push("overhead frac");
+    let mut ct = Table::new(
+        "Hot path — internal accesses by cause per scheme",
+        &cause_headers,
     );
     for scheme in [
         "uncompressed",
@@ -68,8 +79,18 @@ fn main() {
             format!("{:.0}", wall.as_secs_f64() * 1000.0),
             format!("{mreq_s:.2}"),
         ]);
+        // Overhead fraction = everything that is not a host serve.
+        let host_serve = m.mem_by_cause[MemCause::HostServe.index()];
+        let overhead = m.mem_total.saturating_sub(host_serve);
+        let frac = overhead as f64 / m.mem_total.max(1) as f64;
+        report.metric(&format!("{scheme}_internal_overhead_frac"), frac);
+        let mut crow = vec![scheme.to_string()];
+        crow.extend(m.mem_by_cause.iter().map(|c| c.to_string()));
+        crow.push(format!("{frac:.3}"));
+        ct.row(crow);
     }
     t.emit();
+    ct.emit();
 
     // ---- sharded scale-out throughput ------------------------------
 
@@ -311,5 +332,5 @@ fn main() {
     let _ = std::fs::remove_file(&txt_path);
     let _ = std::fs::remove_file(&bin_path);
 
-    report.table(&t).table(&st).table(&iso).table(&lt).write();
+    report.table(&t).table(&ct).table(&st).table(&iso).table(&lt).write();
 }

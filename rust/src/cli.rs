@@ -17,7 +17,8 @@ use crate::config::SimConfig;
 use crate::coordinator::{run_many, run_one, Job, JobResult};
 use crate::cxl::fabric::{Fabric, FabricKind};
 use crate::host::DeviceLaneMetrics;
-use crate::stats::Table;
+use crate::mem::MEM_CAUSES;
+use crate::stats::{slug_of, Table};
 use crate::telemetry::report as telemetry_report;
 use crate::workload::{self, mix::Mix, trace, trace_bin};
 
@@ -50,6 +51,12 @@ pub struct Cli {
     pub intra_threads: Option<String>,
     /// `--json FILE` — write a machine-readable run report there.
     pub json: Option<String>,
+    /// `--event-trace FILE` — write a Chrome trace-event JSON of the
+    /// measured request lifecycles there (per job: multi-job runs get
+    /// the job label's slug inserted before the extension).
+    pub event_trace: Option<String>,
+    /// `--trace-sample N` — record every Nth measured request (1 = all).
+    pub trace_sample: Option<String>,
     /// `--sample-every N[ns|insts]` — telemetry epoch length (plain N
     /// = retired instructions; an `ns` suffix switches to sim-time).
     pub sample_every: Option<String>,
@@ -80,6 +87,8 @@ impl Cli {
             fabric_profile: None,
             intra_threads: None,
             json: None,
+            event_trace: None,
+            trace_sample: None,
             sample_every: None,
             format: None,
             positional: Vec::new(),
@@ -117,6 +126,8 @@ impl Cli {
                 "--fabric-profile" => cli.fabric_profile = Some(take(&mut it, arg)?),
                 "--intra-threads" => cli.intra_threads = Some(take(&mut it, arg)?),
                 "--json" | "-j" => cli.json = Some(take(&mut it, arg)?),
+                "--event-trace" => cli.event_trace = Some(take(&mut it, arg)?),
+                "--trace-sample" => cli.trace_sample = Some(take(&mut it, arg)?),
                 "--sample-every" => cli.sample_every = Some(take(&mut it, arg)?),
                 "--format" | "-f" => cli.format = Some(take(&mut it, arg)?),
                 _ if arg.contains('=') => {
@@ -163,6 +174,12 @@ impl Cli {
         if let Some(n) = &self.intra_threads {
             cfg.set("intra_threads", n)?;
         }
+        if let Some(p) = &self.event_trace {
+            cfg.set("event_trace", p)?;
+        }
+        if let Some(n) = &self.trace_sample {
+            cfg.set("trace_sample", n)?;
+        }
         if let Some(se) = &self.sample_every {
             // `N` (instructions), `Nns` (sim-time), `Ninsts` (explicit).
             let (num, unit) = if let Some(n) = se.strip_suffix("insts") {
@@ -207,6 +224,11 @@ USAGE:
                                                manifest, final + steady-state
                                                metrics, per-tenant/per-device
                                                rows, epoch time-series)
+  ibex run    --event-trace FILE               also write a Chrome trace-event
+              [--trace-sample N]               JSON of the measured request
+                                               lifecycles (load in Perfetto /
+                                               chrome://tracing); N keeps every
+                                               Nth request (default 1 = all)
   ibex sweep  [--workloads W1,W2,..] [--schemes S1,S2,..] [key=value ...]
   ibex record (--workload W | --mix ..) --out FILE [--format text|bin]
               [key=value ...]                  dump the synthetic request
@@ -251,11 +273,23 @@ TELEMETRY: --sample-every N (plain N = retired instructions summed over
            config keys) samples per-device + per-tenant counter deltas at
            epoch boundaries. Sampling never perturbs results (final metrics
            stay bit-identical) and costs nothing when off. --json FILE emits
-           report schema v1; its steady_state block trims warmup and any
+           report schema v2 (adds internal_by_cause maps and per-stage
+           latency attribution: stage_ps/round_trip_ps on tenant and device
+           rows); its steady_state block trims warmup and any
            initial transient: steady state starts at the first measured
            epoch whose internal-access count is within 25% of the median
            over the final half of the series (fallback: the final half).
            p99 values are log2-bucket upper bounds, not exact measurements.
+TRACING:   --event-trace FILE (event_trace= config key) records every
+           measured request's lifecycle spans (fabric ingress, link
+           ingress, scheme service, link egress, fabric egress) plus
+           instant markers (MSHR-full stalls, promotions, demotions,
+           clean demotions, promoted hits) as Chrome trace-event JSON.
+           --trace-sample N (trace_sample=) keeps every Nth request.
+           Tracing never perturbs results: final metrics, epoch series
+           and fingerprints are bit-identical with tracing on or off,
+           at any --intra-threads. Multi-job runs write one file per
+           job (the job label's slug goes before the extension).
 SCHEMES:   uncompressed ibex tmcc dylect mxt dmc compresso
 BACKENDS:  backend=analytic (default, pure Rust) | pjrt (needs --features pjrt
            and `make artifacts`) | auto; artifact=PATH overrides the HLO path
@@ -458,6 +492,31 @@ fn run_cmd(cli: &Cli) -> i32 {
         eprintln!("error: no jobs to run (empty --workloads/--schemes?); no results");
         return 2;
     }
+    // Multi-job event tracing: every job would clobber the one
+    // configured file, so suffix each path with the job label's slug
+    // (see `event_trace_path`). Distinct labels that normalize to the
+    // same slug are refused up front rather than silently overwritten.
+    if !base.event_trace.is_empty() && jobs.len() > 1 {
+        let mut owners: std::collections::HashMap<String, String> =
+            std::collections::HashMap::new();
+        for job in &mut jobs {
+            let path = event_trace_path(&base.event_trace, &job.label);
+            if let Some(prev) = owners.insert(path.clone(), job.label.clone()) {
+                eprintln!(
+                    "error: jobs {prev:?} and {:?} collide on event-trace path \
+                     {path:?}; relabel the jobs or choose another --event-trace",
+                    job.label
+                );
+                return 2;
+            }
+            job.cfg.event_trace = path;
+        }
+    }
+    let event_trace_paths: Vec<String> = if base.event_trace.is_empty() {
+        Vec::new()
+    } else {
+        jobs.iter().map(|j| j.cfg.event_trace.clone()).collect()
+    };
     // Every multi-job invocation goes through the worker pool (results
     // stay order-preserving and deterministic).
     let results = if jobs.len() > 1 {
@@ -552,6 +611,24 @@ fn run_cmd(cli: &Cli) -> i32 {
         pt.emit();
     }
 
+    // Cause-tagged internal-bandwidth attribution: where each scheme's
+    // internal DRAM accesses come from (metadata lookups, activity
+    // scans, compaction, shadow reuse, migration copies, host serves).
+    // The per-cause cells sum to the job's total internal accesses.
+    {
+        let mut headers: Vec<&str> = vec!["workload", "scheme"];
+        headers.extend(MEM_CAUSES.iter().map(|c| c.name()));
+        headers.push("total");
+        let mut ct = Table::new("Internal bandwidth by cause", &headers);
+        for r in &results {
+            let mut row = vec![r.workload.clone(), r.scheme.clone()];
+            row.extend(r.metrics.mem_by_cause.iter().map(|c| c.to_string()));
+            row.push(r.metrics.mem_total.to_string());
+            ct.row(row);
+        }
+        ct.emit();
+    }
+
     // Machine-readable run report (config manifest, final/steady-state
     // metrics, per-tenant/per-device rows, epoch time-series).
     if let Some(path) = &cli.json {
@@ -565,9 +642,28 @@ fn run_cmd(cli: &Cli) -> i32 {
             eprintln!("error: {e}");
             return 2;
         }
-        println!("\nwrote JSON run report (schema v1) to {path}");
+        println!("\nwrote JSON run report (schema v2) to {path}");
+    }
+    for p in &event_trace_paths {
+        println!("wrote event trace to {p}");
     }
     0
+}
+
+/// Per-job event-trace path: the job label's CSV slug (see
+/// [`slug_of`]) inserted before the extension, so `runs.json` +
+/// `pr/ibex` becomes `runs.pr_ibex.json` (extension-less bases just
+/// get `.pr_ibex` appended).
+fn event_trace_path(base: &str, label: &str) -> String {
+    let slug = slug_of(label);
+    let p = Path::new(base);
+    match p.extension().and_then(|e| e.to_str()) {
+        Some(ext) => {
+            let stem = p.with_extension("");
+            format!("{}.{slug}.{ext}", stem.display())
+        }
+        None => format!("{base}.{slug}"),
+    }
 }
 
 const DEVICE_TABLE_HEADERS: &[&str] = &[
@@ -825,6 +921,34 @@ mod tests {
 
         let bad = Cli::parse(&s(&["run", "--sample-every", "soon"])).unwrap();
         assert!(bad.config().is_err());
+    }
+
+    #[test]
+    fn parse_event_trace_flags() {
+        let cli = Cli::parse(&s(&["run", "--event-trace", "ev.json"])).unwrap();
+        assert_eq!(cli.event_trace.as_deref(), Some("ev.json"));
+        let cfg = cli.config().unwrap();
+        assert_eq!(cfg.event_trace, "ev.json");
+        assert_eq!(cfg.trace_sample, 1, "sampling defaults to every request");
+
+        let cli = Cli::parse(&s(&[
+            "run", "--event-trace", "ev.json", "--trace-sample", "8",
+        ]))
+        .unwrap();
+        assert_eq!(cli.config().unwrap().trace_sample, 8);
+
+        let bad = Cli::parse(&s(&["run", "--trace-sample", "0"])).unwrap();
+        assert!(bad.config().is_err(), "trace_sample must be >= 1");
+    }
+
+    #[test]
+    fn event_trace_paths_get_label_slugs() {
+        assert_eq!(event_trace_path("runs.json", "pr/ibex"), "runs.pr_ibex.json");
+        assert_eq!(
+            event_trace_path("out/ev.json", "pr:2,mcf:2/tmcc"),
+            "out/ev.pr_2_mcf_2_tmcc.json"
+        );
+        assert_eq!(event_trace_path("trace", "pr/ibex"), "trace.pr_ibex");
     }
 
     #[test]

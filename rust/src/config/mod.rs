@@ -262,6 +262,14 @@ pub struct SimConfig {
     /// Granularity of `sample_every`: retired instructions (summed over
     /// cores, the default) or simulated nanoseconds.
     pub sample_unit: SampleUnit,
+    /// Write a request-lifecycle event trace (Chrome trace-event /
+    /// Perfetto JSON) to this path. Empty (the default) disables event
+    /// recording entirely; when enabled, results stay bit-identical —
+    /// recording is pure bookkeeping (pinned by `tests/events.rs`).
+    pub event_trace: String,
+    /// Trace every Nth measured request (by global issue order). 1 =
+    /// every request. Only meaningful with `event_trace`.
+    pub trace_sample: u64,
 
     pub seed: u64,
 }
@@ -307,6 +315,8 @@ impl Default for SimConfig {
             trace: String::new(),
             sample_every: 0,
             sample_unit: SampleUnit::default(),
+            event_trace: String::new(),
+            trace_sample: 1,
             seed: DEFAULT_SEED,
         }
     }
@@ -429,6 +439,14 @@ impl SimConfig {
             }
             "trace" => self.trace = value.to_string(),
             "sample_every" => self.sample_every = p(value, key)?,
+            "event_trace" => self.event_trace = value.to_string(),
+            "trace_sample" => {
+                let n: u64 = p(value, key)?;
+                if n == 0 {
+                    return Err("trace_sample must be >= 1".to_string());
+                }
+                self.trace_sample = n;
+            }
             "sample_unit" => {
                 self.sample_unit = SampleUnit::parse(value).ok_or_else(|| {
                     format!(
@@ -521,6 +539,8 @@ impl SimConfig {
         put("trace", self.trace.clone());
         put("sample_every", self.sample_every.to_string());
         put("sample_unit", self.sample_unit.to_string());
+        put("event_trace", self.event_trace.clone());
+        put("trace_sample", self.trace_sample.to_string());
         put("seed", self.seed.to_string());
         m
     }
@@ -660,6 +680,23 @@ mod tests {
         let d = c.dump();
         assert_eq!(d["sample_every"], "1000000");
         assert_eq!(d["sample_unit"], "insts");
+    }
+
+    #[test]
+    fn event_trace_keys_validate_and_dump() {
+        let mut c = SimConfig::default();
+        assert_eq!(c.event_trace, "", "event tracing is off by default");
+        assert_eq!(c.trace_sample, 1, "every request traced when enabled");
+        c.set("event_trace", "/tmp/trace.json").unwrap();
+        c.set("trace_sample", "64").unwrap();
+        assert_eq!(c.event_trace, "/tmp/trace.json");
+        assert_eq!(c.trace_sample, 64);
+        let e = c.set("trace_sample", "0").unwrap_err();
+        assert!(e.contains(">= 1"), "{e}");
+        assert!(c.set("trace_sample", "x").is_err());
+        let d = c.dump();
+        assert_eq!(d["event_trace"], "/tmp/trace.json");
+        assert_eq!(d["trace_sample"], "64");
     }
 
     #[test]

@@ -131,6 +131,7 @@ fn run_sim(job: &Job, engine: SharedEngine) -> (RunMetrics, DevicePool, Option<S
             .unwrap_or_else(|e| panic!("job {:?}: {e}", job.label));
         sim.set_intra_threads(intra_parallelism(&job.cfg));
         let metrics = sim.run(&mut pool, &mut oracle);
+        write_event_trace(job, &mut sim);
         let series = sim.take_series();
         return (metrics, pool, series);
     }
@@ -147,8 +148,26 @@ fn run_sim(job: &Job, engine: SharedEngine) -> (RunMetrics, DevicePool, Option<S
     let mut sim = HostSim::from_mix(&job.cfg, &mix);
     sim.set_intra_threads(intra_parallelism(&job.cfg));
     let metrics = sim.run(&mut pool, &mut oracle);
+    write_event_trace(job, &mut sim);
     let series = sim.take_series();
     (metrics, pool, series)
+}
+
+/// Flush the lifecycle event log (if the job enabled `--event-trace`)
+/// to the job's configured path as Chrome trace-event JSON. Tracing is
+/// observe-only: a write failure is reported but never fails the run.
+fn write_event_trace(job: &Job, sim: &mut HostSim) {
+    if job.cfg.event_trace.is_empty() {
+        return;
+    }
+    if let Some(events) = sim.take_events() {
+        if let Err(e) = events.write(&job.cfg.event_trace) {
+            eprintln!(
+                "warning: job {:?}: cannot write event trace {}: {e}",
+                job.label, job.cfg.event_trace
+            );
+        }
+    }
 }
 
 /// Run one job on the calling thread. The size backend comes from the

@@ -15,7 +15,7 @@ use crate::compress::PageSizes;
 use crate::config::SimConfig;
 use crate::expander::store::PageTable;
 use crate::expander::{ContentOracle, DeviceStats, Scheme, Substrate, LINE_BYTES, PAGE_BYTES};
-use crate::mem::{MemKind, MemorySystem};
+use crate::mem::{MemCause, MemorySystem};
 use crate::rng::Pcg64;
 use crate::sim::{device_cycles, Ps};
 
@@ -125,7 +125,7 @@ impl Scheme for Compresso {
         } else {
             // One data access to the line's packed location.
             let addr = 0x4000_0000 + (ospn % (1 << 20)) * PAGE_BYTES + line as u64 * LINE_BYTES;
-            let d = self.sub.mem.access(t, addr, write, MemKind::Final);
+            let d = self.sub.mem.access(t, addr, write, MemCause::HostServe);
             let d = d + device_cycles(LINE_DECOMP_CYCLES);
             if write {
                 let new_sizes = oracle.on_write(ospn);
@@ -146,10 +146,10 @@ impl Scheme for Compresso {
                     let lines = (self.pages.get(ospn).unwrap().phys_bytes as u64).div_ceil(LINE_BYTES);
                     self.sub
                         .mem
-                        .access_burst(d, addr & !0xFFF, lines, false, MemKind::Control);
+                        .access_burst(d, addr & !0xFFF, lines, false, MemCause::Compaction);
                     self.sub
                         .mem
-                        .access_burst(d, addr & !0xFFF, lines, true, MemKind::Control);
+                        .access_burst(d, addr & !0xFFF, lines, true, MemCause::Compaction);
                 }
             }
             d

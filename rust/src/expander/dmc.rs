@@ -15,7 +15,7 @@ use crate::compress::PageSizes;
 use crate::config::SimConfig;
 use crate::expander::store::{ChunkArena, PageTable};
 use crate::expander::{ContentOracle, DeviceStats, Scheme, Substrate, LINE_BYTES, PAGE_BYTES};
-use crate::mem::{MemKind, MemorySystem};
+use crate::mem::{MemCause, MemorySystem};
 use crate::sim::{device_cycles, ns, Ps};
 
 /// Migration unit: 32 KB (8 pages).
@@ -152,7 +152,7 @@ impl Dmc {
                 self.hot.addr(slot),
                 hot_bytes.div_ceil(LINE_BYTES).max(1),
                 false,
-                MemKind::Demotion,
+                MemCause::DemotionRecompress,
             );
             self.sub
                 .compress_busy(t, self.sub.timing.compress_ps(SUPER_BYTES));
@@ -161,7 +161,7 @@ impl Dmc {
                 0x9000_0000,
                 cold_bytes.div_ceil(LINE_BYTES).max(1),
                 true,
-                MemKind::Demotion,
+                MemCause::DemotionRecompress,
             );
         }
     }
@@ -197,7 +197,7 @@ impl Dmc {
             0x9000_0000,
             cold_bytes.div_ceil(LINE_BYTES).max(1),
             false,
-            MemKind::Promotion,
+            MemCause::PromotionCopy,
         );
         let decompressed = self
             .sub
@@ -207,7 +207,7 @@ impl Dmc {
             self.hot.addr(slot),
             hot_bytes.div_ceil(LINE_BYTES).max(1),
             true,
-            MemKind::Promotion,
+            MemCause::PromotionCopy,
         );
         let sb = self.supers.get_mut(spn).unwrap();
         sb.state = SState::Hot {
@@ -250,7 +250,7 @@ impl Scheme for Dmc {
                 self.sub.stats.promoted_hits += 1;
                 let addr = self.hot.addr(slot) + (ospn % SUPER_PAGES) * PAGE_BYTES / 2
                     + line as u64 * LINE_BYTES / 2;
-                let done = self.sub.mem.access(t, addr, write, MemKind::Final)
+                let done = self.sub.mem.access(t, addr, write, MemCause::HostServe)
                     + device_cycles(LINE_DECOMP_CYCLES);
                 let sb = self.supers.get_mut(spn).unwrap();
                 sb.state = SState::Hot {
@@ -333,6 +333,7 @@ impl Scheme for Dmc {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mem::MemKind;
     use crate::workload::content::FixedOracle;
 
     fn cfg() -> SimConfig {

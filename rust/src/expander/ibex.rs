@@ -41,7 +41,7 @@ use crate::expander::{
     chunks_for, ContentOracle, DeviceStats, Scheme, Substrate, CCHUNK_BYTES, LINE_BYTES,
     PAGE_BYTES,
 };
-use crate::mem::{MemKind, MemorySystem};
+use crate::mem::{MemCause, MemorySystem};
 use crate::rng::Pcg64;
 use crate::sim::Ps;
 
@@ -324,17 +324,18 @@ impl Ibex {
     }
 
     /// Charge `n` free-list control accesses (chunk alloc = node read,
-    /// free = node write) at `t`.
-    fn charge_list_ops(&mut self, t: Ps, reads: usize, writes: usize) {
+    /// free = node write) at `t`, attributed to `cause` (plain allocator
+    /// churn vs. §4.5 shadow-release repacks).
+    fn charge_list_ops(&mut self, t: Ps, reads: usize, writes: usize, cause: MemCause) {
         for i in 0..reads {
             self.sub
                 .mem
-                .access(t, 0x7F00_0000 + (i as u64) * 64, false, MemKind::Control);
+                .access(t, 0x7F00_0000 + (i as u64) * 64, false, cause);
         }
         for i in 0..writes {
             self.sub
                 .mem
-                .access(t, 0x7F80_0000 + (i as u64) * 64, true, MemKind::Control);
+                .access(t, 0x7F80_0000 + (i as u64) * 64, true, cause);
         }
     }
 
@@ -362,7 +363,7 @@ impl Ibex {
                 if !wrote {
                     // One consolidated control write per page (§4.4).
                     let addr = self.activity_addr(slot);
-                    self.sub.mem.access(t, addr, true, MemKind::Control);
+                    self.sub.mem.access(t, addr, true, MemCause::ActivityScan);
                     wrote = true;
                 }
             }
@@ -396,7 +397,7 @@ impl Ibex {
                 }
             }
         };
-        self.charge_list_ops(t, 1, 0); // free-list pop
+        self.charge_list_ops(t, 1, 0, MemCause::Compaction); // free-list pop
         if write_data {
             // Fill the slot with the decompressed block (posted).
             let addr = self.promoted.addr(slot);
@@ -405,7 +406,7 @@ impl Ibex {
                 addr,
                 self.lines_per_block(),
                 true,
-                MemKind::Promotion,
+                MemCause::PromotionCopy,
             );
         }
         // Activity-region install: allocated=1, referenced=1.
@@ -420,7 +421,7 @@ impl Ibex {
         );
         self.sub
             .mem
-            .access(t, self.activity_addr(slot), true, MemKind::Control);
+            .access(t, self.activity_addr(slot), true, MemCause::ActivityScan);
         if self.policy == DemotionPolicy::LruList {
             self.lru.push_front(slot);
         }
@@ -475,7 +476,7 @@ impl Ibex {
             // One control read fetches the 16 entries.
             if !self.sub.background_free {
                 let addr = self.activity_addr((base % n) as u32);
-                self.sub.mem.access(t, addr, false, MemKind::Control);
+                self.sub.mem.access(t, addr, false, MemCause::ActivityScan);
             }
             let mut candidate = None;
             let mut allocated_in_window = [0usize; W];
@@ -505,7 +506,7 @@ impl Ibex {
             // Write back cleared referenced bits (one control write).
             if any_cleared && !self.sub.background_free {
                 let addr = self.activity_addr((base % n) as u32);
-                self.sub.mem.access(t, addr, true, MemKind::Control);
+                self.sub.mem.access(t, addr, true, MemCause::ActivityScan);
             }
             self.cursor = (base + W) % n;
             if let Some(i) = candidate {
@@ -596,7 +597,7 @@ impl Ibex {
                 let src = self.promoted.addr(slot);
                 self.sub
                     .mem
-                    .access_burst(t, src, raw / LINE_BYTES, false, MemKind::Demotion);
+                    .access_burst(t, src, raw / LINE_BYTES, false, MemCause::DemotionRecompress);
                 let occ = self.sub.timing.compress_ps(raw);
                 self.sub.compress_busy(t, occ);
             }
@@ -615,7 +616,7 @@ impl Ibex {
             let (allocs, frees) = self.repack(ospn);
             let first_chunk = self.pages.get(ospn).unwrap().run.first();
             if !background_free {
-                self.charge_list_ops(t, allocs, frees);
+                self.charge_list_ops(t, allocs, frees, MemCause::Compaction);
                 // Write the recompressed image.
                 let dst = first_chunk.map(|c| self.cchunks.addr(c)).unwrap_or(0);
                 let bytes = if incompressible {
@@ -624,7 +625,7 @@ impl Ibex {
                     self_packed(self.opts.colocate, size)
                 };
                 if bytes > 0 {
-                    self.sub.mem.access_bytes(t, dst, bytes, true, MemKind::Demotion);
+                    self.sub.mem.access_bytes(t, dst, bytes, true, MemCause::DemotionRecompress);
                 }
             }
             self.sub.meta_cache.set_dirty(ospn);
@@ -633,10 +634,10 @@ impl Ibex {
         // Release the promoted slot + activity entry.
         self.promoted.free_chunk(slot);
         if !background_free {
-            self.charge_list_ops(t, 0, 1); // free-list push
+            self.charge_list_ops(t, 0, 1, MemCause::Compaction); // free-list push
             self.sub
                 .mem
-                .access(t, self.activity_addr(slot), true, MemKind::Control);
+                .access(t, self.activity_addr(slot), true, MemCause::ActivityScan);
         }
         self.activity.clear(slot as usize);
         if self.policy == DemotionPolicy::LruList {
@@ -656,7 +657,7 @@ impl Ibex {
         for i in 0..3u64 {
             self.sub
                 .mem
-                .access(t, self.act_base + 0x0800_0000 + i * 64, true, MemKind::Control);
+                .access(t, self.act_base + 0x0800_0000 + i * 64, true, MemCause::ActivityScan);
         }
         self.lru.touch(slot);
     }
@@ -767,7 +768,7 @@ impl Scheme for Ibex {
                         self.sub.meta_cache.set_dirty(ospn);
                         let addr = self.promoted.addr(slot)
                             + (line as u64 % self.lines_per_block()) * LINE_BYTES;
-                        self.sub.mem.access(t, addr, true, MemKind::Final)
+                        self.sub.mem.access(t, addr, true, MemCause::HostServe)
                     }
                     None => t,
                 }
@@ -778,7 +779,7 @@ impl Scheme for Ibex {
                 self.charge_lru_touch(t, slot);
                 let addr = self.promoted.addr(slot)
                     + (line as u64 % self.lines_per_block()) * LINE_BYTES;
-                let done = self.sub.mem.access(t, addr, write, MemKind::Final);
+                let done = self.sub.mem.access(t, addr, write, MemCause::HostServe);
                 if write {
                     let _ = oracle.on_write(ospn);
                     if shadow {
@@ -790,7 +791,7 @@ impl Scheme for Ibex {
                             shadow: false,
                         };
                         let (a, f) = self.repack(ospn);
-                        self.charge_list_ops(done, a, f);
+                        self.charge_list_ops(done, a, f, MemCause::ShadowReuse);
                         self.sub.meta_cache.set_dirty(ospn);
                     } else if !dirty {
                         let entry = self.pages.get_mut(ospn).unwrap();
@@ -810,7 +811,7 @@ impl Scheme for Ibex {
                 let entry = self.pages.get(ospn).unwrap();
                 let c = entry.run.first().unwrap_or(0);
                 let addr = self.cchunks.addr(c) + (line as u64 * LINE_BYTES) % CCHUNK_BYTES;
-                let done = self.sub.mem.access(t, addr, write, MemKind::Final);
+                let done = self.sub.mem.access(t, addr, write, MemCause::HostServe);
                 if write {
                     let sizes = oracle.on_write(ospn);
                     let entry = self.pages.get_mut(ospn).unwrap();
@@ -835,7 +836,7 @@ impl Scheme for Ibex {
                                 BState::Comp
                             };
                             let (a, f) = self.repack(ospn);
-                            self.charge_list_ops(done, a, f);
+                            self.charge_list_ops(done, a, f, MemCause::Compaction);
                             let bytes = self_packed(self.opts.colocate, new_size);
                             if bytes > 0 {
                                 self.sub.mem.access_bytes(
@@ -843,7 +844,7 @@ impl Scheme for Ibex {
                                     self.cchunks.addr(0),
                                     bytes,
                                     true,
-                                    MemKind::Demotion,
+                                    MemCause::DemotionRecompress,
                                 );
                             }
                             self.sub.meta_cache.set_dirty(ospn);
@@ -866,7 +867,7 @@ impl Scheme for Ibex {
                     src,
                     packed.div_ceil(LINE_BYTES).max(1),
                     false,
-                    MemKind::Promotion,
+                    MemCause::PromotionCopy,
                 );
                 let occ = self.sub.timing.decompress_ps(self.block_bytes());
                 let decompressed = self.sub.decompress_busy(fetched, occ);
@@ -883,7 +884,7 @@ impl Scheme for Ibex {
                         self.sub.meta_cache.set_dirty(ospn);
                         if !shadow {
                             let (a, f) = self.repack(ospn);
-                            self.charge_list_ops(decompressed, a, f);
+                            self.charge_list_ops(decompressed, a, f, MemCause::Compaction);
                         }
                         if write {
                             let _ = oracle.on_write(ospn);
@@ -894,14 +895,16 @@ impl Scheme for Ibex {
                                 shadow: false,
                             };
                             let (a, f) = self.repack(ospn);
-                            self.charge_list_ops(decompressed, a, f);
+                            // Releases the still-shadowed compressed copy
+                            // when shadowing is on (no-op repack otherwise).
+                            self.charge_list_ops(decompressed, a, f, MemCause::ShadowReuse);
                             let addr = self.promoted.addr(slot)
                                 + (line as u64 % self.lines_per_block()) * LINE_BYTES;
                             return self.sub.mem.access(
                                 decompressed,
                                 addr,
                                 true,
-                                MemKind::Final,
+                                MemCause::HostServe,
                             );
                         }
                     }
@@ -989,6 +992,7 @@ impl Scheme for Ibex {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mem::MemKind;
     use crate::workload::content::FixedOracle;
 
     fn cfg() -> SimConfig {

@@ -32,7 +32,7 @@ pub mod uncompressed;
 use crate::cache::SetAssocCache;
 use crate::compress::{EngineTiming, PageSizes};
 use crate::config::{SchemeKind, SimConfig};
-use crate::mem::{DramTiming, MemKind, MemorySystem};
+use crate::mem::{DramTiming, MemCause, MemorySystem};
 use crate::sim::{device_cycles, Bandwidth, Ps, Resource};
 use crate::stats::LatencyHist;
 
@@ -145,6 +145,8 @@ pub struct SchemeSnapshot {
     pub mem_accesses: u64,
     /// Internal accesses by traffic kind (control/promotion/demotion/final).
     pub mem_by_kind: [u64; 4],
+    /// Internal accesses by cause (`crate::mem::MEM_CAUSES` order).
+    pub mem_by_cause: [u64; 7],
     /// Gauge: resident logical bytes (zero/untouched pages excluded).
     pub logical_bytes: u64,
     /// Gauge: physical bytes backing them.
@@ -172,6 +174,9 @@ impl SchemeSnapshot {
         out.wrcnt_recompressions -= earlier.wrcnt_recompressions;
         out.mem_accesses -= earlier.mem_accesses;
         for (o, e) in out.mem_by_kind.iter_mut().zip(earlier.mem_by_kind.iter()) {
+            *o -= e;
+        }
+        for (o, e) in out.mem_by_cause.iter_mut().zip(earlier.mem_by_cause.iter()) {
             *o -= e;
         }
         out
@@ -284,14 +289,14 @@ impl Substrate {
         for i in 0..reads_on_miss {
             done = self
                 .mem
-                .access(t, meta_addr + i * LINE_BYTES, false, MemKind::Control);
+                .access(t, meta_addr + i * LINE_BYTES, false, MemCause::MetaLookup);
         }
         let mut evicted = None;
         if let Some(victim) = self.meta_cache.insert(key, 0, mark_dirty) {
             if victim.dirty {
                 // Write-back of the victim's metadata line (posted).
                 self.mem
-                    .access(done, victim.key ^ 0x5A5A_0000, true, MemKind::Control);
+                    .access(done, victim.key ^ 0x5A5A_0000, true, MemCause::MetaLookup);
             }
             evicted = Some(victim.key);
         }
@@ -406,6 +411,7 @@ pub trait Scheme: Send {
             wrcnt_recompressions: s.wrcnt_recompressions,
             mem_accesses: m.total_accesses(),
             mem_by_kind: m.breakdown.counts,
+            mem_by_cause: m.breakdown.by_cause,
             logical_bytes: self.logical_bytes(),
             physical_bytes: self.physical_bytes(),
             promoted_used,
@@ -494,6 +500,7 @@ mod tests {
             promotions: 2,
             mem_accesses: 100,
             mem_by_kind: [10, 20, 30, 40],
+            mem_by_cause: [1, 2, 3, 4, 20, 30, 40],
             logical_bytes: 4096,
             physical_bytes: 2048,
             promoted_used: 3,
@@ -506,6 +513,7 @@ mod tests {
             promotions: 7,
             mem_accesses: 260,
             mem_by_kind: [15, 45, 80, 120],
+            mem_by_cause: [3, 5, 3, 4, 45, 80, 120],
             logical_bytes: 8192,
             physical_bytes: 4096,
             promoted_used: 5,
@@ -518,6 +526,7 @@ mod tests {
         assert_eq!(d.promotions, 5);
         assert_eq!(d.mem_accesses, 160);
         assert_eq!(d.mem_by_kind, [5, 25, 50, 80]);
+        assert_eq!(d.mem_by_cause, [2, 3, 0, 0, 25, 50, 80]);
         // Gauges keep the *later* point-in-time values.
         assert_eq!(d.logical_bytes, 8192);
         assert_eq!(d.promoted_used, 5);

@@ -13,7 +13,7 @@ use crate::compress::PageSizes;
 use crate::config::SimConfig;
 use crate::expander::store::PageTable;
 use crate::expander::{ContentOracle, DeviceStats, Scheme, Substrate, LINE_BYTES, PAGE_BYTES};
-use crate::mem::{MemKind, MemorySystem};
+use crate::mem::{MemCause, MemorySystem};
 use crate::sim::{device_cycles, Ps};
 
 /// MXT blocks are 1 KB.
@@ -106,7 +106,7 @@ impl Mxt {
                 0x5000_0000,
                 LINES_PER_BLOCK,
                 false,
-                MemKind::Demotion,
+                MemCause::DemotionRecompress,
             );
             let occ = self.sub.timing.compress_ps(BLOCK_BYTES);
             done = self.sub.compress_busy(read_done, occ);
@@ -116,11 +116,11 @@ impl Mxt {
                     0x5800_0000,
                     Self::sectors(size),
                     true,
-                    MemKind::Demotion,
+                    MemCause::DemotionRecompress,
                 ));
             }
             // Sector-table update.
-            self.sub.mem.access(done, 0x5C00_0000, true, MemKind::Control);
+            self.sub.mem.access(done, 0x5C00_0000, true, MemCause::MetaLookup);
         }
         let old = match self.sizes.get_mut(ospn) {
             Some(e) => std::mem::replace(&mut e[block], size),
@@ -171,18 +171,18 @@ impl Scheme for Mxt {
                 let _ = oracle.on_write(ospn);
             }
             let addr = 0x4000_0000 + (key % (1 << 19)) * BLOCK_BYTES + (line as u64 % LINES_PER_BLOCK) * LINE_BYTES;
-            self.sub.mem.access(t, addr, write, MemKind::Final)
+            self.sub.mem.access(t, addr, write, MemCause::HostServe)
         } else {
             let size = self.sizes.get(ospn).map(|e| e[block as usize]).unwrap_or(0);
             if size == 0 && !write {
                 // Zero block: sector table knows, but MXT still walks the
                 // sector table in memory (1 control read).
                 self.sub.stats.zero_serves += 1;
-                self.sub.mem.access(t, 0x5C00_0000, false, MemKind::Control)
+                self.sub.mem.access(t, 0x5C00_0000, false, MemCause::MetaLookup)
             } else {
                 self.sub.stats.compressed_serves += 1;
                 // Sector-table read to locate the sectors.
-                let meta_done = self.sub.mem.access(t, 0x5C00_0000, false, MemKind::Control);
+                let meta_done = self.sub.mem.access(t, 0x5C00_0000, false, MemCause::MetaLookup);
                 // Fetch + decompress the block.
                 let lines = Self::sectors(size.max(1) as u32).div_ceil(LINE_BYTES).max(1);
                 let fetched = self.sub.mem.access_burst(
@@ -190,7 +190,7 @@ impl Scheme for Mxt {
                     0x5800_0000,
                     lines,
                     false,
-                    MemKind::Promotion,
+                    MemCause::PromotionCopy,
                 );
                 let decompressed = self
                     .sub
@@ -201,7 +201,7 @@ impl Scheme for Mxt {
                     0x4000_0000 + (key % (1 << 19)) * BLOCK_BYTES,
                     LINES_PER_BLOCK,
                     true,
-                    MemKind::Promotion,
+                    MemCause::PromotionCopy,
                 );
                 self.sub.stats.promotions += 1;
                 // MXT's store-back design recompresses the victim before
@@ -266,6 +266,7 @@ impl Scheme for Mxt {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mem::MemKind;
     use crate::workload::content::FixedOracle;
 
     fn cfg() -> SimConfig {

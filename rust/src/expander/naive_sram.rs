@@ -16,7 +16,7 @@ use crate::expander::{
     chunks_for, incompressible_4k, ContentOracle, DeviceStats, Scheme, Substrate, CCHUNK_BYTES,
     LINE_BYTES, LINES_PER_PAGE, PAGE_BYTES,
 };
-use crate::mem::{MemKind, MemorySystem};
+use crate::mem::{MemCause, MemorySystem};
 use crate::sim::{device_cycles, Ps};
 
 /// SRAM access latency (a large on-device SRAM macro).
@@ -119,7 +119,7 @@ impl Scheme for NaiveSram {
                     0xA000_0000 + (ospn % (1 << 20)) * PAGE_BYTES,
                     chunk_lines,
                     false,
-                    MemKind::Promotion,
+                    MemCause::PromotionCopy,
                 );
                 let done = self
                     .sub
@@ -148,7 +148,7 @@ impl Scheme for NaiveSram {
                                 0xA000_0000 + (victim.key % (1 << 20)) * PAGE_BYTES,
                                 lines,
                                 true,
-                                MemKind::Demotion,
+                                MemCause::DemotionRecompress,
                             );
                         }
                     }
@@ -198,6 +198,7 @@ impl Scheme for NaiveSram {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mem::MemKind;
     use crate::workload::content::FixedOracle;
 
     fn cfg() -> SimConfig {

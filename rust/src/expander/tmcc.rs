@@ -28,7 +28,7 @@ use crate::expander::{
     incompressible_4k, ContentOracle, DeviceStats, Scheme, Substrate, LINE_BYTES,
     LINES_PER_PAGE, PAGE_BYTES,
 };
-use crate::mem::{MemKind, MemorySystem};
+use crate::mem::{MemCause, MemorySystem};
 use crate::sim::Ps;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -97,8 +97,8 @@ impl Tmcc {
         self.zs_used += bytes as u64;
         if !(background && self.sub.background_free) {
             // Free-list pop + occupancy map update.
-            self.sub.mem.access(t, 0x7000_0000, false, MemKind::Control);
-            self.sub.mem.access(t, 0x7000_1000, true, MemKind::Control);
+            self.sub.mem.access(t, 0x7000_0000, false, MemCause::Compaction);
+            self.sub.mem.access(t, 0x7000_1000, true, MemCause::Compaction);
         }
     }
 
@@ -106,8 +106,8 @@ impl Tmcc {
         self.zs_used -= bytes as u64;
         self.frees_since_compaction += 1;
         if !(background && self.sub.background_free) {
-            self.sub.mem.access(t, 0x7000_2000, true, MemKind::Control);
-            self.sub.mem.access(t, 0x7000_3000, true, MemKind::Control);
+            self.sub.mem.access(t, 0x7000_2000, true, MemCause::Compaction);
+            self.sub.mem.access(t, 0x7000_3000, true, MemCause::Compaction);
         }
         if self.frees_since_compaction >= COMPACTION_PERIOD {
             self.frees_since_compaction = 0;
@@ -117,10 +117,10 @@ impl Tmcc {
                 let lines = COMPACTION_MIGRATE_BYTES / LINE_BYTES;
                 self.sub
                     .mem
-                    .access_burst(t, 0x7100_0000, lines, false, MemKind::Control);
+                    .access_burst(t, 0x7100_0000, lines, false, MemCause::Compaction);
                 self.sub
                     .mem
-                    .access_burst(t, 0x7200_0000, lines, true, MemKind::Control);
+                    .access_burst(t, 0x7200_0000, lines, true, MemCause::Compaction);
             }
         }
     }
@@ -152,7 +152,7 @@ impl Tmcc {
                     self.promoted.addr(slot),
                     LINES_PER_PAGE,
                     false,
-                    MemKind::Demotion,
+                    MemCause::DemotionRecompress,
                 );
                 let occ = self.sub.timing.compress_ps(PAGE_BYTES);
                 self.sub.compress_busy(t, occ);
@@ -175,7 +175,7 @@ impl Tmcc {
                 if !bg {
                     self.sub
                         .mem
-                        .access_bytes(t, 0x6000_0000, stored as u64, true, MemKind::Demotion);
+                        .access_bytes(t, 0x6000_0000, stored as u64, true, MemCause::DemotionRecompress);
                 }
             }
             self.promoted.free_chunk(slot);
@@ -199,7 +199,7 @@ impl Tmcc {
             self.promoted.addr(slot),
             LINES_PER_PAGE,
             true,
-            MemKind::Promotion,
+            MemCause::PromotionCopy,
         );
         Some(slot)
     }
@@ -268,7 +268,7 @@ impl Scheme for Tmcc {
                         entry.state = PState::Prom { slot, dirty: true };
                         self.sub.meta_cache.set_dirty(ospn);
                         let addr = self.promoted.addr(slot) + line as u64 * LINE_BYTES;
-                        self.sub.mem.access(t, addr, true, MemKind::Final)
+                        self.sub.mem.access(t, addr, true, MemCause::HostServe)
                     }
                     None => t,
                 }
@@ -276,7 +276,7 @@ impl Scheme for Tmcc {
             (PState::Prom { slot, dirty }, _) => {
                 self.sub.stats.promoted_hits += 1;
                 let addr = self.promoted.addr(slot) + line as u64 * LINE_BYTES;
-                let done = self.sub.mem.access(t, addr, write, MemKind::Final);
+                let done = self.sub.mem.access(t, addr, write, MemCause::HostServe);
                 if write {
                     let _ = oracle.on_write(ospn);
                     if !dirty {
@@ -290,7 +290,7 @@ impl Scheme for Tmcc {
             (PState::Raw, _) => {
                 self.sub.stats.incompressible_serves += 1;
                 let addr = 0x6800_0000 + (ospn % (1 << 20)) * PAGE_BYTES + line as u64 * LINE_BYTES;
-                let done = self.sub.mem.access(t, addr, write, MemKind::Final);
+                let done = self.sub.mem.access(t, addr, write, MemCause::HostServe);
                 if write {
                     let _ = oracle.on_write(ospn);
                 }
@@ -303,7 +303,7 @@ impl Scheme for Tmcc {
                 let fetched =
                     self.sub
                         .mem
-                        .access_burst(t, 0x6000_0000, lines, false, MemKind::Promotion);
+                        .access_burst(t, 0x6000_0000, lines, false, MemCause::PromotionCopy);
                 let occ = self.sub.timing.decompress_ps(PAGE_BYTES);
                 let decompressed = self.sub.decompress_busy(fetched, occ);
                 match self.promote(decompressed, ospn, oracle) {
@@ -319,7 +319,7 @@ impl Scheme for Tmcc {
                             return self
                                 .sub
                                 .mem
-                                .access(decompressed, addr, true, MemKind::Final);
+                                .access(decompressed, addr, true, MemCause::HostServe);
                         }
                     }
                     None => {
@@ -389,6 +389,7 @@ impl Scheme for Tmcc {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mem::MemKind;
     use crate::workload::content::FixedOracle;
 
     fn cfg() -> SimConfig {

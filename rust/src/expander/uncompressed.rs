@@ -10,7 +10,7 @@ use crate::compress::PageSizes;
 use crate::config::SimConfig;
 use crate::expander::store::PageBitmap;
 use crate::expander::{ContentOracle, DeviceStats, Scheme, Substrate, LINE_BYTES, PAGE_BYTES};
-use crate::mem::{MemKind, MemorySystem};
+use crate::mem::{MemCause, MemorySystem};
 use crate::sim::Ps;
 
 pub struct Uncompressed {
@@ -46,7 +46,7 @@ impl Scheme for Uncompressed {
         }
         self.resident.set(ospn);
         let addr = ospn * PAGE_BYTES + line as u64 * LINE_BYTES;
-        let done = self.sub.mem.access(now, addr, write, MemKind::Final);
+        let done = self.sub.mem.access(now, addr, write, MemCause::HostServe);
         self.sub
             .stats
             .latency
@@ -85,6 +85,7 @@ impl Scheme for Uncompressed {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mem::MemKind;
     use crate::workload::content::FixedOracle;
 
     #[test]

@@ -53,6 +53,7 @@ use crate::expander::{ContentOracle, SchemeSnapshot};
 use crate::rng::Pcg64;
 use crate::sim::{Ps, CORE_CLK_PS, PS_PER_NS};
 use crate::stats::LatencyHist;
+use crate::telemetry::events::{EventLog, InstantKind, ReqSpans, STAGES};
 use crate::telemetry::{DeviceCum, PortCum, Sampler, Series, TenantCum};
 use crate::topology::{DevicePool, Interleave};
 use crate::workload::{Mix, RequestSource, RunPlan, Trace, WorkloadSpec};
@@ -79,6 +80,13 @@ struct Core {
     writes: u64,
     /// Host-observed round-trip latency (issue → reply), measured phase.
     lat: LatencyHist,
+    /// Per-stage time attribution over the measured phase, ps
+    /// ([`STAGE_NAMES`](crate::telemetry::events::STAGE_NAMES) order).
+    /// The stage boundaries are monotone, so these telescope exactly:
+    /// their sum equals `round_ps` (pinned by `tests/events.rs`).
+    stage_ps: [u64; STAGES],
+    /// Summed round trips over the measured phase, ps.
+    round_ps: u64,
 }
 
 impl Core {
@@ -132,10 +140,36 @@ fn drain_completed(mshrs: &mut MshrHeap, ci: usize, t: Ps, lanes: &mut [Lane]) {
 /// during the stall, and leaving them in the heap would inflate the
 /// per-device occupancy (`peak_outstanding`/`win_peak`) observed by
 /// every core until this core's next turn.
-fn mshr_stall(mshrs: &mut MshrHeap, ci: usize, lanes: &mut [Lane]) -> Option<Ps> {
+fn mshr_stall(mshrs: &mut MshrHeap, ci: usize, lanes: &mut [Lane]) -> Option<(Ps, u32)> {
     let (done, pdev) = mshrs.pop(ci)?;
     lanes[pdev as usize].release();
-    Some(done)
+    Some((done, pdev))
+}
+
+/// Emit one instant event per scheme-activity kind whose counter moved
+/// while serving a traced request (`deltas` = promotions, demotions,
+/// clean demotions, promoted hits — in that order), stamped at the
+/// scheme-service completion time. Shared by both engines so the
+/// emitted set cannot drift between them.
+fn record_scheme_instants(
+    ev: &mut EventLog,
+    deltas: &[u64; 4],
+    ready: Ps,
+    core: u32,
+    dev: u32,
+    req: u64,
+) {
+    const KINDS: [InstantKind; 4] = [
+        InstantKind::Promotion,
+        InstantKind::Demotion,
+        InstantKind::CleanDemotion,
+        InstantKind::PromotedHit,
+    ];
+    for (kind, &d) in KINDS.iter().zip(deltas.iter()) {
+        if d > 0 {
+            ev.instant(*kind, ready, core, dev, req);
+        }
+    }
 }
 
 /// Measured-phase wall clock over a set of cores: the widest per-core
@@ -174,6 +208,11 @@ struct Lane {
     /// unconditionally — one integer compare — so the sampled and
     /// unsampled request paths stay byte-for-byte identical).
     win_peak: usize,
+    /// Per-stage time attribution for requests served by this device
+    /// over the measured phase, ps (stage order; see [`Core::stage_ps`]).
+    stage_ps: [u64; STAGES],
+    /// Summed round trips for this device's requests, measured phase.
+    round_ps: u64,
 }
 
 impl Lane {
@@ -220,6 +259,12 @@ pub struct TenantMetrics {
     /// Host-observed request round trip (link + device), ns.
     pub mean_latency_ns: f64,
     pub p99_latency_ns: u64,
+    /// Summed per-stage request time, ps (stage order: fabric ingress,
+    /// link ingress, scheme service, link egress, fabric egress). The
+    /// five lanes sum exactly to `round_trip_ps`.
+    pub stage_ps: [u64; STAGES],
+    /// Summed host-observed round trips, ps.
+    pub round_trip_ps: u64,
 }
 
 impl TenantMetrics {
@@ -267,6 +312,11 @@ pub struct DeviceLaneMetrics {
     /// one number describes the link; split it per direction only when
     /// reply payloads grow beyond a flit.
     pub link_utilization: f64,
+    /// Summed per-stage request time for this device, ps (stage order;
+    /// see [`TenantMetrics::stage_ps`]). Sums to `round_trip_ps`.
+    pub stage_ps: [u64; STAGES],
+    /// Summed host-observed round trips on this device, ps.
+    pub round_trip_ps: u64,
 }
 
 impl DeviceLaneMetrics {
@@ -338,6 +388,16 @@ impl DeviceLaneMetrics {
             demotions: rows.iter().map(|r| r.demotions).sum(),
             link_utilization: rows.iter().map(|r| r.link_utilization).sum::<f64>()
                 / n as f64,
+            stage_ps: {
+                let mut s = [0u64; STAGES];
+                for r in rows {
+                    for (acc, v) in s.iter_mut().zip(r.stage_ps.iter()) {
+                        *acc += v;
+                    }
+                }
+                s
+            },
+            round_trip_ps: rows.iter().map(|r| r.round_trip_ps).sum(),
         }
     }
 }
@@ -352,6 +412,11 @@ pub struct RunMetrics {
     pub requests: u64,
     /// Memory accesses inside the device pool, by traffic kind.
     pub mem_by_kind: [u64; 4],
+    /// The same accesses by *cause* (`MEM_CAUSES` order: metadata
+    /// lookup, activity scan, compaction, shadow reuse, promotion copy,
+    /// demotion recompress, host serve). Sums to `mem_total`; folding
+    /// each cause through `MemCause::kind` reproduces `mem_by_kind`.
+    pub mem_by_cause: [u64; 7],
     pub mem_total: u64,
     pub compression_ratio: f64,
     /// Per-tenant rows (one entry for a classic homogeneous run).
@@ -425,6 +490,11 @@ pub struct HostSim<'a> {
     /// request loop's only extra work is one `is_some` branch — no
     /// snapshot calls (pinned by `tests/telemetry.rs`).
     sampler: Option<Sampler>,
+    /// Lifecycle event recorder (`cfg.event_trace` non-empty). Pure
+    /// bookkeeping on times the engines already compute — results are
+    /// bit-identical with tracing on or off (pinned by
+    /// `tests/events.rs`).
+    events: Option<EventLog>,
     /// Intra-run worker threads (device-model shards). `<= 1` — or a
     /// single-device pool — runs the classic sequential loop; results
     /// are bit-identical either way.
@@ -512,12 +582,16 @@ impl<'a> HostSim<'a> {
                 reads: 0,
                 writes: 0,
                 lat: LatencyHist::default(),
+                stage_ps: [0; STAGES],
+                round_ps: 0,
             })
             .collect();
         let mshrs = MshrHeap::new(cores.len(), cfg.mshrs_per_core);
         let interleave = Interleave::new(cfg.interleave, cfg.devices, plan.total_pages);
         let sampler =
             (cfg.sample_every > 0).then(|| Sampler::new(cfg.sample_unit, cfg.sample_every));
+        let events =
+            (!cfg.event_trace.is_empty()).then(|| EventLog::new(cfg.trace_sample));
         Self {
             cfg,
             plan,
@@ -526,6 +600,7 @@ impl<'a> HostSim<'a> {
             mshrs,
             lanes: vec![Lane::default(); cfg.devices],
             sampler,
+            events,
             intra_threads: cfg.intra_threads,
         }
     }
@@ -583,6 +658,7 @@ impl<'a> HostSim<'a> {
         // measured phase only (promotions/demotions included — they
         // used to leak warmup traffic into otherwise-windowed rows).
         let warm_kind = pool.mem_breakdown();
+        let warm_cause = pool.mem_cause_breakdown();
         let warm_total = pool.mem_total();
         let warm_dev: Vec<(u64, Ps, u64, u64)> = pool
             .devices
@@ -639,6 +715,14 @@ impl<'a> HostSim<'a> {
             kinds[2] - warm_kind[2],
             kinds[3] - warm_kind[3],
         ];
+        let causes = pool.mem_cause_breakdown();
+        let mut mem_by_cause = [0u64; 7];
+        for (out, (&c, &w)) in mem_by_cause
+            .iter_mut()
+            .zip(causes.iter().zip(warm_cause.iter()))
+        {
+            *out = c - w;
+        }
 
         let mut tenants = Vec::with_capacity(self.plan.mix.tenants.len());
         for (ti, tenant) in self.plan.mix.tenants.iter().enumerate() {
@@ -653,6 +737,10 @@ impl<'a> HostSim<'a> {
             // warmup core was not the slowest final core.
             let mut windows: Vec<(Ps, Ps)> = Vec::with_capacity(tenant.cores);
             let mut lat = LatencyHist::default();
+            // Stage attribution is recorded in the measured phase only
+            // (like the latency histograms), so no warmup subtraction.
+            let mut stage_ps = [0u64; STAGES];
+            let mut round_trip_ps = 0u64;
             for (ci, slot) in self.plan.slots.iter().enumerate() {
                 if slot.tenant != ti {
                     continue;
@@ -664,6 +752,10 @@ impl<'a> HostSim<'a> {
                 writes += c.writes - warm[ci].writes;
                 windows.push((c.t, warm[ci].t));
                 lat.merge(&c.lat);
+                for (acc, v) in stage_ps.iter_mut().zip(c.stage_ps.iter()) {
+                    *acc += v;
+                }
+                round_trip_ps += c.round_ps;
             }
             tenants.push(TenantMetrics {
                 name: tenant.spec.name.to_string(),
@@ -675,6 +767,8 @@ impl<'a> HostSim<'a> {
                 elapsed_ps: measured_window(windows.into_iter()),
                 mean_latency_ns: lat.mean_ns(),
                 p99_latency_ns: lat.percentile_ns(0.99),
+                stage_ps,
+                round_trip_ps,
             });
         }
 
@@ -707,6 +801,8 @@ impl<'a> HostSim<'a> {
                     link_utilization: ((d.link.down.busy - wdown) as f64
                         / horizon as f64)
                         .min(1.0),
+                    stage_ps: lane.stage_ps,
+                    round_trip_ps: lane.round_ps,
                 }
             })
             .collect();
@@ -731,6 +827,7 @@ impl<'a> HostSim<'a> {
             elapsed_ps,
             requests: tenants.iter().map(|t| t.requests).sum(),
             mem_by_kind,
+            mem_by_cause,
             mem_total: pool.mem_total() - warm_total,
             compression_ratio: pool.compression_ratio(),
             tenants,
@@ -747,6 +844,12 @@ impl<'a> HostSim<'a> {
     /// enabled (consumes the sampler; call after [`HostSim::run`]).
     pub fn take_series(&mut self) -> Option<Series> {
         self.sampler.take().map(Sampler::into_series)
+    }
+
+    /// The lifecycle event log recorded by this run, if `--event-trace`
+    /// was set (consumes the log; call after [`HostSim::run`]).
+    pub fn take_events(&mut self) -> Option<EventLog> {
+        self.events.take()
     }
 
     /// Total retired instructions across cores (the sampler's
@@ -897,6 +1000,11 @@ impl<'a> HostSim<'a> {
         let group_of: Vec<u32> = (0..pool.len())
             .map(|d| pool.fabric.group_of(d) as u32)
             .collect();
+        // Phase-local issue sequence, shared contract with the parallel
+        // engine's `next_req_id`: both engines number a phase's issued
+        // requests 0, 1, 2, ... in scheduler order, so the sampled
+        // subset (`EventLog::sampled`) is identical either way.
+        let mut req_seq = 0u64;
         loop {
             let Some(ci) = self.pick_core(insts_target) else {
                 break;
@@ -918,13 +1026,36 @@ impl<'a> HostSim<'a> {
             // release their lane slots now, not at this core's next
             // turn.
             if self.mshrs.len(ci) >= mshr_cap {
-                if let Some(done) = mshr_stall(&mut self.mshrs, ci, &mut self.lanes) {
+                if let Some((done, sdev)) = mshr_stall(&mut self.mshrs, ci, &mut self.lanes) {
                     core.t = core.t.max(done);
+                    // Stall instant, attributed to the request about to
+                    // issue (same keying as the parallel engine).
+                    if measure {
+                        if let Some(ev) = self.events.as_mut() {
+                            if ev.sampled(req_seq) {
+                                ev.instant(
+                                    InstantKind::MshrStall,
+                                    core.t,
+                                    ci as u32,
+                                    sdev,
+                                    req_seq,
+                                );
+                            }
+                        }
+                    }
                     drain_completed(&mut self.mshrs, ci, core.t, &mut self.lanes);
                 }
             }
 
             core.count_issue(tr.write);
+            let traced = measure
+                && match self.events.as_mut() {
+                    Some(ev) => {
+                        ev.count_issue();
+                        ev.sampled(req_seq)
+                    }
+                    None => false,
+                };
             let t_issue = core.t;
             let dev = tr.dev as usize;
             // Host→device: fabric hops (shared switch ports; identity
@@ -932,6 +1063,13 @@ impl<'a> HostSim<'a> {
             let at_port = pool.fabric.ingress(dev, t_issue, 1);
             let device = &mut pool.devices[dev];
             let at_device = device.link.ingress(at_port, 1);
+            // Scheme-activity counters before the access, so traced
+            // requests can attribute promotions/demotions/shadow hits
+            // to themselves (reads only — never perturbs the model).
+            let pre = traced.then(|| {
+                let s = device.scheme.stats();
+                [s.promotions, s.demotions, s.clean_demotions, s.promoted_hits]
+            });
             let ready = if map.devices() == 1 {
                 // Identity routing: skip the translation wrapper on the
                 // default single-device hot path.
@@ -949,6 +1087,15 @@ impl<'a> HostSim<'a> {
                     .scheme
                     .access(at_device, tr.local, tr.line, tr.write, &mut routed)
             };
+            let deltas = pre.map(|p| {
+                let s = device.scheme.stats();
+                [
+                    s.promotions - p[0],
+                    s.demotions - p[1],
+                    s.clean_demotions - p[2],
+                    s.promoted_hits - p[3],
+                ]
+            });
             // Device→host: back over the link, then up the fabric path.
             let at_host_port = device.link.egress(ready, 1);
             let done = pool.fabric.egress(dev, at_host_port, 1);
@@ -956,9 +1103,34 @@ impl<'a> HostSim<'a> {
             lane.count_issue(tr.write);
             let core = &mut self.cores[ci];
             if measure {
-                let ns = done.saturating_sub(t_issue) / PS_PER_NS;
+                let rt = done.saturating_sub(t_issue);
+                let ns = rt / PS_PER_NS;
                 core.lat.record_ns(ns);
                 lane.lat.record_ns(ns);
+                let bounds = [t_issue, at_port, at_device, ready, at_host_port, done];
+                for i in 0..STAGES {
+                    let d = bounds[i + 1].saturating_sub(bounds[i]);
+                    core.stage_ps[i] += d;
+                    lane.stage_ps[i] += d;
+                }
+                core.round_ps += rt;
+                lane.round_ps += rt;
+                if let Some(dl) = deltas {
+                    let ev = self.events.as_mut().expect("traced implies events");
+                    ev.span(ReqSpans {
+                        req: req_seq,
+                        core: ci as u32,
+                        dev: tr.dev,
+                        write: tr.write,
+                        t_issue,
+                        at_port,
+                        at_device,
+                        ready,
+                        at_host_port,
+                        done,
+                    });
+                    record_scheme_instants(ev, &dl, ready, ci as u32, tr.dev, req_seq);
+                }
             }
             // Blocking load: a dependent instruction needs this value —
             // the core stalls until the reply returns.
@@ -973,6 +1145,7 @@ impl<'a> HostSim<'a> {
             if self.sampler.is_some() {
                 self.sampler_tick(pool, measure);
             }
+            req_seq += 1;
         }
         // Let every core drain (reply latency counts toward elapsed).
         for (ci, core) in self.cores.iter_mut().enumerate() {
@@ -1231,8 +1404,9 @@ mod tests {
         drain_completed(&mut mshrs, 0, 50, &mut lanes);
         assert_eq!(mshrs.len(0), 3);
         // MSHR stall retires the (done, device) minimum: (60, #0).
-        let done = mshr_stall(&mut mshrs, 0, &mut lanes).unwrap();
+        let (done, sdev) = mshr_stall(&mut mshrs, 0, &mut lanes).unwrap();
         assert_eq!(done, 60);
+        assert_eq!(sdev, 0, "stall names the retired miss's device");
         assert_eq!(lanes[0].outstanding, 1);
         // Re-drain at the stall's completion time releases (60, #1)
         // too; without it the lane-1 slot stayed counted (inflating

@@ -57,10 +57,11 @@ use std::sync::Mutex;
 
 use crate::expander::{BatchAccess, ContentOracle, SchemeSnapshot};
 use crate::sim::{FxHashMap, Ps};
+use crate::telemetry::events::{EventLog, InstantKind, ReqSpans, STAGES};
 use crate::topology::{DevicePool, Interleave, PoolShard};
 
 use super::mshr::SlotArena;
-use super::{Core, HostSim, Lane, RoutedOracle};
+use super::{record_scheme_instants, Core, HostSim, Lane, RoutedOracle};
 
 /// Work sent to a device-shard worker over its FIFO channel.
 #[derive(Clone, Copy)]
@@ -74,6 +75,9 @@ enum Job {
         local: u64,
         line: u32,
         write: bool,
+        /// Sampled for lifecycle tracing: the worker additionally diffs
+        /// the scheme-activity counters around this request's access.
+        trace: bool,
     },
     /// Telemetry barrier: report every owned device's scheme snapshot
     /// and downlink busy time (plus every owned fabric port's busy
@@ -85,7 +89,19 @@ enum Job {
 enum Reply {
     Done {
         req_id: u64,
+        /// Intermediate stage boundaries (fabric port, device link,
+        /// scheme-ready, host port) — always carried so the scheduler
+        /// can attribute per-stage time; negligible next to the channel
+        /// send itself.
+        at_port: Ps,
+        at_device: Ps,
+        ready: Ps,
+        at_host_port: Ps,
         done: Ps,
+        /// Scheme-activity counter movement while serving a *traced*
+        /// request (promotions, demotions, clean demotions, promoted
+        /// hits); `None` for untraced requests.
+        deltas: Option<[u64; 4]>,
     },
     Snap {
         devices: Vec<(usize, SchemeSnapshot, Ps)>,
@@ -113,6 +129,7 @@ struct Issued {
     core: u32,
     dev: u32,
     t_issue: Ps,
+    write: bool,
 }
 
 /// Reply-side state of the deterministic merge.
@@ -137,9 +154,23 @@ impl Merge {
     /// consumes every pre-boundary reply before an epoch is cut, so
     /// per-epoch histograms still match the sequential engine bit for
     /// bit.
-    fn handle(&mut self, reply: Reply, cores: &mut [Core], lanes: &mut [Lane]) {
+    fn handle(
+        &mut self,
+        reply: Reply,
+        cores: &mut [Core],
+        lanes: &mut [Lane],
+        events: &mut Option<EventLog>,
+    ) {
         match reply {
-            Reply::Done { req_id, done } => {
+            Reply::Done {
+                req_id,
+                at_port,
+                at_device,
+                ready,
+                at_host_port,
+                done,
+                deltas,
+            } => {
                 let f = self
                     .inflight
                     .remove(&req_id)
@@ -149,9 +180,39 @@ impl Merge {
                     "completion violates the fabric round-trip lower bound"
                 );
                 if self.measure {
-                    let ns = done.saturating_sub(f.t_issue) / crate::sim::PS_PER_NS;
-                    cores[f.core as usize].lat.record_ns(ns);
-                    lanes[f.dev as usize].lat.record_ns(ns);
+                    let rt = done.saturating_sub(f.t_issue);
+                    let ns = rt / crate::sim::PS_PER_NS;
+                    let core = &mut cores[f.core as usize];
+                    let lane = &mut lanes[f.dev as usize];
+                    core.lat.record_ns(ns);
+                    lane.lat.record_ns(ns);
+                    // Stage attribution: same telescoping sums as the
+                    // sequential engine; the order replies are consumed
+                    // in is invisible because sums commute.
+                    let bounds = [f.t_issue, at_port, at_device, ready, at_host_port, done];
+                    for i in 0..STAGES {
+                        let d = bounds[i + 1].saturating_sub(bounds[i]);
+                        core.stage_ps[i] += d;
+                        lane.stage_ps[i] += d;
+                    }
+                    core.round_ps += rt;
+                    lane.round_ps += rt;
+                    if let Some(dl) = deltas {
+                        let ev = events.as_mut().expect("traced reply implies events");
+                        ev.span(ReqSpans {
+                            req: req_id,
+                            core: f.core,
+                            dev: f.dev,
+                            write: f.write,
+                            t_issue: f.t_issue,
+                            at_port,
+                            at_device,
+                            ready,
+                            at_host_port,
+                            done,
+                        });
+                        record_scheme_instants(ev, &dl, ready, f.core, f.dev, req_id);
+                    }
                 }
                 self.resolved.insert(req_id, done);
             }
@@ -160,13 +221,19 @@ impl Merge {
     }
 
     /// Block until `req_id`'s completion time is known and claim it.
-    fn resolve(&mut self, req_id: u64, cores: &mut [Core], lanes: &mut [Lane]) -> Ps {
+    fn resolve(
+        &mut self,
+        req_id: u64,
+        cores: &mut [Core],
+        lanes: &mut [Lane],
+        events: &mut Option<EventLog>,
+    ) -> Ps {
         loop {
             if let Some(done) = self.resolved.remove(&req_id) {
                 return done;
             }
             let reply = self.rx.recv().expect("worker thread terminated early");
-            self.handle(reply, cores, lanes);
+            self.handle(reply, cores, lanes, events);
         }
     }
 }
@@ -186,11 +253,12 @@ fn drain(
     merge: &mut Merge,
     cores: &mut [Core],
     lanes: &mut [Lane],
+    events: &mut Option<EventLog>,
 ) {
     for k in 0..out.len(ci) {
         let e = out.get(ci, k);
         if e.done.is_none() && e.lb <= t {
-            let done = merge.resolve(e.req_id, cores, lanes);
+            let done = merge.resolve(e.req_id, cores, lanes, events);
             out.get_mut(ci, k).done = Some(done);
         }
     }
@@ -257,6 +325,11 @@ pub(super) fn phase(
     // stays empty under this engine) — no steady-state allocations.
     let mut out: SlotArena<OutEntry> = SlotArena::new(sim.cores.len(), mshrs);
 
+    // Tracing active this phase? Workers then evaluate runs entry by
+    // entry (bit-identical: the default `access_batch` is a per-entry
+    // loop) so traced requests can diff the scheme counters.
+    let tracing = measure && sim.events.is_some();
+
     std::thread::scope(|scope| {
         let mut job_txs: Vec<Sender<Job>> = Vec::with_capacity(workers);
         for shard in pool.split_mut(workers) {
@@ -264,7 +337,7 @@ pub(super) fn phase(
             job_txs.push(tx);
             let reply_tx = reply_tx.clone();
             let oracle = &oracle;
-            scope.spawn(move || worker(shard, rx, reply_tx, oracle, map));
+            scope.spawn(move || worker(shard, rx, reply_tx, oracle, map, tracing));
         }
         drop(reply_tx);
 
@@ -280,7 +353,15 @@ pub(super) fn phase(
             sim.cores[ci].retire_gap(tr.inst_gap, ipc);
 
             let t = sim.cores[ci].t;
-            drain(&mut out, ci, t, &mut merge, &mut sim.cores, &mut sim.lanes);
+            drain(
+                &mut out,
+                ci,
+                t,
+                &mut merge,
+                &mut sim.cores,
+                &mut sim.lanes,
+                &mut sim.events,
+            );
             if out.len(ci) >= mshrs {
                 // MSHR full: the stall needs the true oldest miss, so
                 // every unresolved completion must be known before the
@@ -288,8 +369,12 @@ pub(super) fn phase(
                 // is retired.
                 for k in 0..out.len(ci) {
                     if out.get(ci, k).done.is_none() {
-                        let done =
-                            merge.resolve(out.get(ci, k).req_id, &mut sim.cores, &mut sim.lanes);
+                        let done = merge.resolve(
+                            out.get(ci, k).req_id,
+                            &mut sim.cores,
+                            &mut sim.lanes,
+                            &mut sim.events,
+                        );
                         out.get_mut(ci, k).done = Some(done);
                     }
                 }
@@ -303,11 +388,42 @@ pub(super) fn phase(
                 sim.lanes[e.dev as usize].release();
                 let done = e.done.expect("resolved above");
                 sim.cores[ci].t = sim.cores[ci].t.max(done);
+                // Stall instant, keyed by the request about to issue —
+                // identical to the sequential engine's.
+                if measure {
+                    if let Some(ev) = sim.events.as_mut() {
+                        if ev.sampled(next_req_id) {
+                            ev.instant(
+                                InstantKind::MshrStall,
+                                sim.cores[ci].t,
+                                ci as u32,
+                                e.dev,
+                                next_req_id,
+                            );
+                        }
+                    }
+                }
                 let t = sim.cores[ci].t;
-                drain(&mut out, ci, t, &mut merge, &mut sim.cores, &mut sim.lanes);
+                drain(
+                    &mut out,
+                    ci,
+                    t,
+                    &mut merge,
+                    &mut sim.cores,
+                    &mut sim.lanes,
+                    &mut sim.events,
+                );
             }
 
             sim.cores[ci].count_issue(tr.write);
+            let traced = measure
+                && match sim.events.as_mut() {
+                    Some(ev) => {
+                        ev.count_issue();
+                        ev.sampled(next_req_id)
+                    }
+                    None => false,
+                };
             let t_issue = sim.cores[ci].t;
             let dev = tr.dev as usize;
             let req_id = next_req_id;
@@ -318,6 +434,7 @@ pub(super) fn phase(
                     core: ci as u32,
                     dev: tr.dev,
                     t_issue,
+                    write: tr.write,
                 },
             );
             job_txs[tr.group as usize % workers]
@@ -328,6 +445,7 @@ pub(super) fn phase(
                     local: tr.local,
                     line: tr.line,
                     write: tr.write,
+                    trace: traced,
                 })
                 .expect("worker thread terminated early");
             sim.lanes[dev].count_issue(tr.write);
@@ -335,7 +453,8 @@ pub(super) fn phase(
                 // Blocking load: the core cannot proceed without the
                 // value, so this is the one place the scheduler waits
                 // unconditionally.
-                let done = merge.resolve(req_id, &mut sim.cores, &mut sim.lanes);
+                let done =
+                    merge.resolve(req_id, &mut sim.cores, &mut sim.lanes, &mut sim.events);
                 sim.cores[ci].t = sim.cores[ci].t.max(done);
             } else {
                 out.push(
@@ -361,6 +480,7 @@ pub(super) fn phase(
                         &mut merge,
                         &mut sim.cores,
                         &mut sim.lanes,
+                        &mut sim.events,
                         ndev,
                         nports,
                     );
@@ -375,7 +495,12 @@ pub(super) fn phase(
         for ci in 0..sim.cores.len() {
             for k in 0..out.len(ci) {
                 if out.get(ci, k).done.is_none() {
-                    let done = merge.resolve(out.get(ci, k).req_id, &mut sim.cores, &mut sim.lanes);
+                    let done = merge.resolve(
+                        out.get(ci, k).req_id,
+                        &mut sim.cores,
+                        &mut sim.lanes,
+                        &mut sim.events,
+                    );
                     out.get_mut(ci, k).done = Some(done);
                 }
             }
@@ -413,6 +538,7 @@ fn snapshot_barrier(
     merge: &mut Merge,
     cores: &mut [Core],
     lanes: &mut [Lane],
+    events: &mut Option<EventLog>,
     ndev: usize,
     nports: usize,
 ) -> (Vec<(SchemeSnapshot, Ps)>, Vec<(Ps, Ps)>) {
@@ -421,7 +547,7 @@ fn snapshot_barrier(
     }
     while merge.snaps.len() < job_txs.len() {
         let reply = merge.rx.recv().expect("worker thread terminated early");
-        merge.handle(reply, cores, lanes);
+        merge.handle(reply, cores, lanes, events);
     }
     let mut slots: Vec<Option<(SchemeSnapshot, Ps)>> = (0..ndev).map(|_| None).collect();
     let mut port_slots: Vec<(Ps, Ps)> = vec![(0, 0); nports];
@@ -462,10 +588,14 @@ fn worker(
     tx: Sender<Reply>,
     oracle: &Mutex<&mut dyn ContentOracle>,
     map: Interleave,
+    tracing: bool,
 ) {
     let mut batch: Vec<Job> = Vec::new();
     let mut accs: Vec<BatchAccess> = Vec::new();
     let mut ids: Vec<u64> = Vec::new();
+    let mut traces: Vec<bool> = Vec::new();
+    let mut at_ports: Vec<Ps> = Vec::new();
+    let mut deltas: Vec<Option<[u64; 4]>> = Vec::new();
     loop {
         let Ok(first) = rx.recv() else {
             return; // scheduler hung up: phase over
@@ -497,6 +627,7 @@ fn worker(
                 Job::Req { dev, .. } => {
                     accs.clear();
                     ids.clear();
+                    traces.clear();
                     let mut j = i;
                     while j < batch.len() {
                         let Job::Req {
@@ -506,6 +637,7 @@ fn worker(
                             local,
                             line,
                             write,
+                            trace,
                         } = batch[j]
                         else {
                             break;
@@ -514,6 +646,7 @@ fn worker(
                             break;
                         }
                         ids.push(req_id);
+                        traces.push(trace);
                         accs.push(BatchAccess {
                             now: t_issue,
                             ospn: local,
@@ -538,9 +671,16 @@ fn worker(
                     for a in accs.iter_mut() {
                         a.now = group.ingress(dev, a.now, 1);
                     }
+                    // `a.now` is progressively overwritten down the
+                    // pipeline; keep the fabric-port boundary for the
+                    // per-stage reply before the link pass claims it.
+                    at_ports.clear();
+                    at_ports.extend(accs.iter().map(|a| a.now));
                     for a in accs.iter_mut() {
                         a.now = device.link.ingress(a.now, 1);
                     }
+                    deltas.clear();
+                    deltas.resize(accs.len(), None);
                     {
                         let mut guard = oracle.lock().expect("oracle mutex poisoned");
                         let mut routed = RoutedOracle {
@@ -548,7 +688,37 @@ fn worker(
                             map,
                             dev,
                         };
-                        device.scheme.access_batch(&mut accs, &mut routed);
+                        if tracing {
+                            // Entry-at-a-time under one oracle lock —
+                            // bit-identical to the whole-run batch (the
+                            // default `access_batch` is a per-entry
+                            // loop) — so traced requests can diff the
+                            // scheme-activity counters around their own
+                            // access.
+                            for k in 0..accs.len() {
+                                let pre = traces[k].then(|| {
+                                    let s = device.scheme.stats();
+                                    [
+                                        s.promotions,
+                                        s.demotions,
+                                        s.clean_demotions,
+                                        s.promoted_hits,
+                                    ]
+                                });
+                                device.scheme.access_batch(&mut accs[k..k + 1], &mut routed);
+                                deltas[k] = pre.map(|p| {
+                                    let s = device.scheme.stats();
+                                    [
+                                        s.promotions - p[0],
+                                        s.demotions - p[1],
+                                        s.clean_demotions - p[2],
+                                        s.promoted_hits - p[3],
+                                    ]
+                                });
+                            }
+                        } else {
+                            device.scheme.access_batch(&mut accs, &mut routed);
+                        }
                     }
                     for (k, a) in accs.iter().enumerate() {
                         let at_host_port = device.link.egress(a.ready, 1);
@@ -556,7 +726,12 @@ fn worker(
                         if tx
                             .send(Reply::Done {
                                 req_id: ids[k],
+                                at_port: at_ports[k],
+                                at_device: a.now,
+                                ready: a.ready,
+                                at_host_port,
                                 done,
+                                deltas: deltas[k],
                             })
                             .is_err()
                         {

@@ -49,6 +49,86 @@ impl MemKind {
     }
 }
 
+/// *Why* an internal access happened — a refinement of `MemKind` that
+/// attributes each access to the mechanism that issued it. Every cause
+/// maps to exactly one kind (`MemCause::kind`), so the per-kind
+/// breakdown is always the kind-wise sum of the per-cause one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MemCause {
+    /// Translation/metadata table reads and writes (page-table entries,
+    /// sector tables, chunk headers).
+    MetaLookup,
+    /// Activity-region traffic: recency-bit installs/fetches/clears and
+    /// second-chance scan windows (cold-page identification).
+    ActivityScan,
+    /// Allocator and free-list churn: zsmalloc alloc/free, repack list
+    /// operations, background compaction bursts.
+    Compaction,
+    /// Shadow-copy reuse bookkeeping: releasing a still-valid compressed
+    /// shadow on promoted-page writes (the traffic §4.5 trades against
+    /// full recompression).
+    ShadowReuse,
+    /// Copying data into the promoted/uncompressed region, including the
+    /// compressed-chunk reads that feed the copy.
+    PromotionCopy,
+    /// Demotion traffic: re-reading promoted pages and writing the
+    /// recompressed image back.
+    DemotionRecompress,
+    /// The access that actually serves the host request.
+    HostServe,
+}
+
+pub const MEM_CAUSES: [MemCause; 7] = [
+    MemCause::MetaLookup,
+    MemCause::ActivityScan,
+    MemCause::Compaction,
+    MemCause::ShadowReuse,
+    MemCause::PromotionCopy,
+    MemCause::DemotionRecompress,
+    MemCause::HostServe,
+];
+
+impl MemCause {
+    pub fn name(self) -> &'static str {
+        match self {
+            MemCause::MetaLookup => "meta_lookup",
+            MemCause::ActivityScan => "activity_scan",
+            MemCause::Compaction => "compaction",
+            MemCause::ShadowReuse => "shadow_reuse",
+            MemCause::PromotionCopy => "promotion_copy",
+            MemCause::DemotionRecompress => "demotion_recompress",
+            MemCause::HostServe => "host_serve",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            MemCause::MetaLookup => 0,
+            MemCause::ActivityScan => 1,
+            MemCause::Compaction => 2,
+            MemCause::ShadowReuse => 3,
+            MemCause::PromotionCopy => 4,
+            MemCause::DemotionRecompress => 5,
+            MemCause::HostServe => 6,
+        }
+    }
+
+    /// The `MemKind` this cause rolls up into. Pinned by tests: the
+    /// cause-tagged accounting must leave every per-kind count
+    /// bit-identical to the pre-cause accounting.
+    pub fn kind(self) -> MemKind {
+        match self {
+            MemCause::MetaLookup => MemKind::Control,
+            MemCause::ActivityScan => MemKind::Control,
+            MemCause::Compaction => MemKind::Control,
+            MemCause::ShadowReuse => MemKind::Control,
+            MemCause::PromotionCopy => MemKind::Promotion,
+            MemCause::DemotionRecompress => MemKind::Demotion,
+            MemCause::HostServe => MemKind::Final,
+        }
+    }
+}
+
 /// DDR5 timing parameters in memory-clock ticks (Table 1: 40/40/40).
 #[derive(Clone, Copy, Debug)]
 pub struct DramTiming {
@@ -172,20 +252,28 @@ impl DramChannel {
     }
 }
 
-/// Per-kind access counters.
+/// Per-kind and per-cause access counters. The kind lanes are always
+/// the cause lanes folded through `MemCause::kind`, so either view can
+/// be cross-checked against the other.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct TrafficBreakdown {
     pub counts: [u64; 4],
+    pub by_cause: [u64; 7],
 }
 
 impl TrafficBreakdown {
     #[inline]
-    pub fn add(&mut self, kind: MemKind, n: u64) {
-        self.counts[kind.index()] += n;
+    pub fn add(&mut self, cause: MemCause, n: u64) {
+        self.counts[cause.kind().index()] += n;
+        self.by_cause[cause.index()] += n;
     }
 
     pub fn get(&self, kind: MemKind) -> u64 {
         self.counts[kind.index()]
+    }
+
+    pub fn get_cause(&self, cause: MemCause) -> u64 {
+        self.by_cause[cause.index()]
     }
 
     pub fn total(&self) -> u64 {
@@ -226,8 +314,8 @@ impl MemorySystem {
     }
 
     /// One 64 B access; returns completion time.
-    pub fn access(&mut self, now: Ps, addr: u64, write: bool, kind: MemKind) -> Ps {
-        self.breakdown.add(kind, 1);
+    pub fn access(&mut self, now: Ps, addr: u64, write: bool, cause: MemCause) -> Ps {
+        self.breakdown.add(cause, 1);
         if self.unlimited {
             // Latency-only model: fixed row-miss latency + one burst.
             let idx = self.route(addr);
@@ -246,10 +334,10 @@ impl MemorySystem {
     /// A burst of `n` consecutive 64 B accesses starting at `addr`
     /// (compressed-chunk fetches, promoted-page fills). Returns the time
     /// the *last* line completes.
-    pub fn access_burst(&mut self, now: Ps, addr: u64, lines: u64, write: bool, kind: MemKind) -> Ps {
+    pub fn access_burst(&mut self, now: Ps, addr: u64, lines: u64, write: bool, cause: MemCause) -> Ps {
         let mut done = now;
         for i in 0..lines {
-            done = done.max(self.access(now, addr + i * 64, write, kind));
+            done = done.max(self.access(now, addr + i * 64, write, cause));
         }
         done
     }
@@ -258,8 +346,8 @@ impl MemorySystem {
     /// accesses starting at `addr` (a no-op for `bytes == 0`). Chunk
     /// runs and variable-size images batch through this directly
     /// instead of every call site repeating the line-count conversion.
-    pub fn access_bytes(&mut self, now: Ps, addr: u64, bytes: u64, write: bool, kind: MemKind) -> Ps {
-        self.access_burst(now, addr, bytes.div_ceil(64), write, kind)
+    pub fn access_bytes(&mut self, now: Ps, addr: u64, bytes: u64, write: bool, cause: MemCause) -> Ps {
+        self.access_burst(now, addr, bytes.div_ceil(64), write, cause)
     }
 
     #[inline]
@@ -310,7 +398,7 @@ mod tests {
     fn single_access_latency_is_row_miss() {
         let mut m = mem();
         let t = DramTiming::default();
-        let done = m.access(0, 0, false, MemKind::Final);
+        let done = m.access(0, 0, false, MemCause::HostServe);
         assert_eq!(done, t.row_miss_ps() + t.burst_ps());
     }
 
@@ -318,8 +406,8 @@ mod tests {
     fn row_hit_is_faster() {
         let mut m = mem();
         let t = DramTiming::default();
-        let first = m.access(0, 0, false, MemKind::Final);
-        let second = m.access(first, 64, false, MemKind::Final);
+        let first = m.access(0, 0, false, MemCause::HostServe);
+        let second = m.access(first, 64, false, MemCause::HostServe);
         assert_eq!(second - first, t.row_hit_ps() + t.burst_ps());
     }
 
@@ -335,8 +423,8 @@ mod tests {
         let mut m = mem();
         // Two same-channel, different-bank accesses at t=0: second must
         // wait for the bus even though banks differ.
-        let a = m.access(0, 0, false, MemKind::Final);
-        let b = m.access(0, 2 * ROW_BYTES * 16, false, MemKind::Final);
+        let a = m.access(0, 0, false, MemCause::HostServe);
+        let b = m.access(0, 2 * ROW_BYTES * 16, false, MemCause::HostServe);
         assert!(b > a);
     }
 
@@ -347,15 +435,15 @@ mod tests {
         let t = DramTiming::default();
         let lat = t.row_miss_ps() + t.burst_ps();
         for _ in 0..100 {
-            assert_eq!(m.access(0, 0, false, MemKind::Final), lat);
+            assert_eq!(m.access(0, 0, false, MemCause::HostServe), lat);
         }
     }
 
     #[test]
     fn burst_completes_after_all_lines() {
         let mut m = mem();
-        let one = m.clone().access(0, 0, false, MemKind::Final);
-        let burst = m.access_burst(0, 0, 8, false, MemKind::Promotion);
+        let one = m.clone().access(0, 0, false, MemCause::HostServe);
+        let burst = m.access_burst(0, 0, 8, false, MemCause::PromotionCopy);
         assert!(burst > one);
         assert_eq!(m.total_accesses(), 8);
     }
@@ -363,30 +451,51 @@ mod tests {
     #[test]
     fn access_bytes_rounds_to_lines() {
         let mut m = mem();
-        assert_eq!(m.access_bytes(0, 0, 0, false, MemKind::Final), 0);
+        assert_eq!(m.access_bytes(0, 0, 0, false, MemCause::HostServe), 0);
         assert_eq!(m.total_accesses(), 0, "zero bytes charges nothing");
-        m.access_bytes(0, 0, 1, false, MemKind::Promotion);
+        m.access_bytes(0, 0, 1, false, MemCause::PromotionCopy);
         assert_eq!(m.total_accesses(), 1);
-        m.access_bytes(0, 0, 65, false, MemKind::Promotion);
+        m.access_bytes(0, 0, 65, false, MemCause::PromotionCopy);
         assert_eq!(m.total_accesses(), 3, "65 B = two 64 B lines");
     }
 
     #[test]
     fn breakdown_tracks_kinds() {
         let mut m = mem();
-        m.access(0, 0, false, MemKind::Control);
-        m.access(0, 64, false, MemKind::Control);
-        m.access(0, 128, true, MemKind::Demotion);
+        m.access(0, 0, false, MemCause::MetaLookup);
+        m.access(0, 64, false, MemCause::ActivityScan);
+        m.access(0, 128, true, MemCause::DemotionRecompress);
         assert_eq!(m.breakdown.get(MemKind::Control), 2);
         assert_eq!(m.breakdown.get(MemKind::Demotion), 1);
         assert_eq!(m.breakdown.total(), 3);
     }
 
     #[test]
+    fn breakdown_tracks_causes() {
+        let mut m = mem();
+        m.access(0, 0, false, MemCause::MetaLookup);
+        m.access(0, 64, false, MemCause::ActivityScan);
+        m.access(0, 128, true, MemCause::Compaction);
+        m.access(0, 192, true, MemCause::ShadowReuse);
+        m.access(0, 256, true, MemCause::PromotionCopy);
+        m.access(0, 320, false, MemCause::HostServe);
+        assert_eq!(m.breakdown.get_cause(MemCause::MetaLookup), 1);
+        assert_eq!(m.breakdown.get_cause(MemCause::ShadowReuse), 1);
+        assert_eq!(m.breakdown.get_cause(MemCause::DemotionRecompress), 0);
+        // Kind lanes are the cause lanes folded through `kind()`.
+        let mut folded = [0u64; 4];
+        for c in MEM_CAUSES {
+            folded[c.kind().index()] += m.breakdown.get_cause(c);
+        }
+        assert_eq!(folded, m.breakdown.counts);
+        assert_eq!(m.breakdown.by_cause.iter().sum::<u64>(), m.breakdown.total());
+    }
+
+    #[test]
     fn reads_writes_counted() {
         let mut m = mem();
-        m.access(0, 0, false, MemKind::Final);
-        m.access(0, 64, true, MemKind::Final);
+        m.access(0, 0, false, MemCause::HostServe);
+        m.access(0, 64, true, MemCause::HostServe);
         assert_eq!(m.total_reads(), 1);
         assert_eq!(m.total_writes(), 1);
     }

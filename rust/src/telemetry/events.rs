@@ -1,0 +1,394 @@
+//! Request-lifecycle event recording, exported as Chrome trace-event
+//! JSON (loadable in Perfetto / `chrome://tracing`).
+//!
+//! Both host engines record the same five stage boundaries per sampled
+//! request — fabric ingress, link ingress, scheme service, link egress,
+//! fabric egress — plus instant events for MSHR-full stalls and
+//! scheme-side promotions/demotions/shadow activity. Recording is pure
+//! bookkeeping on top of times the engines already compute: it never
+//! advances simulated time, touches a modeled resource, or changes a
+//! decision, so results are bit-identical with tracing on or off
+//! (pinned by `tests/events.rs`).
+//!
+//! Determinism: requests are sampled by their global issue sequence
+//! number (`req_seq % sample_every == 0`), which both engines assign in
+//! the same scheduler order, and the export sorts events by
+//! `(pid, tid, ts, req, lane)` — so the sequential and parallel engines
+//! produce byte-identical trace files.
+
+use crate::sim::Ps;
+
+/// Stage labels, in request-path order. Each becomes one track (tid)
+/// under its device's process in the exported trace.
+pub const STAGE_NAMES: [&str; 5] = [
+    "fabric-ingress",
+    "link-ingress",
+    "scheme-service",
+    "link-egress",
+    "fabric-egress",
+];
+
+/// Number of lifecycle stages per request.
+pub const STAGES: usize = STAGE_NAMES.len();
+
+/// The five stage-boundary times of one sampled request, all absolute
+/// picoseconds: `t_issue → at_port → at_device → ready → at_host_port
+/// → done`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReqSpans {
+    pub req: u64,
+    pub core: u32,
+    pub dev: u32,
+    pub write: bool,
+    pub t_issue: Ps,
+    pub at_port: Ps,
+    pub at_device: Ps,
+    pub ready: Ps,
+    pub at_host_port: Ps,
+    pub done: Ps,
+}
+
+impl ReqSpans {
+    /// `(start, duration)` of stage `i` in `STAGE_NAMES` order.
+    pub fn stage(&self, i: usize) -> (Ps, Ps) {
+        let b = [
+            self.t_issue,
+            self.at_port,
+            self.at_device,
+            self.ready,
+            self.at_host_port,
+            self.done,
+        ];
+        (b[i], b[i + 1].saturating_sub(b[i]))
+    }
+
+    /// Round-trip time; equals the sum of the five stage durations as
+    /// long as the boundaries are monotone (asserted in tests).
+    pub fn round_trip(&self) -> Ps {
+        self.done.saturating_sub(self.t_issue)
+    }
+}
+
+/// Point events without duration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InstantKind {
+    /// The issuing core blocked on a full MSHR file.
+    MshrStall,
+    /// The device promoted a block while serving the request.
+    Promotion,
+    /// The device demoted (recompressed) a block.
+    Demotion,
+    /// A demotion satisfied by a shadow pointer (§4.5, no recompression).
+    CleanDemotion,
+    /// The request hit in the promoted region.
+    PromotedHit,
+}
+
+impl InstantKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            InstantKind::MshrStall => "mshr-stall",
+            InstantKind::Promotion => "promotion",
+            InstantKind::Demotion => "demotion",
+            InstantKind::CleanDemotion => "clean-demotion",
+            InstantKind::PromotedHit => "promoted-hit",
+        }
+    }
+
+    fn order(self) -> u32 {
+        match self {
+            InstantKind::MshrStall => 0,
+            InstantKind::Promotion => 1,
+            InstantKind::Demotion => 2,
+            InstantKind::CleanDemotion => 3,
+            InstantKind::PromotedHit => 4,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct InstantEvent {
+    pub kind: InstantKind,
+    pub t: Ps,
+    pub core: u32,
+    pub dev: u32,
+    pub req: u64,
+}
+
+/// Recorder shared by both engines. Collects sampled spans + instants;
+/// `to_chrome_json` renders the sorted trace.
+#[derive(Debug)]
+pub struct EventLog {
+    sample_every: u64,
+    issued: u64,
+    spans: Vec<ReqSpans>,
+    instants: Vec<InstantEvent>,
+}
+
+impl EventLog {
+    pub fn new(sample_every: u64) -> Self {
+        Self {
+            sample_every: sample_every.max(1),
+            issued: 0,
+            spans: Vec::new(),
+            instants: Vec::new(),
+        }
+    }
+
+    pub fn sample_every(&self) -> u64 {
+        self.sample_every
+    }
+
+    /// Should the request with global issue sequence `req_seq` be traced?
+    #[inline]
+    pub fn sampled(&self, req_seq: u64) -> bool {
+        req_seq % self.sample_every == 0
+    }
+
+    /// Count one issued request (sampled or not) — lets consumers check
+    /// `spans.len() == issued.div_ceil(sample_every)`.
+    #[inline]
+    pub fn count_issue(&mut self) {
+        self.issued += 1;
+    }
+
+    pub fn issued(&self) -> u64 {
+        self.issued
+    }
+
+    pub fn span(&mut self, s: ReqSpans) {
+        self.spans.push(s);
+    }
+
+    pub fn instant(&mut self, kind: InstantKind, t: Ps, core: u32, dev: u32, req: u64) {
+        self.instants.push(InstantEvent {
+            kind,
+            t,
+            core,
+            dev,
+            req,
+        });
+    }
+
+    pub fn spans(&self) -> &[ReqSpans] {
+        &self.spans
+    }
+
+    pub fn instants(&self) -> &[InstantEvent] {
+        &self.instants
+    }
+
+    /// Render the Chrome trace-event JSON. Timestamps are microseconds
+    /// with picosecond precision, formatted as exact decimal strings
+    /// (no float rounding), so output is byte-stable across platforms
+    /// and engines.
+    pub fn to_chrome_json(&self) -> String {
+        // Sort key: (pid, tid, ts, req, lane). `lane` breaks ties within
+        // one request deterministically (stage index / instant order).
+        let mut entries: Vec<(u64, u64, Ps, u64, u32, String)> = Vec::new();
+
+        let mut max_core = 0u32;
+        let mut max_dev = 0u32;
+        for s in &self.spans {
+            max_core = max_core.max(s.core);
+            max_dev = max_dev.max(s.dev);
+            let pid = 1 + s.dev as u64;
+            for i in 0..STAGES {
+                let (start, dur) = s.stage(i);
+                let tid = 1 + i as u64;
+                entries.push((
+                    pid,
+                    tid,
+                    start,
+                    s.req,
+                    i as u32,
+                    format!(
+                        "{{\"name\":\"{}\",\"cat\":\"req\",\"ph\":\"X\",\"pid\":{},\"tid\":{},\"ts\":{},\"dur\":{},\"args\":{{\"req\":{},\"core\":{},\"write\":{}}}}}",
+                        STAGE_NAMES[i],
+                        pid,
+                        tid,
+                        us(start),
+                        us(dur),
+                        s.req,
+                        s.core,
+                        s.write
+                    ),
+                ));
+            }
+        }
+        for e in &self.instants {
+            max_core = max_core.max(e.core);
+            let (pid, tid) = match e.kind {
+                // Core-side stalls live under the host process.
+                InstantKind::MshrStall => (0u64, 1 + e.core as u64),
+                // Scheme-side events share one track per device.
+                _ => {
+                    max_dev = max_dev.max(e.dev);
+                    (1 + e.dev as u64, 1 + STAGES as u64)
+                }
+            };
+            entries.push((
+                pid,
+                tid,
+                e.t,
+                e.req,
+                STAGES as u32 + 1 + e.kind.order(),
+                format!(
+                    "{{\"name\":\"{}\",\"cat\":\"inst\",\"ph\":\"i\",\"s\":\"t\",\"pid\":{},\"tid\":{},\"ts\":{},\"args\":{{\"req\":{},\"dev\":{}}}}}",
+                    e.kind.name(),
+                    pid,
+                    tid,
+                    us(e.t),
+                    e.req,
+                    e.dev
+                ),
+            ));
+        }
+        entries.sort_by(|a, b| (a.0, a.1, a.2, a.3, a.4).cmp(&(b.0, b.1, b.2, b.3, b.4)));
+
+        let mut meta: Vec<String> = Vec::new();
+        let have_host = self.instants.iter().any(|e| e.kind == InstantKind::MshrStall);
+        if have_host {
+            meta.push(
+                "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":0,\"args\":{\"name\":\"host\"}}"
+                    .to_string(),
+            );
+            for c in 0..=max_core {
+                meta.push(format!(
+                    "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":{},\"args\":{{\"name\":\"core{}\"}}}}",
+                    1 + c as u64,
+                    c
+                ));
+            }
+        }
+        if !self.spans.is_empty() {
+            for d in 0..=max_dev {
+                let pid = 1 + d as u64;
+                meta.push(format!(
+                    "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{},\"args\":{{\"name\":\"device{}\"}}}}",
+                    pid, d
+                ));
+                for (i, name) in STAGE_NAMES.iter().enumerate() {
+                    meta.push(format!(
+                        "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{},\"tid\":{},\"args\":{{\"name\":\"{}\"}}}}",
+                        pid,
+                        1 + i as u64,
+                        name
+                    ));
+                }
+                meta.push(format!(
+                    "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{},\"tid\":{},\"args\":{{\"name\":\"scheme-events\"}}}}",
+                    pid,
+                    1 + STAGES as u64
+                ));
+            }
+        }
+
+        let mut out = String::from("{\"traceEvents\":[");
+        let mut first = true;
+        for m in meta.iter().chain(entries.iter().map(|e| &e.5)) {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push('\n');
+            out.push_str(m);
+        }
+        out.push_str("\n],\"displayTimeUnit\":\"ns\",\"otherData\":{\"tool\":\"ibex\",\"sample_every\":");
+        out.push_str(&self.sample_every.to_string());
+        out.push_str(",\"issued\":");
+        out.push_str(&self.issued.to_string());
+        out.push_str("}}\n");
+        out
+    }
+
+    /// Write the trace to `path`.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_chrome_json())
+    }
+}
+
+/// Exact decimal microseconds from picoseconds (1 µs = 10⁶ ps).
+fn us(ps: Ps) -> String {
+    format!("{}.{:06}", ps / 1_000_000, ps % 1_000_000)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(req: u64, dev: u32, t0: Ps) -> ReqSpans {
+        ReqSpans {
+            req,
+            core: 0,
+            dev,
+            write: false,
+            t_issue: t0,
+            at_port: t0 + 10,
+            at_device: t0 + 30,
+            ready: t0 + 100,
+            at_host_port: t0 + 120,
+            done: t0 + 140,
+        }
+    }
+
+    #[test]
+    fn stage_durations_sum_to_round_trip() {
+        let s = span(0, 0, 1000);
+        let sum: Ps = (0..STAGES).map(|i| s.stage(i).1).sum();
+        assert_eq!(sum, s.round_trip());
+        assert_eq!(s.round_trip(), 140);
+    }
+
+    #[test]
+    fn sampling_is_modular() {
+        let log = EventLog::new(3);
+        assert!(log.sampled(0));
+        assert!(!log.sampled(1));
+        assert!(!log.sampled(2));
+        assert!(log.sampled(3));
+        // sample_every of 0 is clamped to 1 (trace everything).
+        assert_eq!(EventLog::new(0).sample_every(), 1);
+    }
+
+    #[test]
+    fn chrome_json_is_sorted_and_parseable() {
+        let mut log = EventLog::new(1);
+        // Insert out of order: the export must sort per track.
+        log.span(span(1, 0, 5000));
+        log.span(span(0, 0, 1000));
+        log.instant(InstantKind::MshrStall, 700, 0, 0, 0);
+        log.count_issue();
+        log.count_issue();
+        let txt = log.to_chrome_json();
+        let doc = crate::telemetry::json::Json::parse(&txt).expect("valid JSON");
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!events.is_empty());
+        // Per-(pid,tid) timestamps are monotone non-decreasing.
+        let mut last: std::collections::HashMap<(u64, u64), f64> = Default::default();
+        for e in events {
+            if e.get("ph").unwrap().as_str() == Some("M") {
+                continue;
+            }
+            let pid = e.get("pid").unwrap().as_u64().unwrap();
+            let tid = e.get("tid").unwrap().as_u64().unwrap();
+            let ts = e.get("ts").unwrap().as_f64().unwrap();
+            let prev = last.insert((pid, tid), ts);
+            if let Some(p) = prev {
+                assert!(ts >= p, "track ({pid},{tid}) went backwards: {p} -> {ts}");
+            }
+        }
+        assert_eq!(
+            doc.get("otherData").unwrap().get("issued").unwrap().as_u64(),
+            Some(2)
+        );
+    }
+
+    #[test]
+    fn microsecond_formatting_is_exact() {
+        assert_eq!(us(0), "0.000000");
+        assert_eq!(us(1), "0.000001");
+        assert_eq!(us(1_234_567), "1.234567");
+        assert_eq!(us(70_000), "0.070000");
+    }
+}

@@ -27,6 +27,7 @@
 //!   series) and the BENCH-style JSON the bench binaries drop next to
 //!   their CSVs.
 
+pub mod events;
 pub mod json;
 pub mod report;
 

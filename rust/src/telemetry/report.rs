@@ -17,15 +17,21 @@ use crate::config::SimConfig;
 use crate::coordinator::JobResult;
 use crate::cxl::fabric::Fabric;
 use crate::host::{DeviceLaneMetrics, PortMetrics, TenantMetrics};
-use crate::mem::MEM_KINDS;
+use crate::mem::{MEM_CAUSES, MEM_KINDS};
 use crate::stats::{LatencyHist, Table};
 
+use super::events::{STAGES, STAGE_NAMES};
 use super::json::Json;
 use super::{Epoch, Series};
 
 /// Report layout version. Bump on any breaking change to the shape or
 /// meaning of emitted fields; consumers must check it before reading.
-pub const REPORT_SCHEMA_VERSION: u64 = 1;
+///
+/// v2 (this version) adds `internal_by_cause` maps (final + per-epoch
+/// device rows) and per-stage latency attribution (`stage_ps`,
+/// `round_trip_ps`) on tenant and device rows. v1 documents lack those
+/// keys; consumers should treat them as optional when reading v1.
+pub const REPORT_SCHEMA_VERSION: u64 = 2;
 
 /// Relative tolerance for steady-state detection: an epoch is "at
 /// steady state" when its windowed internal-access count is within
@@ -102,6 +108,28 @@ fn mem_by_kind_json(counts: &[u64; 4]) -> Json {
     j
 }
 
+/// Cause-tagged internal-access map (`MEM_CAUSES` order). The values
+/// sum to `mem_accesses` and fold onto `mem_by_kind` via
+/// [`crate::mem::MemCause::kind`].
+fn mem_by_cause_json(counts: &[u64; 7]) -> Json {
+    let mut j = Json::object();
+    for (cause, &c) in MEM_CAUSES.iter().zip(counts.iter()) {
+        j.set(cause.name(), c);
+    }
+    j
+}
+
+/// Per-stage latency attribution (`STAGE_NAMES` order, picoseconds).
+/// Stages telescope over the request lifecycle, so the values sum to
+/// the sibling `round_trip_ps` exactly.
+fn stage_json(stage_ps: &[u64; STAGES]) -> Json {
+    let mut j = Json::object();
+    for (name, &ps) in STAGE_NAMES.iter().zip(stage_ps.iter()) {
+        j.set(name, ps);
+    }
+    j
+}
+
 fn tenant_json(t: &TenantMetrics) -> Json {
     let mut j = Json::object();
     j.set("name", t.name.as_str())
@@ -114,7 +142,9 @@ fn tenant_json(t: &TenantMetrics) -> Json {
         .set("perf_inst_per_ns", t.perf())
         .set("elapsed_ps", t.elapsed_ps)
         .set("mean_latency_ns", t.mean_latency_ns)
-        .set("p99_latency_ns", t.p99_latency_ns);
+        .set("p99_latency_ns", t.p99_latency_ns)
+        .set("stage_ps", stage_json(&t.stage_ps))
+        .set("round_trip_ps", t.round_trip_ps);
     j
 }
 
@@ -136,7 +166,9 @@ fn device_json(d: &DeviceLaneMetrics) -> Json {
         .set("compression_ratio", d.compression_ratio())
         .set("link_utilization", d.link_utilization)
         .set("promotions", d.promotions)
-        .set("demotions", d.demotions);
+        .set("demotions", d.demotions)
+        .set("stage_ps", stage_json(&d.stage_ps))
+        .set("round_trip_ps", d.round_trip_ps);
     j
 }
 
@@ -177,6 +209,7 @@ fn epoch_json(e: &Epoch, tenant_names: &[String]) -> Json {
                 .set("wrcnt_recompressions", c.wrcnt_recompressions)
                 .set("mem_accesses", c.mem_accesses)
                 .set("mem_by_kind", mem_by_kind_json(&c.mem_by_kind))
+                .set("internal_by_cause", mem_by_cause_json(&c.mem_by_cause))
                 .set("promoted_used", c.promoted_used)
                 .set("promoted_total", c.promoted_total)
                 .set("promoted_fill", c.promoted_fill())
@@ -278,6 +311,7 @@ fn job_json(r: &JobResult) -> Json {
         .set("requests", m.requests)
         .set("mem_accesses", m.mem_total)
         .set("mem_by_kind", mem_by_kind_json(&m.mem_by_kind))
+        .set("internal_by_cause", mem_by_cause_json(&m.mem_by_cause))
         .set("compression_ratio", m.compression_ratio)
         .set("mean_latency_ns", d.mean_latency_ns)
         .set("p99_latency_ns", d.p99_latency_ns)

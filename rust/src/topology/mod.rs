@@ -301,6 +301,19 @@ impl DevicePool {
         sum
     }
 
+    /// Internal memory accesses summed across devices, by access cause
+    /// (`MemCause` order — the finer-grained view of `mem_breakdown`).
+    pub fn mem_cause_breakdown(&self) -> [u64; 7] {
+        let mut sum = [0u64; 7];
+        for d in &self.devices {
+            let by_cause = d.scheme.mem().breakdown.by_cause;
+            for (s, c) in sum.iter_mut().zip(by_cause.iter()) {
+                *s += c;
+            }
+        }
+        sum
+    }
+
     /// Total internal memory accesses summed across devices.
     pub fn mem_total(&self) -> u64 {
         self.devices

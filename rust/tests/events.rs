@@ -1,0 +1,247 @@
+//! Request-lifecycle event-tracing integration tests.
+//!
+//! Pins the observability contract of `ibex::telemetry::events`:
+//! * tracing is **non-perturbing** — final metrics, per-cause internal
+//!   accounting and the epoch series are bit-identical with tracing on
+//!   or off, under both host engines;
+//! * per-request stage spans telescope exactly: the five lifecycle
+//!   stages sum to the round trip, per span and per aggregated
+//!   tenant/device row;
+//! * the exported Chrome trace is byte-identical between the
+//!   sequential and the intra-parallel engine, valid JSON, and
+//!   monotone per track;
+//! * `--trace-sample N` keeps exactly every Nth measured request;
+//! * the CLI writes one trace file per job (label-slug suffixes keep
+//!   multi-job sweeps from clobbering one path).
+
+use ibex::compress::AnalyticSizeModel;
+use ibex::config::SimConfig;
+use ibex::host::{HostSim, RunMetrics};
+use ibex::telemetry::events::{EventLog, STAGES};
+use ibex::telemetry::json::Json;
+use ibex::topology::DevicePool;
+use ibex::workload::{by_name, WorkloadOracle};
+
+fn quick_cfg(devices: &str) -> SimConfig {
+    let mut c = SimConfig::test_small();
+    c.cores = 2;
+    c.instructions = 80_000;
+    c.warmup_instructions = 8_000;
+    c.set("devices", devices).unwrap();
+    c.set("sample_every", "20000").unwrap();
+    c
+}
+
+/// Everything that must not move when tracing is toggled — the final
+/// metrics plus the full epoch series.
+#[derive(Debug, PartialEq)]
+struct Fingerprint {
+    elapsed_ps: u64,
+    requests: u64,
+    mem_by_kind: [u64; 4],
+    mem_by_cause: [u64; 7],
+    mem_total: u64,
+    ratio_bits: u64,
+    dev_requests: Vec<u64>,
+    epochs: Option<Vec<(u64, u64, u64)>>,
+}
+
+fn run(cfg: &SimConfig, intra: usize) -> (Fingerprint, RunMetrics, Option<EventLog>) {
+    let spec = by_name("pr").unwrap();
+    let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
+    let mut pool = DevicePool::build(cfg);
+    let mut sim = HostSim::new(cfg, &spec);
+    sim.set_intra_threads(intra);
+    let m = sim.run(&mut pool, &mut oracle);
+    let epochs = sim.take_series().map(|s| {
+        s.epochs
+            .iter()
+            .map(|e| (e.insts, e.t_ps, e.mem_accesses()))
+            .collect()
+    });
+    let events = sim.take_events();
+    let fp = Fingerprint {
+        elapsed_ps: m.elapsed_ps,
+        requests: m.requests,
+        mem_by_kind: m.mem_by_kind,
+        mem_by_cause: m.mem_by_cause,
+        mem_total: m.mem_total,
+        ratio_bits: m.compression_ratio.to_bits(),
+        dev_requests: m.devices.iter().map(|d| d.requests).collect(),
+        epochs,
+    };
+    (fp, m, events)
+}
+
+#[test]
+fn tracing_leaves_results_bit_identical() {
+    for devices in ["1", "4"] {
+        let base = quick_cfg(devices);
+        let mut traced = base.clone();
+        traced.event_trace = "enabled".into();
+        for intra in [1usize, 4] {
+            let (off, _, ev_off) = run(&base, intra);
+            assert!(ev_off.is_none(), "no recorder without --event-trace");
+            let (on, _, ev_on) = run(&traced, intra);
+            assert!(ev_on.is_some(), "recorder present with --event-trace");
+            assert_eq!(
+                on, off,
+                "tracing perturbed the run (devices={devices}, intra={intra})"
+            );
+        }
+    }
+}
+
+#[test]
+fn stage_spans_sum_to_round_trip() {
+    let mut cfg = quick_cfg("4");
+    cfg.event_trace = "enabled".into();
+    let (_, m, ev) = run(&cfg, 1);
+    let ev = ev.unwrap();
+    assert!(!ev.spans().is_empty(), "measured requests must record spans");
+    for s in ev.spans() {
+        let sum: u64 = (0..STAGES).map(|i| s.stage(i).1).sum();
+        assert_eq!(
+            sum,
+            s.round_trip(),
+            "stage spans of req {} must telescope to its round trip",
+            s.req
+        );
+    }
+    // The always-on aggregated attribution telescopes too, on every
+    // tenant and device row.
+    assert!(!m.tenants.is_empty() && !m.devices.is_empty());
+    for t in &m.tenants {
+        assert!(t.round_trip_ps > 0);
+        assert_eq!(t.stage_ps.iter().sum::<u64>(), t.round_trip_ps);
+    }
+    for d in &m.devices {
+        assert_eq!(d.stage_ps.iter().sum::<u64>(), d.round_trip_ps);
+    }
+    // Tenant-side and device-side views cover the same measured
+    // requests, so their totals agree exactly.
+    let tenant_total: u64 = m.tenants.iter().map(|t| t.round_trip_ps).sum();
+    let device_total: u64 = m.devices.iter().map(|d| d.round_trip_ps).sum();
+    assert_eq!(tenant_total, device_total);
+}
+
+#[test]
+fn trace_bytes_identical_across_engines() {
+    let mut cfg = quick_cfg("4");
+    cfg.event_trace = "enabled".into();
+    let (_, _, seq) = run(&cfg, 1);
+    let (_, _, par) = run(&cfg, 4);
+    let seq = seq.unwrap().to_chrome_json();
+    let par = par.unwrap().to_chrome_json();
+    assert_eq!(seq, par, "engines must serialize byte-identical traces");
+
+    // The shared bytes are valid Chrome trace JSON with per-track
+    // monotone timestamps.
+    let doc = Json::parse(&seq).expect("trace must parse");
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    let mut last: std::collections::HashMap<(u64, u64), f64> = Default::default();
+    for e in events {
+        if e.get("ph").unwrap().as_str() == Some("M") {
+            continue;
+        }
+        let pid = e.get("pid").unwrap().as_u64().unwrap();
+        let tid = e.get("tid").unwrap().as_u64().unwrap();
+        let ts = e.get("ts").unwrap().as_f64().unwrap();
+        if let Some(prev) = last.insert((pid, tid), ts) {
+            assert!(ts >= prev, "track ({pid},{tid}) went backwards");
+        }
+    }
+    let other = doc.get("otherData").unwrap();
+    assert_eq!(other.get("tool").unwrap().as_str(), Some("ibex"));
+    assert!(other.get("issued").unwrap().as_u64().unwrap() > 0);
+}
+
+#[test]
+fn trace_sample_thins_the_span_stream() {
+    let mut cfg = quick_cfg("1");
+    cfg.event_trace = "enabled".into();
+    let (_, _, full) = run(&cfg, 1);
+    let full = full.unwrap();
+    assert_eq!(
+        full.spans().len() as u64,
+        full.issued(),
+        "default sampling records every measured request"
+    );
+
+    let mut thin_cfg = cfg.clone();
+    thin_cfg.set("trace_sample", "4").unwrap();
+    let (_, _, thin) = run(&thin_cfg, 1);
+    let thin = thin.unwrap();
+    assert_eq!(
+        thin.issued(),
+        full.issued(),
+        "sampling must not change the issue count"
+    );
+    assert_eq!(
+        thin.spans().len() as u64,
+        thin.issued().div_ceil(4),
+        "every 4th measured request is recorded"
+    );
+    assert!(thin.spans().iter().all(|s| s.req % 4 == 0));
+}
+
+#[test]
+fn cli_event_trace_writes_per_job_files() {
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let path = dir.join(format!("ibex_events_{pid}.json"));
+    let path_s = path.to_string_lossy().into_owned();
+    let s = |v: &[&str]| -> Vec<String> { v.iter().map(|x| x.to_string()).collect() };
+
+    // Single job: the configured path, verbatim.
+    let code = ibex::cli::dispatch(&s(&[
+        "run",
+        "--workload",
+        "parest",
+        "--scheme",
+        "ibex",
+        "--event-trace",
+        &path_s,
+        "--trace-sample",
+        "16",
+        "instructions=60000",
+        "warmup_instructions=6000",
+        "cores=2",
+        "footprint_scale=0.0001",
+    ]));
+    assert_eq!(code, 0, "ibex run --event-trace must succeed");
+    let txt = std::fs::read_to_string(&path).expect("trace file written");
+    let doc = Json::parse(&txt).expect("trace file parses");
+    assert_eq!(
+        doc.get("otherData").unwrap().get("sample_every").unwrap().as_u64(),
+        Some(16)
+    );
+    let _ = std::fs::remove_file(&path);
+
+    // Multi-job sweep: label slugs keep the per-job files apart.
+    let code = ibex::cli::dispatch(&s(&[
+        "run",
+        "--workload",
+        "parest",
+        "--schemes",
+        "ibex,tmcc",
+        "--event-trace",
+        &path_s,
+        "instructions=60000",
+        "warmup_instructions=6000",
+        "cores=2",
+        "footprint_scale=0.0001",
+    ]));
+    assert_eq!(code, 0);
+    assert!(
+        !path.exists(),
+        "multi-job runs must never write the bare --event-trace path"
+    );
+    for scheme in ["ibex", "tmcc"] {
+        let p = dir.join(format!("ibex_events_{pid}.parest_{scheme}.json"));
+        assert!(p.exists(), "per-job trace {} missing", p.display());
+        Json::parse(&std::fs::read_to_string(&p).unwrap()).expect("per-job trace parses");
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -41,6 +41,7 @@ struct Fingerprint {
     elapsed_ps: u64,
     requests: u64,
     mem_by_kind: [u64; 4],
+    mem_by_cause: [u64; 7],
     mem_total: u64,
     ratio_bits: u64,
     dev_requests: Vec<u64>,
@@ -58,6 +59,7 @@ fn run_fingerprint(cfg: &SimConfig, workload: &str) -> (Fingerprint, Option<usiz
             elapsed_ps: m.elapsed_ps,
             requests: m.requests,
             mem_by_kind: m.mem_by_kind,
+            mem_by_cause: m.mem_by_cause,
             mem_total: m.mem_total,
             ratio_bits: m.compression_ratio.to_bits(),
             dev_requests: m.devices.iter().map(|d| d.requests).collect(),
@@ -228,7 +230,7 @@ fn json_report_roundtrips_with_pinned_shape() {
     let back = Json::parse(&text).expect("report must parse");
     assert_eq!(back, doc, "writer/parser round trip");
 
-    // Pinned top-level shape (schema v1).
+    // Pinned top-level shape (schema v2; unchanged from v1).
     let Json::Obj(entries) = &back else {
         panic!("report must be an object")
     };
@@ -236,7 +238,7 @@ fn json_report_roundtrips_with_pinned_shape() {
     assert_eq!(
         keys,
         ["schema_version", "tool", "kind", "seed", "topology", "config", "jobs"],
-        "schema v1 top-level keys"
+        "schema v2 top-level keys"
     );
     assert_eq!(
         back.get("schema_version").unwrap().as_u64(),
@@ -256,7 +258,10 @@ fn json_report_roundtrips_with_pinned_shape() {
     let job_keys: Vec<&str> = job_entries.iter().map(|(k, _)| k.as_str()).collect();
     assert_eq!(
         job_keys,
-        ["label", "workload", "scheme", "final", "tenants", "devices", "steady_state", "series"]
+        [
+            "label", "workload", "scheme", "final", "tenants", "devices", "ports",
+            "steady_state", "series"
+        ]
     );
     // Final metrics mirror the in-memory result exactly.
     let fin = job.get("final").unwrap();
@@ -269,6 +274,24 @@ fn json_report_roundtrips_with_pinned_shape() {
         Some(r.metrics.elapsed_ps)
     );
     assert_eq!(fin.get("requests").unwrap().as_u64(), Some(r.metrics.requests));
+    // v2: the cause-tagged map sums to the internal-access total.
+    let Json::Obj(causes) = fin.get("internal_by_cause").unwrap() else {
+        panic!("internal_by_cause must be an object")
+    };
+    let cause_sum: u64 = causes.iter().map(|(_, v)| v.as_u64().unwrap()).sum();
+    assert_eq!(cause_sum, r.metrics.mem_total, "causes must sum to mem_accesses");
+    // v2: stage attribution sums to the round trip on every row.
+    for row in job.get("tenants").unwrap().as_arr().unwrap() {
+        let Json::Obj(stages) = row.get("stage_ps").unwrap() else {
+            panic!("stage_ps must be an object")
+        };
+        let stage_sum: u64 = stages.iter().map(|(_, v)| v.as_u64().unwrap()).sum();
+        assert_eq!(
+            Some(stage_sum),
+            row.get("round_trip_ps").unwrap().as_u64(),
+            "tenant stage spans must telescope to the round trip"
+        );
+    }
     // Per-tenant and per-device rows exist.
     assert_eq!(job.get("tenants").unwrap().as_arr().unwrap().len(), 1);
     assert_eq!(job.get("devices").unwrap().as_arr().unwrap().len(), 1);
@@ -283,6 +306,15 @@ fn json_report_roundtrips_with_pinned_shape() {
         let insts = e.get("insts").unwrap().as_u64().unwrap();
         assert!(insts >= last);
         last = insts;
+        // v2: every epoch device row's cause map sums to its windowed
+        // internal-access total.
+        for d in e.get("devices").unwrap().as_arr().unwrap() {
+            let Json::Obj(causes) = d.get("internal_by_cause").unwrap() else {
+                panic!("epoch internal_by_cause must be an object")
+            };
+            let sum: u64 = causes.iter().map(|(_, v)| v.as_u64().unwrap()).sum();
+            assert_eq!(Some(sum), d.get("mem_accesses").unwrap().as_u64());
+        }
     }
     // Steady state detected and inside the measured epochs.
     let steady = job.get("steady_state").unwrap();
@@ -329,7 +361,7 @@ fn cli_json_flag_writes_parseable_report() {
     assert_eq!(code, 0, "ibex run --json must succeed");
     let text = std::fs::read_to_string(&path).expect("report file written");
     let doc = Json::parse(&text).expect("report parses");
-    assert_eq!(doc.get("schema_version").unwrap().as_u64(), Some(1));
+    assert_eq!(doc.get("schema_version").unwrap().as_u64(), Some(2));
     let job = doc.get("jobs").unwrap().idx(0).unwrap();
     let epochs = job.get("series").unwrap().get("epochs").unwrap();
     assert!(
@@ -337,4 +369,55 @@ fn cli_json_flag_writes_parseable_report() {
         "CLI smoke must produce >=2 epochs"
     );
     let _ = std::fs::remove_file(&path);
+}
+
+/// Schema v2 is additive: a v1 document (no `internal_by_cause`, no
+/// `stage_ps`/`round_trip_ps`, no per-job `ports`) must still parse,
+/// and the v2-only keys read back as absent rather than erroring —
+/// the contract consumers rely on when mixing report generations.
+#[test]
+fn v1_report_documents_still_parse() {
+    let v1 = r#"{
+      "schema_version": 1,
+      "tool": "ibex",
+      "kind": "run_report",
+      "seed": 42,
+      "topology": {"devices": 1, "interleave": "page"},
+      "config": {"scheme": "ibex"},
+      "jobs": [{
+        "label": "parest/ibex",
+        "workload": "parest",
+        "scheme": "ibex",
+        "final": {
+          "perf_inst_per_ns": 1.25,
+          "instructions": 60000,
+          "elapsed_ps": 48000000,
+          "requests": 900,
+          "mem_accesses": 1200,
+          "mem_by_kind": {"control": 100, "promotion": 40, "demotion": 60, "final": 1000},
+          "compression_ratio": 2.1
+        },
+        "tenants": [{"name": "parest", "cores": 2, "requests": 900}],
+        "devices": [{"device": 0, "requests": 900}],
+        "steady_state": {"detected": false},
+        "series": null
+      }]
+    }"#;
+    let doc = Json::parse(v1).expect("v1 report must keep parsing");
+    assert_eq!(doc.get("schema_version").unwrap().as_u64(), Some(1));
+    let job = doc.get("jobs").unwrap().idx(0).unwrap();
+    let fin = job.get("final").unwrap();
+    // v2-only keys are simply absent in v1 — `get` returns None, it
+    // does not fail.
+    assert_eq!(fin.get("internal_by_cause"), None);
+    assert_eq!(job.get("ports"), None);
+    let tenant = job.get("tenants").unwrap().idx(0).unwrap();
+    assert_eq!(tenant.get("stage_ps"), None);
+    assert_eq!(tenant.get("round_trip_ps"), None);
+    // The v1 keys still read normally.
+    assert_eq!(fin.get("mem_accesses").unwrap().as_u64(), Some(1200));
+    assert_eq!(
+        fin.get("mem_by_kind").unwrap().get("final").unwrap().as_u64(),
+        Some(1000)
+    );
 }
