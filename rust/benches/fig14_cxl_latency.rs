@@ -6,10 +6,12 @@
 //! relieving internal-bandwidth congestion for pr/cc).
 //!
 //! A second sweep walks the same comparison across fabric topologies
-//! (direct star / one switch level / two) at x8 devices: each hop adds
-//! its calibrated latency *and* a shared, oversubscribable uplink port,
-//! so the lanes extend the latency axis with queueing the flat
-//! `cxl.round_trip_ns` sweep cannot express.
+//! (direct star / one switch level / two) at x8 devices and then up
+//! the scale-out shapes — 16/32/64 devices behind radix-4 switch
+//! trees: each hop adds its calibrated latency *and* a shared,
+//! oversubscribable uplink port, so the lanes extend the latency axis
+//! with queueing the flat `cxl.round_trip_ns` sweep cannot express.
+//! `IBEX_BENCH_QUICK=1` caps the scale-out shapes at 16 devices.
 
 mod common;
 
@@ -62,28 +64,44 @@ fn main() {
     t.emit();
 
     // ---- fabric lanes: the same sweep across switched topologies ----
-    // (fabric kind, switch radix): direct star, 8 devices behind one
-    // radix-8 uplink, and a radix-2 two-level tree — nominal round
-    // trips 70/110/190 ns per the calibrated profiles.
-    const FABRICS: [(&str, &str); 3] =
-        [("direct", "4"), ("switch1", "8"), ("switch2", "2")];
+    // (fabric kind, switch radix, devices): the classic x8 trio —
+    // direct star, one radix-8 uplink, a radix-2 two-level tree
+    // (nominal round trips 70/110/190 ns per the calibrated profiles) —
+    // then the scale-out shapes at 16/32/64 devices behind radix-4
+    // switch trees (a 16-root-port host needs radix ≥ 4 to reach 64
+    // over one switch level). `IBEX_BENCH_QUICK` caps the large shapes
+    // at 16 devices.
+    let mut fabrics: Vec<(&str, &str, usize)> = vec![
+        ("direct", "4", 8),
+        ("switch1", "8", 8),
+        ("switch2", "2", 8),
+    ];
+    let large: &[usize] = if common::quick() { &[16] } else { &[16, 32, 64] };
+    for &n in large {
+        fabrics.push(("switch1", "4", n));
+        fabrics.push(("switch2", "4", n));
+    }
     let mut jobs = Vec::new();
-    for (fabric, radix) in FABRICS {
+    for &(fabric, radix, n) in &fabrics {
         for scheme in ["uncompressed", "ibex"] {
             for &w in &workloads {
                 let mut cfg = common::bench_cfg();
-                cfg.set("devices", "8").unwrap();
+                cfg.set("devices", &n.to_string()).unwrap();
                 cfg.set("fabric", fabric).unwrap();
                 cfg.set("switch_radix", radix).unwrap();
-                jobs.push(Job::new(format!("{scheme}@{fabric}"), cfg, w));
+                jobs.push(Job::new(format!("{scheme}@{fabric}/x{n}"), cfg, w));
             }
         }
     }
     let results = run_many(jobs);
+    let labels: Vec<String> = fabrics
+        .iter()
+        .map(|(f, _, n)| format!("{f}/x{n}"))
+        .collect();
     let mut headers = vec!["workload"];
-    headers.extend(FABRICS.iter().map(|(f, _)| *f));
+    headers.extend(labels.iter().map(|s| s.as_str()));
     let mut ft = Table::new(
-        "Fig 14b — IBEX vs uncompressed across fabric topologies (x8)",
+        "Fig 14b — IBEX vs uncompressed across fabric topologies",
         &headers,
     );
     let mut series: Vec<Vec<f64>> = Vec::new();

@@ -135,6 +135,67 @@ fn main() {
     );
     st.emit();
 
+    // ---- 32-device switched scale-out ------------------------------
+
+    // The 16-64-device scale target: 32 devices behind a radix-4
+    // two-level switch tree, sequential vs 4 workers. Alongside the
+    // wall-clock lanes, the sequential run reports the size-model memo
+    // cache's hit rate (`--size-cache`, on by default): hits skip the
+    // oracle's content fingerprint + size-model walk entirely, which is
+    // the dominant per-miss cost at this pool width.
+    let mut xt = Table::new(
+        "Hot path — 32-device switch2 scale-out throughput (ibex/pr)",
+        &["engine", "requests", "wall ms", "Mreq/s"],
+    );
+    let mut x32_reqs = [0u64; 2];
+    for (slot, (name, threads)) in [("sequential", 1usize), ("intra4", 4)].iter().enumerate() {
+        let mut cfg = common::bench_cfg();
+        cfg.instructions = insts;
+        cfg.warmup_instructions = 0;
+        cfg.set("scheme", "ibex").unwrap();
+        cfg.set("devices", "32").unwrap();
+        cfg.set("fabric", "switch2").unwrap();
+        cfg.set("switch_radix", "4").unwrap();
+        let spec = by_name("pr").unwrap();
+        let mut oracle = WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
+        let mut pool = DevicePool::build(&cfg);
+        let mut sim = HostSim::new(&cfg, &spec);
+        sim.set_intra_threads(*threads);
+        let start = Instant::now();
+        let m = sim.run(&mut pool, &mut oracle);
+        let wall = start.elapsed();
+        x32_reqs[slot] = m.requests;
+        let mreq_s = m.requests as f64 / wall.as_secs_f64() / 1e6;
+        let key = if *threads > 1 {
+            "scaleout_x32_intra4_mreq_per_s"
+        } else {
+            "scaleout_x32_seq_mreq_per_s"
+        };
+        report.metric(key, mreq_s);
+        if *threads == 1 {
+            let cache = pool.size_cache_stats();
+            report.metric("size_cache_hit_rate", cache.hit_rate());
+            println!(
+                "size cache: {} hits / {} misses / {} invalidations ({:.1}% hit rate)",
+                cache.hits,
+                cache.misses,
+                cache.invalidations,
+                cache.hit_rate() * 100.0
+            );
+        }
+        xt.row(vec![
+            name.to_string(),
+            m.requests.to_string(),
+            format!("{:.0}", wall.as_secs_f64() * 1000.0),
+            format!("{mreq_s:.2}"),
+        ]);
+    }
+    assert_eq!(
+        x32_reqs[0], x32_reqs[1],
+        "x32 switch2: parallel engine changed the request count"
+    );
+    xt.emit();
+
     // ---- isolated hot operations -----------------------------------
 
     let mut iso = Table::new(
@@ -332,5 +393,12 @@ fn main() {
     let _ = std::fs::remove_file(&txt_path);
     let _ = std::fs::remove_file(&bin_path);
 
-    report.table(&t).table(&ct).table(&st).table(&iso).table(&lt).write();
+    report
+        .table(&t)
+        .table(&ct)
+        .table(&st)
+        .table(&xt)
+        .table(&iso)
+        .table(&lt)
+        .write();
 }

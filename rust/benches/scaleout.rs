@@ -1,4 +1,4 @@
-//! Scale-out: shard the pooled address space across 1→8 IBEX devices.
+//! Scale-out: shard the pooled address space across 1→64 IBEX devices.
 //!
 //! The fleet-scale questions the topology layer opens: how does
 //! aggregate performance scale as the same workload's footprint (and
@@ -30,7 +30,7 @@ const WORKLOADS: [&str; 3] = ["parest", "omnetpp", "pr"];
 const INTERLEAVES: [&str; 2] = ["page", "contiguous"];
 
 fn main() {
-    common::banner("Scale-out", "1→8 sharded expander devices, per-device utilization");
+    common::banner("Scale-out", "1→64 sharded expander devices, per-device utilization");
     let mut jobs = Vec::new();
     for w in WORKLOADS {
         for il in INTERLEAVES {
@@ -230,7 +230,85 @@ fn main() {
     }
     ft.emit();
 
-    report.table(&t).table(&ut).table(&pt).table(&ft).write();
+    // ---- large pools: 16 → 64 devices on switched fabrics ----------
+
+    // The 16-64-device scale target: the host's 16 root ports cannot
+    // direct-attach past 16 devices (ISSUE: MAX_ROOT_PORTS), so the
+    // large shapes ride radix-4 switch trees — one level (reach 64)
+    // and two (reach 256). Lanes record both model outputs (perf,
+    // latency, shared-port pressure) and simulator throughput (Mreq/s,
+    // seq vs 4 workers) so the perf trajectory covers the big pools.
+    // `IBEX_BENCH_QUICK=1` caps the sweep at 32 devices.
+    let large: &[usize] = if common::quick() { &[16, 32] } else { &[16, 32, 64] };
+    const LARGE_FABRICS: [(&str, &str); 2] = [("switch1", "4"), ("switch2", "4")];
+    let mut lt = Table::new(
+        "Scale-out — large switched pools (pr)",
+        &[
+            "fabric", "devices", "engine", "perf (inst/ns)", "mean lat (ns)",
+            "p99 (ns)", "max port util", "wall ms", "Mreq/s",
+        ],
+    );
+    for (fabric, radix) in LARGE_FABRICS {
+        for &n in large {
+            let mut fps = [0u64; 2];
+            for (slot, threads) in [1usize, 4].iter().enumerate() {
+                let mut cfg = common::bench_cfg();
+                cfg.set("devices", &n.to_string()).unwrap();
+                cfg.set("fabric", fabric).unwrap();
+                cfg.set("switch_radix", radix).unwrap();
+                let spec = by_name("pr").unwrap();
+                let mut oracle =
+                    WorkloadOracle::new(spec.content, cfg.seed, AnalyticSizeModel);
+                let mut pool = DevicePool::build(&cfg);
+                let mut sim = HostSim::new(&cfg, &spec);
+                sim.set_intra_threads(*threads);
+                let start = Instant::now();
+                let m = sim.run(&mut pool, &mut oracle);
+                let wall = start.elapsed().as_secs_f64();
+                fps[slot] = m.elapsed_ps ^ m.mem_total ^ m.requests;
+                let agg = DeviceLaneMetrics::aggregate(&m.devices);
+                let engine = if *threads > 1 { "intra4" } else { "seq" };
+                let mreq_s = m.requests as f64 / wall / 1e6;
+                let peak_port = m
+                    .ports
+                    .iter()
+                    .map(|p| p.down_utilization.max(p.up_utilization))
+                    .fold(0.0f64, f64::max);
+                report.metric(&format!("pr_{fabric}_x{n}_{engine}_mreq_per_s"), mreq_s);
+                if slot == 0 {
+                    report.metric(&format!("pr_{fabric}_x{n}_perf"), m.perf());
+                    report.metric(
+                        &format!("pr_{fabric}_x{n}_max_port_util"),
+                        peak_port,
+                    );
+                }
+                lt.row(vec![
+                    fabric.to_string(),
+                    n.to_string(),
+                    engine.to_string(),
+                    format!("{:.4}", m.perf()),
+                    format!("{:.0}", agg.mean_latency_ns),
+                    agg.p99_latency_ns.to_string(),
+                    format!("{:.1}%", peak_port * 100.0),
+                    format!("{:.0}", wall * 1000.0),
+                    format!("{mreq_s:.2}"),
+                ]);
+            }
+            assert_eq!(
+                fps[0], fps[1],
+                "{fabric}/x{n}: intra-run engine diverged from sequential"
+            );
+        }
+    }
+    lt.emit();
+
+    report
+        .table(&t)
+        .table(&ut)
+        .table(&pt)
+        .table(&ft)
+        .table(&lt)
+        .write();
 
     println!("\nanchor: page interleave evens request share across the pool while");
     println!("contiguous extents concentrate each hot set — per-device link and");

@@ -194,6 +194,10 @@ impl Cli {
                 cfg.set("sample_unit", u)?;
             }
         }
+        // Cross-field checks after every override has landed: per-key
+        // validation can't see that e.g. switch1 × radix 2 strands
+        // devices 33..N past the host's root ports.
+        cfg.validate_topology()?;
         Ok(cfg)
     }
 }
@@ -261,7 +265,10 @@ FABRIC:    --fabric direct (default: the classic star, bit-identical to the
            measurements (arXiv:2303.15375, arXiv:2306.11227). fabric=/
            switch_radix=/fabric_profile= work as config keys too. Switched
            runs add a per-port utilization table and per-port telemetry
-           lanes in --json reports.
+           lanes in --json reports. The host exposes 16 root ports, so a
+           switched shape reaches at most radix*16 (switch1) or
+           radix^2*16 (switch2) devices — shapes that strand devices are
+           rejected with the shape's maximum.
 THREADS:   --intra-threads N (intra_threads= config key, IBEX_INTRA_THREADS
            env default) shards the device models of one run across N worker
            threads with a deterministic time-ordered merge — results are
@@ -1085,6 +1092,32 @@ mod tests {
         assert!(bad.config().is_err());
         let bad = Cli::parse(&s(&["run", "--fabric-profile", "nope"])).unwrap();
         assert!(bad.config().unwrap_err().contains("direct-70"));
+    }
+
+    #[test]
+    fn unreachable_topology_shapes_are_rejected_with_the_max() {
+        // switch1 × radix 2 on 16 root ports reaches 32 devices; asking
+        // for more must fail naming the shape's ceiling, not build a
+        // fabric with stranded devices.
+        let bad = Cli::parse(&s(&[
+            "run", "--devices", "33", "--fabric", "switch1", "--switch-radix", "2",
+        ]))
+        .unwrap();
+        let e = bad.config().unwrap_err();
+        assert!(e.contains("at most 32"), "{e}");
+        assert!(e.contains("switch-radix"), "{e}");
+
+        // The same pool fits behind two switch levels or a wider radix.
+        let ok = Cli::parse(&s(&[
+            "run", "--devices", "33", "--fabric", "switch2", "--switch-radix", "2",
+        ]))
+        .unwrap();
+        assert_eq!(ok.config().unwrap().devices, 33);
+        let ok = Cli::parse(&s(&[
+            "run", "--devices", "64", "--fabric", "switch1", "--switch-radix", "4",
+        ]))
+        .unwrap();
+        assert_eq!(ok.config().unwrap().devices, 64);
     }
 
     #[test]

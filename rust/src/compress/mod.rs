@@ -8,13 +8,18 @@
 //!   by the `compression_explorer` example.
 //! * [`line`] — BDI-style line-level compression (Compresso, DMC's hot
 //!   tier).
+//! * [`size_cache`] — per-device memo cache in front of the content
+//!   oracle's size model (the request-path hot-path shortcut; results
+//!   are bit-identical with it on or off).
 //! * [`EngineTiming`] — the device engine's latency model (Table 1:
 //!   4 B/cycle compression, 16 B/cycle decompression).
 
 pub mod line;
 pub mod lz;
+pub mod size_cache;
 pub mod size_model;
 
+pub use size_cache::{SizeCacheShard, SizeCacheStats};
 pub use size_model::{AnalyticSizeModel, PageSizes, SizeModel};
 
 use crate::sim::{device_cycles, Ps};

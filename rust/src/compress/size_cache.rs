@@ -1,0 +1,205 @@
+//! Per-device memo cache in front of the content oracle's size model.
+//!
+//! Every scheme access that needs page sizes asks the run's
+//! [`ContentOracle`](crate::expander::ContentOracle); the workload
+//! oracle answers by re-deriving the page's content class (seeded RNG
+//! hashing with string labels) before hitting its class memo. At 16–64
+//! devices that per-call re-derivation is a measurable slice of the
+//! request hot path. A [`SizeCacheShard`] short-circuits it: one shard
+//! lives on each [`Device`](crate::topology::Device), keyed by the
+//! device-local OSPN, so lookups for already-sized pages never touch
+//! the oracle at all — and, under the parallel intra-run engine, never
+//! take the shared oracle lock (shards are per-worker state).
+//!
+//! Coherence: the only operation that changes a page's sizes is a host
+//! write ([`ContentOracle::on_write`]). The caching wrappers
+//! (`host::{CachedOracle, parallel::LazyCachedOracle}`) always forward
+//! writes to the oracle and refresh the entry with the returned sizes,
+//! so a shard entry is exactly the oracle's current answer for that
+//! page. Results are therefore bit-identical with the cache on or off
+//! (pinned by `tests/size_cache.rs`); the cache only removes redundant
+//! oracle work, surfaced as the `size_cache_hit_rate` bench lane.
+//!
+//! [`ContentOracle::on_write`]: crate::expander::ContentOracle::on_write
+
+use crate::sim::FxHashMap;
+
+use super::PageSizes;
+
+/// Hit/miss/invalidation counters for one shard (or a pool-wide merge).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SizeCacheStats {
+    /// Lookups answered from the shard (no oracle call, no lock).
+    pub hits: u64,
+    /// Lookups that fell through to the oracle and filled the entry.
+    pub misses: u64,
+    /// Entries refreshed because a write went through to the oracle.
+    pub invalidations: u64,
+}
+
+impl SizeCacheStats {
+    /// Fraction of size lookups served without touching the oracle.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &SizeCacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.invalidations += other.invalidations;
+    }
+}
+
+/// One device's size-model memo: local OSPN → current [`PageSizes`].
+#[derive(Clone, Debug)]
+pub struct SizeCacheShard {
+    map: FxHashMap<u64, PageSizes>,
+    enabled: bool,
+    pub stats: SizeCacheStats,
+}
+
+impl SizeCacheShard {
+    pub fn new(enabled: bool) -> Self {
+        Self {
+            map: FxHashMap::default(),
+            enabled,
+            stats: SizeCacheStats::default(),
+        }
+    }
+
+    /// A shard that never caches (wrappers degrade to pure routing).
+    pub fn disabled() -> Self {
+        Self::new(false)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Look up a page, counting the hit or miss.
+    #[inline]
+    pub fn get(&mut self, local: u64) -> Option<PageSizes> {
+        if !self.enabled {
+            return None;
+        }
+        match self.map.get(&local) {
+            Some(&s) => {
+                self.stats.hits += 1;
+                Some(s)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Record the oracle's answer after a miss.
+    #[inline]
+    pub fn fill(&mut self, local: u64, sizes: PageSizes) {
+        if self.enabled {
+            self.map.insert(local, sizes);
+        }
+    }
+
+    /// A write went through to the oracle: replace the entry with the
+    /// post-write sizes (counted as an invalidation).
+    #[inline]
+    pub fn refresh(&mut self, local: u64, sizes: PageSizes) {
+        if self.enabled {
+            self.stats.invalidations += 1;
+            self.map.insert(local, sizes);
+        }
+    }
+
+    /// Pre-seed an entry outside the measured path (pool population),
+    /// without touching the lookup counters.
+    pub fn seed(&mut self, local: u64, sizes: PageSizes) {
+        if self.enabled {
+            self.map.insert(local, sizes);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sz(page: u32) -> PageSizes {
+        PageSizes {
+            blocks: [page / 4; 4],
+            page,
+        }
+    }
+
+    #[test]
+    fn hits_misses_and_refreshes_are_counted() {
+        let mut c = SizeCacheShard::new(true);
+        assert_eq!(c.get(7), None);
+        c.fill(7, sz(1000));
+        assert_eq!(c.get(7), Some(sz(1000)));
+        c.refresh(7, sz(2000));
+        assert_eq!(c.get(7), Some(sz(2000)));
+        assert_eq!(c.stats.hits, 2);
+        assert_eq!(c.stats.misses, 1);
+        assert_eq!(c.stats.invalidations, 1);
+        assert!((c.stats.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn seeding_populates_without_counting_lookups() {
+        let mut c = SizeCacheShard::new(true);
+        c.seed(3, sz(500));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.stats, SizeCacheStats::default());
+        assert_eq!(c.get(3), Some(sz(500)));
+    }
+
+    #[test]
+    fn disabled_shard_stores_and_serves_nothing() {
+        let mut c = SizeCacheShard::disabled();
+        c.seed(1, sz(10));
+        c.fill(2, sz(20));
+        c.refresh(3, sz(30));
+        assert!(c.is_empty());
+        assert_eq!(c.get(1), None);
+        assert_eq!(c.get(2), None);
+        // A disabled shard counts nothing: the wrappers that consult it
+        // are bypassed entirely on the disabled path.
+        assert_eq!(c.stats.hits, 0);
+        assert_eq!(c.stats.invalidations, 0);
+    }
+
+    #[test]
+    fn merged_stats_sum_across_shards() {
+        let mut a = SizeCacheStats {
+            hits: 3,
+            misses: 1,
+            invalidations: 2,
+        };
+        let b = SizeCacheStats {
+            hits: 1,
+            misses: 3,
+            invalidations: 0,
+        };
+        a.merge(&b);
+        assert_eq!(a.hits, 4);
+        assert_eq!(a.misses, 4);
+        assert_eq!(a.invalidations, 2);
+        assert!((a.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(SizeCacheStats::default().hit_rate(), 0.0);
+    }
+}

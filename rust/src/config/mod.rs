@@ -8,7 +8,7 @@ use std::fmt;
 use std::fs;
 use std::path::Path;
 
-use crate::cxl::fabric::{FabricKind, FabricProfile, DEFAULT_SWITCH_RADIX};
+use crate::cxl::fabric::{Fabric, FabricKind, FabricProfile, DEFAULT_SWITCH_RADIX};
 use crate::cxl::CxlConfig;
 use crate::mem::DramTiming;
 use crate::telemetry::SampleUnit;
@@ -214,6 +214,13 @@ pub struct SimConfig {
     pub backend: SizeBackendKind,
     /// HLO artifact path for the PJRT backend.
     pub artifact: String,
+    /// Per-device memo cache in front of the size model (on by
+    /// default): scheme accesses for already-sized pages skip the
+    /// oracle's content-class re-derivation — and, under the parallel
+    /// engine, the shared oracle lock. Results are bit-identical with
+    /// it on or off (pinned by `tests/size_cache.rs`); the knob exists
+    /// for A/B perf comparison and as a big red switch.
+    pub size_cache: bool,
     /// Compression latency for a 1 KB block, device cycles (Table 1: 256).
     pub comp_cycles_per_kb: u64,
     /// Decompression latency for a 1 KB block, device cycles (Table 1: 64).
@@ -298,6 +305,7 @@ impl Default for SimConfig {
             unlimited_internal_bw: false,
             backend: SizeBackendKind::default(),
             artifact: crate::runtime::DEFAULT_ARTIFACT.to_string(),
+            size_cache: true,
             comp_cycles_per_kb: 256,
             decomp_cycles_per_kb: 64,
             meta_cache_bytes: 96 * 1024,
@@ -413,6 +421,7 @@ impl SimConfig {
                     .ok_or_else(|| format!("unknown backend {value:?}"))?
             }
             "artifact" => self.artifact = value.to_string(),
+            "size_cache" => self.size_cache = p(value, key)?,
             "comp_cycles" => self.comp_cycles_per_kb = p(value, key)?,
             "decomp_cycles" => self.decomp_cycles_per_kb = p(value, key)?,
             "meta_cache_kb" => self.meta_cache_bytes = p::<usize>(value, key)? * 1024,
@@ -459,6 +468,16 @@ impl SimConfig {
             _ => return Err(format!("unknown config key {key:?}")),
         }
         Ok(())
+    }
+
+    /// Cross-field validation the per-key `set` cannot do: the fabric
+    /// shape must be able to reach every configured device (each shape
+    /// has a hard device ceiling given the host's root-port budget —
+    /// see [`Fabric::validate_config`]). The CLI calls this after all
+    /// overrides are applied; `DevicePool::build_for` panics with the
+    /// same message as a backstop.
+    pub fn validate_topology(&self) -> Result<(), String> {
+        Fabric::validate_config(self.fabric, self.switch_radix, self.devices)
     }
 
     /// Load overrides from an INI-subset file: `key = value` lines,
@@ -522,6 +541,7 @@ impl SimConfig {
         );
         put("backend", self.backend.to_string());
         put("artifact", self.artifact.clone());
+        put("size_cache", self.size_cache.to_string());
         put("comp_cycles", self.comp_cycles_per_kb.to_string());
         put("decomp_cycles", self.decomp_cycles_per_kb.to_string());
         put("meta_cache_bytes", self.meta_cache_bytes.to_string());
@@ -651,6 +671,33 @@ mod tests {
         assert_eq!(d["fabric"], "switch1");
         assert_eq!(d["switch_radix"], "8");
         assert_eq!(d["fabric_profile"], "");
+    }
+
+    #[test]
+    fn size_cache_key_sets_and_dumps() {
+        let mut c = SimConfig::default();
+        assert!(c.size_cache, "size cache is on by default");
+        c.set("size_cache", "false").unwrap();
+        assert!(!c.size_cache);
+        assert!(c.set("size_cache", "maybe").is_err());
+        assert_eq!(c.dump()["size_cache"], "false");
+    }
+
+    #[test]
+    fn topology_validation_rejects_unreachable_devices() {
+        let mut c = SimConfig::default();
+        assert!(c.validate_topology().is_ok(), "defaults must validate");
+        c.set("fabric", "switch1").unwrap();
+        c.set("switch_radix", "2").unwrap();
+        c.set("devices", "33").unwrap();
+        let e = c.validate_topology().unwrap_err();
+        assert!(e.contains("at most 32"), "{e}");
+        assert!(e.contains("switch-radix"), "{e}");
+        c.set("switch_radix", "4").unwrap();
+        assert!(c.validate_topology().is_ok());
+        c.set("fabric", "switch2").unwrap();
+        c.set("switch_radix", "2").unwrap();
+        assert!(c.validate_topology().is_ok(), "two levels reach 33 devices");
     }
 
     #[test]

@@ -17,6 +17,17 @@
 //! keeping every shared port's acquire order identical to the
 //! sequential loop (see `host::parallel`).
 //!
+//! Hot-path shape: a request's whole flit train reserves each hop port
+//! in one [`Bandwidth::acquire_run`] call, and each device's root→leaf
+//! hop path is a pre-flattened index run (no per-request nested-Vec
+//! walk). Multi-level walks model **per-port back-pressure**: a train
+//! may not occupy a port while the next same-direction port on its path
+//! is backlogged more than [`PORT_QUEUE_FLITS`] flit times — the
+//! upstream stage holds it, so congestion propagates backwards through
+//! the switch levels instead of queueing unboundedly inside the fabric.
+//! Direct and single-level walks have no "next hop", so star and
+//! `switch1` timings are bit-identical to the unclamped model.
+//!
 //! Latency profiles follow published loaded-latency measurements
 //! (*Demystifying CXL Memory with Genuine CXL-Ready Systems and
 //! Devices*, arXiv:2303.15375; *An Introduction to the Compute Express
@@ -31,6 +42,20 @@ use super::{flit_ps, LINK_EFFICIENCY, PCIE5_X8_RAW_GBPS};
 
 /// Default `switch_radix` (devices or switches per uplink port).
 pub const DEFAULT_SWITCH_RADIX: usize = 4;
+
+/// Host root-port budget for switched fabrics: a shape whose first
+/// switch level needs more than this many root ports is rejected by
+/// [`Fabric::validate_config`] (the devices past the budget would be
+/// unreachable on a real host). The direct star keeps its own
+/// pool-wide cap ([`crate::topology::MAX_DEVICES`]).
+pub const MAX_ROOT_PORTS: usize = 16;
+
+/// Ingress-queue depth of a switch port, in flit times. A flit train
+/// may not start occupying a port while the next same-direction port on
+/// its path is backlogged beyond this window; the train waits upstream
+/// (back-pressure). 32 flits ≈ 2 KiB per direction per port, in line
+/// with shallow CXL switch buffering.
+pub const PORT_QUEUE_FLITS: u64 = 32;
 
 /// Fabric topology shape between the host and the device links.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -161,12 +186,12 @@ impl FabricHop {
 
     #[inline]
     fn ingress(&mut self, now: Ps, flits: u64) -> Ps {
-        self.down.acquire(now, flits * self.flit_ps) + self.latency_ps
+        self.down.acquire_run(now, flits, self.flit_ps) + self.latency_ps
     }
 
     #[inline]
     fn egress(&mut self, now: Ps, flits: u64) -> Ps {
-        self.up.acquire(now, flits * self.flit_ps) + self.latency_ps
+        self.up.acquire_run(now, flits, self.flit_ps) + self.latency_ps
     }
 }
 
@@ -183,9 +208,15 @@ pub struct FabricGroup {
     /// hops within a group in order), for assembling pool-wide lanes.
     pub port_base: usize,
     pub hops: Vec<FabricHop>,
-    /// Hop indices from the root port down to each owned device
-    /// (indexed by `dev - first_dev`). Empty path = direct attach.
-    paths: Vec<Vec<usize>>,
+    /// All root→leaf hop paths, flattened: device `first_dev + i` owns
+    /// `path_flat[path_off[i]..path_off[i + 1]]`. One contiguous run
+    /// per device keeps the per-request walk a pointer-bump instead of
+    /// a nested-Vec chase.
+    path_flat: Vec<u32>,
+    path_off: Vec<u32>,
+    /// Back-pressure admission window: [`PORT_QUEUE_FLITS`] ×
+    /// the profile's flit time, ps.
+    queue_window_ps: Ps,
 }
 
 impl FabricGroup {
@@ -193,31 +224,57 @@ impl FabricGroup {
         dev >= self.first_dev && dev < self.first_dev + self.n_devs
     }
 
+    /// Hop indices from the root port down to `dev`'s leaf link.
+    /// Empty path = direct attach.
+    pub fn path(&self, dev: usize) -> &[u32] {
+        let i = dev - self.first_dev;
+        &self.path_flat[self.path_off[i] as usize..self.path_off[i + 1] as usize]
+    }
+
     /// Charge a host→device crossing through every hop on `dev`'s path.
+    ///
+    /// Before a train occupies hop `w`, it is held upstream until the
+    /// *next* down-direction port on the path has drained to within the
+    /// queue window — so a backlogged L2 port pushes delay back into
+    /// the L1 stage rather than queueing unboundedly. Zero- and
+    /// one-hop paths have no next hop and are never clamped.
     pub fn ingress(&mut self, dev: usize, now: Ps, flits: u64) -> Ps {
+        let i = dev - self.first_dev;
+        let (lo, hi) = (self.path_off[i] as usize, self.path_off[i + 1] as usize);
         let mut t = now;
-        for i in 0..self.paths[dev - self.first_dev].len() {
-            let h = self.paths[dev - self.first_dev][i];
-            t = self.hops[h].ingress(t, flits);
+        for w in lo..hi {
+            if w + 1 < hi {
+                let nh = self.path_flat[w + 1] as usize;
+                let backlog = self.hops[nh].down.next_free();
+                t = t.max(backlog.saturating_sub(self.queue_window_ps));
+            }
+            t = self.hops[self.path_flat[w] as usize].ingress(t, flits);
         }
         t
     }
 
-    /// Charge a device→host crossing (leaf→root hop order).
+    /// Charge a device→host crossing (leaf→root hop order), with the
+    /// same back-pressure rule against the next up-direction port.
     pub fn egress(&mut self, dev: usize, now: Ps, flits: u64) -> Ps {
+        let i = dev - self.first_dev;
+        let (lo, hi) = (self.path_off[i] as usize, self.path_off[i + 1] as usize);
         let mut t = now;
-        for i in (0..self.paths[dev - self.first_dev].len()).rev() {
-            let h = self.paths[dev - self.first_dev][i];
-            t = self.hops[h].egress(t, flits);
+        for w in (lo..hi).rev() {
+            if w > lo {
+                let nh = self.path_flat[w - 1] as usize;
+                let backlog = self.hops[nh].up.next_free();
+                t = t.max(backlog.saturating_sub(self.queue_window_ps));
+            }
+            t = self.hops[self.path_flat[w] as usize].egress(t, flits);
         }
         t
     }
 
     /// Sum of one-way hop latencies on `dev`'s path, ps.
     pub fn path_latency_ps(&self, dev: usize) -> Ps {
-        self.paths[dev - self.first_dev]
+        self.path(dev)
             .iter()
-            .map(|&h| self.hops[h].latency_ps)
+            .map(|&h| self.hops[h as usize].latency_ps)
             .sum()
     }
 
@@ -267,6 +324,49 @@ impl Fabric {
         )
     }
 
+    /// Largest pool a fabric shape can reach: every switched shape is
+    /// bounded by [`MAX_ROOT_PORTS`] first-level ports × the devices
+    /// each can fan out to, and everything by the pool-wide cap.
+    pub fn max_devices(kind: FabricKind, radix: usize) -> usize {
+        let pool_cap = crate::topology::MAX_DEVICES;
+        match kind {
+            FabricKind::Direct => pool_cap,
+            FabricKind::Switch1 => pool_cap.min(radix.saturating_mul(MAX_ROOT_PORTS)),
+            FabricKind::Switch2 => {
+                pool_cap.min(radix.saturating_mul(radix).saturating_mul(MAX_ROOT_PORTS))
+            }
+        }
+    }
+
+    /// Reject `devices`/`radix` combinations the fabric shape cannot
+    /// actually wire up — devices past the root-port budget would be
+    /// unreachable. The error names the shape's maximum so the fix
+    /// (raise the radix or add a switch level) is obvious.
+    pub fn validate_config(
+        kind: FabricKind,
+        radix: usize,
+        devices: usize,
+    ) -> Result<(), String> {
+        if devices == 0 {
+            return Err("devices must be >= 1".to_string());
+        }
+        if kind != FabricKind::Direct && radix < 2 {
+            return Err(format!(
+                "fabric {kind} needs switch_radix >= 2, got {radix}"
+            ));
+        }
+        let max = Self::max_devices(kind, radix);
+        if devices > max {
+            return Err(format!(
+                "{devices} devices do not fit a {kind} fabric at switch_radix \
+                 {radix}: {MAX_ROOT_PORTS} host root ports reach at most {max} \
+                 devices in this shape — raise --switch-radix or add a switch \
+                 level"
+            ));
+        }
+        Ok(())
+    }
+
     pub fn build(
         kind: FabricKind,
         radix: usize,
@@ -275,6 +375,7 @@ impl Fabric {
     ) -> Fabric {
         assert!(devices > 0, "fabric over an empty pool");
         assert!(radix >= 2 || kind == FabricKind::Direct, "switch radix must be >= 2");
+        let queue_window_ps = PORT_QUEUE_FLITS * flit_ps(profile.port_gbps);
         let mut groups = Vec::new();
         let mut port_base = 0;
         match kind {
@@ -286,7 +387,9 @@ impl Fabric {
                         n_devs: 1,
                         port_base,
                         hops: Vec::new(),
-                        paths: vec![Vec::new()],
+                        path_flat: Vec::new(),
+                        path_off: vec![0, 0],
+                        queue_window_ps,
                     });
                 }
             }
@@ -301,7 +404,9 @@ impl Fabric {
                         n_devs: n,
                         port_base,
                         hops: vec![FabricHop::new(format!("sw{s}"), profile)],
-                        paths: vec![vec![0]; n],
+                        path_flat: vec![0; n],
+                        path_off: (0..=n as u32).collect(),
+                        queue_window_ps,
                     });
                     port_base += 1;
                     first += n;
@@ -322,14 +427,20 @@ impl Fabric {
                     for j in 0..l2_here {
                         hops.push(FabricHop::new(format!("l2s{}", g * radix + j), profile));
                     }
-                    let paths = (0..n).map(|k| vec![0, 1 + k / radix]).collect();
+                    let mut path_flat = Vec::with_capacity(2 * n);
+                    for k in 0..n {
+                        path_flat.push(0);
+                        path_flat.push(1 + (k / radix) as u32);
+                    }
                     let nhops = hops.len();
                     groups.push(FabricGroup {
                         first_dev: first,
                         n_devs: n,
                         port_base,
                         hops,
-                        paths,
+                        path_flat,
+                        path_off: (0..=n as u32).map(|k| 2 * k).collect(),
+                        queue_window_ps,
                     });
                     port_base += nhops;
                     first += n;
@@ -433,9 +544,9 @@ mod tests {
                         for d in g.first_dev..g.first_dev + g.n_devs {
                             owners[d] += 1;
                             assert_eq!(f.group_of(d), gi);
-                            let path = &g.paths[d - g.first_dev];
+                            let path = g.path(d);
                             assert_eq!(path.len(), kind.levels());
-                            assert!(path.iter().all(|&h| h < g.hops.len()));
+                            assert!(path.iter().all(|&h| (h as usize) < g.hops.len()));
                         }
                     }
                     assert!(
@@ -515,6 +626,66 @@ mod tests {
         );
         assert_eq!(f.group_of(3), 0);
         assert_eq!(f.group_of(4), 1);
+    }
+
+    #[test]
+    fn back_pressure_holds_a_train_upstream_of_a_congested_hop() {
+        let profile = p(FabricKind::Switch2);
+        let fl = flit_ps(profile.port_gbps);
+        let hop = profile.hop_ns * PS_PER_NS;
+        let window = PORT_QUEUE_FLITS * fl;
+        let mut f = Fabric::build(FabricKind::Switch2, 2, profile, 4);
+
+        // Congest the shared L1 uplink far beyond the queue window.
+        let backlog = 100 * window;
+        f.groups[0].hops[0].up.acquire(0, backlog);
+
+        // A device reply is held at the L2 stage until the L1 up-queue
+        // drains to the window depth, *then* occupies the L2 port.
+        let done = f.egress(0, 0, 1);
+        assert_eq!(
+            f.groups[0].hops[1].up.next_free(),
+            backlog - window + fl,
+            "L2 port must be occupied only once L1 is within the window"
+        );
+        // The L2 hop latency is absorbed by the L1 queue wait: the
+        // reply still serializes behind the whole L1 backlog.
+        assert_eq!(done, backlog + fl + hop);
+
+        // One-hop walks have no next hop: switch1 timing is identical
+        // with and without the clamp, congested or not.
+        let p1 = p(FabricKind::Switch1);
+        let fl1 = flit_ps(p1.port_gbps);
+        let mut s1 = Fabric::build(FabricKind::Switch1, 4, p1, 4);
+        s1.groups[0].hops[0].up.acquire(0, backlog);
+        assert_eq!(
+            s1.egress(0, 0, 1),
+            backlog + fl1 + p1.hop_ns * PS_PER_NS
+        );
+    }
+
+    #[test]
+    fn validation_names_the_max_devices_for_the_shape() {
+        use crate::topology::MAX_DEVICES;
+
+        assert_eq!(Fabric::max_devices(FabricKind::Direct, 4), MAX_DEVICES);
+        assert_eq!(Fabric::max_devices(FabricKind::Switch1, 2), 32);
+        assert_eq!(Fabric::max_devices(FabricKind::Switch1, 4), MAX_DEVICES);
+        assert_eq!(Fabric::max_devices(FabricKind::Switch2, 2), MAX_DEVICES);
+
+        assert!(Fabric::validate_config(FabricKind::Direct, 4, 64).is_ok());
+        assert!(Fabric::validate_config(FabricKind::Switch1, 4, 64).is_ok());
+        assert!(Fabric::validate_config(FabricKind::Switch2, 2, 33).is_ok());
+
+        // radix-2 switch1 tops out at 32 devices on 16 root ports.
+        let err = Fabric::validate_config(FabricKind::Switch1, 2, 33).unwrap_err();
+        assert!(err.contains("at most 32"), "{err}");
+        // radix-3 switch1 tops out at 48.
+        let err = Fabric::validate_config(FabricKind::Switch1, 3, 64).unwrap_err();
+        assert!(err.contains("at most 48"), "{err}");
+
+        assert!(Fabric::validate_config(FabricKind::Direct, 4, 0).is_err());
+        assert!(Fabric::validate_config(FabricKind::Switch1, 1, 8).is_err());
     }
 
     #[test]

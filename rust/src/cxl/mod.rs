@@ -7,7 +7,7 @@
 
 pub mod fabric;
 
-use crate::sim::{Bandwidth, Ps, Resource, PS_PER_NS};
+use crate::sim::{Bandwidth, Ps, PS_PER_NS};
 
 /// PCIe 5.0 ×8 raw per-direction bandwidth, GB/s (Table 1).
 pub const PCIE5_X8_RAW_GBPS: f64 = 32.0;
@@ -72,17 +72,18 @@ impl CxlLink {
         self.cfg.round_trip_ns * PS_PER_NS / 2
     }
 
-    /// Host-side request reaches the device controller.
+    /// Host-side request reaches the device controller. The request's
+    /// whole flit train is reserved in one call ([`Bandwidth::acquire_run`]).
     #[inline]
     pub fn ingress(&mut self, now: Ps, flits: u64) -> Ps {
-        let ser = self.down.acquire(now, flits * self.flit_ps);
+        let ser = self.down.acquire_run(now, flits, self.flit_ps);
         ser + self.one_way_ps()
     }
 
     /// Device response reaches the host.
     #[inline]
     pub fn egress(&mut self, now: Ps, flits: u64) -> Ps {
-        let ser = self.up.acquire(now, flits * self.flit_ps);
+        let ser = self.up.acquire_run(now, flits, self.flit_ps);
         ser + self.one_way_ps()
     }
 

@@ -41,12 +41,13 @@
 
 pub mod mshr;
 pub mod parallel;
+pub mod wheel;
 
 pub use mshr::{PreRouted, ReqQueue, REQUEST_QUANTUM};
 
-use mshr::MshrHeap;
+use wheel::TimingWheel;
 
-use crate::compress::PageSizes;
+use crate::compress::{PageSizes, SizeCacheShard};
 use crate::config::SimConfig;
 use crate::cxl::fabric::{Fabric, FabricKind};
 use crate::expander::{ContentOracle, SchemeSnapshot};
@@ -59,7 +60,7 @@ use crate::topology::{DevicePool, Interleave};
 use crate::workload::{Mix, RequestSource, RunPlan, Trace, WorkloadSpec};
 
 /// One simulated core's issue state. Outstanding misses live in the
-/// run-wide [`MshrHeap`] slab (one fixed-capacity heap per core), not
+/// run-wide [`TimingWheel`] (one fixed-capacity wheel per core), not
 /// here — the hot path allocates nothing in steady state.
 struct Core {
     /// Local time: when the core can issue its next request.
@@ -121,8 +122,8 @@ impl Core {
 }
 
 /// Pop every completed miss (`done <= t`) off core `ci`'s outstanding
-/// heap, releasing each one's device-lane occupancy slot.
-fn drain_completed(mshrs: &mut MshrHeap, ci: usize, t: Ps, lanes: &mut [Lane]) {
+/// wheel, releasing each one's device-lane occupancy slot.
+fn drain_completed(mshrs: &mut TimingWheel, ci: usize, t: Ps, lanes: &mut [Lane]) {
     while let Some((done, pdev)) = mshrs.peek(ci) {
         if done <= t {
             mshrs.pop(ci);
@@ -133,14 +134,14 @@ fn drain_completed(mshrs: &mut MshrHeap, ci: usize, t: Ps, lanes: &mut [Lane]) {
     }
 }
 
-/// MSHR-full stall: retire core `ci`'s oldest outstanding miss (heap
+/// MSHR-full stall: retire core `ci`'s oldest outstanding miss (wheel
 /// minimum by `(done, device)`), releasing its lane slot and returning
 /// the completion time the core must wait for. The caller advances the
 /// core's clock and then re-drains: other misses may have completed
-/// during the stall, and leaving them in the heap would inflate the
+/// during the stall, and leaving them in the wheel would inflate the
 /// per-device occupancy (`peak_outstanding`/`win_peak`) observed by
 /// every core until this core's next turn.
-fn mshr_stall(mshrs: &mut MshrHeap, ci: usize, lanes: &mut [Lane]) -> Option<(Ps, u32)> {
+fn mshr_stall(mshrs: &mut TimingWheel, ci: usize, lanes: &mut [Lane]) -> Option<(Ps, u32)> {
     let (done, pdev) = mshrs.pop(ci)?;
     lanes[pdev as usize].release();
     Some((done, pdev))
@@ -473,6 +474,43 @@ impl ContentOracle for RoutedOracle<'_> {
     }
 }
 
+/// [`RoutedOracle`] plus the device's size-cache shard: reads for
+/// already-sized pages are answered from the shard without touching the
+/// oracle; writes always go through (content may change) and refresh
+/// the entry with the returned sizes, so the shard is always exactly
+/// the oracle's current answer. Identity routing when `devices == 1`
+/// (`map.global(0, local) == local`), so one wrapper covers every pool
+/// width.
+struct CachedOracle<'a> {
+    inner: &'a mut dyn ContentOracle,
+    cache: &'a mut SizeCacheShard,
+    map: Interleave,
+    dev: usize,
+}
+
+impl ContentOracle for CachedOracle<'_> {
+    fn sizes(&mut self, local: u64) -> PageSizes {
+        if let Some(s) = self.cache.get(local) {
+            return s;
+        }
+        let s = self.inner.sizes(self.map.global(self.dev, local));
+        self.cache.fill(local, s);
+        s
+    }
+
+    fn on_write(&mut self, local: u64) -> PageSizes {
+        let s = self.inner.on_write(self.map.global(self.dev, local));
+        self.cache.refresh(local, s);
+        s
+    }
+
+    fn is_zero_fill(&mut self, local: u64) -> bool {
+        // Same answer as the trait default the oracles use, but served
+        // from the shard on a hit.
+        self.sizes(local).page == 0
+    }
+}
+
 /// Drive a [`DevicePool`] with the planned request streams until every
 /// core retires `cfg.instructions` (after `cfg.warmup_instructions` of
 /// warmup).
@@ -481,10 +519,12 @@ pub struct HostSim<'a> {
     plan: RunPlan,
     interleave: Interleave,
     cores: Vec<Core>,
-    /// Every core's outstanding-miss heap, one slab for the whole run
-    /// (see [`mshr`]). Stays empty under the parallel engine, which
-    /// tracks outstanding misses scheduler-side in its own arena.
-    mshrs: MshrHeap,
+    /// Every core's outstanding-miss completion index, keyed
+    /// `(done, device)` with min-heap pop order and O(1)-amortized
+    /// drains (see [`wheel`]). Stays empty under the parallel engine,
+    /// which tracks outstanding misses scheduler-side in its own
+    /// wheels.
+    mshrs: TimingWheel,
     lanes: Vec<Lane>,
     /// Telemetry collector (`cfg.sample_every > 0`). When `None`, the
     /// request loop's only extra work is one `is_some` branch — no
@@ -586,7 +626,7 @@ impl<'a> HostSim<'a> {
                 round_ps: 0,
             })
             .collect();
-        let mshrs = MshrHeap::new(cores.len(), cfg.mshrs_per_core);
+        let mshrs = TimingWheel::new(cores.len(), cfg.mshrs_per_core);
         let interleave = Interleave::new(cfg.interleave, cfg.devices, plan.total_pages);
         let sampler =
             (cfg.sample_every > 0).then(|| Sampler::new(cfg.sample_unit, cfg.sample_every));
@@ -643,6 +683,10 @@ impl<'a> HostSim<'a> {
                 let g = base + p;
                 let (dev, local) = self.interleave.route(g);
                 let sizes = oracle.sizes(g);
+                // Pre-seed the device's size cache with the same answer
+                // the populate path just computed: the measured phase
+                // starts warm for resident data.
+                pool.devices[dev].size_cache.seed(local, sizes);
                 pool.devices[dev].scheme.populate(local, sizes);
             }
         }
@@ -1070,15 +1114,25 @@ impl<'a> HostSim<'a> {
                 let s = device.scheme.stats();
                 [s.promotions, s.demotions, s.clean_demotions, s.promoted_hits]
             });
-            let ready = if map.devices() == 1 {
+            let ready = if device.size_cache.enabled() {
+                let mut cached = CachedOracle {
+                    // Explicit reborrow: the wrapper lives one request.
+                    inner: &mut *oracle,
+                    cache: &mut device.size_cache,
+                    map,
+                    dev,
+                };
+                device
+                    .scheme
+                    .access(at_device, tr.local, tr.line, tr.write, &mut cached)
+            } else if map.devices() == 1 {
                 // Identity routing: skip the translation wrapper on the
-                // default single-device hot path.
+                // single-device uncached path.
                 device
                     .scheme
                     .access(at_device, tr.local, tr.line, tr.write, oracle)
             } else {
                 let mut routed = RoutedOracle {
-                    // Explicit reborrow: the wrapper lives one request.
                     inner: &mut *oracle,
                     map,
                     dev,
@@ -1148,8 +1202,12 @@ impl<'a> HostSim<'a> {
             req_seq += 1;
         }
         // Let every core drain (reply latency counts toward elapsed).
+        // `max_pushed` equals the live maximum here: every popped entry
+        // had `done <= core.t` by the time it was popped, and `core.t`
+        // is monotone, so the max over all pushes is the max over the
+        // survivors once clamped by `core.t`.
         for (ci, core) in self.cores.iter_mut().enumerate() {
-            if let Some(last) = self.mshrs.slice(ci).iter().map(|&(done, _)| done).max() {
+            if let Some(last) = self.mshrs.max_pushed(ci) {
                 core.t = core.t.max(last);
             }
             self.mshrs.clear(ci);
@@ -1393,7 +1451,7 @@ mod tests {
     #[test]
     fn stall_re_drain_releases_completed_misses() {
         let mut lanes = vec![Lane::default(), Lane::default()];
-        let mut mshrs = MshrHeap::new(1, 4);
+        let mut mshrs = TimingWheel::new(1, 4);
         for (done, dev) in [(60u64, 0u32), (60, 1), (90, 0)] {
             mshrs.push(0, done, dev);
             lanes[dev as usize].push_outstanding();

@@ -1,18 +1,23 @@
 //! Allocation-free hot-path storage for the scheduler core.
 //!
-//! Three pieces, all slab-backed and sized once per run:
+//! Slab-backed pieces, all sized once per run:
 //!
-//! * [`MshrHeap`] — every core's outstanding-miss min-heap, keyed by
+//! * [`MshrHeap`] — per-core outstanding-miss min-heaps, keyed by
 //!   `(done, device)` exactly like the `BinaryHeap<Reverse<(Ps, u32)>>`
-//!   it replaced. One slab of `cores × mshrs_per_core` slots; push/pop
-//!   are classic sift-up/sift-down on the core's sub-slice, so the
-//!   sequential engine's drain/stall order is bit-identical to the heap
-//!   it replaced (pinned by the randomized model test below) with zero
-//!   steady-state allocations.
-//! * [`SlotArena`] — the same slab shape for the parallel scheduler's
-//!   `(done, device)` merge, which needs unordered slots (its removals
-//!   are min-scans and threshold sweeps over the whole set, so storage
-//!   order is irrelevant to determinism).
+//!   they replaced. One slab of `cores × mshrs_per_core` slots;
+//!   push/pop are classic sift-up/sift-down on the core's sub-slice
+//!   (pinned by the randomized model test below). The engines now
+//!   drain through the O(1)-amortized [`TimingWheel`](super::wheel);
+//!   the heap stays as the exact reference model the wheel is pinned
+//!   against.
+//! * [`SlotArena`] — per-slot unordered fixed-capacity lists for
+//!   whole-set scans (removals by min-scan or threshold sweep, where
+//!   storage order is irrelevant to determinism).
+//! * [`FreeSlab`] — per-slot fixed-capacity slabs with *stable*
+//!   indices (a free-list stack per slot), for payloads referenced by
+//!   index from another structure — the parallel merge keeps its
+//!   `(req_id, device)` records here while its pending wheel carries
+//!   only the `u32` slab index.
 //! * [`ReqQueue`] — a per-core quantum of upcoming requests with the
 //!   interleave translation, fabric-group (hop-path) resolution and
 //!   tenant attribution precomputed in one batched pass
@@ -282,6 +287,77 @@ impl<T: Copy + Default> SlotArena<T> {
     }
 }
 
+/// Per-slot fixed-capacity slabs with stable indices: `alloc` hands out
+/// a slot-local index that stays valid until `free`, so other
+/// structures can hold `u32` references into the slab. A per-slot
+/// free-list stack makes alloc/free O(1) with zero steady-state
+/// allocations; the LIFO reuse order is deterministic (driven entirely
+/// by the caller's own deterministic alloc/free sequence).
+pub struct FreeSlab<T> {
+    cap: usize,
+    slab: Box<[T]>,
+    /// Per-slot free stacks over one shared slab.
+    free: Box<[u32]>,
+    free_lens: Box<[u32]>,
+}
+
+impl<T: Copy + Default> FreeSlab<T> {
+    pub fn new(slots: usize, cap: usize) -> Self {
+        let cap = cap.max(1);
+        let mut free = vec![0u32; slots * cap].into_boxed_slice();
+        for s in 0..slots {
+            // Stack top pops index 0 first.
+            for k in 0..cap {
+                free[s * cap + k] = (cap - 1 - k) as u32;
+            }
+        }
+        Self {
+            cap,
+            slab: vec![T::default(); slots * cap].into_boxed_slice(),
+            free,
+            free_lens: vec![cap as u32; slots].into_boxed_slice(),
+        }
+    }
+
+    /// Live entries in `slot`.
+    #[inline]
+    pub fn in_use(&self, slot: usize) -> usize {
+        self.cap - self.free_lens[slot] as usize
+    }
+
+    /// Store `v`, returning its stable slot-local index.
+    pub fn alloc(&mut self, slot: usize, v: T) -> u32 {
+        let fl = self.free_lens[slot] as usize;
+        assert!(fl > 0, "free slab overflow (slot {slot})");
+        let k = self.free[slot * self.cap + fl - 1];
+        self.free_lens[slot] -= 1;
+        self.slab[slot * self.cap + k as usize] = v;
+        k
+    }
+
+    #[inline]
+    pub fn get(&self, slot: usize, k: u32) -> T {
+        debug_assert!((k as usize) < self.cap);
+        self.slab[slot * self.cap + k as usize]
+    }
+
+    /// Release index `k` for reuse.
+    pub fn free(&mut self, slot: usize, k: u32) {
+        let fl = self.free_lens[slot] as usize;
+        debug_assert!(fl < self.cap, "free on a fully-free slab");
+        self.free[slot * self.cap + fl] = k;
+        self.free_lens[slot] += 1;
+    }
+
+    /// Reset `slot` to fully free (entries need no teardown: `T: Copy`).
+    pub fn clear(&mut self, slot: usize) {
+        for k in 0..self.cap {
+            self.free[slot * self.cap + k] = (self.cap - 1 - k) as u32;
+        }
+        self.free_lens[slot] = self.cap as u32;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -388,6 +464,42 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn free_slab_indices_stay_stable() {
+        let mut s: FreeSlab<(u64, u32)> = FreeSlab::new(2, 3);
+        let a = s.alloc(0, (10, 0));
+        let b = s.alloc(0, (20, 1));
+        let c = s.alloc(0, (30, 2));
+        assert_eq!((a, b, c), (0, 1, 2), "fresh slab hands out 0, 1, 2");
+        assert_eq!(s.in_use(0), 3);
+        assert_eq!(s.in_use(1), 0);
+        s.free(0, b);
+        // a and c keep their indices across the free.
+        assert_eq!(s.get(0, a), (10, 0));
+        assert_eq!(s.get(0, c), (30, 2));
+        // LIFO reuse: the freed index comes back first.
+        let d = s.alloc(0, (40, 3));
+        assert_eq!(d, b);
+        assert_eq!(s.get(0, d), (40, 3));
+        // Slots are independent.
+        let e = s.alloc(1, (99, 9));
+        assert_eq!(e, 0);
+        assert_eq!(s.get(1, e), (99, 9));
+        s.clear(0);
+        assert_eq!(s.in_use(0), 0);
+        assert_eq!(s.in_use(1), 1);
+        assert_eq!(s.alloc(0, (7, 7)), 0, "clear resets the free order");
+    }
+
+    #[test]
+    #[should_panic(expected = "free slab overflow")]
+    fn free_slab_overflow_panics() {
+        let mut s: FreeSlab<u64> = FreeSlab::new(1, 2);
+        s.alloc(0, 1);
+        s.alloc(0, 2);
+        s.alloc(0, 3);
     }
 
     #[test]

@@ -53,15 +53,17 @@
 //! [`Scheme::access_batch`]: crate::expander::Scheme::access_batch
 
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
+use crate::compress::{PageSizes, SizeCacheShard};
 use crate::expander::{BatchAccess, ContentOracle, SchemeSnapshot};
 use crate::sim::{FxHashMap, Ps};
 use crate::telemetry::events::{EventLog, InstantKind, ReqSpans, STAGES};
 use crate::topology::{DevicePool, Interleave, PoolShard};
 
-use super::mshr::SlotArena;
-use super::{record_scheme_instants, Core, HostSim, Lane, RoutedOracle};
+use super::mshr::FreeSlab;
+use super::wheel::TimingWheel;
+use super::{record_scheme_instants, Core, HostSim, Lane};
 
 /// Work sent to a device-shard worker over its FIFO channel.
 #[derive(Clone, Copy)]
@@ -111,17 +113,72 @@ enum Reply {
     },
 }
 
-/// One outstanding miss on the scheduler side. `lb` is the causal lower
-/// bound on `done` known at issue time; `done` is filled in when the
-/// worker's reply is consumed. `Copy + Default` so the per-core
-/// fixed-capacity [`SlotArena`] (the parallel `(done, device)` merge's
-/// slab, sized at `mshrs_per_core`) can hold it.
-#[derive(Clone, Copy, Default)]
-struct OutEntry {
-    req_id: u64,
-    dev: u32,
-    lb: Ps,
-    done: Option<Ps>,
+/// Scheduler-side outstanding misses, indexed for O(1)-amortized
+/// drains instead of the per-request whole-slab scans the old
+/// `SlotArena` merge paid at high device counts:
+///
+/// * `pend` — misses whose completion is not yet claimed, keyed by the
+///   causal lower bound `lb = t_issue + lookahead[dev]`; the payload is
+///   a [`FreeSlab`] index resolving to `(req_id, device)`. Popping
+///   `lb <= t` yields exactly the set the old merge resolved (every
+///   completion satisfies `done >= lb`). Ties pop in slab-index order,
+///   which is invisible: tied entries resolve in the same drain, and
+///   reply consumption commutes (histograms sum, the event log sorts
+///   its export).
+/// * `comp` — resolved-but-unretired misses keyed `(done, device)` —
+///   the sequential heap key, so threshold drains and MSHR-full
+///   minimum pops retire the identical entry sequence.
+///
+/// Per-core capacity is `pend + comp <= mshrs_per_core`, the same
+/// ledger bound as the sequential wheel.
+struct Outstanding {
+    pend: TimingWheel,
+    comp: TimingWheel,
+    slab: FreeSlab<(u64, u32)>,
+}
+
+impl Outstanding {
+    fn new(cores: usize, cap: usize) -> Self {
+        Outstanding {
+            pend: TimingWheel::new(cores, cap),
+            comp: TimingWheel::new(cores, cap),
+            slab: FreeSlab::new(cores, cap),
+        }
+    }
+
+    #[inline]
+    fn len(&self, ci: usize) -> usize {
+        self.pend.len(ci) + self.comp.len(ci)
+    }
+
+    /// Admit one unclaimed miss.
+    fn push(&mut self, ci: usize, lb: Ps, req_id: u64, dev: u32) {
+        let slot = self.slab.alloc(ci, (req_id, dev));
+        self.pend.push(ci, lb, slot);
+    }
+
+    /// Claim the completion of every pending miss whose lower bound
+    /// admits it could have finished by `t`, moving it to `comp`.
+    fn resolve_pending(
+        &mut self,
+        ci: usize,
+        bound: Option<Ps>,
+        merge: &mut Merge,
+        cores: &mut [Core],
+        lanes: &mut [Lane],
+        events: &mut Option<EventLog>,
+    ) {
+        while let Some((lb, slot)) = self.pend.peek(ci) {
+            if bound.is_some_and(|t| lb > t) {
+                break;
+            }
+            self.pend.pop(ci);
+            let (req_id, dev) = self.slab.get(ci, slot);
+            self.slab.free(ci, slot);
+            let done = merge.resolve(req_id, cores, lanes, events);
+            self.comp.push(ci, done, dev);
+        }
+    }
 }
 
 /// Issue-time facts needed when a reply arrives.
@@ -242,12 +299,13 @@ impl Merge {
 /// releasing its lane slot — the parallel analogue of
 /// [`super::drain_completed`]. Entries whose lower bound exceeds `t`
 /// cannot have completed, so their replies are left unconsumed (no
-/// wait); the rest are resolved first. Set-removal and heap-popping
-/// retire the same `(done, device)` multiset, so lane occupancy evolves
-/// identically (swap-remove order is invisible: every scan here and in
-/// the scheduler is whole-set).
+/// wait); the rest are resolved into `comp` first, then `comp` pops
+/// its `(done, device)` minima up to `t`. The retired multiset is
+/// exactly the old whole-slab sweep's (`done >= lb` always), and lane
+/// release order within a drain is invisible (release only moves a
+/// counter; every observer scans the whole set).
 fn drain(
-    out: &mut SlotArena<OutEntry>,
+    out: &mut Outstanding,
     ci: usize,
     t: Ps,
     merge: &mut Merge,
@@ -255,22 +313,13 @@ fn drain(
     lanes: &mut [Lane],
     events: &mut Option<EventLog>,
 ) {
-    for k in 0..out.len(ci) {
-        let e = out.get(ci, k);
-        if e.done.is_none() && e.lb <= t {
-            let done = merge.resolve(e.req_id, cores, lanes, events);
-            out.get_mut(ci, k).done = Some(done);
+    out.resolve_pending(ci, Some(t), merge, cores, lanes, events);
+    while let Some((done, dev)) = out.comp.peek(ci) {
+        if done > t {
+            break;
         }
-    }
-    let mut k = 0;
-    while k < out.len(ci) {
-        match out.get(ci, k).done {
-            Some(done) if done <= t => {
-                let e = out.swap_remove(ci, k);
-                lanes[e.dev as usize].release();
-            }
-            _ => k += 1,
-        }
+        out.comp.pop(ci);
+        lanes[dev as usize].release();
     }
 }
 
@@ -320,10 +369,11 @@ pub(super) fn phase(
         measure,
         lookahead,
     };
-    // Scheduler-side outstanding misses: one fixed-capacity slab slot
-    // per core (stands in for the sequential engine's `MshrHeap`, which
-    // stays empty under this engine) — no steady-state allocations.
-    let mut out: SlotArena<OutEntry> = SlotArena::new(sim.cores.len(), mshrs);
+    // Scheduler-side outstanding misses: per-core pending/completed
+    // wheels over a fixed-capacity slab (stands in for the sequential
+    // engine's wheel, which stays empty under this engine) — no
+    // steady-state allocations.
+    let mut out = Outstanding::new(sim.cores.len(), mshrs);
 
     // Tracing active this phase? Workers then evaluate runs entry by
     // entry (bit-identical: the default `access_batch` is a per-entry
@@ -365,28 +415,21 @@ pub(super) fn phase(
             if out.len(ci) >= mshrs {
                 // MSHR full: the stall needs the true oldest miss, so
                 // every unresolved completion must be known before the
-                // `(done, device)` minimum — the sequential heap key —
+                // `(done, device)` minimum — the sequential wheel key —
                 // is retired.
-                for k in 0..out.len(ci) {
-                    if out.get(ci, k).done.is_none() {
-                        let done = merge.resolve(
-                            out.get(ci, k).req_id,
-                            &mut sim.cores,
-                            &mut sim.lanes,
-                            &mut sim.events,
-                        );
-                        out.get_mut(ci, k).done = Some(done);
-                    }
-                }
-                let k = (0..out.len(ci))
-                    .min_by_key(|&k| {
-                        let e = out.get(ci, k);
-                        (e.done.expect("resolved above"), e.dev)
-                    })
+                out.resolve_pending(
+                    ci,
+                    None,
+                    &mut merge,
+                    &mut sim.cores,
+                    &mut sim.lanes,
+                    &mut sim.events,
+                );
+                let (done, sdev) = out
+                    .comp
+                    .pop(ci)
                     .expect("MSHR-full with empty outstanding set");
-                let e = out.swap_remove(ci, k);
-                sim.lanes[e.dev as usize].release();
-                let done = e.done.expect("resolved above");
+                sim.lanes[sdev as usize].release();
                 sim.cores[ci].t = sim.cores[ci].t.max(done);
                 // Stall instant, keyed by the request about to issue —
                 // identical to the sequential engine's.
@@ -397,7 +440,7 @@ pub(super) fn phase(
                                 InstantKind::MshrStall,
                                 sim.cores[ci].t,
                                 ci as u32,
-                                e.dev,
+                                sdev,
                                 next_req_id,
                             );
                         }
@@ -457,15 +500,7 @@ pub(super) fn phase(
                     merge.resolve(req_id, &mut sim.cores, &mut sim.lanes, &mut sim.events);
                 sim.cores[ci].t = sim.cores[ci].t.max(done);
             } else {
-                out.push(
-                    ci,
-                    OutEntry {
-                        req_id,
-                        dev: tr.dev,
-                        lb: t_issue + merge.lookahead[dev],
-                        done: None,
-                    },
-                );
+                out.push(ci, t_issue + merge.lookahead[dev], req_id, tr.dev);
                 sim.lanes[dev].push_outstanding();
             }
 
@@ -491,28 +526,24 @@ pub(super) fn phase(
 
         // Phase-end drain: every core absorbs its slowest outstanding
         // reply (latency counts toward elapsed time), mirroring the
-        // sequential engine's tail.
+        // sequential engine's tail. `comp.max_pushed` equals the live
+        // maximum: every popped completion had `done <= core.t` when it
+        // was popped, and the clock is monotone.
         for ci in 0..sim.cores.len() {
-            for k in 0..out.len(ci) {
-                if out.get(ci, k).done.is_none() {
-                    let done = merge.resolve(
-                        out.get(ci, k).req_id,
-                        &mut sim.cores,
-                        &mut sim.lanes,
-                        &mut sim.events,
-                    );
-                    out.get_mut(ci, k).done = Some(done);
-                }
-            }
-            if let Some(last) = out
-                .slice(ci)
-                .iter()
-                .map(|e| e.done.expect("resolved above"))
-                .max()
-            {
+            out.resolve_pending(
+                ci,
+                None,
+                &mut merge,
+                &mut sim.cores,
+                &mut sim.lanes,
+                &mut sim.events,
+            );
+            if let Some(last) = out.comp.max_pushed(ci) {
                 sim.cores[ci].t = sim.cores[ci].t.max(last);
             }
-            out.clear(ci);
+            out.pend.clear(ci);
+            out.comp.clear(ci);
+            out.slab.clear(ci);
         }
         for lane in &mut sim.lanes {
             lane.outstanding = 0;
@@ -566,11 +597,60 @@ fn snapshot_barrier(
     (devs, port_slots)
 }
 
+/// The worker-side caching oracle: the device's size-cache shard in
+/// front of the shared (mutex-guarded) run oracle, with OSPN routing.
+/// Shard hits never touch the mutex; the first miss or write in a
+/// batch takes the lock and the guard is then held for the rest of the
+/// batch (same hold pattern as the pre-cache eager lock). Writes
+/// always go through and refresh the shard, so entries stay exactly
+/// the oracle's current answers — what keeps cached runs bit-identical
+/// to uncached ones.
+struct LazyCachedOracle<'a, 'o> {
+    oracle: &'a Mutex<&'o mut dyn ContentOracle>,
+    guard: Option<MutexGuard<'a, &'o mut dyn ContentOracle>>,
+    cache: &'a mut SizeCacheShard,
+    map: Interleave,
+    dev: usize,
+}
+
+impl LazyCachedOracle<'_, '_> {
+    fn inner(&mut self) -> &mut dyn ContentOracle {
+        if self.guard.is_none() {
+            self.guard = Some(self.oracle.lock().expect("oracle mutex poisoned"));
+        }
+        &mut **self.guard.as_mut().expect("guard just installed")
+    }
+}
+
+impl ContentOracle for LazyCachedOracle<'_, '_> {
+    fn sizes(&mut self, local: u64) -> PageSizes {
+        if let Some(s) = self.cache.get(local) {
+            return s;
+        }
+        let g = self.map.global(self.dev, local);
+        let s = self.inner().sizes(g);
+        self.cache.fill(local, s);
+        s
+    }
+
+    fn on_write(&mut self, local: u64) -> PageSizes {
+        let g = self.map.global(self.dev, local);
+        let s = self.inner().on_write(g);
+        self.cache.refresh(local, s);
+        s
+    }
+
+    fn is_zero_fill(&mut self, local: u64) -> bool {
+        self.sizes(local).page == 0
+    }
+}
+
 /// Fabric-shard worker: drain the job FIFO, evaluate maximal
 /// same-device runs as one batch (fabric-hop then link ingress
-/// serialization in issue order, one oracle lock + one [`access_batch`]
-/// call per run, then link and fabric egress), and reply with
-/// completion times in issue order.
+/// serialization in issue order, at most one oracle lock — size-cache
+/// hits skip it entirely — + one [`access_batch`] call per run, then
+/// link and fabric egress), and reply with completion times in issue
+/// order.
 ///
 /// Splitting a run into its five stages is exact: each directional
 /// resource — every shared hop port on the device's fabric path, the
@@ -682,9 +762,10 @@ fn worker(
                     deltas.clear();
                     deltas.resize(accs.len(), None);
                     {
-                        let mut guard = oracle.lock().expect("oracle mutex poisoned");
-                        let mut routed = RoutedOracle {
-                            inner: &mut **guard,
+                        let mut routed = LazyCachedOracle {
+                            oracle,
+                            guard: None,
+                            cache: &mut device.size_cache,
                             map,
                             dev,
                         };

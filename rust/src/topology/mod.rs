@@ -25,6 +25,7 @@
 
 use std::fmt;
 
+use crate::compress::{SizeCacheShard, SizeCacheStats};
 use crate::config::SimConfig;
 use crate::cxl::fabric::{Fabric, FabricGroup};
 use crate::cxl::CxlLink;
@@ -164,6 +165,10 @@ impl Interleave {
 pub struct Device {
     pub link: CxlLink,
     pub scheme: Box<dyn Scheme>,
+    /// Memo cache in front of the content oracle's size model, keyed by
+    /// this device's local OSPNs. Per-device so the parallel engine's
+    /// workers hit it without touching the shared oracle lock.
+    pub size_cache: SizeCacheShard,
 }
 
 /// The pool of expander devices a run drives. Built from `cfg.devices`
@@ -207,6 +212,11 @@ impl DevicePool {
             "devices must be in 1..={MAX_DEVICES}, got {}",
             cfg.devices
         );
+        // Backstop for callers that skip `SimConfig::validate_topology`
+        // (the CLI rejects these shapes with the same message).
+        if let Err(e) = Fabric::validate_config(cfg.fabric, cfg.switch_radix, cfg.devices) {
+            panic!("{e}");
+        }
         let pages_hint = if total_pages == 0 {
             0
         } else {
@@ -217,6 +227,7 @@ impl DevicePool {
                 .map(|_| Device {
                     link: CxlLink::new(cfg.cxl),
                     scheme: build_scheme_sized(cfg, pages_hint),
+                    size_cache: SizeCacheShard::new(cfg.size_cache),
                 })
                 .collect(),
             fabric: Fabric::from_config(cfg),
@@ -230,6 +241,7 @@ impl DevicePool {
             devices: vec![Device {
                 link: CxlLink::new(cfg.cxl),
                 scheme,
+                size_cache: SizeCacheShard::new(cfg.size_cache),
             }],
             fabric: Fabric::build(
                 cfg.fabric,
@@ -285,6 +297,15 @@ impl DevicePool {
         let mut merged = DeviceStats::default();
         for d in &self.devices {
             merged.merge(d.scheme.stats());
+        }
+        merged
+    }
+
+    /// Size-cache counters folded across every device's shard.
+    pub fn size_cache_stats(&self) -> SizeCacheStats {
+        let mut merged = SizeCacheStats::default();
+        for d in &self.devices {
+            merged.merge(&d.size_cache.stats);
         }
         merged
     }

@@ -298,6 +298,35 @@ fn parallel_engine_is_bit_identical_on_switched_fabrics() {
 }
 
 #[test]
+fn thirty_two_device_switch2_pins_across_thread_counts() {
+    // The 16–64-device scale target: 32 devices behind a two-level
+    // radix-4 switch tree, with every hot-path optimization (timing
+    // wheel, batched flit trains + port back-pressure, size cache) on
+    // by default. Sequential vs {4, 16} workers must agree on every
+    // observable, including the per-port lanes of all ten switch ports.
+    let mut cfg = quick_cfg();
+    cfg.set("devices", "32").unwrap();
+    cfg.set("fabric", "switch2").unwrap();
+    cfg.set("switch_radix", "4").unwrap();
+    cfg.set("sample_every", "20000").unwrap();
+
+    let seq = fingerprint(job_with_threads(&cfg, "pr", 1));
+    assert_eq!(seq.devices.len(), 32, "one row per device expected");
+    assert_eq!(
+        seq.ports.len(),
+        10,
+        "2 L1 groups x (1 L1 + 4 L2 ports) expected"
+    );
+    for threads in [4usize, 16] {
+        let par = fingerprint(job_with_threads(&cfg, "pr", threads));
+        assert_eq!(
+            par, seq,
+            "x32 switch2: intra_threads={threads} diverged from sequential"
+        );
+    }
+}
+
+#[test]
 fn oversubscribed_thread_count_is_capped_and_identical() {
     // More workers than devices: the host clamps to pool width, so
     // wildly oversubscribed values still match (and cannot deadlock).

@@ -1,0 +1,153 @@
+//! Size-model memo cache: the per-device content-fingerprint cache
+//! (`--size-cache`, on by default) must be a pure memoization — every
+//! observable of a run is **bit-identical** with the cache on or off,
+//! across pool widths, thread counts, and cache-friendliness regimes.
+//!
+//! The cache sits between the scheme and the content oracle
+//! ([`ibex::compress::SizeCacheShard`]); writes always pass through to
+//! the oracle and refresh the cached entry, so a hit can never serve a
+//! stale size. These tests pin that coherence contract end to end and
+//! check the cache actually engages (hits > 0) so the equivalence is
+//! not vacuous.
+
+use ibex::config::SimConfig;
+use ibex::compress::SizeCacheStats;
+use ibex::coordinator::intra_parallelism;
+use ibex::host::HostSim;
+use ibex::runtime::SharedEngine;
+use ibex::topology::DevicePool;
+use ibex::workload::{by_name, Mix, MixOracle, RunPlan};
+
+/// Thrashing regime: bench-scale working-set : promoted ratios at test
+/// size, so promotions/demotions churn the oracle with writes.
+fn thrashing_cfg() -> SimConfig {
+    let mut c = SimConfig::test_small();
+    c.cores = 2;
+    c.instructions = 30_000;
+    c.warmup_instructions = 3_000;
+    c.footprint_scale = 1.0 / 256.0;
+    c.promoted_bytes = 256 << 10;
+    c.meta_cache_bytes = 4 * 1024;
+    c
+}
+
+/// Well-behaved regime: the default test pool, where the promoted
+/// region absorbs most traffic and the cache sees a friendly reuse
+/// pattern.
+fn well_behaved_cfg() -> SimConfig {
+    let mut c = SimConfig::test_small();
+    c.cores = 2;
+    c.instructions = 30_000;
+    c.warmup_instructions = 3_000;
+    c
+}
+
+/// Everything a run observably produces, integer/bit exact.
+#[derive(Debug, PartialEq)]
+struct Fingerprint {
+    elapsed_ps: u64,
+    instructions: u64,
+    requests: u64,
+    mem_by_kind: [u64; 4],
+    mem_total: u64,
+    ratio_bits: u64,
+    /// (requests, reads, writes, mem_accesses, promotions, demotions,
+    /// mean bits, p99) per device.
+    devices: Vec<(u64, u64, u64, u64, u64, u64, u64, u64)>,
+}
+
+/// Run `workload` on `cfg` and return the run fingerprint plus the
+/// pool-merged size-cache counters (all zero when the cache is off).
+/// Drives the sim directly (instead of `run_one`) so the device pool —
+/// and with it [`DevicePool::size_cache_stats`] — stays accessible
+/// after the run.
+fn run(cfg: &SimConfig, workload: &str) -> (Fingerprint, SizeCacheStats) {
+    let engine = SharedEngine::for_config(cfg).expect("size backend");
+    let mix = Mix::homogeneous(by_name(workload).expect("workload"), cfg.cores);
+    let plan = RunPlan::new(&mix, cfg.footprint_scale);
+    let mut pool = DevicePool::build_for(cfg, plan.total_pages);
+    let mut oracle = MixOracle::new(&plan, cfg.seed, engine);
+    let mut sim = HostSim::from_mix(cfg, &mix);
+    sim.set_intra_threads(intra_parallelism(cfg));
+    let m = sim.run(&mut pool, &mut oracle);
+    let fp = Fingerprint {
+        elapsed_ps: m.elapsed_ps,
+        instructions: m.instructions,
+        requests: m.requests,
+        mem_by_kind: m.mem_by_kind,
+        mem_total: m.mem_total,
+        ratio_bits: m.compression_ratio.to_bits(),
+        devices: m
+            .devices
+            .iter()
+            .map(|d| {
+                (
+                    d.requests,
+                    d.reads,
+                    d.writes,
+                    d.mem_accesses,
+                    d.promotions,
+                    d.demotions,
+                    d.mean_latency_ns.to_bits(),
+                    d.p99_latency_ns,
+                )
+            })
+            .collect(),
+    };
+    (fp, pool.size_cache_stats())
+}
+
+#[test]
+fn cached_runs_are_bit_identical_to_uncached_runs() {
+    // {thrashing, well-behaved} × {1, 4} devices × {1, 4} intra-threads:
+    // the memo cache may change nothing but wall-clock.
+    for (regime, base) in [("thrash", thrashing_cfg()), ("tame", well_behaved_cfg())] {
+        for devices in [1usize, 4] {
+            for threads in [1usize, 4] {
+                let mut on = base.clone();
+                on.set("devices", &devices.to_string()).unwrap();
+                on.set("intra_threads", &threads.to_string()).unwrap();
+                let mut off = on.clone();
+                on.set("size_cache", "true").unwrap();
+                off.set("size_cache", "false").unwrap();
+                let ctx = format!("{regime}/x{devices}/t{threads}");
+
+                let (fp_on, stats_on) = run(&on, "pr");
+                let (fp_off, stats_off) = run(&off, "pr");
+                assert_eq!(
+                    fp_on, fp_off,
+                    "{ctx}: size cache changed an observable"
+                );
+                assert!(
+                    stats_on.hits > 0,
+                    "{ctx}: cache never hit — equivalence is vacuous ({stats_on:?})"
+                );
+                assert_eq!(
+                    stats_off,
+                    SizeCacheStats::default(),
+                    "{ctx}: disabled cache counted traffic"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn writes_invalidate_and_the_hit_rate_is_sane() {
+    // A write-bearing workload must refresh cached entries (counted as
+    // invalidations), and the derived hit rate must be a proper
+    // fraction of lookups.
+    let mut cfg = thrashing_cfg();
+    cfg.set("devices", "4").unwrap();
+    let (_, stats) = run(&cfg, "pr");
+    assert!(stats.hits > 0, "no hits: {stats:?}");
+    assert!(
+        stats.invalidations > 0,
+        "writes never refreshed an entry: {stats:?}"
+    );
+    let rate = stats.hit_rate();
+    assert!(
+        rate > 0.0 && rate <= 1.0,
+        "hit rate {rate} out of range ({stats:?})"
+    );
+}
